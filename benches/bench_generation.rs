@@ -1,0 +1,66 @@
+//! Table 5 — generation throughput: tok/s and % of memory-bandwidth
+//! roofline for 2-bit / 4-bit QuIP# vs fp32, on the trained model family
+//! (requires `make artifacts`). The paper's shape: 2-bit > 4-bit > fp16
+//! tok/s, with %-of-roofline growing with model size.
+
+use std::time::Instant;
+
+use quipsharp::bench::{memcpy_roofline_mt_gbps, Table};
+use quipsharp::experiments::Runner;
+use quipsharp::generation::{Generator, KvCache};
+use quipsharp::quant::pipeline::Method;
+
+fn main() {
+    let mut runner = match Runner::new("artifacts") {
+        Ok(r) => r,
+        Err(e) => {
+            println!("bench_generation skipped (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let roof = memcpy_roofline_mt_gbps(64 << 20);
+    println!("== Table 5: generation throughput (roofline {roof:.1} GB/s) ==\n");
+    let mut t = Table::new(&["model", "variant", "tok/s", "weight GB/s", "% roofline"]);
+
+    for size in ["s", "m"] {
+        let Ok(model) = runner.model(size) else { continue };
+        let variants: Vec<(String, Option<Method>)> = vec![
+            ("fp32".into(), None),
+            ("2bit".into(), Some(Method::QuipSharp { bits: 2, ft: false })),
+            ("4bit".into(), Some(Method::QuipSharp { bits: 4, ft: false })),
+        ];
+        for (label, method) in variants {
+            let qm = method.as_ref().map(|m| runner.qmodel(size, m).unwrap());
+            let gen = match &qm {
+                Some(q) => Generator::quantized(&q.model, q),
+                None => Generator::dense(&model),
+            };
+            // Generate tokens (decode-only timing after a short prompt).
+            let prompt: Vec<u8> = b"the ".to_vec();
+            let mut cache = KvCache::new(gen.model);
+            let mut logits = vec![0.0f32; gen.model.cfg.vocab];
+            for &p in &prompt {
+                logits = gen.decode_one(p, &mut cache);
+            }
+            let n_tokens = gen.model.cfg.ctx - prompt.len() - 1;
+            let t0 = Instant::now();
+            for _ in 0..n_tokens {
+                let next = quipsharp::generation::argmax(&logits) as u8;
+                logits = gen.decode_one(next, &mut cache);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let tok_s = n_tokens as f64 / dt;
+            let bytes_per_tok = gen.weight_bytes_per_token() as f64;
+            let gbps = tok_s * bytes_per_tok / 1e9;
+            t.row(&[
+                size.to_string(),
+                label,
+                format!("{tok_s:.1}"),
+                format!("{gbps:.2}"),
+                format!("{:.1}%", 100.0 * gbps / roof),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv("bench_generation_table5").ok();
+}

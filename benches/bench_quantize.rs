@@ -1,0 +1,43 @@
+//! Quantization-time throughput: weights/second for each method at one
+//! layer shape (supports the paper's "Llama 2 70B in <10 GPU-hours"
+//! cost narrative at our scale).
+
+use std::time::Duration;
+
+use quipsharp::bench::{Bench, Table};
+use quipsharp::linalg::ldl::random_spd;
+use quipsharp::linalg::Matrix;
+use quipsharp::quant::pipeline::{quantize_matrix, Method};
+use quipsharp::util::rng::Pcg64;
+
+fn main() {
+    println!("== bench_quantize: per-layer quantization throughput ==\n");
+    let mut t = Table::new(&["method", "m×n", "median", "Mweights/s"]);
+    let mut rng = Pcg64::new(3);
+    let (m, n) = (512usize, 512usize);
+    let w = Matrix::gaussian(m, n, 0.02, &mut rng);
+    let h = random_spd(n, 0.5, &mut rng);
+
+    let methods = [
+        Method::QuipSharp { bits: 2, ft: false },
+        Method::QuipSharp { bits: 4, ft: false },
+        Method::QuipSharpNoE8 { bits: 2 },
+        Method::QuipKron { bits: 2 },
+        Method::OmniquantLike { bits: 2, group: None },
+        Method::AwqLike { bits: 2 },
+    ];
+    for method in methods {
+        let r = Bench::new(method.label())
+            .budget(Duration::from_millis(1500))
+            .min_iters(3)
+            .run(|| quantize_matrix(&method, &w, &h, 7).unwrap().stats.proxy_err);
+        t.row(&[
+            method.label(),
+            format!("{m}x{n}"),
+            format!("{:.1} ms", r.median_ns() as f64 / 1e6),
+            format!("{:.2}", (m * n) as f64 * 1e3 / r.median_ns() as f64),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_quantize").ok();
+}

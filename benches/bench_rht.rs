@@ -1,0 +1,36 @@
+//! §3 cost claims: RHT Θ(n log n) vs QuIP's Kronecker Θ(n√n), plus the
+//! H_q ⊗ H_p mixed path for non-power-of-2 dims (e.g. 384 = 12·32).
+
+use std::time::Duration;
+
+use quipsharp::bench::{Bench, Table};
+use quipsharp::quant::incoherence::{IncoherenceKind, Transform};
+use quipsharp::util::rng::Pcg64;
+
+fn main() {
+    println!("== bench_rht: incoherence transform cost (§3) ==\n");
+    let mut t = Table::new(&["transform", "n", "median/apply", "ns per element"]);
+    let mut rng = Pcg64::new(1);
+
+    for &n in &[256usize, 384, 1024, 1536, 4096, 16384] {
+        for kind in [IncoherenceKind::Rht, IncoherenceKind::Rfft, IncoherenceKind::Kron2] {
+            let tr = Transform::new(kind, n, &mut rng);
+            let mut x: Vec<f64> = rng.gaussian_vec(n, 1.0).iter().map(|&v| v as f64).collect();
+            let r = Bench::new(format!("{kind:?}-{n}"))
+                .budget(Duration::from_millis(250))
+                .run(|| {
+                    tr.apply(&mut x);
+                    x[0]
+                });
+            t.row(&[
+                format!("{kind:?}"),
+                format!("{n}"),
+                format!("{:.2} us", r.median_ns() as f64 / 1e3),
+                format!("{:.2}", r.median_ns() as f64 / n as f64),
+            ]);
+        }
+    }
+    t.print();
+    t.write_csv("bench_rht").ok();
+    println!("\n(RHT per-element cost should grow ~log n; Kron ~√n — the §3 asymptotics.)");
+}

@@ -1,0 +1,81 @@
+//! Table 6 — QuIP# vs AQLM-like vs FP16 matvec throughput. The paper's
+//! point: AQLM's per-layer 2^16×8 fp16 codebook (1 MiB) does not fit in
+//! L1, so random-access decode is *slower than fp16*, while E8P's 1 KiB
+//! table decodes faster than fp16 streams.
+
+use std::time::Duration;
+
+use quipsharp::bench::{Bench, Table};
+use quipsharp::linalg::ldl::random_spd;
+use quipsharp::linalg::Matrix;
+use quipsharp::model::qlinear::{dense_matvec, BigCodebookMatvec, QuantMatvec};
+use quipsharp::quant::pipeline::{quantize_matrix, Method};
+use quipsharp::util::rng::Pcg64;
+
+fn main() {
+    println!("== Table 6: decode throughput — E8P vs big-codebook VQ vs fp32 ==\n");
+    let mut t = Table::new(&["variant", "m×n", "codebook", "median/matvec", "rel. to fp32"]);
+    let mut rng = Pcg64::new(2);
+
+    // 2048² is already past LLC on this box; 4096² only adds
+    // quantization time, not information.
+    for &(m, n) in &[(1024usize, 1024usize), (2048, 2048)] {
+        let x: Vec<f32> = rng.gaussian_vec(n, 1.0);
+        let mut y = vec![0.0f32; m];
+
+        // fp32 dense reference.
+        let wd: Vec<f32> = rng.gaussian_vec(m * n, 0.02);
+        let r_fp = Bench::new("fp32")
+            .budget(Duration::from_millis(500))
+            .run(|| {
+                dense_matvec(&wd, &x, m, n, &mut y);
+                y[0]
+            });
+        let fp_ns = r_fp.median_ns() as f64;
+        t.row(&[
+            "fp32".into(),
+            format!("{m}x{n}"),
+            "-".into(),
+            format!("{:.3} ms", fp_ns / 1e6),
+            "1.00x".into(),
+        ]);
+
+        // QuIP# E8P (8 KiB f32 table — L1-resident).
+        let w = Matrix::gaussian(m, n, 0.02, &mut rng);
+        let h = random_spd(n, 0.5, &mut rng);
+        let ql = quantize_matrix(&Method::QuipSharp { bits: 2, ft: false }, &w, &h, 7).unwrap();
+        let qm = QuantMatvec::from_packed(m, n, ql.packed.as_ref().unwrap());
+        let r_q = Bench::new("e8p")
+            .budget(Duration::from_millis(500))
+            .run(|| {
+                qm.matvec(&x, &mut y);
+                y[0]
+            });
+        t.row(&[
+            "quip#-e8p-2bit".into(),
+            format!("{m}x{n}"),
+            "8 KiB (L1)".into(),
+            format!("{:.3} ms", r_q.median_ns() as f64 / 1e6),
+            format!("{:.2}x", fp_ns / r_q.median_ns() as f64),
+        ]);
+
+        // AQLM-like: 2^16 × 8 f32 table (2 MiB) with random-access codes.
+        let big = BigCodebookMatvec::random(m, n, 1 << 16, 3);
+        let r_big = Bench::new("aqlm-like")
+            .budget(Duration::from_millis(500))
+            .run(|| {
+                big.matvec(&x, &mut y);
+                y[0]
+            });
+        t.row(&[
+            "aqlm-like-2bit".into(),
+            format!("{m}x{n}"),
+            "2 MiB (spills L1/L2)".into(),
+            format!("{:.3} ms", r_big.median_ns() as f64 / 1e6),
+            format!("{:.2}x", fp_ns / r_big.median_ns() as f64),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_table6_aqlm").ok();
+    println!("\n(>1.00x = faster than fp32. Paper Table 6 shape: E8P > fp16 > AQLM.)");
+}

@@ -1,0 +1,71 @@
+//! Quickstart: load a trained model, quantize it with QuIP# at 2 bits,
+//! compare perplexity and footprint, and generate some text.
+//!
+//!   cargo run --release --example quickstart [-- --size m]
+//!
+//! Requires `make artifacts` (corpus + trained models).
+
+use anyhow::Result;
+use quipsharp::eval::perplexity;
+use quipsharp::generation::Generator;
+use quipsharp::hessian::collect_hessians;
+use quipsharp::model::Model;
+use quipsharp::qmodel::quantize_model;
+use quipsharp::quant::pipeline::Method;
+use quipsharp::util::cli::Args;
+use quipsharp::data::load_corpus;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let art = args.get_or("art", "artifacts");
+    let size = args.get_or("size", "s");
+
+    println!("== QuIP# quickstart ==");
+    let model = Model::load(art, size)?;
+    println!(
+        "model '{size}': {} params ({} layers, d={})",
+        model.num_params(),
+        model.cfg.n_layers,
+        model.cfg.d_model
+    );
+
+    // 1. Calibration Hessians (paper §F.2).
+    let calib = load_corpus(art, "corpus_calib")?;
+    let hessians = collect_hessians(&model, &calib, 16, model.cfg.ctx);
+    println!("collected {} layer Hessians", hessians.len());
+
+    // 2. Quantize: RHT incoherence + BlockLDLQ + E8P (Algorithm 1).
+    let method = Method::QuipSharp { bits: 2, ft: false };
+    let qm = quantize_model(&model, &hessians, &method, 7140)?;
+    println!(
+        "quantized to {:.3} effective bits/weight (codes 2.0 + overheads — §F.1)",
+        qm.avg_bits()
+    );
+    for (name, ql) in qm.layers.iter().take(2) {
+        println!(
+            "  {name}: mu_W {:.2} → {:.2} after RHT, proxy err {:.2}% of tr(WHWᵀ)",
+            ql.stats.mu_before,
+            ql.stats.mu_after,
+            ql.stats.proxy_rel * 100.0
+        );
+    }
+
+    // 3. Quality: perplexity before/after.
+    let test = load_corpus(art, "corpus_test_w2")?;
+    let ppl_fp = perplexity(&model, &test, 256, 4096);
+    let ppl_q = perplexity(&qm.model, &test, 256, 4096);
+    println!("perplexity: fp32 {ppl_fp:.3} → 2-bit QuIP# {ppl_q:.3}");
+
+    // 4. Generate with the fused E8P decode hot path (Algorithm 2).
+    let gen = Generator::quantized(&qm.model, &qm);
+    let prompt = b"the ";
+    let out = gen.generate(prompt, 48);
+    let text: String = out.iter().map(|&b| b as char).collect();
+    println!("generation (2-bit, fused decode): {:?}...", text);
+    println!(
+        "weight bytes/token: fp32 {} → quantized {}",
+        Generator::dense(&model).weight_bytes_per_token(),
+        gen.weight_bytes_per_token()
+    );
+    Ok(())
+}

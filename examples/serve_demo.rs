@@ -1,0 +1,94 @@
+//! End-to-end serving demo (the repo's E2E validation run):
+//! 1. load the trained model, quantize to 2-bit QuIP#,
+//! 2. start the batching engine + TCP server,
+//! 3. fire concurrent client requests, report latency/throughput,
+//! 4. (if artifacts exist) run the same prompts through the PJRT
+//!    three-layer path ({size}_decode_fp / _e8p) and cross-check.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use quipsharp::experiments::Runner;
+use quipsharp::model::Model;
+use quipsharp::quant::pipeline::Method;
+use quipsharp::serve::{serve_blocking, Client, Engine, NativeEngine, ServerConfig};
+use quipsharp::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let art = args.get_or("art", "artifacts").to_string();
+    let size = args.get_or("size", "s").to_string();
+    let n_requests = args.get_usize("requests", 16);
+    let max_new = args.get_usize("max-new", 32);
+
+    println!("== serve demo: '{size}' 2-bit QuIP# ==");
+    let mut runner = Runner::new(&art)?;
+    let qm = runner.qmodel(&size, &Method::QuipSharp { bits: 2, ft: false })?;
+    let model = Arc::new(Model::new(qm.model.cfg.clone(), qm.model.params.clone()));
+    let engine = Arc::new(NativeEngine::start(model.clone(), Some(qm.clone()), 8));
+    let eng_dyn: Arc<dyn Engine> = engine.clone();
+    let handle = serve_blocking(eng_dyn, ServerConfig::default())?;
+    println!("server on {}", handle.local_addr);
+
+    // Concurrent clients.
+    let t0 = std::time::Instant::now();
+    let addr = handle.local_addr;
+    let mut joins = Vec::new();
+    for i in 0..n_requests {
+        joins.push(std::thread::spawn(move || -> Result<(usize, f64)> {
+            let mut c = Client::connect(addr)?;
+            let prompt: Vec<u8> = format!("the w{} ", i % 7).into_bytes();
+            let (tokens, ms) = c.request(&prompt, max_new)?;
+            Ok((tokens.len(), ms))
+        }));
+    }
+    let mut total_tokens = 0usize;
+    let mut lats = Vec::new();
+    for j in joins {
+        let (n, ms) = j.join().unwrap()?;
+        total_tokens += n;
+        lats.push(ms);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "{n_requests} requests, {total_tokens} tokens in {wall:.2}s → {:.1} tok/s; \
+         latency p50 {:.0} ms, p99 {:.0} ms",
+        total_tokens as f64 / wall,
+        lats[lats.len() / 2],
+        lats[lats.len() - 1],
+    );
+    let mut c = Client::connect(addr)?;
+    println!("server stats: {}", c.stats()?.emit());
+    c.shutdown()?;
+    handle.stop();
+    engine.stop();
+
+    // --- PJRT three-layer path (optional, needs AOT artifacts) -------------
+    match quipsharp::runtime::Runtime::new(&art) {
+        Ok(rt) => {
+            let artifact = format!("{size}_decode_fp");
+            if rt.manifest.artifacts.contains_key(&artifact) {
+                println!("\n== PJRT path ({artifact}) ==");
+                let eng = quipsharp::serve::pjrt_engine::PjrtBatchEngine::new_fp(
+                    &rt, &model, &artifact,
+                )?;
+                let prompts: Vec<Vec<u8>> =
+                    (0..4).map(|i| format!("the w{i} ").into_bytes()).collect();
+                let t0 = std::time::Instant::now();
+                let outs = eng.generate_batch(&prompts, 16)?;
+                let dt = t0.elapsed().as_secs_f64();
+                println!(
+                    "PJRT lockstep batch of {}: {} tokens in {dt:.2}s ({:.1} tok/s)",
+                    prompts.len(),
+                    outs.iter().map(|o| o.len()).sum::<usize>(),
+                    outs.iter().map(|o| o.len()).sum::<usize>() as f64 / dt
+                );
+            } else {
+                println!("\n(no decode artifact '{artifact}' — run `make artifacts`)");
+            }
+        }
+        Err(e) => println!("\n(PJRT path skipped: {e})"),
+    }
+    Ok(())
+}

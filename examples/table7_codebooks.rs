@@ -1,0 +1,61 @@
+//! Table 7 — codebook comparison at ~2 bits on the largest model:
+//! E8P vs E8-lattice-2.37-bit vs D4 (2 / 2.21) vs 8-D k-means.
+//! Reproduced shape: E8P best among the 2-bit entries; the 2.37-bit E8
+//! ball wins overall (more bits); D4 and k-means trail E8P.
+
+use anyhow::Result;
+use quipsharp::bench::Table;
+use quipsharp::experiments::{Runner, WINDOW_NATIVE};
+use quipsharp::quant::pipeline::{Method, SwapCodebook};
+use quipsharp::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut runner = Runner::new(args.get_or("art", "artifacts"))?;
+    let size = args.get_or("size", if args.has_flag("small") { "s" } else { "l" }).to_string();
+
+    println!("== Table 7: codebook swaps on '{size}' (no FT) ==\n");
+    let rows: Vec<(&str, Method)> = vec![
+        ("fp16", Method::Fp16),
+        ("e8p (2 bit)", Method::QuipSharp { bits: 2, ft: false }),
+        ("e8 lattice (2.37 bit)", Method::CodebookSwap { cb: SwapCodebook::E8TwoThirtySeven }),
+        ("d4 (2 bit)", Method::CodebookSwap { cb: SwapCodebook::D4Two }),
+        ("d4 (2.21 bit)", Method::CodebookSwap { cb: SwapCodebook::D4TwoTwentyOne }),
+        ("kmeans 8d (2 bit)", Method::CodebookSwap { cb: SwapCodebook::KMeansTwo }),
+    ];
+
+    let mut t = Table::new(&["codebook", "code bits", "w2 ppl", "c4 ppl", "proxy rel"]);
+    for (label, m) in &rows {
+        let bits = runner.bits(&size, m)?;
+        let w2 = runner.ppl(&size, m, "w2", WINDOW_NATIVE)?;
+        let c4 = runner.ppl(&size, m, "c4", WINDOW_NATIVE)?;
+        let proxy = if matches!(m, Method::Fp16) {
+            0.0
+        } else {
+            runner.proxy_rel(&size, m)?
+        };
+        t.row(&[
+            label.to_string(),
+            format!("{bits:.2}"),
+            format!("{w2:.3}"),
+            format!("{c4:.3}"),
+            format!("{proxy:.4}"),
+        ]);
+    }
+    t.print();
+    t.write_csv("table7_codebooks")?;
+
+    let e8p = runner.ppl(&size, &Method::QuipSharp { bits: 2, ft: false }, "w2", WINDOW_NATIVE)?;
+    let d4 = runner.ppl(&size, &Method::CodebookSwap { cb: SwapCodebook::D4Two }, "w2", WINDOW_NATIVE)?;
+    let e8ball = runner.ppl(
+        &size,
+        &Method::CodebookSwap { cb: SwapCodebook::E8TwoThirtySeven },
+        "w2",
+        WINDOW_NATIVE,
+    )?;
+    println!("\ne8p {e8p:.3} vs d4 {d4:.3} vs e8-2.37 {e8ball:.3}");
+    assert!(e8p <= d4 * 1.02, "E8P must match-or-beat D4 at 2 bits");
+    assert!(e8ball <= e8p, "more bits (2.37) must not be worse");
+    println!("assertion holds: Table 7 ordering reproduced");
+    Ok(())
+}

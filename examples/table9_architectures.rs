@@ -1,0 +1,54 @@
+//! Table 9 — QuIP# 2-bit (no FT) on architecturally different models:
+//! a mixture-of-experts variant (Mixtral analog) and a non-Llama stack
+//! (LayerNorm + GELU + learned positions; Falcon analog).
+//! Reproduced shape: the pipeline runs unchanged; 2-bit ppl degrades
+//! modestly relative to fp16.
+
+use anyhow::Result;
+use quipsharp::bench::Table;
+use quipsharp::data::ZEROSHOT_TASKS;
+use quipsharp::experiments::{Runner, WINDOW_NATIVE};
+use quipsharp::quant::pipeline::Method;
+use quipsharp::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut runner = Runner::new(args.get_or("art", "artifacts"))?;
+
+    println!("== Table 9: other architectures, 2-bit QuIP# (no FT) ==\n");
+    let mut header = vec![
+        "model".to_string(),
+        "bits".to_string(),
+        "w2".to_string(),
+        "c4".to_string(),
+    ];
+    header.extend(ZEROSHOT_TASKS.iter().map(|t| t.to_string()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+
+    for size in ["moe", "nonllama"] {
+        for m in [Method::Fp16, Method::QuipSharp { bits: 2, ft: false }] {
+            let mut cells = vec![
+                format!("{size} ({})", m.label()),
+                format!("{:.2}", runner.bits(size, &m)?),
+                format!("{:.3}", runner.ppl(size, &m, "w2", WINDOW_NATIVE)?),
+                format!("{:.3}", runner.ppl(size, &m, "c4", WINDOW_NATIVE)?),
+            ];
+            for task in ZEROSHOT_TASKS {
+                cells.push(format!("{:.1}", runner.zeroshot(size, &m, task)? * 100.0));
+            }
+            t.row(&cells);
+        }
+    }
+    t.print();
+    t.write_csv("table9_architectures")?;
+
+    for size in ["moe", "nonllama"] {
+        let fp = runner.ppl(size, &Method::Fp16, "w2", WINDOW_NATIVE)?;
+        let q = runner.ppl(size, &Method::QuipSharp { bits: 2, ft: false }, "w2", WINDOW_NATIVE)?;
+        println!("\n{size}: fp {fp:.3} → 2-bit {q:.3} ({:.1}× ratio)", q / fp);
+        assert!(q.is_finite() && q < fp * 5.0, "{size}: 2-bit model must stay usable");
+    }
+    println!("assertion holds: QuIP# transfers across architectures (Table 9 shape)");
+    Ok(())
+}

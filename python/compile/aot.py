@@ -1,0 +1,305 @@
+"""AOT lowering: jax/Pallas (L2+L1) → HLO *text* → artifacts/*.hlo.txt.
+
+Text, not `.serialize()`: jax ≥ 0.5 emits HloModuleProto with 64-bit ids
+which xla_extension 0.5.1 (the version behind the rust `xla` crate)
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts produced (see manifest.json for the exact input/output specs):
+  * {size}_prefill_fp   — tokens (B,S) → logits (B,S,V)         [fp32]
+  * {size}_decode_fp    — (weights…, token, pos, kv) → (logits, kv')
+  * {size}_decode_e8p   — same but every linear is packed QuIP# codes fed
+                          to the L1 Pallas decode+matmul kernel; codes,
+                          scales and sign vectors are runtime *inputs* so
+                          the rust quantizer's output plugs straight in.
+  * e8p_matmul_smoke    — standalone L1 kernel (runtime unit tests).
+  * hadamard_smoke      — standalone FWHT kernel.
+  * e8p_tables.qtz      — the (256,8) abs table + parity + H_q factors.
+
+Python never runs at serve time; the rust runtime loads these once.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import tensorio
+from .kernels import e8p as e8p_kernel
+from .kernels import hadamard as had_kernel
+from .kernels.ref import build_e8p_tables, had_factor
+from .model import CONFIGS, QLinear, decode_step, forward, linear_layer_names
+
+DTYPE_TAG = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides big
+    # constants as `constant({...})`, which xla_extension 0.5.1's text
+    # parser silently replaces with garbage (observed: gathers then return
+    # buffer offsets instead of values). Embedded tables (E8P codebook,
+    # Hadamard factors, baked weights) would all be corrupted.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec_of(x) -> dict:
+    a = np.asarray(x)
+    return {"dtype": DTYPE_TAG[a.dtype], "shape": list(a.shape)}
+
+
+def lower_and_save(art, name, fn, example_args, manifest, input_names):
+    """Lower fn at the example args' shapes, save HLO text + manifest entry."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(art, path), "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *example_args)
+    flat_outs, _ = jax.tree_util.tree_flatten(outs)
+    manifest["artifacts"][name] = {
+        "path": path,
+        "inputs": [
+            {"name": nm, **spec_of(a)} for nm, a in zip(input_names, example_args)
+        ],
+        "outputs": [
+            {"dtype": "f32" if o.dtype == jnp.float32 else "i32", "shape": list(o.shape)}
+            for o in flat_outs
+        ],
+    }
+    print(f"lowered {name}: {len(text)} chars, {len(example_args)} inputs")
+
+
+def flat_weight_order(cfg) -> list[str]:
+    """Deterministic weight-input ordering for the fp decode artifact."""
+    names = ["embed"]
+    if cfg.arch == "nonllama":
+        names.append("pos_embed")
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        names += [pre + "attn_norm"]
+        if cfg.arch == "nonllama":
+            names += [pre + "attn_norm_bias"]
+        names += [pre + "wq", pre + "wk", pre + "wv", pre + "wo", pre + "mlp_norm"]
+        if cfg.arch == "nonllama":
+            names += [pre + "mlp_norm_bias"]
+        if cfg.arch == "moe":
+            names += [pre + "router"]
+            for e in range(cfg.n_experts):
+                names += [pre + f"w_gate.{e}", pre + f"w_up.{e}", pre + f"w_down.{e}"]
+        else:
+            names += [pre + "w_gate", pre + "w_up", pre + "w_down"]
+    names += ["final_norm"]
+    if cfg.arch == "nonllama":
+        names += ["final_norm_bias"]
+    names += ["lm_head"]
+    return names
+
+
+def qlinear_input_names(cfg, stages: int) -> list[tuple[str, str]]:
+    """(layer, field) pairs for e8p inputs, in artifact order."""
+    out = []
+    for lname in linear_layer_names(cfg):
+        for s in range(stages):
+            out.append((lname, f"codes{s}"))
+        out.append((lname, "scales"))
+        out.append((lname, "su"))
+        out.append((lname, "sv"))
+    return out
+
+
+def build_decode_e8p_fn(cfg, stages, abs_t, par_t, hq_cache):
+    """Returns (fn, example_args, input_names) for the packed decode step."""
+    lin_names = linear_layer_names(cfg)
+    shapes = {}
+    d, ff = cfg.d_model, cfg.d_ff
+    for ln in lin_names:
+        base = ln.split(".")[-1] if not ln.split(".")[-1].isdigit() else ln.split(".")[-2]
+        if base in ("wq", "wk", "wv", "wo"):
+            shapes[ln] = (d, d)
+        elif base in ("w_gate", "w_up"):
+            shapes[ln] = (ff, d)
+        else:  # w_down
+            shapes[ln] = (d, ff)
+
+    B = 8
+    L, H, hd, ctx = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.ctx
+    # Non-quantized parameters (embed, norms, head, routers) come first.
+    fp_names = [n for n in flat_weight_order(cfg) if n not in shapes]
+
+    def fn(*args):
+        i = 0
+        params = {}
+        for n in fp_names:
+            params[n] = args[i]
+            i += 1
+        qparams = {}
+        for ln in lin_names:
+            m, n = shapes[ln]
+            codes = []
+            for _ in range(stages):
+                codes.append(args[i])
+                i += 1
+            scales = args[i]; i += 1
+            su = args[i]; i += 1
+            sv = args[i]; i += 1
+            ql = QLinear(
+                codes=codes,
+                stage_scales=[scales[s] for s in range(stages)],
+                su=su, sv=sv, m=m, n=n,
+                abs_table=abs_t, parity=par_t,
+                hq_m=hq_cache.get(m), hq_n=hq_cache.get(n),
+            )
+            qparams[ln] = ql
+        token, pos, kv_k, kv_v = args[i], args[i + 1], args[i + 2], args[i + 3]
+        return decode_step(cfg, params, token, pos, kv_k, kv_v, qparams=qparams)
+
+    # Example args.
+    ex = []
+    names = []
+    rng = np.random.RandomState(0)
+    dummy = {n: None for n in fp_names}
+    from .model import init_params
+
+    p0 = init_params(cfg, seed=0)
+    for n in fp_names:
+        ex.append(jnp.asarray(p0[n]))
+        names.append(n)
+        del dummy
+        dummy = None
+    for ln in lin_names:
+        m, n = shapes[ln]
+        for s in range(stages):
+            ex.append(jnp.zeros((m, n // 8), jnp.int32))
+            names.append(f"{ln}.codes{s}")
+        ex.append(jnp.ones((stages,), jnp.float32))
+        names.append(f"{ln}.scales")
+        ex.append(jnp.ones((m,), jnp.float32))
+        names.append(f"{ln}.su")
+        ex.append(jnp.ones((n,), jnp.float32))
+        names.append(f"{ln}.sv")
+    ex += [
+        jnp.zeros((B,), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((L, B, ctx, H, hd), jnp.float32),
+        jnp.zeros((L, B, ctx, H, hd), jnp.float32),
+    ]
+    names += ["token", "pos", "kv_k", "kv_v"]
+    _ = rng
+    return fn, ex, names
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="../artifacts")
+    ap.add_argument("--decode-sizes", default="s,m")
+    args = ap.parse_args()
+    art = args.art
+    manifest = {"artifacts": {}, "models": {}, "tables": "e8p_tables.qtz"}
+
+    # --- shared decode tables -------------------------------------------------
+    abs_t_np, par_t_np = build_e8p_tables()
+    hq_entries = {}
+    for n in sorted({c.d_model for c in CONFIGS.values()}
+                    | {c.d_ff for c in CONFIGS.values()}):
+        p, q, hq = had_factor(n)
+        if hq is not None:
+            hq_entries[f"hq_{n}"] = hq.astype(np.float32)
+    tensorio.save(
+        os.path.join(art, "e8p_tables.qtz"),
+        {"abs_table": abs_t_np, "parity": par_t_np, **hq_entries},
+    )
+    abs_t = jnp.asarray(abs_t_np)
+    par_t = jnp.asarray(par_t_np)
+    hq_cache = {}
+    for k, v in hq_entries.items():
+        hq_cache[int(k.split("_")[1])] = jnp.asarray(v)
+
+    # --- model metadata -------------------------------------------------------
+    for name, cfg in CONFIGS.items():
+        manifest["models"][name] = {
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+            "ctx": cfg.ctx, "arch": cfg.arch,
+            "weights": f"model_{name}.qtz",
+        }
+
+    # --- kernel smoke artifacts ----------------------------------------------
+    def e8p_smoke(codes, x):
+        return e8p_kernel.e8p_matmul(codes, x, abs_t, par_t, 1.0)
+
+    lower_and_save(
+        art, "e8p_matmul_smoke", e8p_smoke,
+        [jnp.zeros((64, 32), jnp.int32), jnp.zeros((4, 256), jnp.float32)],
+        manifest, ["codes", "x"],
+    )
+
+    def had_smoke(x):
+        return had_kernel.fwht(x)
+
+    lower_and_save(
+        art, "hadamard_smoke", had_smoke,
+        [jnp.zeros((8, 256), jnp.float32)], manifest, ["x"],
+    )
+
+    # --- model artifacts -------------------------------------------------------
+    sizes = args.decode_sizes.split(",")
+    for name in sizes:
+        cfg = CONFIGS[name]
+        weights_path = os.path.join(art, f"model_{name}.qtz")
+        weights = tensorio.load(weights_path)
+        order = flat_weight_order(cfg)
+        B, L, H, hd, ctx = 8, cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.ctx
+
+        # fp prefill (B=1, S=ctx) — weights as runtime inputs (baking them
+        # as constants would bloat the HLO text ~100×; see to_hlo_text).
+        def prefill(*wargs, _cfg=cfg, _order=tuple(order)):
+            nw = len(_order)
+            params = dict(zip(_order, wargs[:nw]))
+            return forward(_cfg, params, wargs[nw])
+
+        ex_prefill = [jnp.asarray(weights[n]) for n in order] + [
+            jnp.zeros((1, cfg.ctx), jnp.int32)
+        ]
+        lower_and_save(
+            art, f"{name}_prefill_fp", prefill, ex_prefill, manifest,
+            list(order) + ["tokens"],
+        )
+
+        # fp decode step — weights as runtime inputs (manifest order).
+        def decode_fp(*wargs, _cfg=cfg, _order=tuple(order)):
+            nw = len(_order)
+            params = dict(zip(_order, wargs[:nw]))
+            token, pos, kv_k, kv_v = wargs[nw:]
+            return decode_step(_cfg, params, token, pos, kv_k, kv_v)
+
+        ex = [jnp.asarray(weights[n]) for n in order] + [
+            jnp.zeros((B,), jnp.int32),
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((L, B, ctx, H, hd), jnp.float32),
+            jnp.zeros((L, B, ctx, H, hd), jnp.float32),
+        ]
+        lower_and_save(
+            art, f"{name}_decode_fp", decode_fp, ex, manifest,
+            list(order) + ["token", "pos", "kv_k", "kv_v"],
+        )
+
+        # e8p decode step (2-bit, 1 stage).
+        fn, ex, names_in = build_decode_e8p_fn(cfg, 1, abs_t, par_t, hq_cache)
+        lower_and_save(art, f"{name}_decode_e8p", fn, ex, manifest, names_in)
+
+    with open(os.path.join(art, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""Synthetic-language corpus + zeroshot-task generator (build time).
+
+Substitutes for Wikitext2 / C4 / RedPajama / LM-Eval in the paper's
+evaluation (see DESIGN.md §1): a seeded two-level stochastic language —
+a word vocabulary with byte-level spellings and a sparse first-order
+Markov chain over words, plus an agreement rule (gendered noun → later
+pronoun must match) that gives the zeroshot "wino" task something real
+to test.
+
+Outputs (all `.qtz`, byte-level tokens, vocab = 256):
+  corpus_train / corpus_dev / corpus_calib (Hessians) /
+  corpus_test_w2 (same distribution — "Wikitext2-like") /
+  corpus_test_c4 (20% alternate transition matrix — "C4-like")
+  zeroshot_{arce,arcc,piqa,wino}: prefix/option-pair likelihood tasks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from . import tensorio
+
+SEED = 20240207
+N_WORDS = 200
+BRANCH = 8  # successors per word
+
+# Special "agreement" machinery: two noun classes and two pronouns.
+N_NOUNS_A = 12
+N_NOUNS_B = 12
+PRONOUN_A = "zel"
+PRONOUN_B = "vok"
+
+
+class Language:
+    """Deterministic synthetic language."""
+
+    def __init__(self, seed: int = SEED):
+        rng = np.random.RandomState(seed)
+        letters = np.array(list("abcdefghijklmnopqrstuvwxy"))
+        spellings = set()
+        words = []
+        while len(words) < N_WORDS:
+            L = rng.randint(2, 6)
+            w = "".join(rng.choice(letters, size=L))
+            if w in spellings or w in (PRONOUN_A, PRONOUN_B):
+                continue
+            spellings.add(w)
+            words.append(w)
+        # Reserve dedicated pronoun spellings.
+        self.words = words + [PRONOUN_A, PRONOUN_B]
+        self.pron_a = N_WORDS
+        self.pron_b = N_WORDS + 1
+        self.nouns_a = list(range(0, N_NOUNS_A))
+        self.nouns_b = list(range(N_NOUNS_A, N_NOUNS_A + N_NOUNS_B))
+        nv = len(self.words)
+
+        # Sparse Markov successors (primary and alternate "C4" matrix).
+        def make_chain(r):
+            succ = np.zeros((nv, BRANCH), dtype=np.int64)
+            prob = np.zeros((nv, BRANCH), dtype=np.float64)
+            for i in range(nv):
+                succ[i] = r.choice(nv, size=BRANCH, replace=False)
+                p = r.dirichlet(np.ones(BRANCH) * 0.6)
+                prob[i] = p
+            return succ, prob
+
+        self.succ, self.prob = make_chain(rng)
+        self.succ_alt, self.prob_alt = make_chain(np.random.RandomState(seed + 1))
+        # Unigram frequency for "plausible but wrong" distractors.
+        self.unigram = rng.dirichlet(np.ones(nv) * 2.0)
+
+    def sample_sentence(self, rng, alt=False):
+        """Word-id sentence with the agreement rule applied."""
+        succ = self.succ_alt if alt else self.succ
+        prob = self.prob_alt if alt else self.prob
+        n = rng.randint(5, 15)
+        w = rng.randint(len(self.words) - 2)  # never start with a pronoun
+        out = [w]
+        last_gender = None
+        for _ in range(n - 1):
+            w = succ[w][rng.choice(BRANCH, p=prob[w])]
+            # Agreement rule: pronouns are forced to match the last noun.
+            if w in (self.pron_a, self.pron_b):
+                if last_gender is None:
+                    w = int(rng.randint(len(self.words) - 2))
+                else:
+                    w = self.pron_a if last_gender == "a" else self.pron_b
+            if w in self.nouns_a:
+                last_gender = "a"
+                # Inject a matching pronoun soon with prob 1/2 — gives the
+                # model training signal for the rule.
+                if rng.rand() < 0.5:
+                    out.append(int(w))
+                    out.append(self.pron_a)
+                    continue
+            elif w in self.nouns_b:
+                last_gender = "b"
+                if rng.rand() < 0.5:
+                    out.append(int(w))
+                    out.append(self.pron_b)
+                    continue
+            out.append(int(w))
+        return out
+
+    def words_to_bytes(self, word_ids) -> bytes:
+        return (" ".join(self.words[w] for w in word_ids) + ". ").encode("ascii")
+
+    def stream(self, n_tokens: int, seed: int, alt_frac: float = 0.0) -> np.ndarray:
+        """Byte-token stream of exactly n_tokens."""
+        rng = np.random.RandomState(seed)
+        chunks = []
+        total = 0
+        while total < n_tokens:
+            alt = rng.rand() < alt_frac
+            b = self.words_to_bytes(self.sample_sentence(rng, alt=alt))
+            chunks.append(np.frombuffer(b, dtype=np.uint8))
+            total += len(b)
+        toks = np.concatenate(chunks)[:n_tokens]
+        return toks.astype(np.int32)
+
+
+def _encode_task(lang, examples):
+    """Pack (prefix, opt_a, opt_b, label) byte examples into flat arrays."""
+    prefix, opt_a, opt_b, labels = [], [], [], []
+    p_len, a_len, b_len = [], [], []
+    for p, a, b, y in examples:
+        prefix.append(np.frombuffer(p, dtype=np.uint8).astype(np.int32))
+        opt_a.append(np.frombuffer(a, dtype=np.uint8).astype(np.int32))
+        opt_b.append(np.frombuffer(b, dtype=np.uint8).astype(np.int32))
+        p_len.append(len(prefix[-1]))
+        a_len.append(len(opt_a[-1]))
+        b_len.append(len(opt_b[-1]))
+        labels.append(y)
+    return {
+        "prefix": np.concatenate(prefix),
+        "opt_a": np.concatenate(opt_a),
+        "opt_b": np.concatenate(opt_b),
+        "prefix_len": np.array(p_len, dtype=np.int32),
+        "a_len": np.array(a_len, dtype=np.int32),
+        "b_len": np.array(b_len, dtype=np.int32),
+        "label": np.array(labels, dtype=np.int32),
+    }
+
+
+def make_zeroshot(lang: Language, task: str, n: int, seed: int):
+    """Two-option likelihood-comparison tasks of graded difficulty."""
+    rng = np.random.RandomState(seed)
+    nv = len(lang.words)
+    examples = []
+    while len(examples) < n:
+        sent = lang.sample_sentence(rng)
+        if len(sent) < 6:
+            continue
+        k = rng.randint(3, len(sent) - 2)
+        prefix_words = sent[:k]
+        true_next = sent[k]
+
+        if task == "arce":
+            # Easy: true next word vs uniformly random word.
+            wrong = int(rng.randint(nv - 2))
+            if wrong == true_next:
+                continue
+            a, b = lang.words[true_next], lang.words[wrong]
+        elif task == "arcc":
+            # Hard: distractor is globally frequent but not a successor of
+            # the previous word.
+            prev = prefix_words[-1]
+            succ_set = set(lang.succ[prev])
+            cands = np.argsort(-lang.unigram)[:40]
+            cands = [c for c in cands if c not in succ_set and c != true_next]
+            if not cands:
+                continue
+            wrong = int(cands[rng.randint(len(cands))])
+            a, b = lang.words[true_next], lang.words[wrong]
+        elif task == "piqa":
+            # Continuation plausibility: real next-3-words vs shuffled.
+            if len(sent) < k + 3:
+                continue
+            cont = sent[k : k + 3]
+            shuf = cont.copy()
+            rng.shuffle(shuf)
+            if shuf == cont:
+                continue
+            a = " ".join(lang.words[w] for w in cont)
+            b = " ".join(lang.words[w] for w in shuf)
+        elif task == "wino":
+            # Agreement: noun in prefix, options are the two pronouns.
+            gender = "a" if rng.rand() < 0.5 else "b"
+            noun = int(
+                rng.choice(lang.nouns_a if gender == "a" else lang.nouns_b)
+            )
+            prefix_words = sent[:k] + [noun]
+            a = PRONOUN_A if gender == "a" else PRONOUN_B
+            b = PRONOUN_B if gender == "a" else PRONOUN_A
+        else:
+            raise ValueError(task)
+
+        p_bytes = (" ".join(lang.words[w] for w in prefix_words) + " ").encode()
+        # Swap options half the time so the label isn't constant.
+        if rng.rand() < 0.5:
+            examples.append((p_bytes, a.encode(), b.encode(), 0))
+        else:
+            examples.append((p_bytes, b.encode(), a.encode(), 1))
+    return _encode_task(lang, examples)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-tokens", type=int, default=2_500_000)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    lang = Language()
+
+    specs = [
+        ("corpus_train", args.train_tokens, 1, 0.0),
+        ("corpus_dev", 131_072, 2, 0.0),
+        ("corpus_calib", 131_072, 3, 0.0),
+        ("corpus_test_w2", 131_072, 4, 0.0),
+        ("corpus_test_c4", 131_072, 5, 0.2),
+    ]
+    for name, n, seed, alt in specs:
+        toks = lang.stream(n, seed=SEED + 100 + seed, alt_frac=alt)
+        tensorio.save(os.path.join(args.out, f"{name}.qtz"), {"tokens": toks})
+        print(f"{name}: {len(toks)} tokens")
+
+    for i, task in enumerate(["arce", "arcc", "piqa", "wino"]):
+        data = make_zeroshot(lang, task, n=400, seed=SEED + 200 + i)
+        tensorio.save(os.path.join(args.out, f"zeroshot_{task}.qtz"), data)
+        print(f"zeroshot_{task}: {len(data['label'])} examples")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: fused E8P decode + matmul (the paper's CUDA
+`decode_matvec_e8p` rethought for TPU, Algorithm 2 / Appendix C.2).
+
+Layout per grid step (DESIGN.md §Hardware-Adaptation):
+  * the (256, 8) abs table and (256,) parity vector live in VMEM for the
+    whole kernel (the "1 KiB codebook in L1" property — VMEM here),
+  * a (tile_m, nb) tile of 16-bit codewords streams in from HBM,
+  * decode = gather + branch-free sign/parity/shift arithmetic,
+  * the decoded (tile_m, n) tile hits the MXU against the activation
+    panel (x is kept whole in VMEM; n ≤ 1536 for this model family).
+
+CPU note: lowered with interpret=True; the BlockSpec schedule is still
+meaningful (it is what a real Mosaic lowering would use) but wallclock on
+CPU is not a TPU proxy — see EXPERIMENTS.md §Perf for the VMEM/MXU
+estimate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_tile(codes, abs_table, parity):
+    """codes (tm, nb) int32 → weights (tm, nb*8) f32 (codebook units)."""
+    tm, nb = codes.shape
+    s_idx = codes & 0xFF
+    sign_bits = (codes >> 8) & 0x7F
+    shift_bit = (codes >> 15) & 1
+    s = abs_table[s_idx]  # (tm, nb, 8) gather from VMEM
+    par = parity[s_idx]  # (tm, nb)
+    bits = (sign_bits[..., None] >> jnp.arange(7, dtype=jnp.int32)) & 1
+    explicit = jnp.sum(bits, axis=-1)
+    flip7 = ((explicit & 1) != par).astype(jnp.int32)
+    all_bits = jnp.concatenate([bits, flip7[..., None]], axis=-1)  # (tm,nb,8)
+    signs = (1 - 2 * all_bits).astype(jnp.float32)
+    shift = jnp.where(shift_bit == 1, 0.25, -0.25).astype(jnp.float32)
+    w = s * signs + shift[..., None]
+    return w.reshape(tm, nb * 8)
+
+
+def _e8p_matmul_kernel(codes_ref, x_ref, abs_ref, par_ref, o_ref, *, scale: float):
+    codes = codes_ref[...]
+    x = x_ref[...]  # (bx, n)
+    w = _decode_tile(codes, abs_ref[...], par_ref[...]) * scale  # (tm, n)
+    o_ref[...] = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "tile_m"))
+def e8p_matmul(codes, x, abs_table, parity, scale: float, tile_m: int = 64):
+    """One-stage fused decode+matmul: y = x · Ŵᵀ.
+
+    codes: (m, nb) int32 16-bit codewords; x: (B, n) f32 with n = nb*8;
+    returns (B, m) f32. Ŵ = decode(codes)·scale.
+    """
+    m, nb = codes.shape
+    bsz, n = x.shape
+    assert n == nb * 8
+    tile_m = min(tile_m, m)
+    assert m % tile_m == 0, f"m={m} % tile_m={tile_m}"
+    return pl.pallas_call(
+        functools.partial(_e8p_matmul_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct((bsz, m), jnp.float32),
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((tile_m, nb), lambda i: (i, 0)),  # codes tile
+            pl.BlockSpec((bsz, n), lambda i: (0, 0)),  # activations (VMEM)
+            pl.BlockSpec((256, 8), lambda i: (0, 0)),  # codebook (VMEM)
+            pl.BlockSpec((256,), lambda i: (0,)),  # parity (VMEM)
+        ],
+        out_specs=pl.BlockSpec((bsz, tile_m), lambda i: (0, i)),
+        interpret=True,
+    )(codes, x, abs_table, parity)
+
+
+def qlinear_apply(q, x):
+    """Apply a packed QuIP# linear layer (model.QLinear) to x (..., n):
+    y = S_u ⊙ H_mᵀ( Ŵ̃ · H_n(S_v ⊙ x) ), summing RVQ stages (Alg. 2)."""
+    from . import hadamard as had
+
+    lead = x.shape[:-1]
+    n = q.n
+    xb = x.reshape(-1, n)
+    # u = T_v x = H_n (s_v ⊙ x)
+    u = had.had_transform(xb * q.sv[None, :], q.hq_n)
+    # z = Ŵ̃ u  (sum of RVQ stages). The stage scale may be a traced value
+    # (runtime input in the AOT path), so it multiplies *outside* the
+    # kernel — scalars commute with the matmul.
+    z = 0.0
+    for codes, s in zip(q.codes, q.stage_scales):
+        z = z + e8p_matmul(codes, u, q.abs_table, q.parity, 1.0) * s
+    # y = T_uᵀ z = s_u ⊙ H_mᵀ z. H is symmetric for pure FWHT; for the
+    # H_q ⊗ H_p factorization the transpose applies H_qᵀ, handled inside
+    # had_transform_t.
+    y = had_transform_t(z, q.hq_m)
+    y = y * q.su[None, :]
+    return y.reshape(*lead, q.m)
+
+
+def had_transform_t(x, hq=None):
+    """Transpose of kernels.hadamard.had_transform (orthogonal inverse)."""
+    from . import hadamard as had
+
+    b, n = x.shape
+    if hq is None:
+        return had.fwht(x) / jnp.sqrt(jnp.asarray(n, x.dtype))
+    q = hq.shape[0]
+    p = n // q
+    # (H_q ⊗ H_p)ᵀ = H_qᵀ ⊗ H_p: dense factor first as transpose.
+    xr = x.reshape(b, q, p)
+    xr = jnp.einsum("ji,bjp->bip", hq.astype(x.dtype), xr)  # H_qᵀ
+    xr = had.fwht(xr.reshape(b * q, p)).reshape(b, q, p)
+    return xr.reshape(b, n) / jnp.sqrt(jnp.asarray(n, x.dtype))

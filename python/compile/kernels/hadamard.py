@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: blocked Fast Walsh–Hadamard transform.
+
+TPU thinking (DESIGN.md §Hardware-Adaptation): one grid step owns a
+(block_rows, n) tile resident in VMEM; the log₂(n) butterfly stages are
+unrolled inside the kernel as vectorized reshapes — no HBM round-trips
+between stages, which is the property the paper's fused CUDA RHT gets
+from shared memory. Must run interpret=True on this image (CPU PJRT
+cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_kernel(x_ref, o_ref, *, n: int):
+    """FWHT along the last axis of a (rows, n) VMEM tile."""
+    x = x_ref[...]
+    rows = x.shape[0]
+    h = 1
+    while h < n:
+        y = x.reshape(rows, n // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=2).reshape(rows, n)
+        # NOTE: concatenate along axis=2 of (rows, g, h)+(rows, g, h) gives
+        # (rows, g, 2h) = [a+b | a-b] which is exactly the butterfly layout.
+        h *= 2
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fwht(x: jnp.ndarray, block_rows: int = 8) -> jnp.ndarray:
+    """Unnormalized FWHT along the last axis; x: (B, n), n a power of 2."""
+    b, n = x.shape
+    assert n & (n - 1) == 0, f"n={n} must be a power of 2"
+    block_rows = min(block_rows, b)
+    # Pad rows to a multiple of block_rows for an even grid.
+    pad = (-b) % block_rows
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, n), x.dtype)], axis=0)
+    rows = x.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+    return out[:b]
+
+
+def had_transform(x: jnp.ndarray, hq: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Orthogonal (H_q ⊗ H_p)/√n along the last axis (batched).
+
+    The power-of-2 part runs through the Pallas FWHT kernel; the small
+    dense H_q factor (q ∈ {12, 20, 28, ...}) is an einsum the MXU handles
+    natively — mirroring rust `HadTransform::apply`.
+    """
+    b, n = x.shape
+    if hq is None:
+        return fwht(x) / jnp.sqrt(jnp.asarray(n, x.dtype))
+    q = hq.shape[0]
+    p = n // q
+    xr = x.reshape(b, q, p).reshape(b * q, p)
+    xr = fwht(xr).reshape(b, q, p)
+    xr = jnp.einsum("ij,bjp->bip", hq.astype(x.dtype), xr)
+    return xr.reshape(b, n) / jnp.sqrt(jnp.asarray(n, x.dtype))

@@ -1,0 +1,196 @@
+"""Pure-jnp / numpy oracles for the L1 Pallas kernels, plus the canonical
+python-side E8P table construction (must match `rust/src/quant/codebook/
+e8p.rs` bit for bit — the cross-language test compares against the table
+exported by the rust CLI).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# E8P table (mirror of the rust construction: shells of |D̂8| by norm²,
+# lexicographic within shell, 227 entries ≤ 10 plus first 29 of norm² 12).
+# ---------------------------------------------------------------------------
+
+
+def _enumerate_abs_by_norm(target_sq: float) -> list[tuple[float, ...]]:
+    target_h = round(4 * target_sq)  # in quarter units (h = 2v odd)
+    out = []
+
+    def rec(pos, remaining, cur):
+        if pos == 8:
+            if remaining == 0:
+                out.append(tuple(c / 2.0 for c in cur))
+            return
+        rest_min = 8 - pos - 1
+        h = 1
+        while h * h + rest_min <= remaining:
+            rec(pos + 1, remaining - h * h, cur + [h])
+            h += 2
+
+    rec(0, target_h, [])
+    return out
+
+
+def build_e8p_tables() -> tuple[np.ndarray, np.ndarray]:
+    """Returns (abs_table (256,8) f32, parity (256,) int32 — 1 when an odd
+    number of sign flips is required to land in D̂8)."""
+    abs_rows: list[tuple[float, ...]] = []
+    for ns in (2.0, 4.0, 6.0, 8.0, 10.0):
+        abs_rows.extend(_enumerate_abs_by_norm(ns))
+    assert len(abs_rows) == 227, len(abs_rows)
+    abs_rows.extend(_enumerate_abs_by_norm(12.0)[:29])
+    assert len(abs_rows) == 256
+    abs_table = np.array(abs_rows, dtype=np.float32)
+    parity = (np.round(abs_table.sum(axis=1)).astype(np.int64) % 2).astype(np.int32)
+    return abs_table, parity
+
+
+def e8p_decode_ref(codes: np.ndarray, abs_table: np.ndarray, parity: np.ndarray) -> np.ndarray:
+    """Decode int codes (any shape) → (..., 8) f32. Numpy reference."""
+    codes = np.asarray(codes, dtype=np.int64)
+    s_idx = codes & 0xFF
+    sign_bits = (codes >> 8) & 0x7F
+    shift_bit = (codes >> 15) & 1
+    s = abs_table[s_idx]  # (..., 8)
+    bits = ((sign_bits[..., None] >> np.arange(7)) & 1).astype(np.int64)  # (...,7)
+    explicit = bits.sum(axis=-1)
+    flip7 = ((explicit % 2) != parity[s_idx]).astype(np.int64)
+    all_bits = np.concatenate([bits, flip7[..., None]], axis=-1)  # (...,8)
+    signs = 1.0 - 2.0 * all_bits
+    shift = np.where(shift_bit == 1, 0.25, -0.25)[..., None]
+    return (s * signs + shift).astype(np.float32)
+
+
+def e8p_matmul_ref(codes, scale, x, abs_table, parity):
+    """y = Ŵ x for one stage. codes (m, n/8); x (..., n); returns (..., m)."""
+    m, nb = codes.shape
+    w = e8p_decode_ref(np.asarray(codes), abs_table, parity).reshape(m, nb * 8)
+    w = w * scale
+    return np.asarray(x) @ w.T
+
+
+def fwht_ref(x: np.ndarray) -> np.ndarray:
+    """Unnormalized Sylvester FWHT along the last axis (power of 2)."""
+    x = np.array(x, dtype=np.float64, copy=True)
+    n = x.shape[-1]
+    assert n & (n - 1) == 0
+    h = 1
+    while h < n:
+        y = x.reshape(*x.shape[:-1], n // (2 * h), 2, h)
+        a = y[..., 0, :].copy()
+        b = y[..., 1, :].copy()
+        y[..., 0, :] = a + b
+        y[..., 1, :] = a - b
+        x = y.reshape(*x.shape[:-1], n)
+        h *= 2
+    return x
+
+
+def had_transform_ref(x: np.ndarray, hq: np.ndarray | None = None) -> np.ndarray:
+    """Orthogonal (H_q ⊗ H_p)/√n transform along the last axis, matching
+    rust `HadTransform::apply`: row-wise FWHT over p, dense H_q across q."""
+    n = x.shape[-1]
+    if hq is None:
+        return (fwht_ref(x) / np.sqrt(n)).astype(np.float32)
+    q = hq.shape[0]
+    p = n // q
+    xr = np.asarray(x, dtype=np.float64).reshape(*x.shape[:-1], q, p)
+    xr = fwht_ref(xr)
+    xr = np.einsum("ij,...jp->...ip", hq.astype(np.float64), xr)
+    return (xr.reshape(*x.shape[:-1], n) / np.sqrt(n)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Hadamard matrices (Sylvester + Paley I/II) — mirror of
+# rust/src/linalg/hadamard.rs for the non-power-of-2 dims.
+# ---------------------------------------------------------------------------
+
+
+def _is_prime(n):
+    if n < 2:
+        return False
+    return all(n % d for d in range(2, int(n**0.5) + 1))
+
+
+def _legendre(a, p):
+    a %= p
+    if a == 0:
+        return 0
+    return 1 if pow(a, (p - 1) // 2, p) == 1 else -1
+
+
+def _paley1(p):
+    n = p + 1
+    h = np.zeros((n, n))
+    h[0, :] = 1.0
+    h[1:, 0] = -1.0
+    for i in range(1, n):
+        for j in range(1, n):
+            h[i, j] = 1.0 if i == j else _legendre(i - j, p)
+    return h
+
+
+def _paley2(p):
+    m = p + 1
+    c = np.zeros((m, m))
+    c[0, 1:] = 1.0
+    c[1:, 0] = 1.0
+    for i in range(1, m):
+        for j in range(1, m):
+            if i != j:
+                c[i, j] = _legendre(i - j, p)
+    n = 2 * m
+    h = np.zeros((n, n))
+    blocks = {
+        0: np.array([[1.0, -1.0], [-1.0, -1.0]]),
+        1: np.array([[1.0, 1.0], [1.0, -1.0]]),
+        -1: -np.array([[1.0, 1.0], [1.0, -1.0]]),
+    }
+    for i in range(m):
+        for j in range(m):
+            h[2 * i : 2 * i + 2, 2 * j : 2 * j + 2] = blocks[int(c[i, j])]
+    return h
+
+
+def hadamard_matrix(n: int) -> np.ndarray | None:
+    if n == 1:
+        return np.array([[1.0]])
+    if n == 2:
+        return np.array([[1.0, 1.0], [1.0, -1.0]])
+    if n % 4 != 0:
+        return None
+    if (n & (n - 1)) == 0:  # power of two → Sylvester (matches FWHT order)
+        return np.kron(hadamard_matrix(2), hadamard_matrix(n // 2))
+    if n - 1 > 2 and _is_prime(n - 1) and (n - 1) % 4 == 3:
+        return _paley1(n - 1)
+    if n % 2 == 0:
+        half = n // 2
+        if half >= 2 and _is_prime(half - 1) and (half - 1) % 4 == 1:
+            return _paley2(half - 1)
+        h = hadamard_matrix(half)
+        if h is not None:
+            return np.kron(np.array([[1.0, 1.0], [1.0, -1.0]]), h)
+    return None
+
+
+def had_factor(n: int) -> tuple[int, int, np.ndarray | None]:
+    """(p, q, H_q) with n = q·p, p the largest power of 2 with H_{n/p}
+    constructible — mirror of rust `HadTransform::new`."""
+    p = 1 << (n & -n).bit_length() - 1
+    q = n // p
+    while True:
+        if q == 1:
+            return p, q, None
+        hq = hadamard_matrix(q)
+        if hq is not None:
+            return p, q, hq
+        if p == 1:
+            raise ValueError(f"no hadamard factorization for {n}")
+        p //= 2
+        q *= 2

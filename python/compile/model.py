@@ -1,0 +1,312 @@
+"""L2 — the JAX model: a Llama-architecture transformer family (plus MoE
+and non-Llama variants for Table 9), in two modes:
+
+* fp32 — used for training (`train.py`) and the fp16-row artifacts;
+* e8p — every linear layer replaced by the L1 Pallas decode+matmul kernel
+  fed packed QuIP# codewords, with the RHT applied to activations around
+  it (paper Algorithm 2). This is what `aot.py` lowers for the serving
+  runtime.
+
+Weight naming (shared contract with `rust/src/model`):
+  embed (V,d) | layers.{i}.attn_norm (d,) | .wq/.wk/.wv/.wo (d,d)
+  | .mlp_norm (d,) | .w_gate/.w_up (ff,d) | .w_down (d,ff)
+  | final_norm (d,) | lm_head (V,d)
+MoE adds .router (E,d) and expert-indexed .w_gate.{e} etc.; the nonllama
+variant uses .pos_embed, LayerNorm with .{name}_bias, and a GELU MLP.
+
+Linear convention: y = W @ x with W (out,in) — Hessians are (in,in).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import e8p as e8p_kernel
+from .kernels import hadamard as had_kernel
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int = 256
+    ctx: int = 256
+    arch: str = "llama"  # llama | moe | nonllama
+    n_experts: int = 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# The model family (DESIGN.md §6). d=384/ff=1536 exercise the paper's
+# non-power-of-2 Hadamard path (H_12 ⊗ H_32 / H_12 ⊗ H_128).
+CONFIGS = {
+    "s": ModelConfig("s", 128, 2, 4, 512),
+    "m": ModelConfig("m", 256, 4, 8, 1024),
+    "l": ModelConfig("l", 384, 4, 8, 1536),
+    "moe": ModelConfig("moe", 128, 2, 4, 512, arch="moe"),
+    "nonllama": ModelConfig("nonllama", 128, 2, 4, 512, arch="nonllama"),
+}
+
+
+def linear_layer_names(cfg: ModelConfig) -> list[str]:
+    """Every quantizable linear layer, in quantization order."""
+    out = []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        out += [p + "wq", p + "wk", p + "wv", p + "wo"]
+        if cfg.arch == "moe":
+            for e in range(cfg.n_experts):
+                out += [p + f"w_gate.{e}", p + f"w_up.{e}", p + f"w_down.{e}"]
+        else:
+            out += [p + "w_gate", p + "w_up", p + "w_down"]
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    rng = np.random.RandomState(seed)
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def dense(m, n):
+        return jnp.asarray(
+            rng.normal(0, 1.0 / np.sqrt(n), size=(m, n)), dtype=jnp.float32
+        )
+
+    p = {"embed": dense(v, d), "lm_head": dense(v, d)}
+    p["final_norm"] = jnp.ones((d,), jnp.float32)
+    if cfg.arch == "nonllama":
+        p["pos_embed"] = dense(cfg.ctx, d) * 0.1
+        p["final_norm_bias"] = jnp.zeros((d,), jnp.float32)
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        p[pre + "attn_norm"] = jnp.ones((d,), jnp.float32)
+        p[pre + "mlp_norm"] = jnp.ones((d,), jnp.float32)
+        if cfg.arch == "nonllama":
+            p[pre + "attn_norm_bias"] = jnp.zeros((d,), jnp.float32)
+            p[pre + "mlp_norm_bias"] = jnp.zeros((d,), jnp.float32)
+        for nm in ["wq", "wk", "wv", "wo"]:
+            p[pre + nm] = dense(d, d)
+        if cfg.arch == "moe":
+            p[pre + "router"] = dense(cfg.n_experts, d)
+            for e in range(cfg.n_experts):
+                p[pre + f"w_gate.{e}"] = dense(ff, d)
+                p[pre + f"w_up.{e}"] = dense(ff, d)
+                p[pre + f"w_down.{e}"] = dense(d, ff)
+        else:
+            p[pre + "w_gate"] = dense(ff, d)
+            p[pre + "w_up"] = dense(ff, d)
+            p[pre + "w_down"] = dense(d, ff)
+    return p
+
+
+def rms_norm(x, w):
+    return x * w / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def layer_norm(x, w, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * w + b
+
+
+def rope(q, pos):
+    """Rotary embedding. q: (..., S, H, hd); pos: (S,) absolute positions."""
+    hd = q.shape[-1]
+    half = hd // 2
+    freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+    cos = jnp.cos(ang)[:, None, :]  # (S, 1, half)
+    sin = jnp.sin(ang)[:, None, :]
+    q1, q2 = q[..., :half], q[..., half:]
+    return jnp.concatenate([q1 * cos - q2 * sin, q1 * sin + q2 * cos], axis=-1)
+
+
+def _attention(q, k, v, mask):
+    """q,k,v: (B,S,H,hd) / (B,T,H,hd); mask (S,T) additive."""
+    hd = q.shape[-1]
+    att = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(hd)
+    att = att + mask[None, None, :, :]
+    att = jax.nn.softmax(att, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", att, v)
+
+
+class LinearFn:
+    """Dispatch table: fp32 dense or e8p-packed linear application."""
+
+    def __init__(self, params, qparams=None):
+        self.params = params
+        self.q = qparams
+
+    def __call__(self, name: str, x):
+        """x: (..., n) → (..., m)."""
+        if self.q is not None and name in self.q:
+            return e8p_kernel.qlinear_apply(self.q[name], x)
+        w = self.params[name]
+        return x @ w.T
+
+
+def block_llama(cfg, lin, params, i, x, pos, kv=None, new_kv=None):
+    """One transformer block. x: (B,S,d). Returns (x, new_kv)."""
+    pre = f"layers.{i}."
+    B, S, d = x.shape
+    h = rms_norm(x, params[pre + "attn_norm"])
+    q = lin(pre + "wq", h).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = lin(pre + "wk", h).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    v = lin(pre + "wv", h).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    q = rope(q, pos)
+    k = rope(k, pos)
+    if kv is None:
+        # Prefill: causal mask over S.
+        mask = jnp.where(
+            jnp.arange(S)[:, None] >= jnp.arange(S)[None, :], 0.0, -1e30
+        )
+        att = _attention(q, k, v, mask)
+        if new_kv is not None:
+            new_kv[i] = (k, v)
+    else:
+        # Decode: append to cache at position pos[0] (S == 1).
+        k_cache, v_cache = kv  # (B, ctx, H, hd)
+        p = pos[0]
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, p, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, p, 0, 0))
+        t = jnp.arange(k_cache.shape[1])
+        mask = jnp.where(t[None, :] <= p, 0.0, -1e30)  # (1, ctx)
+        att = _attention(q, k_cache, v_cache, mask)
+        new_kv[i] = (k_cache, v_cache)
+    x = x + lin(pre + "wo", att.reshape(B, S, d))
+
+    h = rms_norm(x, params[pre + "mlp_norm"])
+    if cfg.arch == "moe":
+        logits_r = h @ params[pre + "router"].T  # (B,S,E)
+        gate = jax.nn.softmax(logits_r, axis=-1)
+        outs = []
+        for e in range(cfg.n_experts):
+            ge = jax.nn.silu(lin(pre + f"w_gate.{e}", h)) * lin(pre + f"w_up.{e}", h)
+            outs.append(lin(pre + f"w_down.{e}", ge))
+        moe = sum(gate[..., e : e + 1] * outs[e] for e in range(cfg.n_experts))
+        x = x + moe
+    else:
+        ff = jax.nn.silu(lin(pre + "w_gate", h)) * lin(pre + "w_up", h)
+        x = x + lin(pre + "w_down", ff)
+    return x
+
+
+def block_nonllama(cfg, lin, params, i, x, pos, kv=None, new_kv=None):
+    pre = f"layers.{i}."
+    B, S, d = x.shape
+    h = layer_norm(x, params[pre + "attn_norm"], params[pre + "attn_norm_bias"])
+    q = lin(pre + "wq", h).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = lin(pre + "wk", h).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    v = lin(pre + "wv", h).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if kv is None:
+        mask = jnp.where(jnp.arange(S)[:, None] >= jnp.arange(S)[None, :], 0.0, -1e30)
+        att = _attention(q, k, v, mask)
+        if new_kv is not None:
+            new_kv[i] = (k, v)
+    else:
+        k_cache, v_cache = kv
+        p = pos[0]
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, p, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, p, 0, 0))
+        t = jnp.arange(k_cache.shape[1])
+        mask = jnp.where(t[None, :] <= p, 0.0, -1e30)
+        att = _attention(q, k_cache, v_cache, mask)
+        new_kv[i] = (k_cache, v_cache)
+    x = x + lin(pre + "wo", att.reshape(B, S, d))
+    h = layer_norm(x, params[pre + "mlp_norm"], params[pre + "mlp_norm_bias"])
+    # GeGLU MLP: same layer inventory as the llama block, different
+    # nonlinearity/norm/positional scheme — the Table 9 "non-Llama" point.
+    ff = jax.nn.gelu(lin(pre + "w_gate", h)) * lin(pre + "w_up", h)
+    x = x + lin(pre + "w_down", ff)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, qparams=None, return_kv=False):
+    """Full-sequence forward (training / prefill). tokens: (B,S) int32."""
+    lin = LinearFn(params, qparams)
+    B, S = tokens.shape
+    x = params["embed"][tokens]  # (B,S,d)
+    pos = jnp.arange(S)
+    if cfg.arch == "nonllama":
+        x = x + params["pos_embed"][None, :S, :]
+    new_kv = [None] * cfg.n_layers if return_kv else None
+    block = block_nonllama if cfg.arch == "nonllama" else block_llama
+    for i in range(cfg.n_layers):
+        x = block(cfg, lin, params, i, x, pos, kv=None, new_kv=new_kv)
+    if cfg.arch == "nonllama":
+        x = layer_norm(x, params["final_norm"], params["final_norm_bias"])
+    else:
+        x = rms_norm(x, params["final_norm"])
+    logits = lin("lm_head", x)
+    if return_kv:
+        return logits, new_kv
+    return logits
+
+
+def decode_step(cfg: ModelConfig, params, token, pos_scalar, kv_k, kv_v, qparams=None):
+    """Single-token decode with KV cache.
+
+    token: (B,) int32; pos_scalar: () int32; kv_k/kv_v: (L,B,ctx,H,hd).
+    Returns (logits (B,V), kv_k', kv_v').
+    """
+    lin = LinearFn(params, qparams)
+    B = token.shape[0]
+    x = params["embed"][token][:, None, :]  # (B,1,d)
+    pos = jnp.array([0], dtype=jnp.int32) + pos_scalar
+    if cfg.arch == "nonllama":
+        pe = params["pos_embed"][pos]  # (1, d)
+        x = x + pe[None, :, :]
+    new_kv = [None] * cfg.n_layers
+    block = block_nonllama if cfg.arch == "nonllama" else block_llama
+    for i in range(cfg.n_layers):
+        x = block(
+            cfg, lin, params, i, x, pos, kv=(kv_k[i], kv_v[i]), new_kv=new_kv
+        )
+    if cfg.arch == "nonllama":
+        x = layer_norm(x, params["final_norm"], params["final_norm_bias"])
+    else:
+        x = rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"].T)[:, 0, :]
+    kv_k2 = jnp.stack([new_kv[i][0] for i in range(cfg.n_layers)])
+    kv_v2 = jnp.stack([new_kv[i][1] for i in range(cfg.n_layers)])
+    return logits, kv_k2, kv_v2
+
+
+# ---------------------------------------------------------------------------
+# E8P-quantized parameter containers (built by aot.py from the rust export).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class QLinear:
+    """Packed QuIP# linear layer for the jax/Pallas path."""
+
+    codes: list  # per-stage (m, n/8) int32 arrays of 16-bit codewords
+    stage_scales: list  # python floats
+    su: jnp.ndarray  # (m,)
+    sv: jnp.ndarray  # (n,)
+    m: int
+    n: int
+    # Shared decode tables:
+    abs_table: jnp.ndarray  # (256, 8)
+    parity: jnp.ndarray  # (256,) int32
+    # Dense H_q factors for non-power-of-2 dims (None for pure FWHT):
+    hq_m: jnp.ndarray | None = None
+    hq_n: jnp.ndarray | None = None
+
+
+def loss_fn(cfg, params, tokens):
+    """Next-token cross entropy over a (B,S) batch."""
+    logits = forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)

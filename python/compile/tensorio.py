@@ -1,0 +1,61 @@
+"""`.qtz` tensor container — the python half of `rust/src/util/tensorio.rs`.
+
+Little-endian; see the rust module for the byte layout. Build-time only:
+python writes corpora / trained weights / packed tables, rust reads them.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+_DTYPES = {
+    0: np.float32,
+    1: np.int32,
+    2: np.uint16,
+    3: np.uint8,
+    4: np.int64,
+}
+_DTYPE_TAGS = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+MAGIC = b"QTZ1"
+
+
+def save(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write a name→array dict. Arrays are cast-checked, not silently cast."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        # Sorted for byte-for-byte determinism (matches rust BTreeMap order).
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            if arr.dtype not in _DTYPE_TAGS:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_TAGS[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            payload = arr.tobytes()
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            tag, ndim = struct.unpack("<BB", f.read(2))
+            shape = tuple(struct.unpack("<I", f.read(4))[0] for _ in range(ndim))
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            data = f.read(nbytes)
+            arr = np.frombuffer(data, dtype=_DTYPES[tag]).reshape(shape).copy()
+            out[name] = arr
+    return out

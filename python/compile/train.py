@@ -1,0 +1,101 @@
+"""Build-time trainer: fits the model family on the synthetic corpus so
+quantization operates on *real trained weights* (outliers, anisotropic
+Hessians), then writes `.qtz` checkpoints the rust side consumes.
+
+Runs once under `make artifacts`; wall-clock is bounded by the per-size
+step counts below (CPU XLA). A training log (loss curve) is saved next to
+each checkpoint and summarized in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tensorio
+from .model import CONFIGS, init_params, loss_fn
+
+# Per-size training budget (steps, batch, seqlen). A few hundred steps is
+# enough for the quantization orderings to be meaningful; the loss curves
+# in artifacts/train_log_*.json document convergence.
+BUDGET = {
+    "s": (600, 32, 128),
+    "m": (400, 24, 128),
+    "l": (250, 16, 128),
+    "moe": (300, 32, 128),
+    "nonllama": (300, 32, 128),
+}
+
+
+def batches(tokens: np.ndarray, batch: int, seqlen: int, seed: int):
+    rng = np.random.RandomState(seed)
+    n = len(tokens) - seqlen - 1
+    while True:
+        idx = rng.randint(0, n, size=batch)
+        yield np.stack([tokens[i : i + seqlen + 1] for i in idx]).astype(np.int32)
+
+
+def adam_init(params):
+    return (
+        {k: jnp.zeros_like(v) for k, v in params.items()},
+        {k: jnp.zeros_like(v) for k, v in params.items()},
+    )
+
+
+def train_one(name: str, art: str, tokens: np.ndarray, seed: int = 0):
+    cfg = CONFIGS[name]
+    steps, batch, seqlen = BUDGET[name]
+    params = init_params(cfg, seed=seed)
+    m, v = adam_init(params)
+    lr, b1, b2, eps = 3e-3, 0.9, 0.95, 1e-8
+
+    @jax.jit
+    def step_fn(params, m, v, toks, t):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, toks))(params)
+        new_p, new_m, new_v = {}, {}, {}
+        for k in params:
+            g = grads[k]
+            new_m[k] = b1 * m[k] + (1 - b1) * g
+            new_v[k] = b2 * v[k] + (1 - b2) * g * g
+            mhat = new_m[k] / (1 - b1**t)
+            vhat = new_v[k] / (1 - b2**t)
+            new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return new_p, new_m, new_v, loss
+
+    gen = batches(tokens, batch, seqlen, seed=123 + seed)
+    log = []
+    t0 = time.time()
+    for t in range(1, steps + 1):
+        toks = next(gen)
+        params, m, v, loss = step_fn(params, m, v, toks, float(t))
+        if t % 25 == 0 or t == 1:
+            log.append({"step": t, "loss": float(loss)})
+            print(f"[{name}] step {t}/{steps} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    out = {k: np.asarray(v_, dtype=np.float32) for k, v_ in params.items()}
+    tensorio.save(os.path.join(art, f"model_{name}.qtz"), out)
+    with open(os.path.join(art, f"train_log_{name}.json"), "w") as f:
+        json.dump({"config": cfg.__dict__, "budget": BUDGET[name], "log": log}, f)
+    print(f"[{name}] saved ({sum(a.size for a in out.values())} params, "
+          f"final loss {log[-1]['loss']:.4f})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="../artifacts")
+    ap.add_argument("--sizes", default="s,m,l,moe,nonllama")
+    args = ap.parse_args()
+    tokens = tensorio.load(os.path.join(args.art, "corpus_train.qtz"))["tokens"]
+    for name in args.sizes.split(","):
+        train_one(name, args.art, tokens)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""L1 Pallas kernels vs the pure-jnp/numpy oracle (`ref.py`), with
+hypothesis sweeping shapes and codes. interpret=True throughout."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import e8p as e8p_kernel
+from compile.kernels import hadamard as had_kernel
+from compile.kernels.ref import (
+    build_e8p_tables,
+    e8p_matmul_ref,
+    fwht_ref,
+    had_factor,
+    had_transform_ref,
+    hadamard_matrix,
+)
+
+ABS_T, PAR_T = build_e8p_tables()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logn=st.integers(min_value=1, max_value=9),
+    rows=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fwht_kernel_matches_ref(logn, rows, seed):
+    n = 1 << logn
+    x = np.random.RandomState(seed).randn(rows, n).astype(np.float32)
+    got = np.asarray(had_kernel.fwht(jnp.asarray(x)))
+    want = fwht_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mt=st.sampled_from([8, 16, 64, 128]),
+    nb=st.sampled_from([1, 4, 16, 48]),
+    bsz=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_e8p_matmul_kernel_matches_ref(mt, nb, bsz, seed):
+    rng = np.random.RandomState(seed)
+    codes = rng.randint(0, 2**16, size=(mt, nb)).astype(np.int32)
+    x = rng.randn(bsz, nb * 8).astype(np.float32)
+    got = np.asarray(
+        e8p_kernel.e8p_matmul(
+            jnp.asarray(codes), jnp.asarray(x), jnp.asarray(ABS_T),
+            jnp.asarray(PAR_T), 1.0, tile_m=min(mt, 64),
+        )
+    )
+    want = e8p_matmul_ref(codes, 1.0, x, ABS_T, PAR_T)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_e8p_scale_commutes(seed):
+    rng = np.random.RandomState(seed)
+    codes = rng.randint(0, 2**16, size=(16, 4)).astype(np.int32)
+    x = rng.randn(2, 32).astype(np.float32)
+    a = np.asarray(
+        e8p_kernel.e8p_matmul(jnp.asarray(codes), jnp.asarray(x),
+                              jnp.asarray(ABS_T), jnp.asarray(PAR_T), 0.37)
+    )
+    b = 0.37 * np.asarray(
+        e8p_kernel.e8p_matmul(jnp.asarray(codes), jnp.asarray(x),
+                              jnp.asarray(ABS_T), jnp.asarray(PAR_T), 1.0)
+    )
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [128, 256, 384, 512, 1536])
+def test_had_transform_orthogonal(n):
+    p, q, hq = had_factor(n)
+    assert p * q == n
+    rng = np.random.RandomState(0)
+    x = rng.randn(4, n).astype(np.float32)
+    y = np.asarray(had_kernel.had_transform(
+        jnp.asarray(x), None if hq is None else jnp.asarray(hq.astype(np.float32))
+    ))
+    # Norm preservation (orthogonality).
+    np.testing.assert_allclose(
+        np.linalg.norm(y, axis=1), np.linalg.norm(x, axis=1), rtol=1e-4
+    )
+    # Against the numpy reference.
+    want = had_transform_ref(x, hq)
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-3)
+
+
+def test_hadamard_matrices_exist_for_model_dims():
+    for n in [12, 20, 28, 128, 384, 1536]:
+        p, q, hq = had_factor(n)
+        assert p * q == n
+        if hq is not None:
+            hhT = hq @ hq.T
+            np.testing.assert_allclose(hhT, q * np.eye(q), atol=1e-9)
+
+
+def test_e8p_tables_shape_and_parity():
+    assert ABS_T.shape == (256, 8)
+    # 227 entries with norm² ≤ 10, 29 with norm² = 12.
+    ns = (ABS_T.astype(np.float64) ** 2).sum(axis=1)
+    assert int((ns <= 10 + 1e-9).sum()) == 227
+    assert int(np.isclose(ns, 12.0).sum()) == 29
+    # All entries positive half-odd-integers.
+    assert (ABS_T > 0).all()
+    assert np.allclose((ABS_T * 2) % 2, 1)
+    # Parity definition: odd integer row-sum → 1.
+    sums = np.round(ABS_T.sum(axis=1)).astype(int)
+    np.testing.assert_array_equal(PAR_T, sums % 2)
+
+
+def test_e8p_decode_points_in_e8_plus_quarter():
+    from compile.kernels.ref import e8p_decode_ref
+
+    rng = np.random.RandomState(1)
+    codes = rng.randint(0, 2**16, size=512)
+    v = e8p_decode_ref(codes, ABS_T, PAR_T).astype(np.float64)
+    for row in v:
+        ok = False
+        for shift in (0.25, -0.25):
+            w = row - shift
+            half_int = np.allclose((w * 2) % 2, 1)
+            int_ = np.allclose(w % 1, 0)
+            s = round(float(w.sum()))
+            if (half_int or int_) and abs(w.sum() - s) < 1e-9 and s % 2 == 0:
+                ok = True
+        assert ok, f"{row} not in E8 + 1/4"

@@ -1,0 +1,110 @@
+"""L2 model invariants: shapes, causality, prefill/decode agreement, and
+the quantized (Pallas-kernel) linear path against dense reconstruction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import e8p as e8p_kernel
+from compile.kernels.ref import build_e8p_tables, e8p_decode_ref, had_factor
+from compile.model import CONFIGS, QLinear, decode_step, forward, init_params, loss_fn
+
+ABS_T, PAR_T = build_e8p_tables()
+
+
+def test_forward_shapes_all_archs():
+    for name in ["s", "moe", "nonllama"]:
+        cfg = CONFIGS[name]
+        p = init_params(cfg, 0)
+        logits = forward(cfg, p, jnp.zeros((2, 16), jnp.int32))
+        assert logits.shape == (2, 16, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality():
+    cfg = CONFIGS["s"]
+    p = init_params(cfg, 1)
+    t = np.zeros((1, 12), np.int32)
+    t[0] = np.arange(12)
+    l1 = forward(cfg, p, jnp.asarray(t))
+    t2 = t.copy()
+    t2[0, -1] = 99
+    l2 = forward(cfg, p, jnp.asarray(t2))
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], atol=1e-5)
+    assert float(jnp.abs(l1[0, -1] - l2[0, -1]).max()) > 1e-4
+
+
+def test_prefill_matches_decode():
+    cfg = CONFIGS["s"]
+    p = init_params(cfg, 2)
+    toks = np.random.RandomState(0).randint(0, 256, size=(1, 6)).astype(np.int32)
+    full = forward(cfg, p, jnp.asarray(toks))
+    B, L, H, hd, ctx = 1, cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.ctx
+    kv_k = jnp.zeros((L, B, ctx, H, hd))
+    kv_v = jnp.zeros((L, B, ctx, H, hd))
+    for t in range(6):
+        logits, kv_k, kv_v = decode_step(
+            cfg, p, jnp.asarray(toks[:, t]), jnp.asarray(t, jnp.int32), kv_k, kv_v
+        )
+    np.testing.assert_allclose(
+        np.asarray(logits[0]), np.asarray(full[0, -1]), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_loss_decreases_with_training_steps():
+    cfg = CONFIGS["s"]
+    p = init_params(cfg, 3)
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(97, 110, size=(8, 33)).astype(np.int32))
+    grad_fn = jax.jit(jax.value_and_grad(lambda pp: loss_fn(cfg, pp, toks)))
+    l0, g = grad_fn(p)
+    for _ in range(10):
+        _, g = grad_fn(p)
+        p = {k: v - 1e-2 * g[k] for k, v in p.items()}
+    l1, _ = grad_fn(p)
+    assert float(l1) < float(l0), f"{float(l1)} !< {float(l0)}"
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_qlinear_apply_matches_dense_reconstruction(seed):
+    """The full Algorithm-2 path (RHT → e8p matmul → RHTᵀ) must equal the
+    dense W_eff = diag(su)·Hᵀ·Ŵ̃·H·diag(sv) reconstruction."""
+    rng = np.random.RandomState(seed)
+    m, n = 64, 128
+    nb = n // 8
+    codes = rng.randint(0, 2**16, size=(m, nb)).astype(np.int32)
+    scale = 0.11
+    su = rng.choice([-1.0, 1.0], size=m).astype(np.float32)
+    sv = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    ql = QLinear(
+        codes=[jnp.asarray(codes)],
+        stage_scales=[scale],
+        su=jnp.asarray(su),
+        sv=jnp.asarray(sv),
+        m=m,
+        n=n,
+        abs_table=jnp.asarray(ABS_T),
+        parity=jnp.asarray(PAR_T),
+        hq_m=None,
+        hq_n=None,
+    )
+    x = rng.randn(3, n).astype(np.float32)
+    got = np.asarray(e8p_kernel.qlinear_apply(ql, jnp.asarray(x)))
+
+    # Dense reconstruction.
+    w_tilde = e8p_decode_ref(codes, ABS_T, PAR_T).reshape(m, n) * scale
+
+    def hmat(k):
+        p, q, hq = had_factor(k)
+        from compile.kernels.ref import fwht_ref
+
+        eye = np.eye(k, dtype=np.float64)
+        return fwht_ref(eye).T / np.sqrt(k)  # pure pow2 here
+
+    hm = hmat(m)
+    hn = hmat(n)
+    w_eff = np.diag(su) @ hm.T @ w_tilde @ hn @ np.diag(sv)
+    want = x @ w_eff.T
+    np.testing.assert_allclose(got, want.astype(np.float32), rtol=1e-3, atol=1e-2)

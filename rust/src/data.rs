@@ -1,0 +1,92 @@
+//! Workload loading: token corpora and zeroshot tasks produced by
+//! `python/compile/datagen.py` at build time (`.qtz` containers).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::tensorio::TensorFile;
+
+/// A byte-token stream.
+pub fn load_corpus(art: impl AsRef<Path>, name: &str) -> Result<Vec<u8>> {
+    let tf = TensorFile::load(art.as_ref().join(format!("{name}.qtz")))
+        .with_context(|| format!("loading corpus {name}"))?;
+    let toks = tf.get("tokens")?.to_i32()?;
+    Ok(toks.into_iter().map(|t| t as u8).collect())
+}
+
+/// One two-option likelihood-comparison example.
+#[derive(Clone, Debug)]
+pub struct ZeroshotExample {
+    pub prefix: Vec<u8>,
+    pub opt_a: Vec<u8>,
+    pub opt_b: Vec<u8>,
+    /// 0 if option A is correct, 1 if option B.
+    pub label: usize,
+}
+
+/// A zeroshot task (our ArcE/ArcC/PiQA/Wino analogs).
+pub struct ZeroshotTask {
+    pub name: String,
+    pub examples: Vec<ZeroshotExample>,
+}
+
+pub fn load_zeroshot(art: impl AsRef<Path>, task: &str) -> Result<ZeroshotTask> {
+    let tf = TensorFile::load(art.as_ref().join(format!("zeroshot_{task}.qtz")))
+        .with_context(|| format!("loading zeroshot task {task}"))?;
+    let prefix = tf.get("prefix")?.to_i32()?;
+    let opt_a = tf.get("opt_a")?.to_i32()?;
+    let opt_b = tf.get("opt_b")?.to_i32()?;
+    let p_len = tf.get("prefix_len")?.to_i32()?;
+    let a_len = tf.get("a_len")?.to_i32()?;
+    let b_len = tf.get("b_len")?.to_i32()?;
+    let label = tf.get("label")?.to_i32()?;
+
+    let mut examples = Vec::with_capacity(label.len());
+    let (mut po, mut ao, mut bo) = (0usize, 0usize, 0usize);
+    for i in 0..label.len() {
+        let (pl, al, bl) = (p_len[i] as usize, a_len[i] as usize, b_len[i] as usize);
+        examples.push(ZeroshotExample {
+            prefix: prefix[po..po + pl].iter().map(|&t| t as u8).collect(),
+            opt_a: opt_a[ao..ao + al].iter().map(|&t| t as u8).collect(),
+            opt_b: opt_b[bo..bo + bl].iter().map(|&t| t as u8).collect(),
+            label: label[i] as usize,
+        });
+        po += pl;
+        ao += al;
+        bo += bl;
+    }
+    Ok(ZeroshotTask {
+        name: task.to_string(),
+        examples,
+    })
+}
+
+pub const ZEROSHOT_TASKS: [&str; 4] = ["arce", "arcc", "piqa", "wino"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensorio::{TensorData, TensorFile};
+
+    #[test]
+    fn zeroshot_roundtrip() {
+        let dir = std::env::temp_dir();
+        let mut tf = TensorFile::new();
+        tf.insert("prefix", TensorData::from_i32(vec![5], &[1, 2, 3, 4, 5]));
+        tf.insert("opt_a", TensorData::from_i32(vec![3], &[10, 11, 12]));
+        tf.insert("opt_b", TensorData::from_i32(vec![2], &[20, 21]));
+        tf.insert("prefix_len", TensorData::from_i32(vec![2], &[2, 3]));
+        tf.insert("a_len", TensorData::from_i32(vec![2], &[1, 2]));
+        tf.insert("b_len", TensorData::from_i32(vec![2], &[1, 1]));
+        tf.insert("label", TensorData::from_i32(vec![2], &[0, 1]));
+        tf.save(dir.join("zeroshot_fake.qtz")).unwrap();
+        let task = load_zeroshot(&dir, "fake").unwrap();
+        assert_eq!(task.examples.len(), 2);
+        assert_eq!(task.examples[0].prefix, vec![1, 2]);
+        assert_eq!(task.examples[1].prefix, vec![3, 4, 5]);
+        assert_eq!(task.examples[1].opt_a, vec![11, 12]);
+        assert_eq!(task.examples[1].label, 1);
+        std::fs::remove_file(dir.join("zeroshot_fake.qtz")).ok();
+    }
+}

@@ -1,0 +1,139 @@
+//! Evaluation harness: perplexity (Wikitext2/C4 protocol analog) and
+//! zeroshot likelihood-comparison accuracy (LM-Eval `acc` analog).
+
+use crate::data::ZeroshotTask;
+use crate::model::{Model, NoHook};
+
+/// Log-softmax normalizer for one logits row.
+fn log_z(row: &[f32]) -> f32 {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln()
+}
+
+/// Perplexity over a token stream with non-overlapping windows of length
+/// `window` (the paper's "context length" protocol: 2048 vs 4096 ↔ our
+/// 128 vs 256). `max_tokens` bounds the evaluation cost.
+pub fn perplexity(model: &Model, tokens: &[u8], window: usize, max_tokens: usize) -> f64 {
+    let usable = tokens.len().min(max_tokens);
+    let mut total_nll = 0.0f64;
+    let mut count = 0usize;
+    let mut start = 0usize;
+    while start + window + 1 <= usable {
+        let seq = &tokens[start..start + window + 1];
+        let logits = model.forward(&seq[..window], &mut NoHook);
+        let v = model.cfg.vocab;
+        for i in 0..window {
+            let row = &logits[i * v..(i + 1) * v];
+            let target = seq[i + 1] as usize;
+            let nll = log_z(row) - row[target];
+            total_nll += nll as f64;
+            count += 1;
+        }
+        start += window;
+    }
+    (total_nll / count.max(1) as f64).exp()
+}
+
+/// Sum log-probability of `cont` given `prefix` (LM-Eval style scoring).
+pub fn continuation_logprob(model: &Model, prefix: &[u8], cont: &[u8]) -> f64 {
+    let mut seq = Vec::with_capacity(prefix.len() + cont.len());
+    seq.extend_from_slice(prefix);
+    seq.extend_from_slice(cont);
+    let ctx = model.cfg.ctx;
+    // Clip from the left if too long (keep the continuation).
+    let clipped: &[u8] = if seq.len() > ctx { &seq[seq.len() - ctx..] } else { &seq };
+    let p_len = clipped.len() - cont.len();
+    let logits = model.forward(&clipped[..clipped.len() - 1], &mut NoHook);
+    let v = model.cfg.vocab;
+    let mut lp = 0.0f64;
+    for (j, &tok) in cont.iter().enumerate() {
+        let pos = p_len + j - 1; // logits index predicting this token
+        let row = &logits[pos * v..(pos + 1) * v];
+        lp += (row[tok as usize] - log_z(row)) as f64;
+    }
+    lp
+}
+
+/// Accuracy on a two-option task: pick the higher-likelihood option.
+pub fn zeroshot_accuracy(model: &Model, task: &ZeroshotTask, max_examples: usize) -> f64 {
+    let n = task.examples.len().min(max_examples);
+    let mut correct = 0usize;
+    for ex in task.examples.iter().take(n) {
+        let la = continuation_logprob(model, &ex.prefix, &ex.opt_a);
+        let lb = continuation_logprob(model, &ex.prefix, &ex.opt_b);
+        let pick = if la >= lb { 0 } else { 1 };
+        if pick == ex.label {
+            correct += 1;
+        }
+    }
+    correct as f64 / n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ZeroshotExample;
+    use crate::model::tests_support::tiny_model;
+
+    #[test]
+    fn perplexity_bounded_by_vocab() {
+        let m = tiny_model(1);
+        let tokens: Vec<u8> = (0..200).map(|i| (i * 13 % 64) as u8).collect();
+        let ppl = perplexity(&m, &tokens, 16, 128);
+        assert!(ppl > 1.0, "ppl={ppl}");
+        // A random-ish model can't be much worse than uniform over 64.
+        assert!(ppl < 1000.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn perplexity_uniform_logits_equals_vocab() {
+        // Zeroed lm_head → uniform distribution → ppl == vocab.
+        let mut m = tiny_model(2);
+        let v = m.cfg.vocab;
+        let d = m.cfg.d_model;
+        m.set_linear("lm_head", vec![0.0; v * d]);
+        let tokens: Vec<u8> = (0..100).map(|i| (i % 64) as u8).collect();
+        let ppl = perplexity(&m, &tokens, 16, 64);
+        assert!((ppl - v as f64).abs() < 0.5, "ppl={ppl} want {v}");
+    }
+
+    #[test]
+    fn continuation_logprob_is_negative_and_additive() {
+        let m = tiny_model(3);
+        let lp1 = continuation_logprob(&m, &[1, 2, 3], &[4]);
+        assert!(lp1 < 0.0);
+        let lp2 = continuation_logprob(&m, &[1, 2, 3], &[4, 5]);
+        // Longer continuation ⇒ not higher probability.
+        assert!(lp2 <= lp1 + 1e-6);
+    }
+
+    #[test]
+    fn zeroshot_on_rigged_task() {
+        // Option equal to argmax continuation should win vs an unlikely one.
+        let m = tiny_model(4);
+        let prefix = vec![1u8, 2, 3, 4];
+        let logits = m.forward(&prefix, &mut crate::model::NoHook);
+        let v = m.cfg.vocab;
+        let last = &logits[(prefix.len() - 1) * v..prefix.len() * v];
+        let best = (0..v).max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap()).unwrap() as u8;
+        let worst = (0..v).min_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap()).unwrap() as u8;
+        let task = ZeroshotTask {
+            name: "rigged".into(),
+            examples: vec![
+                ZeroshotExample {
+                    prefix: prefix.clone(),
+                    opt_a: vec![best],
+                    opt_b: vec![worst],
+                    label: 0,
+                },
+                ZeroshotExample {
+                    prefix,
+                    opt_a: vec![worst],
+                    opt_b: vec![best],
+                    label: 1,
+                },
+            ],
+        };
+        assert_eq!(zeroshot_accuracy(&m, &task, 10), 1.0);
+    }
+}

@@ -1,0 +1,226 @@
+//! Shared experiment runner behind every table/figure driver.
+//!
+//! Owns trained models, calibration Hessians, quantized models and a
+//! disk-backed metric cache (`results/cache.json`) so that Table 2/3/4/…
+//! drivers reuse each other's work: a metric is computed at most once per
+//! (model, method, metric) triple across the whole reproduction.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data;
+use crate::eval;
+use crate::ft::{quantize_model_ft, FtConfig};
+use crate::hessian::collect_hessians;
+use crate::linalg::Matrix;
+use crate::model::Model;
+use crate::qmodel::{quantize_model, QuantizedModel};
+use crate::quant::pipeline::Method;
+use crate::util::json::Json;
+
+pub const SEED: u64 = 7140;
+
+/// Evaluation protocol constants (DESIGN.md §6): window 128 ↔ the paper's
+/// ctx-2048 protocol, window 256 ↔ ctx-4096.
+pub const WINDOW_SHORT: usize = 128;
+pub const WINDOW_NATIVE: usize = 256;
+
+pub struct Runner {
+    pub art: PathBuf,
+    cache_path: PathBuf,
+    cache: BTreeMap<String, f64>,
+    models: BTreeMap<String, Arc<Model>>,
+    hessians: BTreeMap<String, Arc<BTreeMap<String, Matrix>>>,
+    qmodels: BTreeMap<String, Arc<QuantizedModel>>,
+    corpora: BTreeMap<String, Arc<Vec<u8>>>,
+    /// Tokens per perplexity evaluation (speed/precision knob).
+    pub eval_tokens: usize,
+    pub zeroshot_examples: usize,
+    /// Calibration windows for Hessian generation (paper §F.2 analog).
+    pub calib_windows: usize,
+}
+
+impl Runner {
+    pub fn new(art: impl Into<PathBuf>) -> Result<Runner> {
+        let art = art.into();
+        let cache_path = PathBuf::from("results/cache.json");
+        let mut cache = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&cache_path) {
+            if let Ok(Json::Obj(map)) = Json::parse(&text) {
+                for (k, v) in map {
+                    if let Some(x) = v.as_f64() {
+                        cache.insert(k, x);
+                    }
+                }
+            }
+        }
+        Ok(Runner {
+            art,
+            cache_path,
+            cache,
+            models: BTreeMap::new(),
+            hessians: BTreeMap::new(),
+            qmodels: BTreeMap::new(),
+            corpora: BTreeMap::new(),
+            eval_tokens: std::env::var("QUIPSHARP_EVAL_TOKENS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(4096),
+            zeroshot_examples: 100,
+            calib_windows: 24,
+        })
+    }
+
+    fn save_cache(&self) {
+        std::fs::create_dir_all("results").ok();
+        let obj = Json::Obj(
+            self.cache
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        );
+        std::fs::write(&self.cache_path, obj.emit()).ok();
+    }
+
+    pub fn model(&mut self, name: &str) -> Result<Arc<Model>> {
+        if let Some(m) = self.models.get(name) {
+            return Ok(m.clone());
+        }
+        let m = Arc::new(Model::load(&self.art, name).with_context(|| {
+            format!("loading model '{name}' — run `make artifacts` first")
+        })?);
+        self.models.insert(name.to_string(), m.clone());
+        Ok(m)
+    }
+
+    pub fn corpus(&mut self, name: &str) -> Result<Arc<Vec<u8>>> {
+        if let Some(c) = self.corpora.get(name) {
+            return Ok(c.clone());
+        }
+        let c = Arc::new(data::load_corpus(&self.art, name)?);
+        self.corpora.insert(name.to_string(), c.clone());
+        Ok(c)
+    }
+
+    pub fn hessians(&mut self, model_name: &str) -> Result<Arc<BTreeMap<String, Matrix>>> {
+        if let Some(h) = self.hessians.get(model_name) {
+            return Ok(h.clone());
+        }
+        let model = self.model(model_name)?;
+        let calib = self.corpus("corpus_calib")?;
+        eprintln!("[runner] collecting hessians for '{model_name}' …");
+        let hs = Arc::new(collect_hessians(
+            &model,
+            &calib,
+            self.calib_windows,
+            model.cfg.ctx,
+        ));
+        self.hessians.insert(model_name.to_string(), hs.clone());
+        Ok(hs)
+    }
+
+    /// Quantize (with FT when the method requests it), memoized in-process.
+    pub fn qmodel(&mut self, model_name: &str, method: &Method) -> Result<Arc<QuantizedModel>> {
+        let key = format!("{model_name}|{}", method.label());
+        if let Some(q) = self.qmodels.get(&key) {
+            return Ok(q.clone());
+        }
+        let model = self.model(model_name)?;
+        let hs = self.hessians(model_name)?;
+        eprintln!("[runner] quantizing '{model_name}' with {} …", method.label());
+        let qm = match method {
+            Method::QuipSharp { bits, ft: true } => {
+                let dev = self.corpus("corpus_dev")?;
+                let cfg = FtConfig {
+                    steps_block: 6,
+                    steps_e2e: 10,
+                    window: 96,
+                    n_train: 5,
+                    n_valid: 2,
+                    lr: 5e-4,
+                    sign_lr_mult: 10.0,
+                };
+                quantize_model_ft(&model, &hs, *bits, SEED, &dev, &cfg)?
+            }
+            m => quantize_model(&model, &hs, m, SEED)?,
+        };
+        let qm = Arc::new(qm);
+        self.qmodels.insert(key, qm.clone());
+        Ok(qm)
+    }
+
+    fn eval_model(&mut self, model_name: &str, method: &Method) -> Result<Arc<Model>> {
+        if matches!(method, Method::Fp16) {
+            self.model(model_name)
+        } else {
+            Ok(Arc::new(Model::new(
+                self.qmodel(model_name, method)?.model.cfg.clone(),
+                self.qmodel(model_name, method)?.model.params.clone(),
+            )))
+        }
+    }
+
+    fn cached<F: FnOnce(&mut Self) -> Result<f64>>(
+        &mut self,
+        key: String,
+        f: F,
+    ) -> Result<f64> {
+        if let Some(&v) = self.cache.get(&key) {
+            return Ok(v);
+        }
+        let v = f(self)?;
+        self.cache.insert(key, v);
+        self.save_cache();
+        Ok(v)
+    }
+
+    /// Perplexity: corpus ∈ {"w2", "c4"}, window ∈ {WINDOW_SHORT, WINDOW_NATIVE}.
+    pub fn ppl(
+        &mut self,
+        model_name: &str,
+        method: &Method,
+        corpus: &str,
+        window: usize,
+    ) -> Result<f64> {
+        let key = format!("{model_name}|{}|ppl_{corpus}_{window}", method.label());
+        let corpus_file = format!("corpus_test_{corpus}");
+        self.cached(key, |me| {
+            let m = me.eval_model(model_name, method)?;
+            let toks = me.corpus(&corpus_file)?;
+            Ok(eval::perplexity(&m, &toks, window, me.eval_tokens))
+        })
+    }
+
+    /// Zeroshot accuracy on one of the four tasks.
+    pub fn zeroshot(&mut self, model_name: &str, method: &Method, task: &str) -> Result<f64> {
+        let key = format!("{model_name}|{}|zs_{task}", method.label());
+        self.cached(key, |me| {
+            let m = me.eval_model(model_name, method)?;
+            let t = data::load_zeroshot(&me.art, task)?;
+            Ok(eval::zeroshot_accuracy(&m, &t, me.zeroshot_examples))
+        })
+    }
+
+    /// Effective bits/weight (codes + signs + scales + codebook).
+    pub fn bits(&mut self, model_name: &str, method: &Method) -> Result<f64> {
+        if matches!(method, Method::Fp16) {
+            return Ok(16.0);
+        }
+        let key = format!("{model_name}|{}|bits", method.label());
+        self.cached(key, |me| Ok(me.qmodel(model_name, method)?.avg_bits()))
+    }
+
+    /// Mean relative proxy error (quality diagnostic used by ablations).
+    pub fn proxy_rel(&mut self, model_name: &str, method: &Method) -> Result<f64> {
+        let key = format!("{model_name}|{}|proxy", method.label());
+        self.cached(key, |me| Ok(me.qmodel(model_name, method)?.mean_proxy_rel()))
+    }
+
+    /// Model parameter count (for scaling plots: x-axis = total bits).
+    pub fn num_params(&mut self, model_name: &str) -> Result<usize> {
+        Ok(self.model(model_name)?.num_params())
+    }
+}

@@ -1,0 +1,109 @@
+//! Adam optimizer over named f32 parameter buffers (paper §F.6 uses Adam
+//! with lr 5e-5 for weights/norms and 5e-4 for sign vectors at 2 bits).
+
+use std::collections::BTreeMap;
+
+use super::autograd::Grads;
+
+pub struct Adam {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    /// Per-name learning-rate multipliers (e.g. sign vectors ×10).
+    pub lr_mult: BTreeMap<String, f32>,
+    m: BTreeMap<String, Vec<f32>>,
+    v: BTreeMap<String, Vec<f32>>,
+    t: i32,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-8,
+            lr_mult: BTreeMap::new(),
+            m: BTreeMap::new(),
+            v: BTreeMap::new(),
+            t: 0,
+        }
+    }
+
+    /// Multiply lr for every parameter whose name contains `pattern`.
+    pub fn with_lr_mult(mut self, pattern: &str, mult: f32) -> Self {
+        self.lr_mult.insert(pattern.to_string(), mult);
+        self
+    }
+
+    fn mult_for(&self, name: &str) -> f32 {
+        for (pat, m) in &self.lr_mult {
+            if name.contains(pat.as_str()) {
+                return *m;
+            }
+        }
+        1.0
+    }
+
+    /// One update. `params` maps name → mutable buffer; only names present
+    /// in `grads` are touched.
+    pub fn step(&mut self, params: &mut BTreeMap<String, &mut [f32]>, grads: &Grads) {
+        self.t += 1;
+        let bc1 = 1.0 - self.b1.powi(self.t);
+        let bc2 = 1.0 - self.b2.powi(self.t);
+        for (name, g) in grads {
+            let Some(p) = params.get_mut(name) else {
+                continue;
+            };
+            let lr = self.lr * self.mult_for(name);
+            let (b1, b2, eps) = (self.b1, self.b2, self.eps);
+            let m = self.m.entry(name.clone()).or_insert_with(|| vec![0.0; g.len()]);
+            let v = self.v.entry(name.clone()).or_insert_with(|| vec![0.0; g.len()]);
+            for i in 0..g.len() {
+                m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                let mh = m[i] / bc1;
+                let vh = v[i] / bc2;
+                p[i] -= lr * mh / (vh.sqrt() + eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // f(x) = Σ (x - 3)², grad = 2(x - 3)
+        let mut x = vec![0.0f32; 4];
+        let mut opt = Adam::new(0.1);
+        for _ in 0..400 {
+            let mut grads = Grads::new();
+            grads.insert("x".into(), x.iter().map(|v| 2.0 * (v - 3.0)).collect());
+            let mut params: BTreeMap<String, &mut [f32]> = BTreeMap::new();
+            params.insert("x".into(), &mut x);
+            opt.step(&mut params, &grads);
+        }
+        for v in &x {
+            assert!((v - 3.0).abs() < 0.05, "{v}");
+        }
+    }
+
+    #[test]
+    fn lr_mult_applies() {
+        let mut a = vec![0.0f32; 1];
+        let mut b = vec![0.0f32; 1];
+        let mut opt = Adam::new(0.01).with_lr_mult("sv", 10.0);
+        let mut grads = Grads::new();
+        grads.insert("w".into(), vec![1.0]);
+        grads.insert("x.sv".into(), vec![1.0]);
+        let mut params: BTreeMap<String, &mut [f32]> = BTreeMap::new();
+        params.insert("w".into(), &mut a);
+        params.insert("x.sv".into(), &mut b);
+        opt.step(&mut params, &grads);
+        assert!(b[0].abs() > 5.0 * a[0].abs());
+    }
+}

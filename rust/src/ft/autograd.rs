@@ -1,0 +1,353 @@
+//! Hand-written reverse-mode differentiation for the Llama block — the
+//! substrate for fine-tuning during quantization (paper §5, Algorithm 5).
+//!
+//! A quantized linear is y = S_u ⊙ (A · (S_v ⊙ x)) with A = H_mᵀ Ŵ̃ H_n
+//! *frozen* and the sign vectors S_u/S_v relaxed to reals ("By optimizing
+//! the sign vectors as real vectors … we allow the incoherence processing
+//! step to shape the weight matrix to the codebook"). Dense linears keep
+//! trainable W. Everything is checked against central finite differences.
+
+use std::collections::BTreeMap;
+
+use crate::model::ops::*;
+
+/// Gradient store: flat name → grad buffer.
+pub type Grads = BTreeMap<String, Vec<f32>>;
+
+pub fn acc_grad(grads: &mut Grads, name: &str, add: &[f32]) {
+    let g = grads
+        .entry(name.to_string())
+        .or_insert_with(|| vec![0.0; add.len()]);
+    for (a, b) in g.iter_mut().zip(add) {
+        *a += b;
+    }
+}
+
+/// A fine-tunable linear layer.
+pub enum FtLinear {
+    /// Dense trainable weight (out,in).
+    Dense { w: Vec<f32>, m: usize, n: usize, trainable: bool },
+    /// Frozen quantized core A (m,n) with trainable sign vectors.
+    Quant { a: Vec<f32>, su: Vec<f32>, sv: Vec<f32>, m: usize, n: usize },
+}
+
+impl FtLinear {
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            FtLinear::Dense { m, n, .. } => (*m, *n),
+            FtLinear::Quant { m, n, .. } => (*m, *n),
+        }
+    }
+
+    /// y (s,m) = layer(x (s,n)); `cache` receives what backward needs.
+    pub fn forward(&self, x: &[f32], s: usize, cache: &mut LinCache) -> Vec<f32> {
+        let (m, n) = self.shape();
+        let mut y = vec![0.0f32; s * m];
+        match self {
+            FtLinear::Dense { w, .. } => {
+                matmul_nt(x, w, s, n, m, &mut y);
+                cache.x = x.to_vec();
+            }
+            FtLinear::Quant { a, su, sv, .. } => {
+                // xs = sv ⊙ x ; z = xs Aᵀ ; y = su ⊙ z
+                let mut xs = x.to_vec();
+                for row in xs.chunks_mut(n) {
+                    for (v, &s_) in row.iter_mut().zip(sv) {
+                        *v *= s_;
+                    }
+                }
+                matmul_nt(&xs, a, s, n, m, &mut y);
+                cache.z = y.clone();
+                for row in y.chunks_mut(m) {
+                    for (v, &s_) in row.iter_mut().zip(su) {
+                        *v *= s_;
+                    }
+                }
+                cache.x = x.to_vec();
+                cache.xs = xs;
+            }
+        }
+        y
+    }
+
+    /// Backward: given dy (s,m), return dx (s,n) and accumulate parameter
+    /// grads under `name` (dense: `name.w`; quant: `name.su`, `name.sv`).
+    pub fn backward(
+        &self,
+        name: &str,
+        dy: &[f32],
+        s: usize,
+        cache: &LinCache,
+        grads: &mut Grads,
+    ) -> Vec<f32> {
+        let (m, n) = self.shape();
+        let mut dx = vec![0.0f32; s * n];
+        match self {
+            FtLinear::Dense { w, trainable, .. } => {
+                // dx = dy W ; dW += dyᵀ x
+                matmul_nn_acc_from_nt(dy, w, s, m, n, &mut dx);
+                if *trainable {
+                    let mut dw = vec![0.0f32; m * n];
+                    matmul_tn_acc(dy, &cache.x, s, m, n, &mut dw);
+                    acc_grad(grads, &format!("{name}.w"), &dw);
+                }
+            }
+            FtLinear::Quant { a, su, sv, .. } => {
+                // y = su ⊙ z, z = A xs, xs = sv ⊙ x
+                // dsu += Σ_s dy ⊙ z ; dz = dy ⊙ su
+                let mut dsu = vec![0.0f32; m];
+                let mut dz = vec![0.0f32; s * m];
+                for i in 0..s {
+                    for j in 0..m {
+                        let dyv = dy[i * m + j];
+                        dsu[j] += dyv * cache.z[i * m + j];
+                        dz[i * m + j] = dyv * su[j];
+                    }
+                }
+                acc_grad(grads, &format!("{name}.su"), &dsu);
+                // dxs = dz A  (A is (m,n) row-major; dz (s,m))
+                let mut dxs = vec![0.0f32; s * n];
+                matmul_nn_acc_from_nt(&dz, a, s, m, n, &mut dxs);
+                // dsv += Σ_s dxs ⊙ x ; dx = dxs ⊙ sv
+                let mut dsv = vec![0.0f32; n];
+                for i in 0..s {
+                    for j in 0..n {
+                        let dxsv = dxs[i * n + j];
+                        dsv[j] += dxsv * cache.x[i * n + j];
+                        dx[i * n + j] = dxsv * sv[j];
+                    }
+                }
+                acc_grad(grads, &format!("{name}.sv"), &dsv);
+            }
+        }
+        dx
+    }
+}
+
+/// dx (s,n) += dy (s,m) · W (m,n)  — input-gradient through y = x Wᵀ.
+fn matmul_nn_acc_from_nt(dy: &[f32], w: &[f32], _s: usize, m: usize, n: usize, dx: &mut [f32]) {
+    crate::util::threadpool::par_rows(dx, n, |i, dxrow| {
+        let dyrow = &dy[i * m..(i + 1) * m];
+        for (o, &dyv) in dyrow.iter().enumerate() {
+            if dyv == 0.0 {
+                continue;
+            }
+            let wrow = &w[o * n..(o + 1) * n];
+            for (d, &wv) in dxrow.iter_mut().zip(wrow) {
+                *d += dyv * wv;
+            }
+        }
+    });
+}
+
+/// Per-linear forward cache.
+#[derive(Default, Clone)]
+pub struct LinCache {
+    pub x: Vec<f32>,
+    pub xs: Vec<f32>,
+    pub z: Vec<f32>,
+}
+
+/// RMSNorm backward. y = x·w/rms(x). Given dy, caches (x, inv), returns
+/// dx and accumulates dw.
+pub fn rms_norm_backward(
+    name: &str,
+    dy: &[f32],
+    x: &[f32],
+    w: &[f32],
+    inv: &[f32],
+    s: usize,
+    d: usize,
+    grads: &mut Grads,
+) -> Vec<f32> {
+    let mut dx = vec![0.0f32; s * d];
+    let mut dw = vec![0.0f32; d];
+    for i in 0..s {
+        let xrow = &x[i * d..(i + 1) * d];
+        let dyrow = &dy[i * d..(i + 1) * d];
+        let r = inv[i]; // 1/rms
+        // y_j = x_j * r * w_j, r = (mean(x²)+eps)^{-1/2}
+        // dL/dx_k = r·w_k·dy_k − r³/d · x_k · Σ_j dy_j w_j x_j
+        let mut dot = 0.0f32;
+        for j in 0..d {
+            dot += dyrow[j] * w[j] * xrow[j];
+            dw[j] += dyrow[j] * xrow[j] * r;
+        }
+        let c = r * r * r * dot / d as f32;
+        for j in 0..d {
+            dx[i * d + j] = r * w[j] * dyrow[j] - c * xrow[j];
+        }
+    }
+    acc_grad(grads, name, &dw);
+    dx
+}
+
+/// Softmax backward for row-wise softmax p = softmax(z):
+/// dz = p ⊙ (dp − Σ p·dp).
+pub fn softmax_backward_row(p: &[f32], dp: &[f32], dz: &mut [f32]) {
+    let dot: f32 = p.iter().zip(dp).map(|(a, b)| a * b).sum();
+    for ((dzv, &pv), &dpv) in dz.iter_mut().zip(p).zip(dp) {
+        *dzv = pv * (dpv - dot);
+    }
+}
+
+/// RoPE backward: the rotation is orthogonal per (j, j+half) pair, so the
+/// gradient is rotated by the inverse (transpose) rotation.
+pub fn rope_backward(dx: &mut [f32], heads: usize, hd: usize, p: usize, cos: &[f32], sin: &[f32]) {
+    let half = hd / 2;
+    for h in 0..heads {
+        let row = &mut dx[h * hd..(h + 1) * hd];
+        for j in 0..half {
+            let (c, s) = (cos[p * half + j], sin[p * half + j]);
+            let (a, b) = (row[j], row[half + j]);
+            row[j] = a * c + b * s;
+            row[half + j] = -a * s + b * c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn fd_check<F: FnMut(&[f32]) -> f32>(
+        mut f: F,
+        theta: &[f32],
+        analytic: &[f32],
+        eps: f32,
+        tol: f32,
+    ) {
+        for i in 0..theta.len() {
+            let mut tp = theta.to_vec();
+            tp[i] += eps;
+            let fp = f(&tp);
+            tp[i] -= 2.0 * eps;
+            let fm = f(&tp);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - analytic[i]).abs() < tol * (1.0 + fd.abs().max(analytic[i].abs())),
+                "param {i}: fd={fd} analytic={}",
+                analytic[i]
+            );
+        }
+    }
+
+    #[test]
+    fn dense_linear_grads() {
+        let mut rng = Pcg64::new(1);
+        let (s, m, n) = (3usize, 4usize, 5usize);
+        let w0 = rng.gaussian_vec(m * n, 0.5);
+        let x = rng.gaussian_vec(s * n, 1.0);
+        let dy = rng.gaussian_vec(s * m, 1.0); // loss = Σ dy ⊙ y
+        let layer = FtLinear::Dense { w: w0.clone(), m, n, trainable: true };
+        let mut cache = LinCache::default();
+        let _y = layer.forward(&x, s, &mut cache);
+        let mut grads = Grads::new();
+        let dx = layer.backward("lin", &dy, s, &cache, &mut grads);
+        // check dW by finite differences
+        fd_check(
+            |w| {
+                let l = FtLinear::Dense { w: w.to_vec(), m, n, trainable: false };
+                let mut c = LinCache::default();
+                let y = l.forward(&x, s, &mut c);
+                y.iter().zip(&dy).map(|(a, b)| a * b).sum()
+            },
+            &w0,
+            &grads["lin.w"],
+            1e-3,
+            1e-2,
+        );
+        // check dx
+        fd_check(
+            |xx| {
+                let mut c = LinCache::default();
+                let y = layer.forward(xx, s, &mut c);
+                y.iter().zip(&dy).map(|(a, b)| a * b).sum()
+            },
+            &x,
+            &dx,
+            1e-3,
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn quant_linear_sign_grads() {
+        let mut rng = Pcg64::new(2);
+        let (s, m, n) = (2usize, 4usize, 6usize);
+        let a = rng.gaussian_vec(m * n, 0.5);
+        let su0 = rng.sign_vec(m);
+        let sv0 = rng.sign_vec(n);
+        let x = rng.gaussian_vec(s * n, 1.0);
+        let dy = rng.gaussian_vec(s * m, 1.0);
+        let layer = FtLinear::Quant { a: a.clone(), su: su0.clone(), sv: sv0.clone(), m, n };
+        let mut cache = LinCache::default();
+        layer.forward(&x, s, &mut cache);
+        let mut grads = Grads::new();
+        let dx = layer.backward("q", &dy, s, &cache, &mut grads);
+        let loss_with = |su: &[f32], sv: &[f32], xx: &[f32]| -> f32 {
+            let l = FtLinear::Quant { a: a.clone(), su: su.to_vec(), sv: sv.to_vec(), m, n };
+            let mut c = LinCache::default();
+            let y = l.forward(xx, s, &mut c);
+            y.iter().zip(&dy).map(|(p, q)| p * q).sum()
+        };
+        fd_check(|su| loss_with(su, &sv0, &x), &su0, &grads["q.su"], 1e-3, 1e-2);
+        fd_check(|sv| loss_with(&su0, sv, &x), &sv0, &grads["q.sv"], 1e-3, 1e-2);
+        fd_check(|xx| loss_with(&su0, &sv0, xx), &x, &dx, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn rms_norm_grads() {
+        let mut rng = Pcg64::new(3);
+        let (s, d) = (2usize, 6usize);
+        let x = rng.gaussian_vec(s * d, 1.0);
+        let w0: Vec<f32> = (0..d).map(|_| 1.0 + rng.f32() * 0.2).collect();
+        let dy = rng.gaussian_vec(s * d, 1.0);
+        let loss = |x_: &[f32], w_: &[f32]| -> f32 {
+            let mut y = vec![0.0f32; s * d];
+            rms_norm(x_, w_, s, d, &mut y);
+            y.iter().zip(&dy).map(|(a, b)| a * b).sum()
+        };
+        let mut y = vec![0.0f32; s * d];
+        let inv = rms_norm(&x, &w0, s, d, &mut y);
+        let mut grads = Grads::new();
+        let dx = rms_norm_backward("nw", &dy, &x, &w0, &inv, s, d, &mut grads);
+        fd_check(|xx| loss(xx, &w0), &x, &dx, 1e-3, 2e-2);
+        fd_check(|ww| loss(&x, ww), &w0, &grads["nw"], 1e-3, 2e-2);
+    }
+
+    #[test]
+    fn softmax_backward_correct() {
+        let mut rng = Pcg64::new(4);
+        let n = 5;
+        let z0 = rng.gaussian_vec(n, 1.0);
+        let dp = rng.gaussian_vec(n, 1.0);
+        let loss = |z: &[f32]| -> f32 {
+            let mut p = z.to_vec();
+            softmax_rows(&mut p, 1, n);
+            p.iter().zip(&dp).map(|(a, b)| a * b).sum()
+        };
+        let mut p = z0.clone();
+        softmax_rows(&mut p, 1, n);
+        let mut dz = vec![0.0f32; n];
+        softmax_backward_row(&p, &dp, &mut dz);
+        fd_check(loss, &z0, &dz, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn rope_backward_is_inverse_rotation() {
+        let (cos, sin) = rope_tables(8, 4);
+        let mut rng = Pcg64::new(5);
+        let x0 = rng.gaussian_vec(4, 1.0);
+        let dy = rng.gaussian_vec(4, 1.0);
+        let loss = |x: &[f32]| -> f32 {
+            let mut y = x.to_vec();
+            rope_apply(&mut y, 1, 4, 5, &cos, &sin);
+            y.iter().zip(&dy).map(|(a, b)| a * b).sum()
+        };
+        let mut dx = dy.clone();
+        rope_backward(&mut dx, 1, 4, 5, &cos, &sin);
+        fd_check(loss, &x0, &dx, 1e-3, 1e-2);
+    }
+}

@@ -1,0 +1,426 @@
+//! Fine-tunable Llama transformer block: forward with activation cache +
+//! full reverse-mode backward. Used both for within-block fine-tuning
+//! (block-output MSE) and end-to-end fine-tuning (soft-target CE through
+//! the whole stack).
+
+use std::collections::BTreeMap;
+
+use super::autograd::*;
+use crate::model::ops::*;
+
+/// Trainable block parameters. Linears are `FtLinear` (dense or
+/// quantized-with-sign-vectors); norms are always trainable.
+pub struct FtBlock {
+    pub name: String,
+    pub d: usize,
+    pub heads: usize,
+    pub hd: usize,
+    pub ff: usize,
+    pub lin: BTreeMap<String, FtLinear>, // wq wk wv wo w_gate w_up w_down
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+    pub rope_cos: Vec<f32>,
+    pub rope_sin: Vec<f32>,
+}
+
+/// Everything backward needs from one block forward.
+pub struct BlockCache {
+    pub s: usize,
+    pub x_in: Vec<f32>,
+    pub h1: Vec<f32>,
+    pub inv1: Vec<f32>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub probs: Vec<Vec<f32>>, // per head (s,s)
+    pub att_out: Vec<f32>,
+    pub x_mid: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub inv2: Vec<f32>,
+    pub g_pre: Vec<f32>, // gate pre-activation
+    pub u: Vec<f32>,
+    pub a: Vec<f32>, // silu(g)*u
+    pub lin_caches: BTreeMap<String, LinCache>,
+}
+
+impl FtBlock {
+    fn lin_fwd(&self, nm: &str, x: &[f32], s: usize, cache: &mut BlockCache) -> Vec<f32> {
+        let mut lc = LinCache::default();
+        let y = self.lin[nm].forward(x, s, &mut lc);
+        cache.lin_caches.insert(nm.to_string(), lc);
+        y
+    }
+
+    /// Forward over (s, d) activations.
+    pub fn forward(&self, x: &[f32], s: usize) -> (Vec<f32>, BlockCache) {
+        let (d, heads, hd) = (self.d, self.heads, self.hd);
+        let mut cache = BlockCache {
+            s,
+            x_in: x.to_vec(),
+            h1: vec![0.0; s * d],
+            inv1: vec![],
+            q: vec![],
+            k: vec![],
+            v: vec![],
+            probs: vec![],
+            att_out: vec![0.0; s * d],
+            x_mid: vec![],
+            h2: vec![0.0; s * d],
+            inv2: vec![],
+            g_pre: vec![],
+            u: vec![],
+            a: vec![],
+            lin_caches: BTreeMap::new(),
+        };
+        let mut h1 = vec![0.0f32; s * d];
+        cache.inv1 = rms_norm(x, &self.attn_norm, s, d, &mut h1);
+        cache.h1 = h1.clone();
+        let mut q = self.lin_fwd("wq", &h1, s, &mut cache);
+        let mut k = self.lin_fwd("wk", &h1, s, &mut cache);
+        let v = self.lin_fwd("wv", &h1, s, &mut cache);
+        for i in 0..s {
+            rope_apply(&mut q[i * d..(i + 1) * d], heads, hd, i, &self.rope_cos, &self.rope_sin);
+            rope_apply(&mut k[i * d..(i + 1) * d], heads, hd, i, &self.rope_cos, &self.rope_sin);
+        }
+        cache.q = q.clone();
+        cache.k = k.clone();
+        cache.v = v.clone();
+        // attention
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut att = vec![0.0f32; s * d];
+        for hh in 0..heads {
+            let mut scores = vec![0.0f32; s * s];
+            for i in 0..s {
+                for j in 0..=i {
+                    let qi = &q[i * d + hh * hd..i * d + (hh + 1) * hd];
+                    let kj = &k[j * d + hh * hd..j * d + (hh + 1) * hd];
+                    let mut sdot = 0.0f32;
+                    for t in 0..hd {
+                        sdot += qi[t] * kj[t];
+                    }
+                    scores[i * s + j] = sdot * scale;
+                }
+                for j in i + 1..s {
+                    scores[i * s + j] = f32::NEG_INFINITY;
+                }
+            }
+            softmax_rows(&mut scores, s, s);
+            for i in 0..s {
+                let out = &mut att[i * d + hh * hd..i * d + (hh + 1) * hd];
+                for j in 0..=i {
+                    let p = scores[i * s + j];
+                    let vj = &v[j * d + hh * hd..j * d + (hh + 1) * hd];
+                    for t in 0..hd {
+                        out[t] += p * vj[t];
+                    }
+                }
+            }
+            cache.probs.push(scores);
+        }
+        cache.att_out = att.clone();
+        let o = self.lin_fwd("wo", &att, s, &mut cache);
+        let mut x_mid = x.to_vec();
+        for (xv, &ov) in x_mid.iter_mut().zip(&o) {
+            *xv += ov;
+        }
+        cache.x_mid = x_mid.clone();
+        // mlp
+        let mut h2 = vec![0.0f32; s * d];
+        cache.inv2 = rms_norm(&x_mid, &self.mlp_norm, s, d, &mut h2);
+        cache.h2 = h2.clone();
+        let g = self.lin_fwd("w_gate", &h2, s, &mut cache);
+        let u = self.lin_fwd("w_up", &h2, s, &mut cache);
+        cache.g_pre = g.clone();
+        cache.u = u.clone();
+        let mut a = g;
+        for (av, &uv) in a.iter_mut().zip(&u) {
+            *av = silu(*av) * uv;
+        }
+        cache.a = a.clone();
+        let dn = self.lin_fwd("w_down", &a, s, &mut cache);
+        let mut out = x_mid;
+        for (xv, &dv) in out.iter_mut().zip(&dn) {
+            *xv += dv;
+        }
+        (out, cache)
+    }
+
+    /// Backward: given d(out), accumulate grads (keys prefixed with the
+    /// block name) and return d(x_in).
+    pub fn backward(&self, dout: &[f32], cache: &BlockCache, grads: &mut Grads) -> Vec<f32> {
+        let (s, d, heads, hd) = (cache.s, self.d, self.heads, self.hd);
+        let pfx = &self.name;
+        // out = x_mid + w_down(a)
+        let d_dn = dout; // grad into w_down output
+        let da = self.lin["w_down"].backward(
+            &format!("{pfx}.w_down"),
+            d_dn,
+            s,
+            &cache.lin_caches["w_down"],
+            grads,
+        );
+        // a = silu(g) * u
+        let mut dg = vec![0.0f32; da.len()];
+        let mut du = vec![0.0f32; da.len()];
+        for i in 0..da.len() {
+            let g = cache.g_pre[i];
+            dg[i] = da[i] * cache.u[i] * silu_grad(g);
+            du[i] = da[i] * silu(g);
+        }
+        let dh2_a = self.lin["w_gate"].backward(
+            &format!("{pfx}.w_gate"),
+            &dg,
+            s,
+            &cache.lin_caches["w_gate"],
+            grads,
+        );
+        let dh2_b = self.lin["w_up"].backward(
+            &format!("{pfx}.w_up"),
+            &du,
+            s,
+            &cache.lin_caches["w_up"],
+            grads,
+        );
+        let dh2: Vec<f32> = dh2_a.iter().zip(&dh2_b).map(|(a, b)| a + b).collect();
+        let dx_mid_norm = rms_norm_backward(
+            &format!("{pfx}.mlp_norm"),
+            &dh2,
+            &cache.x_mid,
+            &self.mlp_norm,
+            &cache.inv2,
+            s,
+            d,
+            grads,
+        );
+        // x_mid gets gradient from both the residual (dout) and the norm.
+        let mut dx_mid: Vec<f32> = dout.to_vec();
+        for (a, &b) in dx_mid.iter_mut().zip(&dx_mid_norm) {
+            *a += b;
+        }
+        // x_mid = x_in + wo(att)
+        let datt = self.lin["wo"].backward(
+            &format!("{pfx}.wo"),
+            &dx_mid,
+            s,
+            &cache.lin_caches["wo"],
+            grads,
+        );
+        // attention backward
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut dq = vec![0.0f32; s * d];
+        let mut dk = vec![0.0f32; s * d];
+        let mut dv = vec![0.0f32; s * d];
+        for hh in 0..heads {
+            let probs = &cache.probs[hh];
+            for i in 0..s {
+                // dP row and dV accumulation
+                let dout_i = &datt[i * d + hh * hd..i * d + (hh + 1) * hd];
+                let mut dp = vec![0.0f32; s];
+                for j in 0..=i {
+                    let vj = &cache.v[j * d + hh * hd..j * d + (hh + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for t in 0..hd {
+                        acc += dout_i[t] * vj[t];
+                    }
+                    dp[j] = acc;
+                    let p = probs[i * s + j];
+                    let dvj = &mut dv[j * d + hh * hd..j * d + (hh + 1) * hd];
+                    for t in 0..hd {
+                        dvj[t] += p * dout_i[t];
+                    }
+                }
+                // softmax backward on row i (only 0..=i entries are live)
+                let prow = &probs[i * s..i * s + i + 1];
+                let mut dz = vec![0.0f32; i + 1];
+                softmax_backward_row(prow, &dp[..i + 1], &mut dz);
+                // scores = scale · q_i · k_j
+                let qi = &cache.q[i * d + hh * hd..i * d + (hh + 1) * hd];
+                let dqi = &mut dq[i * d + hh * hd..i * d + (hh + 1) * hd];
+                for j in 0..=i {
+                    let z = dz[j] * scale;
+                    let kj = &cache.k[j * d + hh * hd..j * d + (hh + 1) * hd];
+                    for t in 0..hd {
+                        dqi[t] += z * kj[t];
+                    }
+                    let dkj = &mut dk[j * d + hh * hd..j * d + (hh + 1) * hd];
+                    for t in 0..hd {
+                        dkj[t] += z * qi[t];
+                    }
+                }
+            }
+        }
+        // RoPE backward on dq, dk.
+        for i in 0..s {
+            rope_backward(&mut dq[i * d..(i + 1) * d], heads, hd, i, &self.rope_cos, &self.rope_sin);
+            rope_backward(&mut dk[i * d..(i + 1) * d], heads, hd, i, &self.rope_cos, &self.rope_sin);
+        }
+        let dh1_q = self.lin["wq"].backward(&format!("{pfx}.wq"), &dq, s, &cache.lin_caches["wq"], grads);
+        let dh1_k = self.lin["wk"].backward(&format!("{pfx}.wk"), &dk, s, &cache.lin_caches["wk"], grads);
+        let dh1_v = self.lin["wv"].backward(&format!("{pfx}.wv"), &dv, s, &cache.lin_caches["wv"], grads);
+        let dh1: Vec<f32> = dh1_q
+            .iter()
+            .zip(&dh1_k)
+            .zip(&dh1_v)
+            .map(|((a, b), c)| a + b + c)
+            .collect();
+        let dx_norm = rms_norm_backward(
+            &format!("{pfx}.attn_norm"),
+            &dh1,
+            &cache.x_in,
+            &self.attn_norm,
+            &cache.inv1,
+            s,
+            d,
+            grads,
+        );
+        let mut dx: Vec<f32> = dx_mid;
+        for (a, &b) in dx.iter_mut().zip(&dx_norm) {
+            *a += b;
+        }
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    pub fn random_block(seed: u64, quant_wq: bool) -> FtBlock {
+        let (d, heads, hd, ff) = (16usize, 2usize, 8usize, 32usize);
+        let mut rng = Pcg64::new(seed);
+        let mut lin = BTreeMap::new();
+        let mut dense = |m: usize, n: usize, rng: &mut Pcg64| FtLinear::Dense {
+            w: rng.gaussian_vec(m * n, 1.0 / (n as f32).sqrt()),
+            m,
+            n,
+            trainable: true,
+        };
+        if quant_wq {
+            lin.insert(
+                "wq".into(),
+                FtLinear::Quant {
+                    a: rng.gaussian_vec(d * d, 1.0 / (d as f32).sqrt()),
+                    su: rng.sign_vec(d),
+                    sv: rng.sign_vec(d),
+                    m: d,
+                    n: d,
+                },
+            );
+        } else {
+            lin.insert("wq".into(), dense(d, d, &mut rng));
+        }
+        lin.insert("wk".into(), dense(d, d, &mut rng));
+        lin.insert("wv".into(), dense(d, d, &mut rng));
+        lin.insert("wo".into(), dense(d, d, &mut rng));
+        lin.insert("w_gate".into(), dense(ff, d, &mut rng));
+        lin.insert("w_up".into(), dense(ff, d, &mut rng));
+        lin.insert("w_down".into(), dense(d, ff, &mut rng));
+        let (rope_cos, rope_sin) = rope_tables(32, hd);
+        FtBlock {
+            name: "blk".into(),
+            d,
+            heads,
+            hd,
+            ff,
+            lin,
+            attn_norm: vec![1.0; d],
+            mlp_norm: vec![1.0; d],
+            rope_cos,
+            rope_sin,
+        }
+    }
+
+    fn loss_of(block: &FtBlock, x: &[f32], s: usize, dy: &[f32]) -> f32 {
+        let (y, _) = block.forward(x, s);
+        y.iter().zip(dy).map(|(a, b)| a * b).sum()
+    }
+
+    #[test]
+    fn block_input_gradient_matches_fd() {
+        let block = random_block(1, false);
+        let mut rng = Pcg64::new(10);
+        let s = 3;
+        let x = rng.gaussian_vec(s * block.d, 1.0);
+        let dy = rng.gaussian_vec(s * block.d, 1.0);
+        let (_, cache) = block.forward(&x, s);
+        let mut grads = Grads::new();
+        let dx = block.backward(&dy, &cache, &mut grads);
+        let eps = 1e-2f32;
+        for i in (0..x.len()).step_by(7) {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let fp = loss_of(&block, &xp, s, &dy);
+            xp[i] -= 2.0 * eps;
+            let fm = loss_of(&block, &xp, s, &dy);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - dx[i]).abs() < 2e-2 * (1.0 + fd.abs().max(dx[i].abs())),
+                "x[{i}]: fd={fd} got={}",
+                dx[i]
+            );
+        }
+    }
+
+    #[test]
+    fn block_sign_vector_gradients_match_fd() {
+        let block = random_block(2, true);
+        let mut rng = Pcg64::new(11);
+        let s = 2;
+        let x = rng.gaussian_vec(s * block.d, 1.0);
+        let dy = rng.gaussian_vec(s * block.d, 1.0);
+        let (_, cache) = block.forward(&x, s);
+        let mut grads = Grads::new();
+        block.backward(&dy, &cache, &mut grads);
+        let gsu = grads["blk.wq.su"].clone();
+        let eps = 1e-2f32;
+        for i in 0..block.d {
+            let mut b2 = random_block(2, true); // identical reconstruction
+            let probe = |delta: f32, b2: &mut FtBlock| -> f32 {
+                if let FtLinear::Quant { su, .. } = b2.lin.get_mut("wq").unwrap() {
+                    su[i] += delta;
+                }
+                let l = loss_of(b2, &x, s, &dy);
+                if let FtLinear::Quant { su, .. } = b2.lin.get_mut("wq").unwrap() {
+                    su[i] -= delta;
+                }
+                l
+            };
+            let fp = probe(eps, &mut b2);
+            let fm = probe(-eps, &mut b2);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - gsu[i]).abs() < 2e-2 * (1.0 + fd.abs().max(gsu[i].abs())),
+                "su[{i}]: fd={fd} got={}",
+                gsu[i]
+            );
+        }
+    }
+
+    #[test]
+    fn block_norm_gradients_match_fd() {
+        let block = random_block(3, false);
+        let mut rng = Pcg64::new(12);
+        let s = 2;
+        let x = rng.gaussian_vec(s * block.d, 1.0);
+        let dy = rng.gaussian_vec(s * block.d, 1.0);
+        let (_, cache) = block.forward(&x, s);
+        let mut grads = Grads::new();
+        block.backward(&dy, &cache, &mut grads);
+        let gn = grads["blk.attn_norm"].clone();
+        let eps = 1e-2f32;
+        for i in (0..block.d).step_by(3) {
+            let mut b2 = random_block(3, false);
+            b2.attn_norm[i] += eps;
+            let fp = loss_of(&b2, &x, s, &dy);
+            b2.attn_norm[i] -= 2.0 * eps;
+            let fm = loss_of(&b2, &x, s, &dy);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - gn[i]).abs() < 2e-2 * (1.0 + fd.abs().max(gn[i].abs())),
+                "attn_norm[{i}]: fd={fd} got={}",
+                gn[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Fine-tuning during quantization (paper §5, Appendix D): hand-written
+//! reverse-mode autodiff for the transformer block, Adam, and the
+//! two-stage Algorithm 5 driver.
+
+pub mod adam;
+pub mod autograd;
+pub mod block;
+pub mod finetune;
+
+pub use finetune::{quantize_model_ft, FtConfig};

@@ -1,0 +1,386 @@
+//! Autoregressive generation with a KV cache — the workload behind
+//! Tables 5/6 (generation throughput) and the serving engine's native
+//! fallback path. Supports dense (fp) weights and the fused E8P decode
+//! hot path per linear layer.
+
+use std::collections::BTreeMap;
+
+use crate::linalg::hadamard::{fwht_f32, HadTransform};
+use crate::model::ops::*;
+use crate::model::qlinear::QuantMatvec;
+use crate::model::{Arch, Model};
+
+/// Apply a scaled orthogonal Hadamard transform to an f32 vector
+/// (pure-FWHT fast path; f64 round-trip for the H_q ⊗ H_p case).
+pub fn had_apply_f32(t: &HadTransform, x: &mut [f32]) {
+    if t.q == 1 {
+        fwht_f32(x);
+        let s = 1.0 / (t.n as f32).sqrt();
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    } else {
+        let mut buf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        t.apply(&mut buf);
+        for (o, v) in x.iter_mut().zip(buf) {
+            *o = v as f32;
+        }
+    }
+}
+
+pub fn had_apply_inverse_f32(t: &HadTransform, x: &mut [f32]) {
+    if t.q == 1 {
+        fwht_f32(x); // Sylvester H is symmetric
+        let s = 1.0 / (t.n as f32).sqrt();
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    } else {
+        let mut buf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        t.apply_inverse(&mut buf);
+        for (o, v) in x.iter_mut().zip(buf) {
+            *o = v as f32;
+        }
+    }
+}
+
+/// Per-sequence KV cache.
+pub struct KvCache {
+    /// per layer: (ctx, d) k and v rows.
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(model: &Model) -> Self {
+        let (l, ctx, d) = (model.cfg.n_layers, model.cfg.ctx, model.cfg.d_model);
+        KvCache {
+            k: vec![vec![0.0; ctx * d]; l],
+            v: vec![vec![0.0; ctx * d]; l],
+            len: 0,
+        }
+    }
+}
+
+/// How each linear layer is applied at decode time.
+pub enum DecodeLinear<'a> {
+    Dense,
+    /// Fused E8P decode path (with RHT around it).
+    Quant(&'a QuantMatvec),
+}
+
+/// Generator with per-layer quantized matvec overrides.
+pub struct Generator<'a> {
+    pub model: &'a Model,
+    pub qlayers: BTreeMap<String, QuantMatvec>,
+    _marker: std::marker::PhantomData<&'a ()>,
+}
+
+impl<'a> Generator<'a> {
+    pub fn dense(model: &'a Model) -> Self {
+        Generator {
+            model,
+            qlayers: BTreeMap::new(),
+            _marker: Default::default(),
+        }
+    }
+
+    /// Build from a quantized model's packed layers (E8P methods only).
+    pub fn quantized(model: &'a Model, qm: &crate::qmodel::QuantizedModel) -> Self {
+        let mut qlayers = BTreeMap::new();
+        for (name, ql) in &qm.layers {
+            if let Some(p) = &ql.packed {
+                qlayers.insert(name.clone(), QuantMatvec::from_packed(ql.m, ql.n, p));
+            }
+        }
+        Generator {
+            model,
+            qlayers,
+            _marker: Default::default(),
+        }
+    }
+
+    fn apply_linear(&self, name: &str, x: &[f32], y: &mut [f32]) {
+        if let Some(qm) = self.qlayers.get(name) {
+            if qm.n.is_power_of_two() && qm.m.is_power_of_two() {
+                qm.matvec(x, y);
+                return;
+            }
+        }
+        let w = self.model.p(name);
+        let (m, n) = (w.shape[0], w.shape[1]);
+        crate::model::qlinear::dense_matvec(&w.data, x, m, n, y);
+    }
+
+    /// Bytes of weights streamed per decoded token.
+    pub fn weight_bytes_per_token(&self) -> u64 {
+        let mut total = 0u64;
+        for name in self.model.cfg.linear_names() {
+            if let Some(qm) = self.qlayers.get(&name) {
+                total += qm.bytes_per_matvec();
+            } else {
+                let w = self.model.p(&name);
+                total += (w.data.len() * 4) as u64;
+            }
+        }
+        // embed row + head also stream (fp32).
+        total += (self.model.p("lm_head").data.len() * 4) as u64;
+        total
+    }
+
+    /// Advance one token, returning the logits row.
+    pub fn decode_one(&self, token: u8, cache: &mut KvCache) -> Vec<f32> {
+        let cfg = &self.model.cfg;
+        let (d, heads, hd, ff) = (cfg.d_model, cfg.n_heads, cfg.head_dim(), cfg.d_ff);
+        let pos = cache.len;
+        assert!(pos < cfg.ctx, "KV cache full");
+        let model = self.model;
+        let (rope_cos, rope_sin) = {
+            // RoPE tables are owned by Model (private); recompute lazily:
+            // cheap at hd ≤ 64, but cache anyway via thread_local.
+            thread_local! {
+                static TABLES: std::cell::RefCell<Option<(usize, usize, Vec<f32>, Vec<f32>)>> =
+                    const { std::cell::RefCell::new(None) };
+            }
+            TABLES.with(|t| {
+                let mut t = t.borrow_mut();
+                let need = match &*t {
+                    Some((c, h, _, _)) => *c != cfg.ctx || *h != hd,
+                    None => true,
+                };
+                if need {
+                    let (c, s) = rope_tables(cfg.ctx, hd);
+                    *t = Some((cfg.ctx, hd, c, s));
+                }
+                let (_, _, c, s) = t.as_ref().unwrap();
+                (c.clone(), s.clone())
+            })
+        };
+
+        let embed = model.p("embed");
+        let mut x: Vec<f32> = embed.data[token as usize * d..(token as usize + 1) * d].to_vec();
+        if cfg.arch == Arch::NonLlama {
+            let pe = model.p("pos_embed");
+            for j in 0..d {
+                x[j] += pe.data[pos * d + j];
+            }
+        }
+
+        let mut h = vec![0.0f32; d];
+        let mut q = vec![0.0f32; d];
+        let mut kx = vec![0.0f32; d];
+        let mut vx = vec![0.0f32; d];
+        let mut att = vec![0.0f32; d];
+        let mut tmp_d = vec![0.0f32; d];
+        let mut ffg = vec![0.0f32; ff];
+        let mut ffu = vec![0.0f32; ff];
+
+        for layer in 0..cfg.n_layers {
+            let pre = format!("layers.{layer}.");
+            self.norm_one(&format!("{pre}attn_norm"), &x, d, &mut h);
+            self.apply_linear(&format!("{pre}wq"), &h, &mut q);
+            self.apply_linear(&format!("{pre}wk"), &h, &mut kx);
+            self.apply_linear(&format!("{pre}wv"), &h, &mut vx);
+            if cfg.arch != Arch::NonLlama {
+                rope_apply(&mut q, heads, hd, pos, &rope_cos, &rope_sin);
+                rope_apply(&mut kx, heads, hd, pos, &rope_cos, &rope_sin);
+            }
+            cache.k[layer][pos * d..(pos + 1) * d].copy_from_slice(&kx);
+            cache.v[layer][pos * d..(pos + 1) * d].copy_from_slice(&vx);
+            // Attention over cache[0..=pos].
+            let kc = &cache.k[layer];
+            let vc = &cache.v[layer];
+            let scale = 1.0 / (hd as f32).sqrt();
+            for hh in 0..heads {
+                let qh = &q[hh * hd..(hh + 1) * hd];
+                let mut scores = vec![0.0f32; pos + 1];
+                for t in 0..=pos {
+                    let kt = &kc[t * d + hh * hd..t * d + (hh + 1) * hd];
+                    let mut s = 0.0f32;
+                    for j in 0..hd {
+                        s += qh[j] * kt[j];
+                    }
+                    scores[t] = s * scale;
+                }
+                softmax_rows(&mut scores, 1, pos + 1);
+                let out = &mut att[hh * hd..(hh + 1) * hd];
+                out.iter_mut().for_each(|v| *v = 0.0);
+                for (t, &sc) in scores.iter().enumerate() {
+                    let vt = &vc[t * d + hh * hd..t * d + (hh + 1) * hd];
+                    for j in 0..hd {
+                        out[j] += sc * vt[j];
+                    }
+                }
+            }
+            self.apply_linear(&format!("{pre}wo"), &att, &mut tmp_d);
+            for (xv, &o) in x.iter_mut().zip(&tmp_d) {
+                *xv += o;
+            }
+            // MLP.
+            self.norm_one(&format!("{pre}mlp_norm"), &x, d, &mut h);
+            match cfg.arch {
+                Arch::Moe => {
+                    let router = model.p(&format!("{pre}router"));
+                    let ne = cfg.n_experts;
+                    let mut gl = vec![0.0f32; ne];
+                    matmul_nt(&h, &router.data, 1, d, ne, &mut gl);
+                    softmax_rows(&mut gl, 1, ne);
+                    let mut acc = vec![0.0f32; d];
+                    for e in 0..ne {
+                        self.apply_linear(&format!("{pre}w_gate.{e}"), &h, &mut ffg);
+                        self.apply_linear(&format!("{pre}w_up.{e}"), &h, &mut ffu);
+                        for (g, &u) in ffg.iter_mut().zip(&ffu) {
+                            *g = silu(*g) * u;
+                        }
+                        self.apply_linear(&format!("{pre}w_down.{e}"), &ffg, &mut tmp_d);
+                        for j in 0..d {
+                            acc[j] += gl[e] * tmp_d[j];
+                        }
+                    }
+                    for (xv, &o) in x.iter_mut().zip(&acc) {
+                        *xv += o;
+                    }
+                }
+                _ => {
+                    self.apply_linear(&format!("{pre}w_gate"), &h, &mut ffg);
+                    self.apply_linear(&format!("{pre}w_up"), &h, &mut ffu);
+                    if cfg.arch == Arch::NonLlama {
+                        for (g, &u) in ffg.iter_mut().zip(&ffu) {
+                            *g = gelu(*g) * u;
+                        }
+                    } else {
+                        for (g, &u) in ffg.iter_mut().zip(&ffu) {
+                            *g = silu(*g) * u;
+                        }
+                    }
+                    self.apply_linear(&format!("{pre}w_down"), &ffg, &mut tmp_d);
+                    for (xv, &o) in x.iter_mut().zip(&tmp_d) {
+                        *xv += o;
+                    }
+                }
+            }
+        }
+        self.norm_one("final_norm", &x, d, &mut h);
+        let head = model.p("lm_head");
+        let mut logits = vec![0.0f32; cfg.vocab];
+        matmul_nt(&h, &head.data, 1, d, cfg.vocab, &mut logits);
+        cache.len += 1;
+        logits
+    }
+
+    fn norm_one(&self, name: &str, x: &[f32], d: usize, y: &mut [f32]) {
+        match self.model.cfg.arch {
+            Arch::NonLlama => {
+                let w = self.model.p(name);
+                let b = self.model.p(&format!("{name}_bias"));
+                layer_norm(x, &w.data, &b.data, 1, d, y);
+            }
+            _ => {
+                let w = self.model.p(name);
+                rms_norm(x, &w.data, 1, d, y);
+            }
+        }
+    }
+
+    /// Greedy generation: prefill the prompt token-by-token, then sample
+    /// argmax until `max_new` tokens or ctx is full. Returns new tokens.
+    pub fn generate(&self, prompt: &[u8], max_new: usize) -> Vec<u8> {
+        let mut cache = KvCache::new(self.model);
+        let mut logits = vec![0.0f32; self.model.cfg.vocab];
+        for &t in prompt {
+            logits = self.decode_one(t, &mut cache);
+        }
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            if cache.len >= self.model.cfg.ctx {
+                break;
+            }
+            let next = argmax(&logits) as u8;
+            out.push(next);
+            logits = self.decode_one(next, &mut cache);
+        }
+        out
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tests_support::tiny_model;
+    use crate::model::NoHook;
+
+    #[test]
+    fn decode_matches_full_forward() {
+        let m = tiny_model(1);
+        let gen = Generator::dense(&m);
+        let tokens: Vec<u8> = vec![5, 9, 1, 33, 7];
+        let full = m.forward(&tokens, &mut NoHook);
+        let v = m.cfg.vocab;
+        let mut cache = KvCache::new(&m);
+        let mut last = vec![];
+        for &t in &tokens {
+            last = gen.decode_one(t, &mut cache);
+        }
+        let want = &full[(tokens.len() - 1) * v..tokens.len() * v];
+        for (a, b) in last.iter().zip(want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn generate_emits_tokens_below_vocab() {
+        let m = tiny_model(2);
+        let gen = Generator::dense(&m);
+        let out = gen.generate(&[1, 2, 3], 10);
+        assert_eq!(out.len(), 10);
+        assert!(out.iter().all(|&t| (t as usize) < m.cfg.vocab));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let m = tiny_model(3);
+        let gen = Generator::dense(&m);
+        assert_eq!(gen.generate(&[4, 5], 8), gen.generate(&[4, 5], 8));
+    }
+
+    #[test]
+    fn quantized_generator_close_to_dense_at_4bit() {
+        use crate::hessian::collect_hessians;
+        use crate::qmodel::quantize_model;
+        use crate::quant::pipeline::Method;
+        let m = tiny_model(4);
+        let calib: Vec<u8> = (0..128).map(|i| (i * 5 % 64) as u8).collect();
+        let hs = collect_hessians(&m, &calib, 4, 32);
+        let qm = quantize_model(&m, &hs, &Method::QuipSharp { bits: 4, ft: false }, 1).unwrap();
+        let gen_q = Generator::quantized(&qm.model, &qm);
+        assert!(!gen_q.qlayers.is_empty());
+        // The fused path must agree with the dense effective weights.
+        let gen_dense = Generator::dense(&qm.model);
+        let a = gen_q.generate(&[1, 2, 3, 4], 6);
+        let b = gen_dense.generate(&[1, 2, 3, 4], 6);
+        assert_eq!(a, b, "fused decode path diverged from dense w_eff");
+    }
+
+    #[test]
+    fn weight_bytes_smaller_when_quantized() {
+        use crate::hessian::collect_hessians;
+        use crate::qmodel::quantize_model;
+        use crate::quant::pipeline::Method;
+        let m = tiny_model(5);
+        let calib: Vec<u8> = (0..128).map(|i| (i % 64) as u8).collect();
+        let hs = collect_hessians(&m, &calib, 2, 32);
+        let qm = quantize_model(&m, &hs, &Method::QuipSharp { bits: 2, ft: false }, 1).unwrap();
+        let gq = Generator::quantized(&qm.model, &qm);
+        let gd = Generator::dense(&m);
+        assert!(gq.weight_bytes_per_token() < gd.weight_bytes_per_token() / 4);
+    }
+}

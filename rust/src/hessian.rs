@@ -1,0 +1,140 @@
+//! Proxy-Hessian collection (paper §2.2, §F.2): H = E[x xᵀ] over the
+//! inputs each linear layer sees on a calibration stream, accumulated in
+//! f64 with a small ridge for positive-definiteness.
+
+use std::collections::BTreeMap;
+
+use crate::linalg::Matrix;
+use crate::model::{LinearHook, Model};
+
+/// Accumulates per-layer input second moments during forward passes.
+pub struct HessianCollector {
+    acc: BTreeMap<String, (Matrix, usize)>,
+    /// Layers to collect for (None = all).
+    filter: Option<Vec<String>>,
+}
+
+impl HessianCollector {
+    pub fn new(filter: Option<Vec<String>>) -> Self {
+        HessianCollector {
+            acc: BTreeMap::new(),
+            filter,
+        }
+    }
+}
+
+impl LinearHook for HessianCollector {
+    fn observe(&mut self, layer: &str, input: &[f32], rows: usize, cols: usize) {
+        if let Some(f) = &self.filter {
+            if !f.iter().any(|l| l == layer) {
+                return;
+            }
+        }
+        if layer == "lm_head" {
+            return; // head stays fp16 (as in the paper)
+        }
+        let entry = self
+            .acc
+            .entry(layer.to_string())
+            .or_insert_with(|| (Matrix::zeros(cols, cols), 0));
+        // H += Xᵀ X (f64 accumulate), parallel over rows of H.
+        let h = &mut entry.0;
+        crate::util::threadpool::par_rows(&mut h.data, cols, |i, hrow| {
+            for s in 0..rows {
+                let xi = input[s * cols + i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                let xrow = &input[s * cols..(s + 1) * cols];
+                for (hj, &xj) in hrow.iter_mut().zip(xrow) {
+                    *hj += xi * xj as f64;
+                }
+            }
+        });
+        entry.1 += rows;
+    }
+}
+
+impl HessianCollector {
+    /// Finalize: H / count + ridge·mean(diag)·I, symmetrized.
+    pub fn finalize(self, ridge: f64) -> BTreeMap<String, Matrix> {
+        let mut out = BTreeMap::new();
+        for (name, (mut h, count)) in self.acc {
+            let inv = 1.0 / count.max(1) as f64;
+            for v in h.data.iter_mut() {
+                *v *= inv;
+            }
+            let n = h.rows;
+            let mean_diag = (0..n).map(|i| h[(i, i)]).sum::<f64>() / n as f64;
+            let eps = ridge * mean_diag.max(1e-12);
+            for i in 0..n {
+                h[(i, i)] += eps;
+            }
+            out.insert(name, h.symmetrize());
+        }
+        out
+    }
+}
+
+/// Run the model over calibration windows and return per-layer Hessians.
+pub fn collect_hessians(
+    model: &Model,
+    calib_tokens: &[u8],
+    n_windows: usize,
+    window: usize,
+) -> BTreeMap<String, Matrix> {
+    let mut collector = HessianCollector::new(None);
+    let stride = (calib_tokens.len().saturating_sub(window)) / n_windows.max(1);
+    for wdx in 0..n_windows {
+        let start = wdx * stride;
+        let toks = &calib_tokens[start..(start + window).min(calib_tokens.len())];
+        model.forward(toks, &mut collector);
+    }
+    collector.finalize(1e-2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ldl::cholesky;
+    use crate::model::tests_support::tiny_model;
+
+    #[test]
+    fn hessians_are_spd_and_right_shape() {
+        let m = tiny_model(1);
+        let tokens: Vec<u8> = (0..64).map(|i| (i * 7 % 64) as u8).collect();
+        let hs = collect_hessians(&m, &tokens, 3, 16);
+        assert!(!hs.is_empty());
+        for name in m.cfg.linear_names() {
+            let h = hs.get(&name).unwrap_or_else(|| panic!("missing {name}"));
+            let (_, n_in) = m.cfg.linear_shape(&name);
+            assert_eq!(h.rows, n_in);
+            // SPD check via Cholesky.
+            cholesky(h).unwrap_or_else(|e| panic!("{name} not SPD: {e}"));
+        }
+    }
+
+    #[test]
+    fn lm_head_not_collected() {
+        let m = tiny_model(2);
+        let tokens: Vec<u8> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let hs = collect_hessians(&m, &tokens, 1, 8);
+        assert!(!hs.contains_key("lm_head"));
+    }
+
+    #[test]
+    fn hessian_scales_like_second_moment() {
+        // Feeding the same window twice halves nothing: H is a mean.
+        let m = tiny_model(3);
+        let tokens: Vec<u8> = (0..32).map(|i| (i % 64) as u8).collect();
+        let h1 = collect_hessians(&m, &tokens, 1, 16);
+        let h2 = collect_hessians(&m, &tokens, 2, 16);
+        // Different windows → different H, but same order of magnitude.
+        let a = &h1["layers.0.wq"];
+        let b = &h2["layers.0.wq"];
+        let ra = a.trace();
+        let rb = b.trace();
+        assert!(ra > 0.0 && rb > 0.0);
+        assert!(ra / rb < 10.0 && rb / ra < 10.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! # QuIP# — full-system reproduction
+//!
+//! Rust + JAX + Pallas (three-layer, AOT via xla/PJRT) implementation of
+//! *QuIP#: Even Better LLM Quantization with Hadamard Incoherence and
+//! Lattice Codebooks* (Tseng, Chee, Sun, Kuleshov & De Sa, ICML 2024).
+//!
+//! Layer map:
+//! * `quant` — the paper's contribution: RHT/RFFT incoherence processing,
+//!   BlockLDLQ adaptive rounding, the E8P lattice codebook family, RVQ, and
+//!   every baseline the paper compares against.
+//! * `model`, `ft`, `eval`, `hessian`, `data` — the substrate: a native
+//!   Llama-architecture transformer (forward + hand-written backprop for
+//!   fine-tuning), calibration Hessians, perplexity/zeroshot harness, and
+//!   the synthetic-language workload.
+//! * `runtime`, `serve` — the L3 coordinator: PJRT execution of the
+//!   AOT-lowered JAX/Pallas artifacts and a batching inference server.
+//! * `util`, `bench`, `linalg` — offline-environment substrates (RNG, JSON,
+//!   thread pool, tensor IO, bench harness, dense linear algebra).
+
+pub mod bench;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod ft;
+pub mod generation;
+pub mod hessian;
+pub mod qmodel;
+pub mod runtime;
+pub mod serve;
+pub mod model;
+pub mod linalg;
+pub mod quant;
+pub mod util;

@@ -1,0 +1,231 @@
+//! Complex FFT substrate for the Randomized FFT incoherence variant
+//! (paper Algorithm 4 / §A.2). Radix-2 iterative Cooley–Tukey for
+//! power-of-two lengths plus Bluestein's chirp-z algorithm for arbitrary
+//! lengths (needed because e.g. n = 384 reals → 192 complex points).
+
+use std::f64::consts::PI;
+
+/// In-place radix-2 FFT. `inverse` applies the conjugate transform
+/// (unnormalized in both directions; see [`fft_unitary`]).
+fn fft_pow2(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    debug_assert!(n.is_power_of_two());
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr0, vi0) = (re[i + k + len / 2], im[i + k + len / 2]);
+                let vr = vr0 * cr - vi0 * ci;
+                let vi = vr0 * ci + vi0 * cr;
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Arbitrary-length DFT via Bluestein: x_k = sum_j x_j e^{-2πi jk/n}
+/// expressed as a convolution, evaluated with a power-of-2 FFT.
+fn fft_bluestein(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    let m = (2 * n - 1).next_power_of_two();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    // Chirp: w_j = e^{sign * πi j² / n}
+    let chirp: Vec<(f64, f64)> = (0..n)
+        .map(|j| {
+            // j² mod 2n avoids precision loss for large j.
+            let jj = (j * j) % (2 * n);
+            let ang = sign * PI * jj as f64 / n as f64;
+            (ang.cos(), ang.sin())
+        })
+        .collect();
+    // a_j = x_j * w_j
+    let mut are = vec![0.0; m];
+    let mut aim = vec![0.0; m];
+    for j in 0..n {
+        let (cr, ci) = chirp[j];
+        are[j] = re[j] * cr - im[j] * ci;
+        aim[j] = re[j] * ci + im[j] * cr;
+    }
+    // b_j = conj(w_j) with wraparound symmetry b_{m-j} = b_j
+    let mut bre = vec![0.0; m];
+    let mut bim = vec![0.0; m];
+    for j in 0..n {
+        let (cr, ci) = chirp[j];
+        bre[j] = cr;
+        bim[j] = -ci;
+        if j > 0 {
+            bre[m - j] = cr;
+            bim[m - j] = -ci;
+        }
+    }
+    // Convolution via pow2 FFT.
+    fft_pow2(&mut are, &mut aim, false);
+    fft_pow2(&mut bre, &mut bim, false);
+    for j in 0..m {
+        let r = are[j] * bre[j] - aim[j] * bim[j];
+        let i = are[j] * bim[j] + aim[j] * bre[j];
+        are[j] = r;
+        aim[j] = i;
+    }
+    fft_pow2(&mut are, &mut aim, true);
+    let scale = 1.0 / m as f64;
+    for k in 0..n {
+        let (cr, ci) = chirp[k];
+        let (r, i) = (are[k] * scale, aim[k] * scale);
+        re[k] = r * cr - i * ci;
+        im[k] = r * ci + i * cr;
+    }
+}
+
+/// Unnormalized DFT of any length (pow2 fast path, Bluestein otherwise).
+pub fn fft(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    assert_eq!(re.len(), im.len());
+    let n = re.len();
+    if n <= 1 {
+        return;
+    }
+    if n.is_power_of_two() {
+        fft_pow2(re, im, inverse);
+    } else {
+        fft_bluestein(re, im, inverse);
+    }
+}
+
+/// Unitary DFT: scaled by 1/sqrt(n) so that as an operator on R^{2n} it is
+/// orthogonal — the property incoherence processing needs (Lemma A.3).
+pub fn fft_unitary(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    fft(re, im, inverse);
+    let s = 1.0 / (n as f64).sqrt();
+    for v in re.iter_mut() {
+        *v *= s;
+    }
+    for v in im.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Naive O(n²) DFT (test oracle).
+pub fn dft_naive(re: &[f64], im: &[f64], inverse: bool) -> (Vec<f64>, Vec<f64>) {
+    let n = re.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut ore = vec![0.0; n];
+    let mut oim = vec![0.0; n];
+    for k in 0..n {
+        for j in 0..n {
+            let ang = sign * 2.0 * PI * (j * k % n) as f64 / n as f64;
+            let (c, s) = (ang.cos(), ang.sin());
+            ore[k] += re[j] * c - im[j] * s;
+            oim[k] += re[j] * s + im[j] * c;
+        }
+    }
+    (ore, oim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+
+    fn close(a: &[f64], b: &[f64], tol: f64) -> bool {
+        a.iter().zip(b).all(|(x, y)| (x - y).abs() < tol)
+    }
+
+    #[test]
+    fn pow2_matches_naive() {
+        check("fft_pow2_naive", 10, |rng| {
+            let n = 1usize << (1 + rng.below_usize(6));
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let (wr, wi) = dft_naive(&re, &im, false);
+            let (mut gr, mut gi) = (re, im);
+            fft(&mut gr, &mut gi, false);
+            if !close(&gr, &wr, 1e-8) || !close(&gi, &wi, 1e-8) {
+                return Err(format!("n={n} mismatch"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bluestein_matches_naive() {
+        check("fft_bluestein_naive", 10, |rng| {
+            let sizes = [3usize, 5, 6, 7, 12, 96, 192, 100];
+            let n = sizes[rng.below_usize(sizes.len())];
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let (wr, wi) = dft_naive(&re, &im, false);
+            let (mut gr, mut gi) = (re, im);
+            fft(&mut gr, &mut gi, false);
+            if !close(&gr, &wr, 1e-7) || !close(&gi, &wi, 1e-7) {
+                return Err(format!("n={n} mismatch"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unitary_roundtrip() {
+        check("fft_unitary_roundtrip", 10, |rng| {
+            let sizes = [8usize, 192, 64, 100, 768];
+            let n = sizes[rng.below_usize(sizes.len())];
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let (mut gr, mut gi) = (re.clone(), im.clone());
+            fft_unitary(&mut gr, &mut gi, false);
+            fft_unitary(&mut gr, &mut gi, true);
+            if !close(&gr, &re, 1e-8) || !close(&gi, &im, 1e-8) {
+                return Err(format!("n={n} roundtrip failed"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        check("fft_parseval", 10, |rng| {
+            let n = 192;
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im = vec![0.0; n];
+            let e0: f64 = re.iter().map(|x| x * x).sum();
+            let (mut gr, mut gi) = (re, im);
+            fft_unitary(&mut gr, &mut gi, false);
+            let e1: f64 = gr.iter().zip(&gi).map(|(r, i)| r * r + i * i).sum();
+            if (e0 - e1).abs() > 1e-8 * e0.max(1.0) {
+                return Err(format!("{e0} vs {e1}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,496 @@
+//! Hadamard machinery for incoherence processing (paper §3).
+//!
+//! * `fwht` — in-place fast Walsh–Hadamard transform, O(n log n), power-of-2
+//!   lengths, no floating multiplies in the butterfly (paper's constant-
+//!   factor argument).
+//! * `hadamard_matrix` — explicit ±1 Hadamard matrices via Sylvester
+//!   doubling and the two Paley constructions, covering every size this
+//!   repo needs (12, 20, 28, ... and all powers of two).
+//! * `HadTransform` — the paper's n = p·q scheme: V = H_q ⊗ H_p with p the
+//!   largest power of 2 dividing n such that H_{n/p} exists; applies the
+//!   orthogonal (scaled) transform in O(q²·p + n·log p) per vector.
+
+use super::matrix::Matrix;
+
+/// In-place unnormalized FWHT; `x.len()` must be a power of two.
+/// After the call, x <- H_n x with H the ±1 Sylvester matrix.
+pub fn fwht(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fwht length {n} not a power of 2");
+    let mut h = 1;
+    while h < n {
+        let step = h * 2;
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += step;
+        }
+        h = step;
+    }
+}
+
+/// f32 variant for the inference hot path.
+pub fn fwht_f32(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fwht length {n} not a power of 2");
+    let mut h = 1;
+    while h < n {
+        let step = h * 2;
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += step;
+        }
+        h = step;
+    }
+}
+
+/// Orthogonal (1/sqrt n scaled) FWHT.
+pub fn fwht_normalized(x: &mut [f64]) {
+    fwht(x);
+    let s = 1.0 / (x.len() as f64).sqrt();
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+fn is_prime(n: usize) -> bool {
+    if n < 2 {
+        return false;
+    }
+    let mut d = 2;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 1;
+    }
+    true
+}
+
+/// Legendre symbol chi(a) over GF(p): 0 if a≡0, +1 if QR, -1 otherwise.
+fn legendre(a: i64, p: i64) -> i64 {
+    let a = a.rem_euclid(p);
+    if a == 0 {
+        return 0;
+    }
+    // Euler's criterion by fast modular exponentiation.
+    let mut base = a as u128;
+    let mut exp = ((p - 1) / 2) as u128;
+    let m = p as u128;
+    let mut acc: u128 = 1;
+    base %= m;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = acc * base % m;
+        }
+        base = base * base % m;
+        exp >>= 1;
+    }
+    if acc == 1 {
+        1
+    } else {
+        -1
+    }
+}
+
+/// Paley construction I: for prime p ≡ 3 (mod 4), returns H_{p+1}.
+fn paley1(p: usize) -> Matrix {
+    let n = p + 1;
+    // Jacobsthal matrix Q_{ij} = chi(i - j).
+    let mut h = Matrix::zeros(n, n);
+    // Border row/col of +1, then I + Q inside with sign conventions:
+    // H = [[1, 1^T], [-1, Q + I]] gives a Hadamard matrix for p≡3 mod 4
+    // (one of the standard normalizations).
+    for j in 0..n {
+        h[(0, j)] = 1.0;
+    }
+    for i in 1..n {
+        h[(i, 0)] = -1.0;
+    }
+    for i in 1..n {
+        for j in 1..n {
+            let q = legendre(i as i64 - j as i64, p as i64) as f64;
+            h[(i, j)] = if i == j { 1.0 } else { q };
+        }
+    }
+    h
+}
+
+/// Paley construction II: for prime p ≡ 1 (mod 4), returns H_{2(p+1)}.
+fn paley2(p: usize) -> Matrix {
+    let m = p + 1;
+    // Symmetric conference matrix C of order p+1 (C^T C = p I, zero diag).
+    let mut c = Matrix::zeros(m, m);
+    for j in 1..m {
+        c[(0, j)] = 1.0;
+        c[(j, 0)] = 1.0;
+    }
+    for i in 1..m {
+        for j in 1..m {
+            if i != j {
+                c[(i, j)] = legendre(i as i64 - j as i64, p as i64) as f64;
+            }
+        }
+    }
+    // Replace entries: 0 -> [[1,-1],[-1,-1]], +1 -> [[1,1],[1,-1]],
+    // -1 -> -[[1,1],[1,-1]].
+    let n = 2 * m;
+    let mut h = Matrix::zeros(n, n);
+    for i in 0..m {
+        for j in 0..m {
+            let (a, b, cc, d) = match c[(i, j)] as i64 {
+                0 => (1.0, -1.0, -1.0, -1.0),
+                1 => (1.0, 1.0, 1.0, -1.0),
+                -1 => (-1.0, -1.0, -1.0, 1.0),
+                _ => unreachable!(),
+            };
+            h[(2 * i, 2 * j)] = a;
+            h[(2 * i, 2 * j + 1)] = b;
+            h[(2 * i + 1, 2 * j)] = cc;
+            h[(2 * i + 1, 2 * j + 1)] = d;
+        }
+    }
+    h
+}
+
+/// Construct a ±1 Hadamard matrix of order `n`, if this library knows how:
+/// n = 1, 2, or any n ≡ 0 (mod 4) reachable by Sylvester doubling over a
+/// Paley I/II base. Returns None otherwise (the RFFT path is the fallback,
+/// as in the paper).
+pub fn hadamard_matrix(n: usize) -> Option<Matrix> {
+    match n {
+        0 => None,
+        1 => Some(Matrix::from_vec(1, 1, vec![1.0])),
+        2 => Some(Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, -1.0])),
+        n if n % 4 != 0 => None,
+        n => {
+            // Powers of two take the Sylvester construction so the dense
+            // matrix agrees with the FWHT butterfly ordering.
+            if n.is_power_of_two() {
+                let h2 = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, -1.0]);
+                return Some(h2.kron(&hadamard_matrix(n / 2).unwrap()));
+            }
+            if n - 1 > 2 && is_prime(n - 1) && (n - 1) % 4 == 3 {
+                return Some(paley1(n - 1));
+            }
+            if n % 2 == 0 {
+                let half = n / 2;
+                if half >= 2 && is_prime(half - 1) && (half - 1) % 4 == 1 {
+                    return Some(paley2(half - 1));
+                }
+                if let Some(h) = hadamard_matrix(half) {
+                    let h2 = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, -1.0]);
+                    return Some(h2.kron(&h));
+                }
+            }
+            None
+        }
+    }
+}
+
+/// Check H H^T = n I exactly (entries are ±1 so the products are integers).
+pub fn is_hadamard(h: &Matrix) -> bool {
+    if h.rows != h.cols {
+        return false;
+    }
+    if h.data.iter().any(|&v| v != 1.0 && v != -1.0) {
+        return false;
+    }
+    let n = h.rows;
+    let prod = h.matmul_transb(h);
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { n as f64 } else { 0.0 };
+            if (prod[(i, j)] - want).abs() > 1e-9 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// The orthogonal structured transform used by incoherence processing:
+/// V = (H_q ⊗ H_p) / sqrt(n), where p = 2^a is the power-of-2 part of n
+/// (reduced until H_{n/p} is constructible) and H_q is an explicit
+/// Hadamard matrix. For power-of-2 n this degenerates to the pure FWHT.
+#[derive(Clone, Debug)]
+pub struct HadTransform {
+    pub n: usize,
+    /// power-of-2 factor (FWHT part)
+    pub p: usize,
+    /// explicit-matrix factor; `hq` is None when q == 1
+    pub q: usize,
+    hq: Option<Matrix>,
+}
+
+impl HadTransform {
+    /// Build the transform for dimension n, or None when n has no
+    /// factorization n = q·2^a with H_q constructible.
+    pub fn new(n: usize) -> Option<Self> {
+        assert!(n > 0);
+        // Largest power of two dividing n.
+        let mut p = 1usize << n.trailing_zeros();
+        let mut q = n / p;
+        // Grow q by powers of two until H_q is constructible (paper: "p is
+        // the largest power of 2 such that there exists a known Hadamard
+        // matrix of size q").
+        loop {
+            if q == 1 {
+                return Some(HadTransform { n, p, q, hq: None });
+            }
+            if let Some(hq) = hadamard_matrix(q) {
+                return Some(HadTransform { n, p, q, hq: Some(hq) });
+            }
+            if p == 1 {
+                return None;
+            }
+            p /= 2;
+            q *= 2;
+        }
+    }
+
+    /// Apply the orthogonal transform in place: x <- (H_q ⊗ H_p) x / sqrt(n).
+    ///
+    /// With x viewed row-major as a (q, p) matrix X, (H_q ⊗ H_p) x equals
+    /// H_q · X · H_p^T flattened; H_p is symmetric so the second factor is a
+    /// row-wise FWHT, and H_q is applied densely across the q rows
+    /// (O(q²·p)). Total O(q²·p + n·log p), matching the paper's cost model.
+    pub fn apply(&self, x: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        // Row-wise FWHT over the p-sized rows.
+        if self.p > 1 {
+            for row in x.chunks_mut(self.p) {
+                fwht(row);
+            }
+        }
+        // Dense H_q across rows (column mixing), skipped when q == 1.
+        if let Some(hq) = &self.hq {
+            let p = self.p;
+            let q = self.q;
+            let mut col = vec![0.0f64; q];
+            let mut out = vec![0.0f64; q];
+            for c in 0..p {
+                for r in 0..q {
+                    col[r] = x[r * p + c];
+                }
+                for r in 0..q {
+                    let hrow = hq.row(r);
+                    let mut acc = 0.0;
+                    for k in 0..q {
+                        acc += hrow[k] * col[k];
+                    }
+                    out[r] = acc;
+                }
+                for r in 0..q {
+                    x[r * p + c] = out[r];
+                }
+            }
+        }
+        let s = 1.0 / (self.n as f64).sqrt();
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Inverse transform. The scaled transform is orthogonal and symmetric
+    /// only in the pure power-of-2 case; in general the inverse is the
+    /// transpose, applied here explicitly.
+    pub fn apply_inverse(&self, x: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        // Inverse of H_q ⊗ H_p (scaled orthogonal) is its transpose:
+        // (H_q^T ⊗ H_p^T)/sqrt(n). H_p (Sylvester) is symmetric; H_q from
+        // Paley II is symmetric but Paley I is not, so use hq^T.
+        if self.p > 1 {
+            for row in x.chunks_mut(self.p) {
+                fwht(row); // H_p^T = H_p
+            }
+        }
+        if let Some(hq) = &self.hq {
+            let p = self.p;
+            let q = self.q;
+            let mut col = vec![0.0f64; q];
+            let mut out = vec![0.0f64; q];
+            for c in 0..p {
+                for r in 0..q {
+                    col[r] = x[r * p + c];
+                }
+                for r in 0..q {
+                    let mut acc = 0.0;
+                    for k in 0..q {
+                        acc += hq[(k, r)] * col[k]; // hq^T
+                    }
+                    out[r] = acc;
+                }
+                for r in 0..q {
+                    x[r * p + c] = out[r];
+                }
+            }
+        }
+        let s = 1.0 / (self.n as f64).sqrt();
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Materialize the scaled orthogonal matrix (tests / small dims only).
+    pub fn dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n, self.n);
+        for j in 0..self.n {
+            let mut e = vec![0.0; self.n];
+            e[j] = 1.0;
+            self.apply(&mut e);
+            for i in 0..self.n {
+                m[(i, j)] = e[i];
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn fwht_matches_dense_hadamard() {
+        let n = 16;
+        let h = hadamard_matrix(n).unwrap();
+        let mut rng = Pcg64::new(1);
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let mut y = x.clone();
+        fwht(&mut y);
+        let want = h.matvec(&x);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fwht_selfinverse_scaled() {
+        let mut rng = Pcg64::new(2);
+        let x: Vec<f64> = (0..64).map(|_| rng.gaussian()).collect();
+        let mut y = x.clone();
+        fwht_normalized(&mut y);
+        fwht_normalized(&mut y);
+        for (a, b) in y.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn paley1_sizes_are_hadamard() {
+        for n in [4, 12, 20, 24, 28, 44] {
+            let h = hadamard_matrix(n).unwrap_or_else(|| panic!("no H_{n}"));
+            assert!(is_hadamard(&h), "H_{n} failed orthogonality");
+        }
+    }
+
+    #[test]
+    fn sylvester_powers_are_hadamard() {
+        for n in [1, 2, 4, 8, 16, 32, 64, 128] {
+            let h = hadamard_matrix(n).unwrap();
+            assert!(is_hadamard(&h), "H_{n} failed");
+        }
+    }
+
+    #[test]
+    fn paley2_from_p13_gives_h28() {
+        let h = hadamard_matrix(28).unwrap();
+        assert!(is_hadamard(&h));
+    }
+
+    #[test]
+    fn no_hadamard_for_non_multiple_of_4() {
+        assert!(hadamard_matrix(6).is_none());
+        assert!(hadamard_matrix(10).is_none());
+    }
+
+    #[test]
+    fn had_transform_orthogonal_for_model_dims() {
+        // Every dimension the model family uses, incl. non-powers of 2.
+        for n in [128usize, 256, 384, 512, 1024, 1536, 96, 12, 24] {
+            let t = HadTransform::new(n).unwrap_or_else(|| panic!("no transform for {n}"));
+            let d = t.dense();
+            let prod = d.matmul_transb(&d);
+            let err = prod.max_diff(&Matrix::eye(n));
+            assert!(err < 1e-9, "n={n} not orthogonal, err={err}");
+        }
+    }
+
+    #[test]
+    fn had_transform_inverse_roundtrip() {
+        check("had_inverse", 20, |rng| {
+            let dims = [12usize, 32, 48, 96, 128, 384];
+            let n = dims[rng.below_usize(dims.len())];
+            let t = HadTransform::new(n).unwrap();
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let mut y = x.clone();
+            t.apply(&mut y);
+            t.apply_inverse(&mut y);
+            for (i, (a, b)) in y.iter().zip(&x).enumerate() {
+                if (a - b).abs() > 1e-9 {
+                    return Err(format!("n={n} idx={i}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn had_transform_preserves_norm() {
+        check("had_norm", 20, |rng| {
+            let dims = [20usize, 28, 64, 384, 1536];
+            let n = dims[rng.below_usize(dims.len())];
+            let t = HadTransform::new(n).unwrap();
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let norm0: f64 = x.iter().map(|v| v * v).sum();
+            let mut y = x;
+            t.apply(&mut y);
+            let norm1: f64 = y.iter().map(|v| v * v).sum();
+            if (norm0 - norm1).abs() > 1e-6 * norm0.max(1.0) {
+                return Err(format!("n={n}: {norm0} vs {norm1}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pure_pow2_uses_fwht_only() {
+        let t = HadTransform::new(256).unwrap();
+        assert_eq!(t.q, 1);
+        assert_eq!(t.p, 256);
+    }
+
+    #[test]
+    fn dim_384_factors_as_12_times_32() {
+        let t = HadTransform::new(384).unwrap();
+        assert_eq!(t.q, 12);
+        assert_eq!(t.p, 32);
+    }
+
+    #[test]
+    fn fwht_f32_matches_f64() {
+        let mut rng = Pcg64::new(7);
+        let x64: Vec<f64> = (0..128).map(|_| rng.gaussian()).collect();
+        let mut a: Vec<f64> = x64.clone();
+        let mut b: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        fwht(&mut a);
+        fwht_f32(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - *y as f64).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,425 @@
+//! Matrix factorizations for adaptive rounding: Cholesky, the paper's
+//! g-block LDL decomposition H = 𝐋ᵀ𝐃𝐋 (Section 4.1), and a Jacobi
+//! symmetric eigensolver used to verify incoherence bounds and compute
+//! tr(H^{1/2}) in tests.
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor C with A = C Cᵀ. Fails on non-PD input.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut c = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= c[(i, k)] * c[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("cholesky: not positive definite at pivot {i} (s={s})");
+                }
+                c[(i, j)] = s.sqrt();
+            } else {
+                c[(i, j)] = s / c[(j, j)];
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// Solve A x = b given the Cholesky factor C (A = C Cᵀ).
+pub fn cholesky_solve(c: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = c.rows;
+    assert_eq!(b.len(), n);
+    // Forward solve C y = b.
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= c[(i, k)] * y[k];
+        }
+        y[i] = s / c[(i, i)];
+    }
+    // Back solve Cᵀ x = y.
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= c[(k, i)] * x[k];
+        }
+        x[i] = s / c[(i, i)];
+    }
+    x
+}
+
+/// Inverse of a symmetric positive definite matrix via Cholesky.
+pub fn spd_inverse(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows;
+    let c = cholesky(a)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e.iter_mut().for_each(|v| *v = 0.0);
+        e[j] = 1.0;
+        let col = cholesky_solve(&c, &e);
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+    }
+    Ok(inv.symmetrize())
+}
+
+/// The paper's g-block LDL decomposition (Section 4.1):
+/// H = 𝐋ᵀ 𝐃 𝐋 with 𝐋 unit *block lower* triangular and 𝐃 block diagonal.
+///
+/// We compute the equivalent U 𝐃 Uᵀ factorization with U = 𝐋ᵀ unit block
+/// *upper* triangular by block elimination from the bottom-right corner.
+/// BlockLDLQ's linear feedback matrix is then `U - I` (strictly block
+/// upper), whose k-th block column feeds quantization of block k from the
+/// rounding residual of blocks < k.
+pub struct BlockLdl {
+    /// Unit block-upper-triangular U (n×n), U = 𝐋ᵀ.
+    pub u: Matrix,
+    /// Diagonal blocks of 𝐃, each g×g.
+    pub d: Vec<Matrix>,
+    pub g: usize,
+}
+
+impl BlockLdl {
+    /// Reconstruct H = U 𝐃 Uᵀ (tests).
+    pub fn reconstruct(&self) -> Matrix {
+        let n = self.u.rows;
+        let g = self.g;
+        let nb = n / g;
+        let mut dfull = Matrix::zeros(n, n);
+        for (k, dk) in self.d.iter().enumerate() {
+            dfull.set_block(k, k, g, dk);
+        }
+        let _ = nb;
+        self.u.matmul(&dfull).matmul_transb(&self.u)
+    }
+
+    /// tr(𝐃) — the quantity Theorem 4.1 bounds.
+    pub fn trace_d(&self) -> f64 {
+        self.d.iter().map(|dk| dk.trace()).sum()
+    }
+}
+
+/// Compute the g-block LDL decomposition of symmetric positive definite H.
+/// `n` must be divisible by `g`. A tiny ridge is added automatically if a
+/// diagonal block is numerically singular.
+pub fn block_ldl(h: &Matrix, g: usize) -> Result<BlockLdl> {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    assert!(g >= 1 && n % g == 0, "block size {g} must divide n={n}");
+    let nb = n / g;
+    let mut a = h.clone();
+    let mut u = Matrix::eye(n);
+    let mut d = vec![Matrix::zeros(g, g); nb];
+
+    // Scratch for the per-step U_{·k} panel (k blocks of g×g, row-major
+    // per block) and its D_k-scaled copy — avoids per-block allocations
+    // in the O(nb³) Schur update.
+    let mut uk = vec![0.0f64; nb * g * g];
+    let mut ukd = vec![0.0f64; nb * g * g];
+
+    for k in (0..nb).rev() {
+        let dk = a.block(k, k, g).symmetrize();
+        // Invert D_k (with escalating ridge on numerical failure).
+        let dk_inv = match spd_inverse(&dk) {
+            Ok(inv) => inv,
+            Err(_) => {
+                let ridge = 1e-8 * (dk.trace().abs() / g as f64).max(1e-12);
+                let mut dk2 = dk.clone();
+                for i in 0..g {
+                    dk2[(i, i)] += ridge;
+                }
+                spd_inverse(&dk2)?
+            }
+        };
+        // U_{ik} = A_{ik} D_k^{-1} and (U_{ik} D_k) for i < k.
+        for i in 0..k {
+            for r in 0..g {
+                for c in 0..g {
+                    let mut acc = 0.0;
+                    for t in 0..g {
+                        acc += a[(i * g + r, k * g + t)] * dk_inv[(t, c)];
+                    }
+                    uk[(i * g + r) * g + c] = acc;
+                }
+            }
+            // ukd_i = uk_i · D_k
+            for r in 0..g {
+                for c in 0..g {
+                    let mut acc = 0.0;
+                    for t in 0..g {
+                        acc += uk[(i * g + r) * g + t] * dk[(t, c)];
+                    }
+                    ukd[(i * g + r) * g + c] = acc;
+                }
+            }
+            for r in 0..g {
+                for c in 0..g {
+                    u[(i * g + r, k * g + c)] = uk[(i * g + r) * g + c];
+                }
+            }
+        }
+        d[k] = dk;
+        if k == 0 {
+            continue;
+        }
+        // Schur update A_{ij} -= (U_{ik} D_k) U_{jk}ᵀ for i,j < k,
+        // parallel over block-rows i (disjoint row slices of `a`).
+        let cols = a.cols;
+        let uk_ref = &uk;
+        let ukd_ref = &ukd;
+        crate::util::threadpool::par_rows(&mut a.data[..k * g * cols], g * cols, |i, arows| {
+            // arows = rows i·g .. (i+1)·g of A.
+            let ukd_i = &ukd_ref[i * g * g..(i + 1) * g * g];
+            for j in 0..k {
+                let uk_j = &uk_ref[j * g * g..(j + 1) * g * g];
+                for r in 0..g {
+                    let arow = &mut arows[r * cols + j * g..r * cols + (j + 1) * g];
+                    for (c, av) in arow.iter_mut().enumerate() {
+                        let mut acc = 0.0;
+                        for t in 0..g {
+                            acc += ukd_i[r * g + t] * uk_j[c * g + t];
+                        }
+                        *av -= acc;
+                    }
+                }
+            }
+        });
+    }
+    Ok(BlockLdl { u, d, g })
+}
+
+/// Jacobi eigenvalue algorithm for symmetric matrices. Returns
+/// (eigenvalues ascending, eigenvector matrix Q with columns = vectors),
+/// A = Q diag(λ) Qᵀ. O(n³) per sweep — intended for test/verification
+/// sizes (n ≲ a few hundred).
+pub fn sym_eig(a: &Matrix) -> (Vec<f64>, Matrix) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.symmetrize();
+    let mut q = Matrix::eye(n);
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // Off-diagonal magnitude.
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + m.frob_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for r in p + 1..n {
+                let apr = m[(p, r)];
+                if apr.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let arr = m[(r, r)];
+                let theta = 0.5 * (arr - app) / apr;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation G(p,r,θ) on both sides.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkr = m[(k, r)];
+                    m[(k, p)] = c * mkp - s * mkr;
+                    m[(k, r)] = s * mkp + c * mkr;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mrk = m[(r, k)];
+                    m[(p, k)] = c * mpk - s * mrk;
+                    m[(r, k)] = s * mpk + c * mrk;
+                }
+                for k in 0..n {
+                    let qkp = q[(k, p)];
+                    let qkr = q[(k, r)];
+                    q[(k, p)] = c * qkp - s * qkr;
+                    q[(k, r)] = s * qkp + c * qkr;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    let vals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&i, &j| vals[i].partial_cmp(&vals[j]).unwrap());
+    let sorted_vals: Vec<f64> = order.iter().map(|&i| vals[i]).collect();
+    let mut qs = Matrix::zeros(n, n);
+    for (newc, &oldc) in order.iter().enumerate() {
+        for i in 0..n {
+            qs[(i, newc)] = q[(i, oldc)];
+        }
+    }
+    (sorted_vals, qs)
+}
+
+/// tr(A^{1/2}) for symmetric PSD A via eigenvalues (test sizes).
+pub fn trace_sqrt(a: &Matrix) -> f64 {
+    let (vals, _) = sym_eig(a);
+    vals.iter().map(|&v| v.max(0.0).sqrt()).sum()
+}
+
+/// Generate a random symmetric positive definite matrix (test helper):
+/// B Bᵀ / n + ridge I with B gaussian.
+pub fn random_spd(n: usize, ridge: f64, rng: &mut crate::util::rng::Pcg64) -> Matrix {
+    let b = Matrix::gaussian(n, n, 1.0, rng);
+    let mut h = b.matmul_transb(&b).scale(1.0 / n as f64);
+    for i in 0..n {
+        h[(i, i)] += ridge;
+    }
+    h.symmetrize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        check("cholesky", 10, |rng| {
+            let n = 4 + rng.below_usize(20);
+            let a = random_spd(n, 0.1, rng);
+            let c = cholesky(&a).map_err(|e| e.to_string())?;
+            let err = c.matmul_transb(&c).max_diff(&a);
+            if err > 1e-9 {
+                return Err(format!("n={n} err={err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn cholesky_solve_works() {
+        check("chol_solve", 10, |rng| {
+            let n = 3 + rng.below_usize(12);
+            let a = random_spd(n, 0.1, rng);
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let b = a.matvec(&x);
+            let c = cholesky(&a).map_err(|e| e.to_string())?;
+            let got = cholesky_solve(&c, &b);
+            for (g, w) in got.iter().zip(&x) {
+                if (g - w).abs() > 1e-7 {
+                    return Err(format!("solve mismatch {g} vs {w}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spd_inverse_works() {
+        let mut rng = Pcg64::new(3);
+        let a = random_spd(8, 0.2, &mut rng);
+        let inv = spd_inverse(&a).unwrap();
+        assert!(a.matmul(&inv).max_diff(&Matrix::eye(8)) < 1e-8);
+    }
+
+    #[test]
+    fn block_ldl_reconstructs() {
+        check("block_ldl", 10, |rng| {
+            let gs = [1usize, 2, 4, 8];
+            let g = gs[rng.below_usize(gs.len())];
+            let nb = 1 + rng.below_usize(6);
+            let n = g * nb;
+            let h = random_spd(n, 0.1, rng);
+            let f = block_ldl(&h, g).map_err(|e| e.to_string())?;
+            let err = f.reconstruct().max_diff(&h);
+            if err > 1e-8 {
+                return Err(format!("g={g} n={n} err={err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_ldl_u_is_unit_block_upper() {
+        let mut rng = Pcg64::new(5);
+        let g = 4;
+        let n = 16;
+        let h = random_spd(n, 0.1, &mut rng);
+        let f = block_ldl(&h, g).unwrap();
+        for bi in 0..n / g {
+            // Diagonal blocks are exactly identity.
+            let diag = f.u.block(bi, bi, g);
+            assert!(diag.max_diff(&Matrix::eye(g)) == 0.0);
+            // Below-diagonal blocks are exactly zero.
+            for bj in 0..bi {
+                let b = f.u.block(bi, bj, g);
+                assert!(b.max_abs() == 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn block_ldl_g1_matches_scalar_ldl_semantics() {
+        // For g=1 the factorization must satisfy H = U diag(d) Uᵀ with unit
+        // upper-triangular U.
+        let mut rng = Pcg64::new(6);
+        let h = random_spd(6, 0.2, &mut rng);
+        let f = block_ldl(&h, 1).unwrap();
+        assert!(f.reconstruct().max_diff(&h) < 1e-9);
+        for dk in &f.d {
+            assert!(dk[(0, 0)] > 0.0, "pivots must be positive for PD input");
+        }
+    }
+
+    #[test]
+    fn sym_eig_reconstructs_and_orthogonal() {
+        let mut rng = Pcg64::new(7);
+        let a = random_spd(12, 0.05, &mut rng);
+        let (vals, q) = sym_eig(&a);
+        // Q orthogonal.
+        assert!(q.matmul_transb(&q).max_diff(&Matrix::eye(12)) < 1e-8);
+        // Reconstruct.
+        let mut lam = Matrix::zeros(12, 12);
+        for i in 0..12 {
+            lam[(i, i)] = vals[i];
+        }
+        let rec = q.matmul(&lam).matmul_transb(&q);
+        assert!(rec.max_diff(&a) < 1e-8);
+        // PSD input → nonnegative eigenvalues (sorted ascending).
+        assert!(vals[0] > 0.0);
+        assert!(vals.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn trace_sqrt_of_identity() {
+        let i = Matrix::eye(9);
+        assert!((trace_sqrt(&i) - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_d_le_trace_h() {
+        // tr(D) ≤ tr(H): LDL pivots are Schur complements.
+        check("trace_d_bound", 10, |rng| {
+            let g = 2;
+            let n = 12;
+            let h = random_spd(n, 0.1, rng);
+            let f = block_ldl(&h, g).map_err(|e| e.to_string())?;
+            if f.trace_d() > h.trace() + 1e-9 {
+                return Err(format!("tr(D)={} > tr(H)={}", f.trace_d(), h.trace()));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,374 @@
+//! Dense row-major f64 matrix. Small-model scale (dims ≤ a few thousand),
+//! so clarity over BLAS: straightforward loops with cache-friendly order
+//! and thread-pool parallelism on the heavy products.
+
+use crate::util::rng::Pcg64;
+use crate::util::threadpool;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// iid N(0, sigma^2) entries.
+    pub fn gaussian(rows: usize, cols: usize, sigma: f64, rng: &mut Pcg64) -> Self {
+        let data = (0..rows * cols).map(|_| rng.gaussian() * sigma).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// self * other, parallel over rows of self. ikj loop order keeps the
+    /// inner loop streaming over contiguous rows of `other`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        let cols = other.cols;
+        let a = &self.data;
+        let b = &other.data;
+        let kdim = self.cols;
+        threadpool::par_rows(&mut out.data, cols, |i, orow| {
+            let arow = &a[i * kdim..(i + 1) * kdim];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * cols..(kk + 1) * cols];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
+            }
+        });
+        out
+    }
+
+    /// self * other^T.
+    pub fn matmul_transb(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_transb shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        let a = &self.data;
+        let b = &other.data;
+        let kdim = self.cols;
+        let cols = other.rows;
+        threadpool::par_rows(&mut out.data, cols, |i, orow| {
+            let arow = &a[i * kdim..(i + 1) * kdim];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * kdim..(j + 1) * kdim];
+                let mut acc = 0.0;
+                for (x, y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                *o = acc;
+            }
+        });
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    /// Scale row i by d[i] (diag(d) * self).
+    pub fn scale_rows(&self, d: &[f64]) -> Matrix {
+        assert_eq!(d.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for v in out.row_mut(i) {
+                *v *= d[i];
+            }
+        }
+        out
+    }
+
+    /// Scale col j by d[j] (self * diag(d)).
+    pub fn scale_cols(&self, d: &[f64]) -> Matrix {
+        assert_eq!(d.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for (v, s) in out.row_mut(i).iter_mut().zip(d) {
+                *v *= s;
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// (A + A^T) / 2 — clean up symmetric matrices drifting from roundoff.
+    pub fn symmetrize(&self) -> Matrix {
+        assert_eq!(self.rows, self.cols);
+        Matrix::from_fn(self.rows, self.cols, |i, j| {
+            0.5 * (self[(i, j)] + self[(j, i)])
+        })
+    }
+
+    /// Kronecker product self ⊗ other.
+    pub fn kron(&self, other: &Matrix) -> Matrix {
+        let (r1, c1, r2, c2) = (self.rows, self.cols, other.rows, other.cols);
+        let mut out = Matrix::zeros(r1 * r2, c1 * c2);
+        for i in 0..r1 {
+            for j in 0..c1 {
+                let s = self[(i, j)];
+                if s == 0.0 {
+                    continue;
+                }
+                for k in 0..r2 {
+                    for l in 0..c2 {
+                        out[(i * r2 + k, j * c2 + l)] = s * other[(k, l)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Extract the g×g block at block coordinates (bi, bj).
+    pub fn block(&self, bi: usize, bj: usize, g: usize) -> Matrix {
+        let mut b = Matrix::zeros(g, g);
+        for i in 0..g {
+            for j in 0..g {
+                b[(i, j)] = self[(bi * g + i, bj * g + j)];
+            }
+        }
+        b
+    }
+
+    pub fn set_block(&mut self, bi: usize, bj: usize, g: usize, b: &Matrix) {
+        for i in 0..g {
+            for j in 0..g {
+                self[(bi * g + i, bj * g + j)] = b[(i, j)];
+            }
+        }
+    }
+
+    /// Max |self - other| entry.
+    pub fn max_diff(&self, other: &Matrix) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::new(1);
+        let a = Matrix::gaussian(5, 7, 1.0, &mut rng);
+        let i = Matrix::eye(7);
+        assert!(a.matmul(&i).max_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_transb_matches() {
+        let mut rng = Pcg64::new(2);
+        let a = Matrix::gaussian(6, 4, 1.0, &mut rng);
+        let b = Matrix::gaussian(5, 4, 1.0, &mut rng);
+        let got = a.matmul_transb(&b);
+        let want = a.matmul(&b.transpose());
+        assert!(got.max_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(3);
+        let a = Matrix::gaussian(4, 9, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn kron_shape_and_values() {
+        let a = Matrix::from_vec(1, 2, vec![2.0, 3.0]);
+        let b = Matrix::eye(2);
+        let k = a.kron(&b);
+        assert_eq!((k.rows, k.cols), (2, 4));
+        assert_eq!(k.data, vec![2.0, 0.0, 3.0, 0.0, 0.0, 2.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn kron_mixed_product_property() {
+        // (A ⊗ B)(C ⊗ D) = (AC) ⊗ (BD)
+        let mut rng = Pcg64::new(4);
+        let a = Matrix::gaussian(2, 3, 1.0, &mut rng);
+        let b = Matrix::gaussian(2, 2, 1.0, &mut rng);
+        let c = Matrix::gaussian(3, 2, 1.0, &mut rng);
+        let d = Matrix::gaussian(2, 2, 1.0, &mut rng);
+        let lhs = a.kron(&b).matmul(&c.kron(&d));
+        let rhs = a.matmul(&c).kron(&b.matmul(&d));
+        assert!(lhs.max_diff(&rhs) < 1e-10);
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let mut rng = Pcg64::new(5);
+        let a = Matrix::gaussian(6, 6, 1.0, &mut rng);
+        let b = a.block(1, 2, 2);
+        let mut a2 = a.clone();
+        a2.set_block(1, 2, 2, &b);
+        assert_eq!(a2, a);
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.scale_rows(&[2.0, 3.0]).data, vec![2.0, 2.0, 3.0, 3.0]);
+        assert_eq!(a.scale_cols(&[2.0, 3.0]).data, vec![2.0, 3.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn trace_and_norms() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, -4.0, 0.0, 1.0]);
+        assert_eq!(a.trace(), 4.0);
+        assert!((a.frob_norm() - (26.0f64).sqrt()).abs() < 1e-12);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+}

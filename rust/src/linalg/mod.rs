@@ -1,0 +1,11 @@
+//! Dense linear algebra substrate: matrices, Cholesky and g-block LDL
+//! decompositions, fast Walsh–Hadamard transform, Hadamard matrix
+//! constructions (Sylvester / Paley I / Paley II), a real FFT for the RFFT
+//! incoherence variant, and Kronecker products.
+
+pub mod fft;
+pub mod hadamard;
+pub mod ldl;
+pub mod matrix;
+
+pub use matrix::Matrix;

@@ -1,0 +1,209 @@
+//! `quipsharp` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   quantize  --size m --method quip#-2bit [--out path.qtz]
+//!   eval      --size m --method quip#-2bit [--corpus w2] [--window 256]
+//!   zeroshot  --size m --method quip#-2bit
+//!   serve     --size m [--bits 2] [--addr 127.0.0.1:7140]
+//!   export-codebook --out path.qtz      (E8P tables for cross-lang tests)
+//!   runtime-info                         (PJRT platform + artifact list)
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use quipsharp::experiments::{Runner, WINDOW_NATIVE};
+use quipsharp::quant::pipeline::{Method, SwapCodebook};
+use quipsharp::serve::{serve_blocking, NativeEngine, ServerConfig};
+use quipsharp::util::cli::Args;
+use quipsharp::util::tensorio::{TensorData, TensorFile};
+
+pub fn parse_method(label: &str) -> Result<Method> {
+    Ok(match label {
+        "fp16" => Method::Fp16,
+        "quip#-2bit" => Method::QuipSharp { bits: 2, ft: true },
+        "quip#-3bit" => Method::QuipSharp { bits: 3, ft: true },
+        "quip#-4bit" => Method::QuipSharp { bits: 4, ft: true },
+        "quip#-2bit-noft" => Method::QuipSharp { bits: 2, ft: false },
+        "quip#-3bit-noft" => Method::QuipSharp { bits: 3, ft: false },
+        "quip#-4bit-noft" => Method::QuipSharp { bits: 4, ft: false },
+        "quip#-2bit-noe8" => Method::QuipSharpNoE8 { bits: 2 },
+        "quip#-3bit-noe8" => Method::QuipSharpNoE8 { bits: 3 },
+        "quip#-4bit-noe8" => Method::QuipSharpNoE8 { bits: 4 },
+        "quip#-2bit-rfft" => Method::QuipSharpRfft { bits: 2 },
+        "quip-kron-2bit" => Method::QuipKron { bits: 2 },
+        "omniq-2bit" => Method::OmniquantLike { bits: 2, group: None },
+        "omniq-3bit" => Method::OmniquantLike { bits: 3, group: None },
+        "omniq-4bit" => Method::OmniquantLike { bits: 4, group: None },
+        "omniq-2bit-g64" => Method::OmniquantLike { bits: 2, group: Some(64) },
+        "awq-2bit" => Method::AwqLike { bits: 2 },
+        "awq-3bit" => Method::AwqLike { bits: 3 },
+        "awq-4bit" => Method::AwqLike { bits: 4 },
+        "aqlm-2bit" => Method::AqlmLike { bits: 2 },
+        "d4-2bit" => Method::CodebookSwap { cb: SwapCodebook::D4Two },
+        "kmeans-2bit" => Method::CodebookSwap { cb: SwapCodebook::KMeansTwo },
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let art = args.get_or("art", "artifacts").to_string();
+    match args.subcommand() {
+        Some("quantize") => cmd_quantize(&args, &art),
+        Some("eval") => cmd_eval(&args, &art),
+        Some("zeroshot") => cmd_zeroshot(&args, &art),
+        Some("serve") => cmd_serve(&args, &art),
+        Some("export-codebook") => cmd_export_codebook(&args),
+        Some("runtime-info") => cmd_runtime_info(&art),
+        _ => {
+            eprintln!(
+                "usage: quipsharp <quantize|eval|zeroshot|serve|export-codebook|runtime-info> \
+                 [--size s|m|l|moe|nonllama] [--method quip#-2bit|…] [--art artifacts]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_quantize(args: &Args, art: &str) -> Result<()> {
+    let size = args.get_or("size", "m");
+    let method = parse_method(args.get_or("method", "quip#-2bit-noft"))?;
+    let mut runner = Runner::new(art)?;
+    let qm = runner.qmodel(size, &method)?;
+    println!(
+        "quantized '{size}' with {}: avg {:.3} bits/weight, mean proxy err {:.4}",
+        method.label(),
+        qm.avg_bits(),
+        qm.mean_proxy_rel()
+    );
+    if let Some(out) = args.get("out") {
+        let mut tf = TensorFile::new();
+        for (name, ql) in &qm.layers {
+            tf.insert(
+                format!("{name}.w_eff"),
+                TensorData::from_f32(vec![ql.m, ql.n], &ql.w_eff),
+            );
+            if let Some(p) = &ql.packed {
+                for (s, codes) in p.stage_codes.iter().enumerate() {
+                    tf.insert(
+                        format!("{name}.codes{s}"),
+                        TensorData::from_u16(vec![ql.m, ql.n / 8], codes),
+                    );
+                }
+                tf.insert(format!("{name}.su"), TensorData::from_f32(vec![ql.m], &p.su));
+                tf.insert(format!("{name}.sv"), TensorData::from_f32(vec![ql.n], &p.sv));
+                tf.insert(
+                    format!("{name}.scales"),
+                    TensorData::from_f32(vec![p.stage_scales.len()], &p.stage_scales),
+                );
+            }
+        }
+        tf.save(out)?;
+        println!("packed model written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, art: &str) -> Result<()> {
+    let size = args.get_or("size", "m");
+    let method = parse_method(args.get_or("method", "fp16"))?;
+    let corpus = args.get_or("corpus", "w2");
+    let window = args.get_usize("window", WINDOW_NATIVE);
+    let mut runner = Runner::new(art)?;
+    let ppl = runner.ppl(size, &method, corpus, window)?;
+    let bits = runner.bits(size, &method)?;
+    println!(
+        "{size} {} ({bits:.2} bits): {corpus} ppl (ctx {window}) = {ppl:.4}",
+        method.label()
+    );
+    Ok(())
+}
+
+fn cmd_zeroshot(args: &Args, art: &str) -> Result<()> {
+    let size = args.get_or("size", "m");
+    let method = parse_method(args.get_or("method", "fp16"))?;
+    let mut runner = Runner::new(art)?;
+    for task in quipsharp::data::ZEROSHOT_TASKS {
+        let acc = runner.zeroshot(size, &method, task)?;
+        println!("{size} {} {task}: acc {:.1}%", method.label(), acc * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, art: &str) -> Result<()> {
+    let size = args.get_or("size", "m").to_string();
+    let addr = args.get_or("addr", "127.0.0.1:7140").to_string();
+    let max_batch = args.get_usize("max-batch", 8);
+    let mut runner = Runner::new(art)?;
+    let model = runner.model(&size)?;
+    let engine = if let Some(bits) = args.get("bits") {
+        let bits: u8 = bits.parse().context("--bits")?;
+        let ft = args.has_flag("ft");
+        let qm = runner.qmodel(&size, &Method::QuipSharp { bits, ft })?;
+        println!(
+            "serving '{size}' quantized to {bits} bits (avg {:.2} b/w)",
+            qm.avg_bits()
+        );
+        let model_arc = Arc::new(quipsharp::model::Model::new(
+            qm.model.cfg.clone(),
+            qm.model.params.clone(),
+        ));
+        NativeEngine::start(model_arc, Some(qm), max_batch)
+    } else {
+        println!("serving '{size}' fp32");
+        NativeEngine::start(model.clone(), None, max_batch)
+    };
+    let engine: Arc<dyn quipsharp::serve::Engine> = Arc::new(engine);
+    let handle = serve_blocking(engine, ServerConfig { addr })?;
+    println!(
+        "listening on {} (line-JSON; {{\"cmd\":\"shutdown\"}} to stop)",
+        handle.local_addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_export_codebook(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "results/e8p_table_rust.qtz");
+    let cb = quipsharp::quant::codebook::e8p::E8P::new();
+    let mut tf = TensorFile::new();
+    tf.insert(
+        "abs_table",
+        TensorData::from_f32(vec![256, 8], &cb.abs_table_f32()),
+    );
+    tf.insert(
+        "parity",
+        TensorData::from_u8(vec![256], cb.parity_table()),
+    );
+    // Full decode of all 2^16 codewords — golden reference against which
+    // the python-side table construction is verified.
+    let mut full = Vec::with_capacity(65536 * 8);
+    for code in 0..=u16::MAX {
+        for v in cb.decode_u16(code) {
+            full.push(v as f32);
+        }
+    }
+    tf.insert("decoded", TensorData::from_f32(vec![65536, 8], &full));
+    if let Some(parent) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    tf.save(out)?;
+    println!("E8P tables exported to {out}");
+    Ok(())
+}
+
+fn cmd_runtime_info(art: &str) -> Result<()> {
+    let rt = quipsharp::runtime::Runtime::new(art)?;
+    println!("PJRT platform: {}", rt.platform());
+    for (name, spec) in &rt.manifest.artifacts {
+        println!(
+            "  {name}: {} inputs, {} outputs ({})",
+            spec.inputs.len(),
+            spec.outputs.len(),
+            spec.path
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,462 @@
+//! Native transformer: the evaluation substrate. Mirrors
+//! `python/compile/model.py` exactly (same weight names, same math) so the
+//! PJRT artifacts and the native path can be cross-checked numerically.
+
+pub mod ops;
+pub mod qlinear;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::tensorio::TensorFile;
+use ops::*;
+
+/// Architecture variants (Table 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Llama,
+    Moe,
+    NonLlama,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub ctx: usize,
+    pub arch: Arch,
+    pub n_experts: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// The built-in family (must match python CONFIGS).
+    pub fn by_name(name: &str) -> Result<ModelConfig> {
+        let (d, l, h, ff, arch) = match name {
+            "s" => (128, 2, 4, 512, Arch::Llama),
+            "m" => (256, 4, 8, 1024, Arch::Llama),
+            "l" => (384, 4, 8, 1536, Arch::Llama),
+            "moe" => (128, 2, 4, 512, Arch::Moe),
+            "nonllama" => (128, 2, 4, 512, Arch::NonLlama),
+            _ => bail!("unknown model '{name}'"),
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            d_ff: ff,
+            vocab: 256,
+            ctx: 256,
+            arch,
+            n_experts: 2,
+        })
+    }
+
+    /// Quantizable linear layers in quantization order (matches python
+    /// `linear_layer_names`).
+    pub fn linear_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for i in 0..self.n_layers {
+            let p = format!("layers.{i}.");
+            for nm in ["wq", "wk", "wv", "wo"] {
+                out.push(format!("{p}{nm}"));
+            }
+            if self.arch == Arch::Moe {
+                for e in 0..self.n_experts {
+                    for nm in ["w_gate", "w_up", "w_down"] {
+                        out.push(format!("{p}{nm}.{e}"));
+                    }
+                }
+            } else {
+                for nm in ["w_gate", "w_up", "w_down"] {
+                    out.push(format!("{p}{nm}"));
+                }
+            }
+        }
+        out
+    }
+
+    /// (out, in) shape of a named linear layer.
+    pub fn linear_shape(&self, name: &str) -> (usize, usize) {
+        let field = name.rsplit('.').find(|s| s.parse::<usize>().is_err()).unwrap();
+        match field {
+            "wq" | "wk" | "wv" | "wo" => (self.d_model, self.d_model),
+            "w_gate" | "w_up" => (self.d_ff, self.d_model),
+            "w_down" => (self.d_model, self.d_ff),
+            _ => panic!("not a linear: {name}"),
+        }
+    }
+}
+
+/// Named f32 tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+}
+
+pub type Params = BTreeMap<String, Tensor>;
+
+/// Observes inputs to every linear layer during a forward pass — the
+/// Hessian collector (§F.2) and block fine-tuning hook into this.
+pub trait LinearHook {
+    fn observe(&mut self, layer: &str, input: &[f32], rows: usize, cols: usize);
+}
+
+/// A no-op hook.
+pub struct NoHook;
+impl LinearHook for NoHook {
+    fn observe(&mut self, _: &str, _: &[f32], _: usize, _: usize) {}
+}
+
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub params: Params,
+    rope_cos: Vec<f32>,
+    rope_sin: Vec<f32>,
+}
+
+impl Model {
+    pub fn new(cfg: ModelConfig, params: Params) -> Self {
+        let (rope_cos, rope_sin) = rope_tables(cfg.ctx, cfg.head_dim());
+        Model {
+            cfg,
+            params,
+            rope_cos,
+            rope_sin,
+        }
+    }
+
+    /// Load trained weights from `artifacts/model_{name}.qtz`.
+    pub fn load(art_dir: impl AsRef<Path>, name: &str) -> Result<Model> {
+        let cfg = ModelConfig::by_name(name)?;
+        let tf = TensorFile::load(art_dir.as_ref().join(format!("model_{name}.qtz")))
+            .with_context(|| format!("loading model '{name}'"))?;
+        let mut params = Params::new();
+        for (k, t) in &tf.tensors {
+            params.insert(k.clone(), Tensor::new(t.shape.clone(), t.to_f32()?));
+        }
+        Ok(Model::new(cfg, params))
+    }
+
+    pub fn p(&self, name: &str) -> &Tensor {
+        self.params
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    /// Replace a linear layer's dense weight (quantized swap-in).
+    pub fn set_linear(&mut self, name: &str, w: Vec<f32>) {
+        let t = self.params.get_mut(name).expect("unknown linear");
+        assert_eq!(t.data.len(), w.len());
+        t.data = w;
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.values().map(|t| t.data.len()).sum()
+    }
+
+    /// Bytes of weight data read per generated token (memory-bound decode
+    /// cost model, Table 5's %-of-bandwidth denominator).
+    pub fn weight_bytes(&self, bits_per_weight: f64) -> f64 {
+        self.num_params() as f64 * bits_per_weight / 8.0
+    }
+
+    fn linear(
+        &self,
+        name: &str,
+        x: &[f32],
+        rows: usize,
+        hook: &mut dyn LinearHook,
+        y: &mut [f32],
+    ) {
+        let w = self.p(name);
+        let (m, n) = (w.shape[0], w.shape[1]);
+        hook.observe(name, x, rows, n);
+        matmul_nt(x, &w.data, rows, n, m, y);
+    }
+
+    /// Full-sequence forward. Returns logits (s × vocab).
+    pub fn forward(&self, tokens: &[u8], hook: &mut dyn LinearHook) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (s, d, heads, hd, ff) = (
+            tokens.len(),
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.head_dim(),
+            cfg.d_ff,
+        );
+        assert!(s <= cfg.ctx, "sequence {s} exceeds ctx {}", cfg.ctx);
+        let embed = self.p("embed");
+        let mut x = vec![0.0f32; s * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            x[i * d..(i + 1) * d].copy_from_slice(&embed.data[t as usize * d..(t as usize + 1) * d]);
+        }
+        if cfg.arch == Arch::NonLlama {
+            let pe = self.p("pos_embed");
+            for i in 0..s {
+                for j in 0..d {
+                    x[i * d + j] += pe.data[i * d + j];
+                }
+            }
+        }
+
+        let mut h = vec![0.0f32; s * d];
+        let mut qkv = vec![0.0f32; s * d];
+        let mut q = vec![0.0f32; s * d];
+        let mut k = vec![0.0f32; s * d];
+        let mut v = vec![0.0f32; s * d];
+        let mut att_out = vec![0.0f32; s * d];
+        let mut ffg = vec![0.0f32; s * ff];
+        let mut ffu = vec![0.0f32; s * ff];
+        let mut ffd = vec![0.0f32; s * d];
+
+        for layer in 0..cfg.n_layers {
+            let pre = format!("layers.{layer}.");
+            // --- attention ---
+            self.norm(&format!("{pre}attn_norm"), &x, s, d, &mut h);
+            self.linear(&format!("{pre}wq"), &h, s, hook, &mut q);
+            self.linear(&format!("{pre}wk"), &h, s, hook, &mut k);
+            self.linear(&format!("{pre}wv"), &h, s, hook, &mut v);
+            if cfg.arch != Arch::NonLlama {
+                for i in 0..s {
+                    rope_apply(&mut q[i * d..(i + 1) * d], heads, hd, i, &self.rope_cos, &self.rope_sin);
+                    rope_apply(&mut k[i * d..(i + 1) * d], heads, hd, i, &self.rope_cos, &self.rope_sin);
+                }
+            }
+            self.attention(&q, &k, &v, s, &mut att_out);
+            self.linear(&format!("{pre}wo"), &att_out, s, hook, &mut qkv);
+            for (xv, &o) in x.iter_mut().zip(&qkv) {
+                *xv += o;
+            }
+            // --- mlp ---
+            self.norm(&format!("{pre}mlp_norm"), &x, s, d, &mut h);
+            match cfg.arch {
+                Arch::Moe => {
+                    let router = self.p(&format!("{pre}router"));
+                    let ne = cfg.n_experts;
+                    let mut gate_logits = vec![0.0f32; s * ne];
+                    matmul_nt(&h, &router.data, s, d, ne, &mut gate_logits);
+                    softmax_rows(&mut gate_logits, s, ne);
+                    let mut moe_acc = vec![0.0f32; s * d];
+                    for e in 0..ne {
+                        self.linear(&format!("{pre}w_gate.{e}"), &h, s, hook, &mut ffg);
+                        self.linear(&format!("{pre}w_up.{e}"), &h, s, hook, &mut ffu);
+                        for (g, &u) in ffg.iter_mut().zip(&ffu) {
+                            *g = silu(*g) * u;
+                        }
+                        self.linear(&format!("{pre}w_down.{e}"), &ffg, s, hook, &mut ffd);
+                        for i in 0..s {
+                            let gw = gate_logits[i * ne + e];
+                            for j in 0..d {
+                                moe_acc[i * d + j] += gw * ffd[i * d + j];
+                            }
+                        }
+                    }
+                    for (xv, &o) in x.iter_mut().zip(&moe_acc) {
+                        *xv += o;
+                    }
+                }
+                _ => {
+                    self.linear(&format!("{pre}w_gate"), &h, s, hook, &mut ffg);
+                    self.linear(&format!("{pre}w_up"), &h, s, hook, &mut ffu);
+                    if cfg.arch == Arch::NonLlama {
+                        for (g, &u) in ffg.iter_mut().zip(&ffu) {
+                            *g = gelu(*g) * u;
+                        }
+                    } else {
+                        for (g, &u) in ffg.iter_mut().zip(&ffu) {
+                            *g = silu(*g) * u;
+                        }
+                    }
+                    self.linear(&format!("{pre}w_down"), &ffg, s, hook, &mut ffd);
+                    for (xv, &o) in x.iter_mut().zip(&ffd) {
+                        *xv += o;
+                    }
+                }
+            }
+        }
+        self.norm("final_norm", &x, s, d, &mut h);
+        let head = self.p("lm_head");
+        let mut logits = vec![0.0f32; s * cfg.vocab];
+        hook.observe("lm_head", &h, s, d);
+        matmul_nt(&h, &head.data, s, d, cfg.vocab, &mut logits);
+        logits
+    }
+
+    fn norm(&self, name: &str, x: &[f32], s: usize, d: usize, y: &mut [f32]) {
+        match self.cfg.arch {
+            Arch::NonLlama => {
+                let w = self.p(name);
+                let b = self.p(&format!("{name}_bias"));
+                layer_norm(x, &w.data, &b.data, s, d, y);
+            }
+            _ => {
+                let w = self.p(name);
+                rms_norm(x, &w.data, s, d, y);
+            }
+        }
+    }
+
+    /// Multi-head causal attention over full (s, heads·hd) q/k/v buffers.
+    fn attention(&self, q: &[f32], k: &[f32], v: &[f32], s: usize, out: &mut [f32]) {
+        let heads = self.cfg.n_heads;
+        let hd = self.cfg.head_dim();
+        let d = heads * hd;
+        let scale = 1.0 / (hd as f32).sqrt();
+        // Parallel over heads: each head writes a disjoint column stripe
+        // of `out`; gather per-head contiguous copies first.
+        let out_ptr = std::sync::Mutex::new(());
+        let _ = out_ptr;
+        let results: Vec<Vec<f32>> = crate::util::threadpool::par_map(heads, |hh| {
+            let mut qh = vec![0.0f32; s * hd];
+            let mut kh = vec![0.0f32; s * hd];
+            let mut vh = vec![0.0f32; s * hd];
+            for i in 0..s {
+                qh[i * hd..(i + 1) * hd].copy_from_slice(&q[i * d + hh * hd..i * d + (hh + 1) * hd]);
+                kh[i * hd..(i + 1) * hd].copy_from_slice(&k[i * d + hh * hd..i * d + (hh + 1) * hd]);
+                vh[i * hd..(i + 1) * hd].copy_from_slice(&v[i * d + hh * hd..i * d + (hh + 1) * hd]);
+            }
+            let mut scores = vec![0.0f32; s * s];
+            matmul_nt(&qh, &kh, s, hd, s, &mut scores);
+            for i in 0..s {
+                for j in 0..s {
+                    scores[i * s + j] = if j <= i {
+                        scores[i * s + j] * scale
+                    } else {
+                        f32::NEG_INFINITY
+                    };
+                }
+            }
+            softmax_rows(&mut scores, s, s);
+            let mut oh = vec![0.0f32; s * hd];
+            matmul_nn_acc(&scores, &vh, s, s, hd, &mut oh);
+            oh
+        });
+        for (hh, oh) in results.into_iter().enumerate() {
+            for i in 0..s {
+                out[i * d + hh * hd..i * d + (hh + 1) * hd].copy_from_slice(&oh[i * hd..(i + 1) * hd]);
+            }
+        }
+    }
+}
+
+/// Test-only helpers shared across modules (hessian, ft, eval tests).
+#[cfg(test)]
+pub mod tests_support {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    pub fn tiny_model(seed: u64) -> Model {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            vocab: 64,
+            ctx: 32,
+            arch: Arch::Llama,
+            n_experts: 2,
+        };
+        let mut rng = Pcg64::new(seed);
+        let mut params = Params::new();
+        let d = cfg.d_model;
+        let ff = cfg.d_ff;
+        let mut dense = |m: usize, n: usize, rng: &mut Pcg64| {
+            Tensor::new(vec![m, n], rng.gaussian_vec(m * n, 1.0 / (n as f32).sqrt()))
+        };
+        params.insert("embed".into(), dense(cfg.vocab, d, &mut rng));
+        params.insert("lm_head".into(), dense(cfg.vocab, d, &mut rng));
+        params.insert("final_norm".into(), Tensor::new(vec![d], vec![1.0; d]));
+        for i in 0..cfg.n_layers {
+            let p = format!("layers.{i}.");
+            params.insert(format!("{p}attn_norm"), Tensor::new(vec![d], vec![1.0; d]));
+            params.insert(format!("{p}mlp_norm"), Tensor::new(vec![d], vec![1.0; d]));
+            for nm in ["wq", "wk", "wv", "wo"] {
+                params.insert(format!("{p}{nm}"), dense(d, d, &mut rng));
+            }
+            params.insert(format!("{p}w_gate"), dense(ff, d, &mut rng));
+            params.insert(format!("{p}w_up"), dense(ff, d, &mut rng));
+            params.insert(format!("{p}w_down"), dense(d, ff, &mut rng));
+        }
+        Model::new(cfg, params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::tiny_model;
+    use super::*;
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let m = tiny_model(1);
+        let tokens: Vec<u8> = (0..16).map(|i| (i * 3 % 64) as u8).collect();
+        let logits = m.forward(&tokens, &mut NoHook);
+        assert_eq!(logits.len(), 16 * 64);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // Changing a later token must not change earlier logits.
+        let m = tiny_model(2);
+        let mut t1: Vec<u8> = (0..12).map(|i| (i % 64) as u8).collect();
+        let l1 = m.forward(&t1, &mut NoHook);
+        t1[11] = 63;
+        let l2 = m.forward(&t1, &mut NoHook);
+        for i in 0..11 * 64 {
+            assert!((l1[i] - l2[i]).abs() < 1e-5, "leak at {i}");
+        }
+        // And the last logits must change.
+        let diff: f32 = (0..64).map(|j| (l1[11 * 64 + j] - l2[11 * 64 + j]).abs()).sum();
+        assert!(diff > 1e-3);
+    }
+
+    #[test]
+    fn hook_sees_all_linears() {
+        struct Counter(std::collections::BTreeSet<String>);
+        impl LinearHook for Counter {
+            fn observe(&mut self, l: &str, _: &[f32], _: usize, _: usize) {
+                self.0.insert(l.to_string());
+            }
+        }
+        let m = tiny_model(3);
+        let mut c = Counter(Default::default());
+        m.forward(&[1, 2, 3], &mut c);
+        for name in m.cfg.linear_names() {
+            assert!(c.0.contains(&name), "hook missed {name}");
+        }
+        assert!(c.0.contains("lm_head"));
+    }
+
+    #[test]
+    fn set_linear_changes_output() {
+        let mut m = tiny_model(4);
+        let t: Vec<u8> = vec![1, 2, 3, 4];
+        let l1 = m.forward(&t, &mut NoHook);
+        let zeros = vec![0.0f32; 32 * 32];
+        m.set_linear("layers.0.wq", zeros);
+        let l2 = m.forward(&t, &mut NoHook);
+        let diff: f32 = l1.iter().zip(&l2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-3);
+    }
+}

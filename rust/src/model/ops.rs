@@ -1,0 +1,309 @@
+//! f32 tensor ops for the native transformer: blocked/parallel matmul,
+//! norms, activations, RoPE, softmax. Shapes are explicit row-major
+//! buffers — this is the substrate the evaluation and fine-tuning paths
+//! run on, so the matmul is written to autovectorize.
+
+use crate::util::threadpool;
+
+/// y = x · wᵀ  — x: (r, k), w: (c, k) row-major (out,in), y: (r, c).
+/// The hot matmul of the native path: parallel over output rows of y,
+/// inner loops ordered for contiguous streaming of both operands.
+pub fn matmul_nt(x: &[f32], w: &[f32], r: usize, k: usize, c: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), r * k);
+    debug_assert_eq!(w.len(), c * k);
+    debug_assert_eq!(y.len(), r * c);
+    threadpool::par_rows_work(y, c, k * c, |i, yrow| {
+        let xrow = &x[i * k..(i + 1) * k];
+        // 4-wide output blocking: each w row is streamed once; the compiler
+        // vectorizes the k-loop.
+        let mut j = 0;
+        while j + 4 <= c {
+            let w0 = &w[j * k..(j + 1) * k];
+            let w1 = &w[(j + 1) * k..(j + 2) * k];
+            let w2 = &w[(j + 2) * k..(j + 3) * k];
+            let w3 = &w[(j + 3) * k..(j + 4) * k];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for t in 0..k {
+                let xv = xrow[t];
+                a0 += xv * w0[t];
+                a1 += xv * w1[t];
+                a2 += xv * w2[t];
+                a3 += xv * w3[t];
+            }
+            yrow[j] = a0;
+            yrow[j + 1] = a1;
+            yrow[j + 2] = a2;
+            yrow[j + 3] = a3;
+            j += 4;
+        }
+        while j < c {
+            let wrow = &w[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += xrow[t] * wrow[t];
+            }
+            yrow[j] = acc;
+            j += 1;
+        }
+    });
+}
+
+/// y += x · w — x: (r, k), w: (k, c) row-major, y: (r, c). Used by
+/// backward passes (grad wrt inputs: dX = dY · W with W (c_out, k) → this
+/// is dY (r, c_out) times W (c_out, k) = matmul_nn).
+pub fn matmul_nn_acc(x: &[f32], w: &[f32], r: usize, k: usize, c: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), r * k);
+    debug_assert_eq!(w.len(), k * c);
+    debug_assert_eq!(y.len(), r * c);
+    threadpool::par_rows_work(y, c, k * c, |i, yrow| {
+        let xrow = &x[i * k..(i + 1) * k];
+        for (t, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[t * c..(t + 1) * c];
+            for (yv, &wv) in yrow.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+    });
+}
+
+/// y += xᵀ · g — x: (r, k), g: (r, c), y: (k, c). Weight-gradient shape
+/// (dW = dYᵀ X, but stored (out,in): dW[o,i] += Σ_s g[s,o]·x[s,i]).
+pub fn matmul_tn_acc(g: &[f32], x: &[f32], r: usize, c_out: usize, k: usize, dw: &mut [f32]) {
+    debug_assert_eq!(g.len(), r * c_out);
+    debug_assert_eq!(x.len(), r * k);
+    debug_assert_eq!(dw.len(), c_out * k);
+    threadpool::par_rows(dw, k, |o, dwrow| {
+        for s in 0..r {
+            let gv = g[s * c_out + o];
+            if gv == 0.0 {
+                continue;
+            }
+            let xrow = &x[s * k..(s + 1) * k];
+            for (d, &xv) in dwrow.iter_mut().zip(xrow) {
+                *d += gv * xv;
+            }
+        }
+    });
+}
+
+/// RMSNorm forward: y = x * w / rms(x), row-wise over (r, d).
+/// Returns the per-row 1/rms for the backward pass.
+pub fn rms_norm(x: &[f32], w: &[f32], r: usize, d: usize, y: &mut [f32]) -> Vec<f32> {
+    let mut inv = vec![0.0f32; r];
+    for i in 0..r {
+        let row = &x[i * d..(i + 1) * d];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let s = 1.0 / (ms + 1e-6).sqrt();
+        inv[i] = s;
+        for j in 0..d {
+            y[i * d + j] = row[j] * s * w[j];
+        }
+    }
+    inv
+}
+
+/// LayerNorm forward (non-llama variant). Returns (mean, inv_std) rows.
+pub fn layer_norm(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    r: usize,
+    d: usize,
+    y: &mut [f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut means = vec![0.0f32; r];
+    let mut invs = vec![0.0f32; r];
+    for i in 0..r {
+        let row = &x[i * d..(i + 1) * d];
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let s = 1.0 / (var + 1e-6).sqrt();
+        means[i] = mu;
+        invs[i] = s;
+        for j in 0..d {
+            y[i * d + j] = (row[j] - mu) * s * w[j] + b[j];
+        }
+    }
+    (means, invs)
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    // tanh approximation (matches jax.nn.gelu default).
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    let u = c * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = c * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// In-place softmax over the last `n` elements of each of `r` rows.
+pub fn softmax_rows(x: &mut [f32], r: usize, n: usize) {
+    for i in 0..r {
+        let row = &mut x[i * n..(i + 1) * n];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        let inv = 1.0 / z;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// RoPE tables for positions 0..max_pos with head dim hd (cos, sin), each
+/// (max_pos, hd/2) — matches the jax `rope` in python/compile/model.py.
+pub fn rope_tables(max_pos: usize, hd: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = hd / 2;
+    let mut cos = vec![0.0f32; max_pos * half];
+    let mut sin = vec![0.0f32; max_pos * half];
+    for p in 0..max_pos {
+        for j in 0..half {
+            let freq = 10000.0f64.powf(-(j as f64) / half as f64);
+            let ang = p as f64 * freq;
+            cos[p * half + j] = ang.cos() as f32;
+            sin[p * half + j] = ang.sin() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply RoPE in place to one (heads, hd) token row at position p.
+pub fn rope_apply(x: &mut [f32], heads: usize, hd: usize, p: usize, cos: &[f32], sin: &[f32]) {
+    let half = hd / 2;
+    for h in 0..heads {
+        let row = &mut x[h * hd..(h + 1) * hd];
+        for j in 0..half {
+            let (c, s) = (cos[p * half + j], sin[p * half + j]);
+            let (a, b) = (row[j], row[half + j]);
+            row[j] = a * c - b * s;
+            row[half + j] = a * s + b * c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matmul_nt_matches_naive() {
+        let mut rng = Pcg64::new(1);
+        let (r, k, c) = (7, 13, 9);
+        let x = rng.gaussian_vec(r * k, 1.0);
+        let w = rng.gaussian_vec(c * k, 1.0);
+        let mut y = vec![0.0; r * c];
+        matmul_nt(&x, &w, r, k, c, &mut y);
+        for i in 0..r {
+            for j in 0..c {
+                let want: f32 = (0..k).map(|t| x[i * k + t] * w[j * k + t]).sum();
+                assert!((y[i * c + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nn_acc_matches() {
+        let mut rng = Pcg64::new(2);
+        let (r, k, c) = (5, 6, 8);
+        let x = rng.gaussian_vec(r * k, 1.0);
+        let w = rng.gaussian_vec(k * c, 1.0);
+        let mut y = vec![1.0f32; r * c]; // accumulates
+        matmul_nn_acc(&x, &w, r, k, c, &mut y);
+        for i in 0..r {
+            for j in 0..c {
+                let want: f32 = 1.0 + (0..k).map(|t| x[i * k + t] * w[t * c + j]).sum::<f32>();
+                assert!((y[i * c + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_tn_acc_matches() {
+        let mut rng = Pcg64::new(3);
+        let (r, co, k) = (6, 4, 5);
+        let g = rng.gaussian_vec(r * co, 1.0);
+        let x = rng.gaussian_vec(r * k, 1.0);
+        let mut dw = vec![0.0f32; co * k];
+        matmul_tn_acc(&g, &x, r, co, k, &mut dw);
+        for o in 0..co {
+            for i in 0..k {
+                let want: f32 = (0..r).map(|s| g[s * co + o] * x[s * k + i]).sum();
+                assert!((dw[o * k + i] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 2, 3);
+        for row in x.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(row.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn rms_norm_unit_scale() {
+        let x = vec![3.0f32, 4.0];
+        let w = vec![1.0f32, 1.0];
+        let mut y = vec![0.0f32; 2];
+        rms_norm(&x, &w, 1, 2, &mut y);
+        let rms = ((9.0 + 16.0) / 2.0f32).sqrt();
+        assert!((y[0] - 3.0 / rms).abs() < 1e-4);
+        assert!((y[1] - 4.0 / rms).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_rotates() {
+        let (cos, sin) = rope_tables(8, 4);
+        let mut x = vec![1.0f32, 0.0, 0.0, 1.0];
+        let orig = x.clone();
+        rope_apply(&mut x, 1, 4, 3, &cos, &sin);
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-5);
+        assert!(x != orig);
+        // Position 0 is identity.
+        let mut y = orig.clone();
+        rope_apply(&mut y, 1, 4, 0, &cos, &sin);
+        assert_eq!(y, orig);
+    }
+
+    #[test]
+    fn activation_grads_match_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let eps = 1e-3;
+            let fd_silu = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!((fd_silu - silu_grad(x)).abs() < 1e-3, "silu at {x}");
+            let fd_gelu = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((fd_gelu - gelu_grad(x)).abs() < 1e-3, "gelu at {x}");
+        }
+    }
+}

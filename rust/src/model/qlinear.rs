@@ -1,0 +1,285 @@
+//! The inference hot path: fused E8P decode + matvec with RHT
+//! (paper Algorithm 2 / §6.3, the CUDA kernel's CPU counterpart).
+//!
+//! Per token: y = S_u ⊙ H_mᵀ( Σ_s scale_s · Ŵ_s · (H_n (S_v ⊙ x)) ),
+//! where each Ŵ_s row is decoded on the fly from 16-bit codewords via a
+//! 256×8 f32 abs-value LUT (1 KiB at 4-bit entries in the paper; 8 KiB as
+//! f32 here — still L1-resident) plus branch-free sign/parity/shift bit
+//! arithmetic. Memory traffic per row is 2 bytes/weight at 2 bits —
+//! the memory-bound decode throughput Table 5/6 measure.
+
+use crate::linalg::hadamard::fwht_f32;
+use crate::quant::codebook::e8p::E8P;
+use crate::util::threadpool;
+
+/// Decode tables in hot-path layout.
+pub struct E8PTables {
+    /// 256 × 8 absolute values.
+    pub abs: Vec<f32>,
+    /// parity[i] = 1 when an odd number of sign flips is required.
+    pub parity: [u8; 256],
+}
+
+impl E8PTables {
+    pub fn new() -> Self {
+        let cb = E8P::new();
+        let abs = cb.abs_table_f32();
+        let mut parity = [0u8; 256];
+        for (i, &p) in cb.parity_table().iter().enumerate() {
+            parity[i] = p;
+        }
+        E8PTables { abs, parity }
+    }
+}
+
+impl Default for E8PTables {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Decode one 16-bit codeword into 8 f32 weights (branch-free except the
+/// LUT loads). `out` must have length ≥ 8.
+#[inline(always)]
+pub fn decode8(tables: &E8PTables, code: u16, out: &mut [f32]) {
+    let s_idx = (code & 0xff) as usize;
+    let sign_bits = ((code >> 8) & 0x7f) as u32;
+    let shift = if code & 0x8000 != 0 { 0.25f32 } else { -0.25f32 };
+    let parity = tables.parity[s_idx] as u32;
+    let flip7 = (sign_bits.count_ones() & 1) ^ parity; // 1 → negate coord 7
+    let abs = &tables.abs[s_idx * 8..s_idx * 8 + 8];
+    // Branch-free sign application: sign bit set → negate.
+    let full_bits = sign_bits | (flip7 << 7);
+    for j in 0..8 {
+        let neg = (full_bits >> j) & 1;
+        let a = abs[j];
+        let signed = f32::from_bits(a.to_bits() ^ (neg << 31));
+        out[j] = signed + shift;
+    }
+}
+
+/// A packed E8P weight matrix ready for the serving hot path.
+pub struct QuantMatvec {
+    pub m: usize,
+    pub n: usize,
+    /// Per-stage codes (m × n/8), row-major.
+    pub stage_codes: Vec<Vec<u16>>,
+    pub stage_scales: Vec<f32>,
+    pub su: Vec<f32>,
+    pub sv: Vec<f32>,
+    pub tables: E8PTables,
+}
+
+impl QuantMatvec {
+    pub fn from_packed(m: usize, n: usize, p: &crate::quant::pipeline::PackedE8P) -> Self {
+        QuantMatvec {
+            m,
+            n,
+            stage_codes: p.stage_codes.clone(),
+            stage_scales: p.stage_scales.clone(),
+            su: p.su.clone(),
+            sv: p.sv.clone(),
+            tables: E8PTables::new(),
+        }
+    }
+
+    /// Bytes of quantized weights streamed per matvec (the memory-bound
+    /// cost Table 5 normalizes against).
+    pub fn bytes_per_matvec(&self) -> u64 {
+        (self.stage_codes.len() * self.m * (self.n / 8) * 2) as u64
+    }
+
+    /// y = Ŵ_eff · x, with the RHT applied on both sides. Requires m, n
+    /// powers of two (pure-FWHT fast path; the serving models satisfy
+    /// this; d = 384 models route through the generic path in
+    /// `pipeline::QuantizedLinear::w_eff`).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        assert!(self.n.is_power_of_two() && self.m.is_power_of_two());
+        // u = H_n (s_v ⊙ x) / sqrt(n)
+        let mut u = vec![0.0f32; self.n];
+        for (ui, (&xi, &si)) in u.iter_mut().zip(x.iter().zip(&self.sv)) {
+            *ui = xi * si;
+        }
+        fwht_f32(&mut u);
+        let inv_sqrt_n = 1.0 / (self.n as f32).sqrt();
+        for v in u.iter_mut() {
+            *v *= inv_sqrt_n;
+        }
+        // z = Σ_s scale_s · Ŵ_s u — fused decode+dot, parallel over rows.
+        self.matvec_tilde(&u, y);
+        // y = s_u ⊙ H_mᵀ z / sqrt(m)
+        fwht_f32(y);
+        let inv_sqrt_m = 1.0 / (self.m as f32).sqrt();
+        for (yv, &su) in y.iter_mut().zip(&self.su) {
+            *yv *= inv_sqrt_m * su;
+        }
+    }
+
+    /// z = Σ_s scale_s · Ŵ_s u (processed domain, no RHT) — the pure
+    /// decode+GEMV kernel the §6.3 benchmark times.
+    pub fn matvec_tilde(&self, u: &[f32], z: &mut [f32]) {
+        let nb = self.n / 8;
+        let tables = &self.tables;
+        let stages: Vec<(&[u16], f32)> = self
+            .stage_codes
+            .iter()
+            .map(|c| c.as_slice())
+            .zip(self.stage_scales.iter().copied())
+            .collect();
+        // ~n flops per output row (decode + dot); serial below the
+        // spawn-amortization threshold.
+        threadpool::par_rows_work(z, 1, self.n * self.stage_codes.len(), |i, zi| {
+            let mut acc_total = 0.0f32;
+            for (codes, scale) in &stages {
+                let row = &codes[i * nb..(i + 1) * nb];
+                let mut dec = [0.0f32; 8];
+                let mut acc = 0.0f32;
+                for (b, &code) in row.iter().enumerate() {
+                    decode8(tables, code, &mut dec);
+                    let ub = &u[b * 8..b * 8 + 8];
+                    let mut s = 0.0f32;
+                    for j in 0..8 {
+                        s += dec[j] * ub[j];
+                    }
+                    acc += s;
+                }
+                acc_total += acc * scale;
+            }
+            zi[0] = acc_total;
+        });
+    }
+}
+
+/// Dense f32 matvec baseline (the "FP16" row of Tables 5/6 — same memory
+/// role, 4 bytes/weight here).
+pub fn dense_matvec(w: &[f32], x: &[f32], _m: usize, n: usize, y: &mut [f32]) {
+    threadpool::par_rows_work(y, 1, n, |i, yi| {
+        let row = &w[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for (a, b) in row.iter().zip(x) {
+            acc += a * b;
+        }
+        yi[0] = acc;
+    });
+}
+
+/// "AQLM-like" matvec: unstructured fp16-class codebook of `k` entries ×
+/// 8 dims (k = 2^16 → 1 MiB at fp16; here f32 for simplicity, cache
+/// behaviour is the point). Random-access gathers into a table that does
+/// NOT fit in L1 — Table 6's failure mode.
+pub struct BigCodebookMatvec {
+    pub m: usize,
+    pub n: usize,
+    pub codes: Vec<u16>,
+    pub table: Vec<f32>, // k × 8
+}
+
+impl BigCodebookMatvec {
+    pub fn random(m: usize, n: usize, k: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let codes = (0..m * n / 8)
+            .map(|_| rng.below(k as u64) as u16)
+            .collect();
+        let table = rng.gaussian_vec(k * 8, 1.0);
+        BigCodebookMatvec { m, n, codes, table }
+    }
+
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        let nb = self.n / 8;
+        threadpool::par_rows_work(y, 1, self.n, |i, yi| {
+            let row = &self.codes[i * nb..(i + 1) * nb];
+            let mut acc = 0.0f32;
+            for (b, &code) in row.iter().enumerate() {
+                let entry = &self.table[code as usize * 8..code as usize * 8 + 8];
+                let ub = &x[b * 8..b * 8 + 8];
+                for j in 0..8 {
+                    acc += entry[j] * ub[j];
+                }
+            }
+            yi[0] = acc;
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ldl::random_spd;
+    use crate::linalg::Matrix;
+    use crate::quant::pipeline::{quantize_matrix, Method};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn decode8_matches_codebook() {
+        let tables = E8PTables::new();
+        let cb = E8P::new();
+        let mut rng = Pcg64::new(1);
+        let mut out = [0.0f32; 8];
+        for _ in 0..500 {
+            let code = (rng.next_u64() & 0xffff) as u16;
+            decode8(&tables, code, &mut out);
+            let want = cb.decode_u16(code);
+            for j in 0..8 {
+                assert!(
+                    (out[j] as f64 - want[j]).abs() < 1e-6,
+                    "code {code:#06x} coord {j}: {} vs {}",
+                    out[j],
+                    want[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_matvec_matches_dense_w_eff() {
+        // The fused decode path must agree with the dense effective weight
+        // produced by the pipeline.
+        let mut rng = Pcg64::new(2);
+        let (m, n) = (32usize, 64usize);
+        let w = Matrix::gaussian(m, n, 0.05, &mut rng);
+        let h = random_spd(n, 0.1, &mut rng);
+        let ql = quantize_matrix(&Method::QuipSharp { bits: 2, ft: false }, &w, &h, 3).unwrap();
+        let qm = QuantMatvec::from_packed(m, n, ql.packed.as_ref().unwrap());
+        let x: Vec<f32> = rng.gaussian_vec(n, 1.0);
+        let mut y_fast = vec![0.0f32; m];
+        qm.matvec(&x, &mut y_fast);
+        let mut y_dense = vec![0.0f32; m];
+        dense_matvec(&ql.w_eff, &x, m, n, &mut y_dense);
+        for (a, b) in y_fast.iter().zip(&y_dense) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quant_matvec_4bit_two_stages() {
+        let mut rng = Pcg64::new(3);
+        let (m, n) = (16usize, 32usize);
+        let w = Matrix::gaussian(m, n, 0.05, &mut rng);
+        let h = random_spd(n, 0.1, &mut rng);
+        let ql = quantize_matrix(&Method::QuipSharp { bits: 4, ft: false }, &w, &h, 3).unwrap();
+        let qm = QuantMatvec::from_packed(m, n, ql.packed.as_ref().unwrap());
+        assert_eq!(qm.stage_codes.len(), 2);
+        let x: Vec<f32> = rng.gaussian_vec(n, 1.0);
+        let mut y_fast = vec![0.0f32; m];
+        qm.matvec(&x, &mut y_fast);
+        let mut y_dense = vec![0.0f32; m];
+        dense_matvec(&ql.w_eff, &x, m, n, &mut y_dense);
+        for (a, b) in y_fast.iter().zip(&y_dense) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut rng = Pcg64::new(4);
+        let (m, n) = (16usize, 32usize);
+        let w = Matrix::gaussian(m, n, 0.05, &mut rng);
+        let h = random_spd(n, 0.1, &mut rng);
+        let ql = quantize_matrix(&Method::QuipSharp { bits: 2, ft: false }, &w, &h, 3).unwrap();
+        let qm = QuantMatvec::from_packed(m, n, ql.packed.as_ref().unwrap());
+        // 2 bits/weight → m·n/4 bytes.
+        assert_eq!(qm.bytes_per_matvec(), (m * n / 4) as u64);
+    }
+}

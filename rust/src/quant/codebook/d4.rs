@@ -1,0 +1,174 @@
+//! D4 lattice codebooks (Table 7 / Figure 3 comparison): D4 = even-parity
+//! integer vectors in Z⁴, the densest 4-D packing. Codebooks are D4 ∩ ball
+//! truncated to a target size in deterministic shell order.
+
+use super::{nearest_bruteforce, Codebook};
+use crate::quant::codebook::e8::nearest_dn;
+
+/// Enumerate D4 points with squared norm ≤ max_sq, sorted (norm², lex).
+pub fn d4_points_up_to(max_sq: f64) -> Vec<[f64; 4]> {
+    let limit = (max_sq.sqrt().ceil() as i64) + 1;
+    let mut pts = Vec::new();
+    for a in -limit..=limit {
+        for b in -limit..=limit {
+            for c in -limit..=limit {
+                for d in -limit..=limit {
+                    let n = (a * a + b * b + c * c + d * d) as f64;
+                    if n <= max_sq + 1e-9 && (a + b + c + d).rem_euclid(2) == 0 {
+                        pts.push([a as f64, b as f64, c as f64, d as f64]);
+                    }
+                }
+            }
+        }
+    }
+    pts.sort_by(|x, y| {
+        let nx: f64 = x.iter().map(|v| v * v).sum();
+        let ny: f64 = y.iter().map(|v| v * v).sum();
+        nx.partial_cmp(&ny)
+            .unwrap()
+            .then_with(|| x.partial_cmp(y).unwrap())
+    });
+    pts
+}
+
+/// D4 ∩ ball codebook with exactly `target_size` entries.
+/// 256 entries ↔ the paper's "D4 2 bit"; ~460 ↔ "D4 2.21 bit".
+pub struct D4Ball {
+    entries: Vec<f64>, // size × 4
+    max_norm_sq: f64,
+    index: std::collections::HashMap<[i64; 4], u32>,
+    name: String,
+}
+
+impl D4Ball {
+    pub fn with_size(target_size: usize) -> Self {
+        let mut max_sq = 2.0;
+        let mut pts = d4_points_up_to(max_sq);
+        while pts.len() < target_size {
+            max_sq += 2.0;
+            pts = d4_points_up_to(max_sq);
+        }
+        pts.truncate(target_size);
+        let max_norm_sq = pts
+            .iter()
+            .map(|p| p.iter().map(|v| v * v).sum::<f64>())
+            .fold(0.0f64, f64::max);
+        let mut entries = Vec::with_capacity(pts.len() * 4);
+        let mut index = std::collections::HashMap::new();
+        for (i, p) in pts.iter().enumerate() {
+            entries.extend_from_slice(p);
+            index.insert(Self::key(p), i as u32);
+        }
+        D4Ball {
+            entries,
+            max_norm_sq,
+            index,
+            name: format!("d4-ball-{target_size}"),
+        }
+    }
+
+    fn key(p: &[f64]) -> [i64; 4] {
+        let mut k = [0i64; 4];
+        for i in 0..4 {
+            k[i] = p[i].round() as i64;
+        }
+        k
+    }
+}
+
+impl Codebook for D4Ball {
+    fn dim(&self) -> usize {
+        4
+    }
+
+    fn size(&self) -> usize {
+        self.entries.len() / 4
+    }
+
+    fn decode_one(&self, code: u32) -> Vec<f64> {
+        let i = code as usize;
+        self.entries[i * 4..(i + 1) * 4].to_vec()
+    }
+
+    fn encode_one(&self, x: &[f64]) -> u32 {
+        // Exact D4 decode, fall back to brute force near/outside the ball
+        // (codebooks here are ≤ a few hundred entries).
+        let p = nearest_dn(x);
+        let n: f64 = p.iter().map(|v| v * v).sum();
+        if n <= self.max_norm_sq + 1e-9 {
+            if let Some(&idx) = self.index.get(&Self::key(&p)) {
+                return idx;
+            }
+        }
+        nearest_bruteforce(&self.entries, 4, x)
+    }
+
+    fn cb_name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+
+    #[test]
+    fn d4_shell_counts() {
+        // D4 theta series: 1, 24 (norm² 2), 24 (norm² 4), 96 (norm² 6)...
+        let p2 = d4_points_up_to(2.0);
+        assert_eq!(p2.len(), 25);
+        let p4 = d4_points_up_to(4.0);
+        assert_eq!(p4.len(), 49);
+        let p6 = d4_points_up_to(6.0);
+        assert_eq!(p6.len(), 145);
+    }
+
+    #[test]
+    fn d4_256_codebook_valid() {
+        let cb = D4Ball::with_size(256);
+        assert_eq!(Codebook::size(&cb), 256);
+        for c in 0..256u32 {
+            let p = cb.decode_one(c);
+            let s: i64 = p.iter().map(|&v| v as i64).sum();
+            assert_eq!(s.rem_euclid(2), 0, "{p:?} not even parity");
+            assert!(p.iter().all(|v| (v - v.round()).abs() < 1e-9));
+        }
+    }
+
+    #[test]
+    fn encode_is_nearest() {
+        let cb = D4Ball::with_size(256);
+        check("d4_nearest", 60, |rng| {
+            let x: Vec<f64> = (0..4).map(|_| rng.gaussian() * 1.5).collect();
+            let got = cb.encode_one(&x);
+            let dg: f64 = cb
+                .decode_one(got)
+                .iter()
+                .zip(&x)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            for c in 0..256u32 {
+                let d: f64 = cb
+                    .decode_one(c)
+                    .iter()
+                    .zip(&x)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d < dg - 1e-9 {
+                    return Err(format!("code {c} beats {got}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bits_accounting() {
+        use super::super::VectorQuantizer;
+        let cb = D4Ball::with_size(256);
+        assert!((cb.bits_per_weight() - 2.0).abs() < 1e-9);
+        let cb221 = D4Ball::with_size(460);
+        assert!((cb221.bits_per_weight() - 2.21).abs() < 0.01);
+    }
+}

@@ -1,0 +1,430 @@
+//! E8 lattice codebooks beyond E8P:
+//!
+//! * exact nearest-point search in the infinite E8 lattice (via the
+//!   classic D8 ∪ (D8 + ½·1) decomposition),
+//! * the paper's 1-bit E8 codebook used as the RVQ residual stage for
+//!   3-bit quantization (§4.3): the 241 points of norm² ≤ 2 plus 15
+//!   points from the norm² = 4 shell,
+//! * `E8Ball`: E8 ∩ ball codebooks of arbitrary size (the "E8 lattice
+//!   2.37 bit" row of Table 7 and the Figure 3 sweep).
+
+use super::{nearest_bruteforce, Codebook};
+
+/// Nearest point in D_n = {x ∈ Z^n : Σx even}: round every coordinate;
+/// if the sum is odd, re-round the coordinate whose rounding error was
+/// largest in the other direction (Conway & Sloane, SPLAG ch. 4).
+pub fn nearest_dn(x: &[f64]) -> Vec<f64> {
+    let mut r: Vec<f64> = x.iter().map(|v| v.round()).collect();
+    let sum: i64 = r.iter().map(|&v| v as i64).sum();
+    if sum.rem_euclid(2) != 0 {
+        // Index with the largest |x - round(x)|.
+        let (mut worst, mut worst_e) = (0usize, -1.0f64);
+        for (i, (&xi, &ri)) in x.iter().zip(&r).enumerate() {
+            let e = (xi - ri).abs();
+            if e > worst_e {
+                worst_e = e;
+                worst = i;
+            }
+        }
+        let xi = x[worst];
+        let ri = r[worst];
+        // Move to the second-nearest integer.
+        r[worst] = if xi >= ri { ri + 1.0 } else { ri - 1.0 };
+    }
+    r
+}
+
+/// Nearest point in E8 = D8 ∪ (D8 + ½·1): the better of the two coset
+/// decodings. Exact.
+pub fn nearest_e8(x: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(x.len(), 8);
+    let a = nearest_dn(x);
+    let shifted: Vec<f64> = x.iter().map(|v| v - 0.5).collect();
+    let mut b = nearest_dn(&shifted);
+    for v in b.iter_mut() {
+        *v += 0.5;
+    }
+    let da: f64 = a.iter().zip(x).map(|(p, q)| (p - q) * (p - q)).sum();
+    let db: f64 = b.iter().zip(x).map(|(p, q)| (p - q) * (p - q)).sum();
+    if da <= db {
+        a
+    } else {
+        b
+    }
+}
+
+/// Enumerate all E8 points with squared norm ≤ `max_sq`, deterministic
+/// order (shell by shell, lexicographic within shell).
+pub fn e8_points_up_to(max_sq: f64) -> Vec<[f64; 8]> {
+    // Integer coset D8: coords in [-L, L]; half coset: odd half-integers.
+    let limit = (max_sq.sqrt().ceil() as i64) + 1;
+    let mut pts: Vec<[f64; 8]> = Vec::new();
+    // D8 part.
+    let mut cur = [0i64; 8];
+    fn rec_int(
+        pos: usize,
+        rem: f64,
+        limit: i64,
+        cur: &mut [i64; 8],
+        pts: &mut Vec<[f64; 8]>,
+    ) {
+        if pos == 8 {
+            let s: i64 = cur.iter().sum();
+            if s.rem_euclid(2) == 0 {
+                let mut v = [0.0; 8];
+                for i in 0..8 {
+                    v[i] = cur[i] as f64;
+                }
+                pts.push(v);
+            }
+            return;
+        }
+        let mut c = -limit;
+        while c <= limit {
+            let cc = (c * c) as f64;
+            if cc <= rem + 1e-9 {
+                cur[pos] = c;
+                rec_int(pos + 1, rem - cc, limit, cur, pts);
+            }
+            c += 1;
+        }
+    }
+    rec_int(0, max_sq, limit, &mut cur, &mut pts);
+    // D8 + 1/2 part: coords are odd multiples of 1/2.
+    let mut curh = [0i64; 8]; // value = curh/2, curh odd
+    fn rec_half(pos: usize, rem4: i64, limit2: i64, cur: &mut [i64; 8], pts: &mut Vec<[f64; 8]>) {
+        // rem4 = remaining squared norm in quarter units.
+        if pos == 8 {
+            if rem4 >= 0 {
+                // Sum must be even: Σ(h/2) with h odd → Σh ≡ 0 (mod 4)
+                // for integer-even sum. Σ h/2 even ⇔ Σh ≡ 0 mod 4.
+                let s: i64 = cur.iter().sum();
+                if s.rem_euclid(4) == 0 {
+                    let mut v = [0.0; 8];
+                    for i in 0..8 {
+                        v[i] = cur[i] as f64 / 2.0;
+                    }
+                    pts.push(v);
+                }
+            }
+            return;
+        }
+        let mut h = -limit2;
+        while h <= limit2 {
+            if h.rem_euclid(2) != 0 {
+                let hh = h * h;
+                if hh <= rem4 {
+                    cur[pos] = h;
+                    rec_half(pos + 1, rem4 - hh, limit2, cur, pts);
+                }
+            }
+            h += 1;
+        }
+    }
+    rec_half(
+        0,
+        (4.0 * max_sq).round() as i64,
+        2 * limit,
+        &mut curh,
+        &mut pts,
+    );
+    // Sort by (norm², lexicographic) for deterministic shells.
+    pts.sort_by(|a, b| {
+        let na: f64 = a.iter().map(|v| v * v).sum();
+        let nb: f64 = b.iter().map(|v| v * v).sum();
+        na.partial_cmp(&nb)
+            .unwrap()
+            .then_with(|| a.partial_cmp(b).unwrap())
+    });
+    pts
+}
+
+/// The paper's 1-bit E8 codebook: 256 entries = {0} ∪ 240 roots (norm²=2)
+/// ∪ 15 chosen norm²=4 points. Used as RVQ stage 2 for 3-bit QuIP#.
+pub struct E8OneBit {
+    entries: Vec<f64>, // 256 × 8 row-major
+}
+
+impl E8OneBit {
+    pub fn new() -> Self {
+        let small = e8_points_up_to(2.0);
+        assert_eq!(small.len(), 241, "origin + 240 roots");
+        let shell4 = e8_points_up_to(4.0)
+            .into_iter()
+            .filter(|p| {
+                let n: f64 = p.iter().map(|v| v * v).sum();
+                (n - 4.0).abs() < 1e-9
+            })
+            .collect::<Vec<_>>();
+        assert!(shell4.len() >= 15);
+        let mut entries = Vec::with_capacity(256 * 8);
+        for p in small.iter().chain(shell4.iter().take(15)) {
+            entries.extend_from_slice(p);
+        }
+        assert_eq!(entries.len(), 256 * 8);
+        E8OneBit { entries }
+    }
+}
+
+impl Default for E8OneBit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Codebook for E8OneBit {
+    fn dim(&self) -> usize {
+        8
+    }
+
+    fn size(&self) -> usize {
+        256
+    }
+
+    fn decode_one(&self, code: u32) -> Vec<f64> {
+        let i = code as usize;
+        self.entries[i * 8..(i + 1) * 8].to_vec()
+    }
+
+    fn encode_one(&self, x: &[f64]) -> u32 {
+        nearest_bruteforce(&self.entries, 8, x)
+    }
+
+    fn cb_name(&self) -> String {
+        "e8-1bit".to_string()
+    }
+}
+
+/// E8 ∩ ball codebook of a given target size (e.g. 2^19 ≈ the paper's
+/// "2.37 bit" row in Table 7; small sizes for the Figure 3 sweep).
+/// Encoding uses the exact infinite-lattice decoder and falls back to a
+/// shrink-toward-origin loop when the lattice point lands outside the
+/// ball, then a local brute force over the outermost shell.
+pub struct E8Ball {
+    entries: Vec<f64>, // size × 8
+    max_norm_sq: f64,
+    name: String,
+    /// lattice point (in quarter units) → code, for O(1) encode.
+    index: std::collections::HashMap<[i64; 8], u32>,
+}
+
+impl E8Ball {
+    /// Build with the smallest shell radius reaching at least
+    /// `target_size` points, then truncate to exactly `target_size`
+    /// (deterministic shell order).
+    pub fn with_size(target_size: usize) -> Self {
+        let mut max_sq = 2.0;
+        let mut pts = e8_points_up_to(max_sq);
+        while pts.len() < target_size {
+            max_sq += 2.0;
+            pts = e8_points_up_to(max_sq);
+        }
+        pts.truncate(target_size);
+        let max_norm_sq = pts
+            .iter()
+            .map(|p| p.iter().map(|v| v * v).sum::<f64>())
+            .fold(0.0f64, f64::max);
+        let mut entries = Vec::with_capacity(pts.len() * 8);
+        let mut index = std::collections::HashMap::with_capacity(pts.len());
+        for (i, p) in pts.iter().enumerate() {
+            entries.extend_from_slice(p);
+            index.insert(Self::key(p), i as u32);
+        }
+        E8Ball {
+            entries,
+            max_norm_sq,
+            name: format!("e8-ball-{target_size}"),
+            index,
+        }
+    }
+
+    fn key(p: &[f64]) -> [i64; 8] {
+        let mut k = [0i64; 8];
+        for i in 0..8 {
+            k[i] = (p[i] * 4.0).round() as i64;
+        }
+        k
+    }
+
+    fn find_index(&self, p: &[f64]) -> Option<u32> {
+        self.index.get(&Self::key(p)).copied()
+    }
+}
+
+impl Codebook for E8Ball {
+    fn dim(&self) -> usize {
+        8
+    }
+
+    fn size(&self) -> usize {
+        self.entries.len() / 8
+    }
+
+    fn decode_one(&self, code: u32) -> Vec<f64> {
+        let i = code as usize;
+        self.entries[i * 8..(i + 1) * 8].to_vec()
+    }
+
+    fn encode_one(&self, x: &[f64]) -> u32 {
+        // Exact lattice point first.
+        let p = nearest_e8(x);
+        let norm: f64 = p.iter().map(|v| v * v).sum();
+        if norm <= self.max_norm_sq + 1e-9 {
+            if let Some(idx) = self.find_index(&p) {
+                return idx;
+            }
+        }
+        // Outside the ball (or truncated outer shell): shrink x toward the
+        // origin until the decoded point is inside, then refine with a
+        // brute-force pass for exactness near the boundary.
+        let mut scale = (self.max_norm_sq / norm.max(1e-12)).sqrt();
+        for _ in 0..8 {
+            let xs: Vec<f64> = x.iter().map(|v| v * scale).collect();
+            let p = nearest_e8(&xs);
+            let n: f64 = p.iter().map(|v| v * v).sum();
+            if n <= self.max_norm_sq + 1e-9 {
+                if let Some(idx) = self.find_index(&p) {
+                    if Codebook::size(self) <= 4096 {
+                        // Small codebooks: brute-force guarantees exact
+                        // nearest near the truncated boundary.
+                        let bf = nearest_bruteforce(&self.entries, 8, x);
+                        let d_idx = dist_sq(&self.decode_one(idx), x);
+                        let d_bf = dist_sq(&self.decode_one(bf), x);
+                        return if d_bf < d_idx { bf } else { idx };
+                    }
+                    return idx;
+                }
+            }
+            scale *= 0.9;
+        }
+        nearest_bruteforce(&self.entries, 8, x)
+    }
+
+    fn cb_name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+
+    #[test]
+    fn nearest_dn_is_in_dn_and_nearest() {
+        check("nearest_dn", 100, |rng| {
+            let x: Vec<f64> = (0..8).map(|_| rng.gaussian() * 2.0).collect();
+            let p = nearest_dn(&x);
+            let s: i64 = p.iter().map(|&v| v as i64).sum();
+            if s.rem_euclid(2) != 0 {
+                return Err(format!("sum odd: {p:?}"));
+            }
+            // Verify optimality within D8 by local search: any single-coord
+            // ±1 plus parity-restoring move can't improve (spot check via
+            // brute force over offsets in {-1,0,1}^2 on two random coords).
+            let d0 = dist_sq(&p, &x);
+            for _ in 0..20 {
+                let i = rng.below_usize(8);
+                let j = rng.below_usize(8);
+                if i == j {
+                    continue;
+                }
+                for di in [-1.0, 1.0] {
+                    for dj in [-1.0, 1.0] {
+                        let mut q = p.clone();
+                        q[i] += di;
+                        q[j] += dj;
+                        let s: i64 = q.iter().map(|&v| v as i64).sum();
+                        if s.rem_euclid(2) == 0 && dist_sq(&q, &x) < d0 - 1e-9 {
+                            return Err(format!("improvable: {p:?} -> {q:?} for {x:?}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nearest_e8_in_lattice() {
+        check("nearest_e8", 100, |rng| {
+            let x: Vec<f64> = (0..8).map(|_| rng.gaussian() * 2.0).collect();
+            let p = nearest_e8(&x);
+            if !super::super::e8p::in_e8(&p) {
+                return Err(format!("not in E8: {p:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nearest_e8_covering_radius() {
+        // E8 covering radius is 1 → squared distance ≤ 1 for any point.
+        check("e8_covering", 200, |rng| {
+            let x: Vec<f64> = (0..8).map(|_| rng.gaussian() * 3.0).collect();
+            let p = nearest_e8(&x);
+            let d = dist_sq(&p, &x);
+            if d > 1.0 + 1e-9 {
+                return Err(format!("covering radius violated: d²={d} at {x:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shell_counts_match_theta_series() {
+        // E8 theta series: 1, 240 (norm² 2), 2160 (norm² 4).
+        let pts2 = e8_points_up_to(2.0);
+        assert_eq!(pts2.len(), 1 + 240);
+        let pts4 = e8_points_up_to(4.0);
+        assert_eq!(pts4.len(), 1 + 240 + 2160);
+    }
+
+    #[test]
+    fn one_bit_codebook_size_and_membership() {
+        let cb = E8OneBit::new();
+        assert_eq!(Codebook::size(&cb), 256);
+        for c in 0..256u32 {
+            let p = cb.decode_one(c);
+            assert!(super::super::e8p::in_e8(&p), "{p:?} not in E8");
+        }
+    }
+
+    #[test]
+    fn one_bit_encode_is_nearest() {
+        let cb = E8OneBit::new();
+        check("e8_1bit_nearest", 50, |rng| {
+            let x: Vec<f64> = (0..8).map(|_| rng.gaussian() * 0.7).collect();
+            let got = cb.encode_one(&x);
+            let d_got = dist_sq(&cb.decode_one(got), &x);
+            for c in 0..256u32 {
+                let d = dist_sq(&cb.decode_one(c), &x);
+                if d < d_got - 1e-9 {
+                    return Err(format!("code {c} beats {got}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ball_codebook_exact_small() {
+        let cb = E8Ball::with_size(241);
+        check("e8ball_nearest", 40, |rng| {
+            let x: Vec<f64> = (0..8).map(|_| rng.gaussian() * 1.0).collect();
+            let got = cb.encode_one(&x);
+            let d_got = dist_sq(&cb.decode_one(got), &x);
+            for c in 0..Codebook::size(&cb) as u32 {
+                let d = dist_sq(&cb.decode_one(c), &x);
+                if d < d_got - 1e-9 {
+                    return Err(format!("code {c} beats {got} (d {d} vs {d_got})"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

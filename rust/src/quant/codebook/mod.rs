@@ -1,0 +1,159 @@
+//! Vector-quantization codebooks (paper §4.2–4.3, §C).
+//!
+//! Everything rounds through the [`VectorQuantizer`] trait so BlockLDLQ is
+//! agnostic to the codebook: the 2-bit E8P lattice codebook (the paper's
+//! contribution), the 1-bit E8 residual codebook, E8/D4 ball codebooks,
+//! k-means ("AQLM-like" and the Table 7 comparison), the 1-D half-integer
+//! grid (the "no-E8" ablation), and multi-stage RVQ composition.
+//!
+//! Convention: quantizers operate in *codebook units*. The pipeline
+//! rescales weights by `sigma_w * rho` first, where `rho` is the
+//! codebook's optimal Gaussian scale found by [`crate::quant::scales`].
+
+pub mod d4;
+pub mod e8;
+pub mod e8p;
+pub mod kmeans;
+pub mod scalar;
+
+use crate::util::rng::Pcg64;
+
+/// A (possibly multi-stage) vector quantizer: maps a `dim()`-vector to
+/// `num_codes()` integer codes and back.
+pub trait VectorQuantizer: Send + Sync {
+    /// Vector dimension d (the paper's g when used inside BlockLDLQ).
+    fn dim(&self) -> usize;
+
+    /// Total bits per *weight* spent on codes: sum(log2 sizes)/dim.
+    fn bits_per_weight(&self) -> f64;
+
+    /// Number of codes emitted per vector (1 for plain codebooks,
+    /// #stages for RVQ).
+    fn num_codes(&self) -> usize;
+
+    /// Quantize `x` (len = dim) writing codes into `codes` (len =
+    /// num_codes) and returning the decoded vector.
+    fn quantize(&self, x: &[f64], codes: &mut [u32]) -> Vec<f64>;
+
+    /// Decode codes back to the vector.
+    fn decode(&self, codes: &[u32]) -> Vec<f64>;
+
+    /// Short identifier used in artifacts and reports.
+    fn name(&self) -> String;
+
+    /// Per-stage scale multipliers (RVQ overrides; single codebooks are
+    /// `[1.0]`). Used to reconstruct per-stage total scales when packing.
+    fn stage_scales(&self) -> Vec<f64> {
+        vec![1.0]
+    }
+}
+
+/// A single-table codebook: `size()` entries of dimension `dim()`.
+/// Blanket-implements [`VectorQuantizer`].
+pub trait Codebook: Send + Sync {
+    fn dim(&self) -> usize;
+    fn size(&self) -> usize;
+    fn decode_one(&self, code: u32) -> Vec<f64>;
+    /// Exact nearest codebook entry (Euclidean).
+    fn encode_one(&self, x: &[f64]) -> u32;
+    fn cb_name(&self) -> String;
+}
+
+impl<T: Codebook> VectorQuantizer for T {
+    fn dim(&self) -> usize {
+        Codebook::dim(self)
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        (self.size() as f64).log2() / Codebook::dim(self) as f64
+    }
+
+    fn num_codes(&self) -> usize {
+        1
+    }
+
+    fn quantize(&self, x: &[f64], codes: &mut [u32]) -> Vec<f64> {
+        debug_assert_eq!(x.len(), Codebook::dim(self));
+        let c = self.encode_one(x);
+        codes[0] = c;
+        self.decode_one(c)
+    }
+
+    fn decode(&self, codes: &[u32]) -> Vec<f64> {
+        self.decode_one(codes[0])
+    }
+
+    fn name(&self) -> String {
+        self.cb_name()
+    }
+}
+
+/// Brute-force nearest neighbour over an explicit entry table
+/// (row-major `entries`: size × dim). Shared by the smaller codebooks.
+pub(crate) fn nearest_bruteforce(entries: &[f64], dim: usize, x: &[f64]) -> u32 {
+    debug_assert_eq!(x.len(), dim);
+    let mut best = 0u32;
+    let mut best_d = f64::INFINITY;
+    for (idx, e) in entries.chunks_exact(dim).enumerate() {
+        let mut d = 0.0;
+        for (a, b) in e.iter().zip(x) {
+            let t = a - b;
+            d += t * t;
+            if d >= best_d {
+                break;
+            }
+        }
+        if d < best_d {
+            best_d = d;
+            best = idx as u32;
+        }
+    }
+    best
+}
+
+/// Monte-Carlo elementwise MSE of quantizing N(0,1)^d with a quantizer at
+/// input scale `rho` (decode(quantize(x/rho))*rho vs x). This is the
+/// quantity plotted in the paper's Figure 3.
+pub fn gaussian_mse(q: &dyn VectorQuantizer, rho: f64, samples: usize, rng: &mut Pcg64) -> f64 {
+    let d = q.dim();
+    let mut codes = vec![0u32; q.num_codes()];
+    let mut se = 0.0;
+    let mut count = 0usize;
+    let inv = 1.0 / rho;
+    while count < samples {
+        let x: Vec<f64> = (0..d).map(|_| rng.gaussian()).collect();
+        let xs: Vec<f64> = x.iter().map(|v| v * inv).collect();
+        let dec = q.quantize(&xs, &mut codes);
+        for (orig, d) in x.iter().zip(&dec) {
+            let err = orig - d * rho;
+            se += err * err;
+        }
+        count += d;
+    }
+    se / count as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::scalar::HalfIntGrid;
+    use super::*;
+
+    #[test]
+    fn blanket_impl_roundtrip() {
+        let g = HalfIntGrid::new(2);
+        let mut codes = [0u32];
+        let dec = VectorQuantizer::quantize(&g, &[0.4], &mut codes);
+        assert_eq!(dec, VectorQuantizer::decode(&g, &codes));
+        assert!((g.bits_per_weight() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_mse_decreases_with_bits() {
+        let mut rng = Pcg64::new(1);
+        let g2 = HalfIntGrid::new(2);
+        let g4 = HalfIntGrid::new(4);
+        let m2 = gaussian_mse(&g2, 1.0, 4000, &mut rng);
+        let m4 = gaussian_mse(&g4, 1.0, 4000, &mut rng);
+        assert!(m4 < m2, "4-bit MSE {m4} should beat 2-bit {m2}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Scalar (1-D) codebooks.
+//!
+//! * [`HalfIntGrid`] — the paper's "no-E8" ablation: round each weight to
+//!   the k-bit half-integer grid {±1/2, ±3/2, ...}. Also the d=1 series in
+//!   Figure 3.
+//! * [`HalfIntCube`] — d-dimensional product of half-integer grids
+//!   (Figure 3's "half-int d=2/4/8" curves), showing the dimension effect
+//!   without lattice shaping.
+
+use super::Codebook;
+
+/// k-bit half-integer grid: 2^k points {-(2^{k-1} - 1/2), ..., -1/2, 1/2,
+/// ..., 2^{k-1} - 1/2}. Code = index into the sorted grid.
+pub struct HalfIntGrid {
+    bits: u32,
+    levels: Vec<f64>,
+}
+
+impl HalfIntGrid {
+    pub fn new(bits: u32) -> Self {
+        assert!(bits >= 1 && bits <= 16);
+        let half = 1i64 << (bits - 1);
+        let levels = (-half..half).map(|i| i as f64 + 0.5).collect();
+        HalfIntGrid { bits, levels }
+    }
+
+    #[inline]
+    pub fn quantize_scalar(&self, x: f64) -> (u32, f64) {
+        // Nearest grid point = clamp(round(x - 0.5) + 0.5).
+        let half = 1i64 << (self.bits - 1);
+        let idx = (x - 0.5).round() as i64 + half;
+        let idx = idx.clamp(0, 2 * half - 1) as u32;
+        (idx, self.levels[idx as usize])
+    }
+}
+
+impl Codebook for HalfIntGrid {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn size(&self) -> usize {
+        1 << self.bits
+    }
+
+    fn decode_one(&self, code: u32) -> Vec<f64> {
+        vec![self.levels[code as usize]]
+    }
+
+    fn encode_one(&self, x: &[f64]) -> u32 {
+        self.quantize_scalar(x[0]).0
+    }
+
+    fn cb_name(&self) -> String {
+        format!("halfint-{}bit", self.bits)
+    }
+}
+
+/// d-dimensional half-integer product grid with a ball constraint to reach
+/// a non-power-of-two size when requested; used only for the Figure 3
+/// dimension sweep. Codes pack per-coordinate indices.
+pub struct HalfIntCube {
+    bits: u32,
+    d: usize,
+    grid: HalfIntGrid,
+}
+
+impl HalfIntCube {
+    pub fn new(bits: u32, d: usize) -> Self {
+        assert!(d * (bits as usize) <= 31, "code must fit u32");
+        HalfIntCube {
+            bits,
+            d,
+            grid: HalfIntGrid::new(bits),
+        }
+    }
+}
+
+impl Codebook for HalfIntCube {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn size(&self) -> usize {
+        1usize << (self.bits as usize * self.d)
+    }
+
+    fn decode_one(&self, code: u32) -> Vec<f64> {
+        let mask = (1u32 << self.bits) - 1;
+        (0..self.d)
+            .map(|i| self.grid.levels[((code >> (i as u32 * self.bits)) & mask) as usize])
+            .collect()
+    }
+
+    fn encode_one(&self, x: &[f64]) -> u32 {
+        let mut code = 0u32;
+        for (i, &v) in x.iter().enumerate() {
+            let (c, _) = self.grid.quantize_scalar(v);
+            code |= c << (i as u32 * self.bits);
+        }
+        code
+    }
+
+    fn cb_name(&self) -> String {
+        format!("halfint-{}bit-d{}", self.bits, self.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+
+    #[test]
+    fn grid_levels_2bit() {
+        let g = HalfIntGrid::new(2);
+        assert_eq!(g.levels, vec![-1.5, -0.5, 0.5, 1.5]);
+    }
+
+    #[test]
+    fn quantize_rounds_to_nearest() {
+        let g = HalfIntGrid::new(2);
+        assert_eq!(g.quantize_scalar(0.1).1, 0.5);
+        assert_eq!(g.quantize_scalar(-0.1).1, -0.5);
+        assert_eq!(g.quantize_scalar(0.9).1, 0.5);
+        assert_eq!(g.quantize_scalar(1.01).1, 1.5);
+        assert_eq!(g.quantize_scalar(100.0).1, 1.5); // clamp
+        assert_eq!(g.quantize_scalar(-100.0).1, -1.5);
+    }
+
+    #[test]
+    fn encode_exact_nearest_property() {
+        let g = HalfIntGrid::new(3);
+        check("halfint_nearest", 100, |rng| {
+            let x = rng.gaussian() * 3.0;
+            let (_, v) = g.quantize_scalar(x);
+            for &l in &g.levels {
+                if (l - x).abs() < (v - x).abs() - 1e-12 {
+                    return Err(format!("{l} beats {v} for {x}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cube_roundtrip() {
+        let c = HalfIntCube::new(2, 8);
+        check("cube_roundtrip", 50, |rng| {
+            let x: Vec<f64> = (0..8).map(|_| rng.gaussian()).collect();
+            let code = c.encode_one(&x);
+            let v = c.decode_one(code);
+            let code2 = c.encode_one(&v);
+            if code != code2 {
+                return Err(format!("not idempotent: {code} vs {code2}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cube_equals_product_of_grids() {
+        let c = HalfIntCube::new(2, 4);
+        let g = HalfIntGrid::new(2);
+        let x = [0.3, -1.2, 2.7, -0.6];
+        let v = c.decode_one(c.encode_one(&x));
+        for (i, &xi) in x.iter().enumerate() {
+            assert_eq!(v[i], g.quantize_scalar(xi).1);
+        }
+    }
+}

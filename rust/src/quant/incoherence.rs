@@ -1,0 +1,520 @@
+//! Incoherence processing (paper §3, Algorithms 3–4, Appendix A).
+//!
+//! Conjugates W and H by structured random orthogonal transforms so that
+//! the result is μ-incoherent with high probability:
+//!
+//! * **RHT** (QuIP#): x → H·(s ⊙ x) with H a (scaled) Hadamard transform
+//!   and s a random ±1 vector — Algorithm 3.
+//! * **RFFT** (fallback for awkward dimensions): x → F·(φ ⊙ x) with F the
+//!   unitary FFT over pairs and φ random unit phases — Algorithm 4.
+//! * **Kron** (QuIP baseline, Chee et al. 2023): x → (A ⊗ B)·x with A, B
+//!   dense random orthogonal factors of size ≈ √n.
+//!
+//! The proxy objective is preserved exactly:
+//! tr((UWVᵀ)(VHVᵀ)(VWᵀUᵀ)) = tr(WHWᵀ).
+
+use crate::linalg::fft::fft_unitary;
+use crate::linalg::hadamard::HadTransform;
+use crate::linalg::ldl::sym_eig;
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg64;
+use crate::util::threadpool;
+
+/// Which structured transform family to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IncoherenceKind {
+    Rht,
+    Rfft,
+    Kron2,
+}
+
+/// One side's structured random orthogonal transform.
+pub enum Transform {
+    /// x → Had(s ⊙ x), s ∈ {±1}^n (the paper stores s as the "sign
+    /// vector" S_U/S_V; fine-tuning later relaxes it to reals).
+    Rht { t: HadTransform, s: Vec<f64> },
+    /// x → unpack(F(φ ⊙ pack(x))) over n/2 complex pairs.
+    Rfft { cos: Vec<f64>, sin: Vec<f64> },
+    /// x → (A ⊗ B) x with dense orthogonal A (a×a), B (b×b), n = a·b.
+    Kron { a: Matrix, b: Matrix },
+}
+
+/// Random orthogonal matrix via modified Gram–Schmidt on a Gaussian
+/// matrix (Haar for our purposes).
+pub fn random_orthogonal(n: usize, rng: &mut Pcg64) -> Matrix {
+    let g = Matrix::gaussian(n, n, 1.0, rng);
+    let mut q = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut v: Vec<f64> = (0..n).map(|i| g[(i, j)]).collect();
+        for k in 0..j {
+            let mut dot = 0.0;
+            for i in 0..n {
+                dot += q[(i, k)] * v[i];
+            }
+            for i in 0..n {
+                v[i] -= dot * q[(i, k)];
+            }
+        }
+        let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+        for i in 0..n {
+            q[(i, j)] = v[i] / norm;
+        }
+    }
+    q
+}
+
+/// Split n = a·b with a, b as close to √n as possible (QuIP's 2-factor
+/// Kronecker shapes).
+pub fn balanced_factor(n: usize) -> (usize, usize) {
+    let mut best = (1, n);
+    let mut a = 1;
+    while a * a <= n {
+        if n % a == 0 {
+            best = (a, n / a);
+        }
+        a += 1;
+    }
+    best
+}
+
+impl Transform {
+    pub fn new(kind: IncoherenceKind, n: usize, rng: &mut Pcg64) -> Transform {
+        match kind {
+            IncoherenceKind::Rht => {
+                let t = HadTransform::new(n)
+                    .unwrap_or_else(|| panic!("no Hadamard factorization for n={n}"));
+                let s = rng.sign_vec(n).into_iter().map(|v| v as f64).collect();
+                Transform::Rht { t, s }
+            }
+            IncoherenceKind::Rfft => {
+                assert!(n % 2 == 0, "RFFT needs even n, got {n}");
+                let half = n / 2;
+                let theta: Vec<f64> = (0..half)
+                    .map(|_| rng.f64() * 2.0 * std::f64::consts::PI)
+                    .collect();
+                Transform::Rfft {
+                    cos: theta.iter().map(|t| t.cos()).collect(),
+                    sin: theta.iter().map(|t| t.sin()).collect(),
+                }
+            }
+            IncoherenceKind::Kron2 => {
+                let (a, b) = balanced_factor(n);
+                Transform::Kron {
+                    a: random_orthogonal(a, rng),
+                    b: random_orthogonal(b, rng),
+                }
+            }
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            Transform::Rht { t, .. } => t.n,
+            Transform::Rfft { cos, .. } => cos.len() * 2,
+            Transform::Kron { a, b } => a.rows * b.rows,
+        }
+    }
+
+    /// The stored randomization vector, for fine-tuning (RHT signs). The
+    /// RFFT/Kron variants have no sign vector to tune.
+    pub fn sign_vec(&self) -> Option<&[f64]> {
+        match self {
+            Transform::Rht { s, .. } => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn sign_vec_mut(&mut self) -> Option<&mut Vec<f64>> {
+        match self {
+            Transform::Rht { s, .. } => Some(s),
+            _ => None,
+        }
+    }
+
+    /// y = T x.
+    pub fn apply(&self, x: &mut [f64]) {
+        match self {
+            Transform::Rht { t, s } => {
+                for (v, si) in x.iter_mut().zip(s) {
+                    *v *= si;
+                }
+                t.apply(x);
+            }
+            Transform::Rfft { cos, sin } => {
+                let half = cos.len();
+                let mut re = vec![0.0; half];
+                let mut im = vec![0.0; half];
+                for j in 0..half {
+                    // phase multiply: (x0 + i x1) * e^{iθ}
+                    let (x0, x1) = (x[2 * j], x[2 * j + 1]);
+                    re[j] = x0 * cos[j] - x1 * sin[j];
+                    im[j] = x0 * sin[j] + x1 * cos[j];
+                }
+                fft_unitary(&mut re, &mut im, false);
+                for j in 0..half {
+                    x[2 * j] = re[j];
+                    x[2 * j + 1] = im[j];
+                }
+            }
+            Transform::Kron { a, b } => {
+                // (A ⊗ B) x : view x as (a.rows × b.rows) row-major X,
+                // result = A X Bᵀ.
+                let (ar, br) = (a.rows, b.rows);
+                let xm = Matrix::from_vec(ar, br, x.to_vec());
+                let y = a.matmul(&xm).matmul_transb(b);
+                x.copy_from_slice(&y.data);
+            }
+        }
+    }
+
+    /// y = Tᵀ x (inverse, since T is orthogonal).
+    pub fn apply_inverse(&self, x: &mut [f64]) {
+        match self {
+            Transform::Rht { t, s } => {
+                t.apply_inverse(x);
+                for (v, si) in x.iter_mut().zip(s) {
+                    *v *= si; // signs are ±1 ⇒ s⁻¹ = s (exact before FT)
+                }
+            }
+            Transform::Rfft { cos, sin } => {
+                let half = cos.len();
+                let mut re = vec![0.0; half];
+                let mut im = vec![0.0; half];
+                for j in 0..half {
+                    re[j] = x[2 * j];
+                    im[j] = x[2 * j + 1];
+                }
+                fft_unitary(&mut re, &mut im, true);
+                for j in 0..half {
+                    // conj phase multiply
+                    let (r, i) = (re[j], im[j]);
+                    x[2 * j] = r * cos[j] + i * sin[j];
+                    x[2 * j + 1] = -r * sin[j] + i * cos[j];
+                }
+            }
+            Transform::Kron { a, b } => {
+                let (ar, br) = (a.rows, b.rows);
+                let xm = Matrix::from_vec(ar, br, x.to_vec());
+                // (A ⊗ B)ᵀ x = Aᵀ X B
+                let y = a.transpose().matmul(&xm).matmul(b);
+                x.copy_from_slice(&y.data);
+            }
+        }
+    }
+
+    /// Core inverse *without* the sign multiplication: x → Hᵀx for RHT
+    /// (full inverse for RFFT/Kron, which have no separable sign vector).
+    /// Lets fine-tuning split W_eff = diag(s_u)·A·diag(s_v) with A frozen.
+    pub fn apply_core_inverse(&self, x: &mut [f64]) {
+        match self {
+            Transform::Rht { t, .. } => t.apply_inverse(x),
+            _ => self.apply_inverse(x),
+        }
+    }
+
+    /// Materialize as a dense matrix (tests only).
+    pub fn dense(&self) -> Matrix {
+        let n = self.dim();
+        let mut m = Matrix::zeros(n, n);
+        for j in 0..n {
+            let mut e = vec![0.0; n];
+            e[j] = 1.0;
+            self.apply(&mut e);
+            for i in 0..n {
+                m[(i, j)] = e[i];
+            }
+        }
+        m
+    }
+}
+
+/// Both sides of the conjugation for one weight matrix:
+/// W̃ = T_U W T_Vᵀ, H̃ = T_V H T_Vᵀ.
+pub struct IncoherenceCtx {
+    pub u: Transform,
+    pub v: Transform,
+    pub kind: IncoherenceKind,
+}
+
+impl IncoherenceCtx {
+    /// Fresh random context for an m×n weight matrix.
+    pub fn new(kind: IncoherenceKind, m: usize, n: usize, rng: &mut Pcg64) -> Self {
+        let mut ru = rng.fork(1);
+        let mut rv = rng.fork(2);
+        IncoherenceCtx {
+            u: Transform::new(kind, m, &mut ru),
+            v: Transform::new(kind, n, &mut rv),
+            kind,
+        }
+    }
+
+    /// W̃ = T_U W T_Vᵀ (Algorithm 3 line 2). Parallel over rows/cols.
+    pub fn process_w(&self, w: &Matrix) -> Matrix {
+        let mut out = w.clone();
+        // Right side: each row r ← T_V r  (since (W T_Vᵀ)ᵢ. = T_V(Wᵢ.)).
+        let v = &self.v;
+        threadpool::par_rows(&mut out.data, out.cols, |_, row| {
+            v.apply(row);
+        });
+        // Left side: transform columns via transpose.
+        let mut t = out.transpose();
+        let u = &self.u;
+        threadpool::par_rows(&mut t.data, t.cols, |_, row| {
+            u.apply(row);
+        });
+        t.transpose()
+    }
+
+    /// Invert the conjugation: W = T_Uᵀ W̃ T_V.
+    pub fn unprocess_w(&self, wt: &Matrix) -> Matrix {
+        let mut out = wt.clone();
+        let v = &self.v;
+        threadpool::par_rows(&mut out.data, out.cols, |_, row| {
+            v.apply_inverse(row);
+        });
+        let mut t = out.transpose();
+        let u = &self.u;
+        threadpool::par_rows(&mut t.data, t.cols, |_, row| {
+            u.apply_inverse(row);
+        });
+        t.transpose()
+    }
+
+    /// Sign-free inverse conjugation: A = H_mᵀ W̃ H_n, so that
+    /// W_eff = diag(s_u) · A · diag(s_v) (the fine-tuning parametrization).
+    pub fn unprocess_w_signless(&self, wt: &Matrix) -> Matrix {
+        let mut out = wt.clone();
+        let v = &self.v;
+        threadpool::par_rows(&mut out.data, out.cols, |_, row| {
+            v.apply_core_inverse(row);
+        });
+        let mut t = out.transpose();
+        let u = &self.u;
+        threadpool::par_rows(&mut t.data, t.cols, |_, row| {
+            u.apply_core_inverse(row);
+        });
+        t.transpose()
+    }
+
+    /// H̃ = T_V H T_Vᵀ (Algorithm 3 line 3).
+    pub fn process_h(&self, h: &Matrix) -> Matrix {
+        let mut out = h.clone();
+        let v = &self.v;
+        threadpool::par_rows(&mut out.data, out.cols, |_, row| {
+            v.apply(row);
+        });
+        let mut t = out.transpose();
+        threadpool::par_rows(&mut t.data, t.cols, |_, row| {
+            v.apply(row);
+        });
+        t.transpose().symmetrize()
+    }
+}
+
+/// Weight incoherence μ_W = max|W_ij|·√(mn)/‖W‖_F (Definition 2.1).
+pub fn mu_w(w: &Matrix) -> f64 {
+    let f = w.frob_norm();
+    if f == 0.0 {
+        return 0.0;
+    }
+    w.max_abs() * ((w.rows * w.cols) as f64).sqrt() / f
+}
+
+/// Hessian incoherence μ_H = max|Q_ij|·√n over the eigenvector matrix Q
+/// (Definition 2.1). O(n³) eigensolve — test/verification sizes.
+pub fn mu_h(h: &Matrix) -> f64 {
+    let (_, q) = sym_eig(h);
+    q.max_abs() * (h.rows as f64).sqrt()
+}
+
+/// The paper's Lemma 3.1 bounds for failure probability δ.
+pub fn lemma31_mu_h(n: usize, delta: f64) -> f64 {
+    (2.0 * (2.0 * (n * n) as f64 / delta).ln()).sqrt()
+}
+
+pub fn lemma31_mu_w(m: usize, n: usize, delta: f64) -> f64 {
+    2.0 * (4.0 * (m * n) as f64 / delta).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ldl::random_spd;
+    use crate::util::proptest_lite::check;
+
+    fn transform_kinds() -> Vec<IncoherenceKind> {
+        vec![
+            IncoherenceKind::Rht,
+            IncoherenceKind::Rfft,
+            IncoherenceKind::Kron2,
+        ]
+    }
+
+    #[test]
+    fn transforms_are_orthogonal() {
+        let mut rng = Pcg64::new(1);
+        for kind in transform_kinds() {
+            for n in [16usize, 24, 48] {
+                let t = Transform::new(kind, n, &mut rng);
+                let d = t.dense();
+                let err = d.matmul_transb(&d).max_diff(&Matrix::eye(n));
+                assert!(err < 1e-8, "{kind:?} n={n} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_inverse_roundtrip() {
+        check("transform_roundtrip", 12, |rng| {
+            for kind in transform_kinds() {
+                let n = 32;
+                let t = Transform::new(kind, n, rng);
+                let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                let mut y = x.clone();
+                t.apply(&mut y);
+                t.apply_inverse(&mut y);
+                for (a, b) in y.iter().zip(&x) {
+                    if (a - b).abs() > 1e-8 {
+                        return Err(format!("{kind:?} roundtrip failed"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn proxy_objective_preserved() {
+        // tr(W̃ H̃ W̃ᵀ) == tr(W H Wᵀ) for every transform family.
+        check("proxy_preserved", 6, |rng| {
+            for kind in transform_kinds() {
+                let (m, n) = (16, 24);
+                let w = Matrix::gaussian(m, n, 1.0, rng);
+                let h = random_spd(n, 0.1, rng);
+                let ctx = IncoherenceCtx::new(kind, m, n, rng);
+                let wt = ctx.process_w(&w);
+                let ht = ctx.process_h(&h);
+                let before = w.matmul(&h).matmul_transb(&w).trace();
+                let after = wt.matmul(&ht).matmul_transb(&wt).trace();
+                if (before - after).abs() > 1e-6 * before.abs().max(1.0) {
+                    return Err(format!("{kind:?}: {before} vs {after}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unprocess_inverts_process() {
+        check("unprocess", 6, |rng| {
+            for kind in transform_kinds() {
+                let (m, n) = (12, 16);
+                let w = Matrix::gaussian(m, n, 1.0, rng);
+                let ctx = IncoherenceCtx::new(kind, m, n, rng);
+                let roundtrip = ctx.unprocess_w(&ctx.process_w(&w));
+                if roundtrip.max_diff(&w) > 1e-8 {
+                    return Err(format!("{kind:?} unprocess failed"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rht_achieves_lemma31_weight_incoherence() {
+        // Spiky matrix (one huge entry) becomes incoherent under RHT with
+        // μ_W below the Lemma 3.1 bound at δ = 0.01.
+        check("rht_mu_w", 10, |rng| {
+            let (m, n) = (64, 128);
+            let mut w = Matrix::gaussian(m, n, 0.01, rng);
+            w[(3, 5)] = 100.0; // massive outlier
+            let ctx = IncoherenceCtx::new(IncoherenceKind::Rht, m, n, rng);
+            let wt = ctx.process_w(&w);
+            let mu = mu_w(&wt);
+            let bound = lemma31_mu_w(m, n, 0.01);
+            if mu > bound {
+                return Err(format!("mu_W={mu} exceeds bound {bound}"));
+            }
+            // And it must actually help: the original is far above 1.
+            if mu_w(&w) < mu {
+                return Err("incoherence processing made things worse".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rht_achieves_lemma31_hessian_incoherence() {
+        check("rht_mu_h", 5, |rng| {
+            let n = 32;
+            // Spiky Hessian: near rank-1 in a coordinate direction.
+            let mut h = random_spd(n, 0.01, rng);
+            h[(2, 2)] += 50.0;
+            let ctx = IncoherenceCtx::new(IncoherenceKind::Rht, n, n, rng);
+            let ht = ctx.process_h(&h);
+            let mu = mu_h(&ht);
+            let bound = lemma31_mu_h(n, 0.01);
+            if mu > bound {
+                return Err(format!("mu_H={mu} exceeds bound {bound}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rfft_also_reduces_mu() {
+        let mut rng = Pcg64::new(5);
+        let (m, n) = (32, 64);
+        let mut w = Matrix::gaussian(m, n, 0.01, &mut rng);
+        w[(0, 0)] = 10.0;
+        let before = mu_w(&w);
+        let ctx = IncoherenceCtx::new(IncoherenceKind::Rfft, m, n, &mut rng);
+        let after = mu_w(&ctx.process_w(&w));
+        assert!(after < before, "{after} !< {before}");
+    }
+
+    #[test]
+    fn kron_reduces_mu_but_weaker_shape() {
+        let mut rng = Pcg64::new(6);
+        let (m, n) = (36, 64);
+        let mut w = Matrix::gaussian(m, n, 0.01, &mut rng);
+        w[(1, 1)] = 10.0;
+        let before = mu_w(&w);
+        let ctx = IncoherenceCtx::new(IncoherenceKind::Kron2, m, n, &mut rng);
+        let after = mu_w(&ctx.process_w(&w));
+        assert!(after < before);
+    }
+
+    #[test]
+    fn balanced_factor_examples() {
+        assert_eq!(balanced_factor(64), (8, 8));
+        assert_eq!(balanced_factor(384), (16, 24));
+        assert_eq!(balanced_factor(24), (4, 6));
+    }
+
+    #[test]
+    fn rht_processed_weights_look_gaussian() {
+        // Kurtosis of RHT(W) entries ≈ 3 (CLT shaping — §4 premise).
+        let mut rng = Pcg64::new(8);
+        let (m, n) = (64, 128);
+        // Heavy-tailed input: cubed gaussians.
+        let w = Matrix::from_fn(m, n, |_, _| {
+            let g = rng.gaussian();
+            g * g * g
+        });
+        let ctx = IncoherenceCtx::new(IncoherenceKind::Rht, m, n, &mut rng);
+        let wt = ctx.process_w(&w);
+        let mean = wt.data.iter().sum::<f64>() / wt.data.len() as f64;
+        let var = wt.data.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / wt.data.len() as f64;
+        let kurt = wt.data.iter().map(|x| (x - mean).powi(4)).sum::<f64>()
+            / (wt.data.len() as f64 * var * var);
+        let raw_kurt = {
+            let mean = w.data.iter().sum::<f64>() / w.data.len() as f64;
+            let var = w.data.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / w.data.len() as f64;
+            w.data.iter().map(|x| (x - mean).powi(4)).sum::<f64>()
+                / (w.data.len() as f64 * var * var)
+        };
+        assert!(raw_kurt > 10.0, "input should be heavy-tailed: {raw_kurt}");
+        assert!(kurt < 4.5, "RHT output kurtosis {kurt} should approach 3");
+    }
+}

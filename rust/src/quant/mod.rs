@@ -1,0 +1,15 @@
+//! QuIP# — the paper's contribution (Algorithms 1–4, §3–§5):
+//! incoherence processing, lattice codebooks, BlockLDLQ adaptive rounding,
+//! RVQ bit scaling, scale optimization, packing, and the per-layer
+//! quantization pipeline with every baseline the evaluation compares
+//! against.
+
+pub mod codebook;
+pub mod incoherence;
+pub mod ldlq;
+pub mod packing;
+pub mod pipeline;
+pub mod rvq;
+pub mod scales;
+
+pub use pipeline::{quantize_matrix, Method, QuantizedLinear};

@@ -1,0 +1,142 @@
+//! Codeword bit-packing and the paper's bit accounting (§F.1).
+//!
+//! E8P codes are exactly 16 bits and pack into `u16` streams (the layout
+//! the inference kernel consumes). Other codebooks use the generic
+//! LSB-first bitstream packer.
+
+/// Pack codes of `bits` bits each (bits ≤ 32) into a little-endian,
+/// LSB-first byte stream.
+pub fn pack_bits(codes: &[u32], bits: u32) -> Vec<u8> {
+    assert!(bits >= 1 && bits <= 32);
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(bits == 32 || c < (1u32 << bits));
+        for b in 0..bits {
+            if (c >> b) & 1 == 1 {
+                out[(bitpos + b as usize) / 8] |= 1 << ((bitpos + b as usize) % 8);
+            }
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Inverse of [`pack_bits`].
+pub fn unpack_bits(bytes: &[u8], bits: u32, count: usize) -> Vec<u32> {
+    assert!(bits >= 1 && bits <= 32);
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let mut c = 0u32;
+        for b in 0..bits {
+            let idx = bitpos + b as usize;
+            if (bytes[idx / 8] >> (idx % 8)) & 1 == 1 {
+                c |= 1 << b;
+            }
+        }
+        out.push(c);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// u16 view of 16-bit codes (the E8P fast path).
+pub fn to_u16_codes(codes: &[u32]) -> Vec<u16> {
+    codes.iter().map(|&c| c as u16).collect()
+}
+
+/// Bits-per-weight accounting for one quantized m×n linear layer,
+/// reproducing the paper's §F.1 overhead discussion.
+#[derive(Clone, Debug)]
+pub struct BitAccounting {
+    pub m: usize,
+    pub n: usize,
+    /// bits spent on codes per weight.
+    pub code_bits: f64,
+    /// sign-vector overhead: (m + n) bits as bitvectors, 16(m + n) after
+    /// fine-tuning stores them in fp16 (§5).
+    pub sign_bits: f64,
+    /// per-layer scalar scales (fp16 each).
+    pub scale_bits: f64,
+    /// codebook storage amortized over this layer (0 for shared E8P;
+    /// large for AQLM-style per-layer codebooks).
+    pub codebook_bits: f64,
+}
+
+impl BitAccounting {
+    pub fn new(
+        m: usize,
+        n: usize,
+        code_bits: f64,
+        ft_signs: bool,
+        n_scales: usize,
+        codebook_storage_bits: usize,
+    ) -> Self {
+        let per_sign = if ft_signs { 16.0 } else { 1.0 };
+        BitAccounting {
+            m,
+            n,
+            code_bits,
+            sign_bits: per_sign * (m + n) as f64 / (m * n) as f64,
+            scale_bits: 16.0 * n_scales as f64 / (m * n) as f64,
+            codebook_bits: codebook_storage_bits as f64 / (m * n) as f64,
+        }
+    }
+
+    /// Total effective bits per weight.
+    pub fn total(&self) -> f64 {
+        self.code_bits + self.sign_bits + self.scale_bits + self.codebook_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+
+    #[test]
+    fn pack_roundtrip_all_widths() {
+        check("pack_roundtrip", 40, |rng| {
+            let bits = 1 + (rng.below(16)) as u32;
+            let count = 1 + rng.below_usize(100);
+            let codes: Vec<u32> = (0..count)
+                .map(|_| (rng.next_u64() as u32) & ((1u32 << bits) - 1))
+                .collect();
+            let packed = pack_bits(&codes, bits);
+            let got = unpack_bits(&packed, bits, count);
+            if got != codes {
+                return Err(format!("roundtrip failed bits={bits}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_size_is_tight() {
+        let codes = vec![0u32; 100];
+        assert_eq!(pack_bits(&codes, 16).len(), 200);
+        assert_eq!(pack_bits(&codes, 2).len(), 25);
+        assert_eq!(pack_bits(&codes, 3).len(), 38); // ceil(300/8)
+    }
+
+    #[test]
+    fn u16_codes() {
+        assert_eq!(to_u16_codes(&[1, 65535, 256]), vec![1u16, 65535, 256]);
+    }
+
+    #[test]
+    fn paper_f1_bit_accounting() {
+        // §F.1: for a 4096×4096 layer with bitvector signs, overhead is
+        // (n+m)/(nm) < 0.01 bits; with fp16 signs 16(n+m)/(nm) < 0.01.
+        let acc = BitAccounting::new(4096, 4096, 2.0, false, 1, 0);
+        assert!(acc.sign_bits < 0.001);
+        let acc_ft = BitAccounting::new(4096, 4096, 2.0, true, 1, 0);
+        assert!(acc_ft.sign_bits < 0.01);
+        assert!(acc_ft.total() < 2.01);
+        // AQLM-style 2^16×8 fp16 codebook on the same layer: ~0.5 bits.
+        let acc_aqlm = BitAccounting::new(4096, 4096, 2.0, false, 1, 65536 * 8 * 16);
+        assert!(acc_aqlm.codebook_bits > 0.4, "{}", acc_aqlm.codebook_bits);
+    }
+}

@@ -1,0 +1,642 @@
+//! End-to-end per-layer quantization pipeline (paper Algorithm 1) and the
+//! method registry backing every experiment table.
+//!
+//! `quantize_matrix` takes a trained weight matrix and its proxy Hessian
+//! and produces a [`QuantizedLinear`]: the dense effective weight (for
+//! native evaluation), packed E8P codes + sign vectors (for the inference
+//! hot path and the AOT artifacts), and quality/bit statistics.
+
+use super::codebook::d4::D4Ball;
+use super::codebook::e8::{E8Ball, E8OneBit};
+use super::codebook::e8p::E8P;
+use super::codebook::kmeans::KMeansCodebook;
+use super::codebook::scalar::HalfIntGrid;
+use super::codebook::VectorQuantizer;
+use super::incoherence::{mu_w, IncoherenceCtx, IncoherenceKind};
+use super::ldlq::block_ldlq;
+use super::packing::BitAccounting;
+use super::rvq::Rvq;
+use super::scales::{optimal_rho, rvq_stage_scales};
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+/// Every quantization method the experiment tables exercise.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// No quantization (FP16/FP32 reference rows).
+    Fp16,
+    /// QuIP#: RHT incoherence + BlockLDLQ + E8P (+ RVQ stages at 3/4 bits).
+    /// Fine-tuning is applied afterwards by `ft::finetune` when `ft`.
+    QuipSharp { bits: u8, ft: bool },
+    /// Ablation "no E8": RHT + scalar LDLQ on the half-integer grid.
+    QuipSharpNoE8 { bits: u8 },
+    /// Table 1: RFFT instead of RHT.
+    QuipSharpRfft { bits: u8 },
+    /// QuIP baseline (Chee et al. 2023): Kronecker incoherence + scalar
+    /// LDLQ on the half-integer grid.
+    QuipKron { bits: u8 },
+    /// OmniQuant-like: per-channel (optionally per-group) learned
+    /// clipping grid quantization, Hessian-diagonal weighted.
+    OmniquantLike { bits: u8, group: Option<usize> },
+    /// AWQ-like: activation-magnitude channel scaling + clipped RTN grid.
+    AwqLike { bits: u8 },
+    /// AQLM-like: per-layer k-means 8-D codebook (fp16 entries) with
+    /// BlockLDLQ feedback; codebook storage reported in bit accounting.
+    AqlmLike { bits: u8 },
+    /// Table 7 codebook swaps (all with RHT + BlockLDLQ, no FT).
+    CodebookSwap { cb: SwapCodebook },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapCodebook {
+    /// D4 ∩ ball, 256 entries (2 bits).
+    D4Two,
+    /// D4 ∩ ball, 460 entries (≈2.21 bits).
+    D4TwoTwentyOne,
+    /// E8 ∩ ball, 2^19 entries (≈2.37 bits).
+    E8TwoThirtySeven,
+    /// K-means on Gaussian, 2^16 × 8 (2 bits).
+    KMeansTwo,
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Fp16 => "fp16".into(),
+            Method::QuipSharp { bits, ft } => {
+                format!("quip#-{bits}bit{}", if *ft { "" } else { "-noft" })
+            }
+            Method::QuipSharpNoE8 { bits } => format!("quip#-{bits}bit-noe8"),
+            Method::QuipSharpRfft { bits } => format!("quip#-{bits}bit-rfft"),
+            Method::QuipKron { bits } => format!("quip-kron-{bits}bit"),
+            Method::OmniquantLike { bits, group } => match group {
+                Some(g) => format!("omniq-{bits}bit-g{g}"),
+                None => format!("omniq-{bits}bit"),
+            },
+            Method::AwqLike { bits } => format!("awq-{bits}bit"),
+            Method::AqlmLike { bits } => format!("aqlm-{bits}bit"),
+            Method::CodebookSwap { cb } => match cb {
+                SwapCodebook::D4Two => "d4-2bit".into(),
+                SwapCodebook::D4TwoTwentyOne => "d4-2.21bit".into(),
+                SwapCodebook::E8TwoThirtySeven => "e8-2.37bit".into(),
+                SwapCodebook::KMeansTwo => "kmeans-2bit".into(),
+            },
+        }
+    }
+}
+
+/// Quality statistics recorded for every quantized layer.
+#[derive(Clone, Debug, Default)]
+pub struct QuantStats {
+    /// tr((Ŵ−W)H(Ŵ−W)ᵀ) in the processed domain.
+    pub proxy_err: f64,
+    /// proxy error relative to tr(W H Wᵀ).
+    pub proxy_rel: f64,
+    /// ‖Ŵ−W‖_F / ‖W‖_F in the original domain.
+    pub frob_rel: f64,
+    /// μ_W before and after incoherence processing.
+    pub mu_before: f64,
+    pub mu_after: f64,
+}
+
+/// Packed representation for the E8P family (what the inference hot path
+/// and the AOT artifacts consume).
+#[derive(Clone, Debug)]
+pub struct PackedE8P {
+    /// Per-stage 16-bit codewords, each stage m×(n/8) row-major.
+    pub stage_codes: Vec<Vec<u16>>,
+    /// Per-stage global scale (σ_w · ρ · stage multiplier).
+    pub stage_scales: Vec<f32>,
+    /// RHT sign vectors (±1, or real after fine-tuning).
+    pub su: Vec<f32>,
+    pub sv: Vec<f32>,
+}
+
+/// A quantized linear layer.
+pub struct QuantizedLinear {
+    pub method: Method,
+    pub m: usize,
+    pub n: usize,
+    /// Effective dense weight in the *original* domain (Ŵ_eff ≈ W),
+    /// row-major f32 — used by native evaluation and fine-tuning.
+    pub w_eff: Vec<f32>,
+    /// Fast-path payload when the method is E8P-based.
+    pub packed: Option<PackedE8P>,
+    /// The incoherence context (needed to re-assemble w_eff after sign
+    /// vectors are fine-tuned). None for grid/AQLM methods.
+    pub ctx: Option<IncoherenceCtx>,
+    /// Quantized weights in the processed domain (None for grid methods).
+    pub w_hat_tilde: Option<Matrix>,
+    pub bits: BitAccounting,
+    pub stats: QuantStats,
+}
+
+impl QuantizedLinear {
+    /// Recompute `w_eff` from the processed-domain Ŵ and the (possibly
+    /// fine-tuned) sign vectors.
+    pub fn refresh_w_eff(&mut self) {
+        if let (Some(ctx), Some(wht)) = (&self.ctx, &self.w_hat_tilde) {
+            let w = ctx.unprocess_w(wht);
+            self.w_eff = w.to_f32();
+        }
+    }
+
+    /// Install fine-tuned (real-valued) sign vectors — paper §5: "we must
+    /// store the sign vectors in FP16 instead of as bitvectors".
+    pub fn set_signs(&mut self, su: &[f32], sv: &[f32]) {
+        if let Some(ctx) = &mut self.ctx {
+            if let Some(s) = ctx.u.sign_vec_mut() {
+                s.clear();
+                s.extend(su.iter().map(|&v| v as f64));
+            }
+            if let Some(s) = ctx.v.sign_vec_mut() {
+                s.clear();
+                s.extend(sv.iter().map(|&v| v as f64));
+            }
+        }
+        if let Some(p) = &mut self.packed {
+            p.su = su.to_vec();
+            p.sv = sv.to_vec();
+        }
+    }
+}
+
+/// Build the paper's quantizer for a bit width: 2 → E8P, 3 → E8P + 1-bit
+/// E8 residual, 4 → E8P + E8P residual (§4.3).
+pub fn build_e8p_quantizer(bits: u8) -> Box<dyn VectorQuantizer> {
+    match bits {
+        2 => Box::new(E8P::new()),
+        3 => {
+            let (s1, s2) = rvq_stage_scales(&E8P::new(), &E8OneBit::new());
+            Box::new(Rvq::new(vec![
+                (Box::new(E8P::new()) as Box<dyn VectorQuantizer>, s1),
+                (Box::new(E8OneBit::new()), s2),
+            ]))
+        }
+        4 => {
+            let (s1, s2) = rvq_stage_scales(&E8P::new(), &E8P::new());
+            Box::new(Rvq::new(vec![
+                (Box::new(E8P::new()) as Box<dyn VectorQuantizer>, s1),
+                (Box::new(E8P::new()), s2),
+            ]))
+        }
+        b => panic!("unsupported E8P bit width {b}"),
+    }
+}
+
+fn sigma_w(w: &Matrix) -> f64 {
+    (w.frob_norm().powi(2) / (w.rows * w.cols) as f64).sqrt()
+}
+
+/// Incoherence + BlockLDLQ + codebook path shared by every lattice/VQ
+/// method. `kind` selects RHT/RFFT/Kron; `q` is the (possibly RVQ)
+/// quantizer operating at unit-Gaussian scale.
+fn quantize_incoherent(
+    method: &Method,
+    w: &Matrix,
+    h: &Matrix,
+    kind: IncoherenceKind,
+    q: &dyn VectorQuantizer,
+    seed: u64,
+    ft_signs: bool,
+    codebook_storage_bits: usize,
+) -> Result<QuantizedLinear> {
+    let (m, n) = (w.rows, w.cols);
+    let mut rng = Pcg64::new(seed);
+    let ctx = IncoherenceCtx::new(kind, m, n, &mut rng);
+    let wt = ctx.process_w(w);
+    let ht = ctx.process_h(h);
+
+    let (rho, _) = optimal_rho(q, 20_000, 17);
+    // Convention must match `gaussian_mse`: the quantizer sees x/ρ for
+    // x ~ N(0,1), i.e. W̃/(σ_W·ρ). (A σ/ρ slip here is nearly invisible
+    // for E8P, whose ρ* ≈ 0.95, but breaks scalar grids with ρ* ≈ 0.3 —
+    // caught by the Table 2 driver.)
+    let scale = sigma_w(&wt) * rho.max(1e-9);
+
+    let res = block_ldlq(&wt, &ht, q, scale)?;
+
+    // Effective weight back in the original domain.
+    let w_eff = ctx.unprocess_w(&res.w_hat);
+
+    // Stats.
+    let base = wt.matmul(&ht).matmul_transb(&wt).trace();
+    let diff_f = res.w_hat.sub(&wt).frob_norm();
+    let stats = QuantStats {
+        proxy_err: res.proxy_err,
+        proxy_rel: res.proxy_err / base.max(1e-30),
+        frob_rel: diff_f / wt.frob_norm().max(1e-30),
+        mu_before: mu_w(w),
+        mu_after: mu_w(&wt),
+    };
+
+    // Pack the E8P fast path when applicable (8-dim quantizers).
+    let packed = if q.dim() == 8 {
+        let stages = q.num_codes();
+        let nb = n / 8;
+        let mut stage_codes: Vec<Vec<u16>> = vec![Vec::with_capacity(m * nb); stages];
+        for i in 0..m {
+            for k in 0..nb {
+                for s in 0..stages {
+                    stage_codes[s].push(res.codes[(i * nb + k) * stages + s] as u16);
+                }
+            }
+        }
+        // Per-stage total scale: global scale × RVQ stage multiplier.
+        let muls: Vec<f64> = q.stage_scales();
+        let su = ctx
+            .u
+            .sign_vec()
+            .map(|s| s.iter().map(|&v| v as f32).collect())
+            .unwrap_or_default();
+        let sv = ctx
+            .v
+            .sign_vec()
+            .map(|s| s.iter().map(|&v| v as f32).collect())
+            .unwrap_or_default();
+        Some(PackedE8P {
+            stage_codes,
+            stage_scales: muls.iter().map(|&s| (s * scale) as f32).collect(),
+            su,
+            sv,
+        })
+    } else {
+        None
+    };
+
+    let bits = BitAccounting::new(
+        m,
+        n,
+        q.bits_per_weight(),
+        ft_signs,
+        q.num_codes(),
+        codebook_storage_bits,
+    );
+
+    Ok(QuantizedLinear {
+        method: method.clone(),
+        m,
+        n,
+        w_eff: w_eff.to_f32(),
+        packed,
+        ctx: Some(ctx),
+        w_hat_tilde: Some(res.w_hat),
+        bits,
+        stats,
+    })
+}
+
+/// Symmetric k-bit RTN grid quantization of one channel group with clip
+/// search: pick the scale minimizing Σ d_j (w_j − ŵ_j)² over a grid of
+/// clip ratios, where d_j are importance weights (Hessian diagonal).
+fn grid_quantize_group(w: &[f64], d: &[f64], bits: u8, out: &mut [f64]) -> f64 {
+    let qmax = ((1i64 << (bits - 1)) - 1).max(1) as f64; // symmetric int grid
+    let wmax = w.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1e-12);
+    let mut best_scale = wmax / qmax;
+    let mut best_err = f64::INFINITY;
+    for clip in [0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95, 1.0] {
+        let scale = (wmax * clip / qmax).max(1e-12);
+        let mut err = 0.0;
+        for (j, &v) in w.iter().enumerate() {
+            let q = (v / scale).round().clamp(-qmax - 1.0, qmax);
+            let e = v - q * scale;
+            err += d[j] * e * e;
+        }
+        if err < best_err {
+            best_err = err;
+            best_scale = scale;
+        }
+    }
+    for (j, &v) in w.iter().enumerate() {
+        let q = (v / best_scale).round().clamp(-qmax - 1.0, qmax);
+        out[j] = q * best_scale;
+    }
+    best_err
+}
+
+/// OmniQuant-like: per-output-channel (optionally per-group along input
+/// dim) clipped RTN, weighted by the Hessian diagonal (their learnable
+/// equivalent transformation, realized as a direct search).
+fn quantize_omniquant(
+    method: &Method,
+    w: &Matrix,
+    h: &Matrix,
+    bits: u8,
+    group: Option<usize>,
+) -> QuantizedLinear {
+    let (m, n) = (w.rows, w.cols);
+    let diag: Vec<f64> = (0..n).map(|j| h[(j, j)].max(1e-12)).collect();
+    let gsize = group.unwrap_or(n);
+    assert!(n % gsize == 0);
+    let mut w_eff = Matrix::zeros(m, n);
+    let mut proxy = 0.0;
+    for i in 0..m {
+        for g0 in (0..n).step_by(gsize) {
+            let mut out = vec![0.0; gsize];
+            proxy += grid_quantize_group(
+                &w.row(i)[g0..g0 + gsize],
+                &diag[g0..g0 + gsize],
+                bits,
+                &mut out,
+            );
+            w_eff.row_mut(i)[g0..g0 + gsize].copy_from_slice(&out);
+        }
+    }
+    let diff = w_eff.sub(w);
+    let base = w.matmul(h).matmul_transb(w).trace();
+    let true_proxy = diff.matmul(h).matmul_transb(&diff).trace();
+    let n_scales = m * (n / gsize);
+    let _ = proxy;
+    QuantizedLinear {
+        method: method.clone(),
+        m,
+        n,
+        w_eff: w_eff.to_f32(),
+        packed: None,
+        ctx: None,
+        w_hat_tilde: None,
+        bits: BitAccounting::new(m, n, bits as f64, false, n_scales, 0),
+        stats: QuantStats {
+            proxy_err: true_proxy,
+            proxy_rel: true_proxy / base.max(1e-30),
+            frob_rel: diff.frob_norm() / w.frob_norm().max(1e-30),
+            mu_before: mu_w(w),
+            mu_after: mu_w(w),
+        },
+    }
+}
+
+/// AWQ-like: scale input channels by activation magnitude^α (α = 0.5,
+/// E[x_j²] ≈ H_jj), then per-channel clipped RTN; the inverse scaling is
+/// model-preserving and folded back into the effective weight.
+fn quantize_awq(method: &Method, w: &Matrix, h: &Matrix, bits: u8) -> QuantizedLinear {
+    let (m, n) = (w.rows, w.cols);
+    let alpha = 0.5;
+    let act: Vec<f64> = (0..n).map(|j| h[(j, j)].max(1e-12).sqrt()).collect();
+    let act_mean = act.iter().sum::<f64>() / n as f64;
+    let s: Vec<f64> = act.iter().map(|a| (a / act_mean).powf(alpha).max(1e-6)).collect();
+    // w' = w ⊙ s (per input channel), quantize w', then fold s back.
+    let ws = w.scale_cols(&s);
+    let diag: Vec<f64> = (0..n).map(|j| h[(j, j)].max(1e-12) / (s[j] * s[j])).collect();
+    let mut w_q = Matrix::zeros(m, n);
+    for i in 0..m {
+        let mut out = vec![0.0; n];
+        grid_quantize_group(ws.row(i), &diag, bits, &mut out);
+        w_q.row_mut(i).copy_from_slice(&out);
+    }
+    let inv_s: Vec<f64> = s.iter().map(|v| 1.0 / v).collect();
+    let w_eff = w_q.scale_cols(&inv_s);
+    let diff = w_eff.sub(w);
+    let base = w.matmul(h).matmul_transb(w).trace();
+    let true_proxy = diff.matmul(h).matmul_transb(&diff).trace();
+    QuantizedLinear {
+        method: method.clone(),
+        m,
+        n,
+        w_eff: w_eff.to_f32(),
+        packed: None,
+        ctx: None,
+        w_hat_tilde: None,
+        // per-output-channel scale + n per-input-channel fp16 scales
+        bits: BitAccounting::new(m, n, bits as f64, false, m + n, 0),
+        stats: QuantStats {
+            proxy_err: true_proxy,
+            proxy_rel: true_proxy / base.max(1e-30),
+            frob_rel: diff.frob_norm() / w.frob_norm().max(1e-30),
+            mu_before: mu_w(w),
+            mu_after: mu_w(w),
+        },
+    }
+}
+
+/// AQLM-like: per-layer k-means codebook (k capped by the layer's block
+/// count) learned on the layer's own 8-D weight blocks, then BlockLDLQ.
+/// Codebook storage (fp16) is charged to the bit accounting — the
+/// paper's Table 6 point.
+fn quantize_aqlm(
+    method: &Method,
+    w: &Matrix,
+    h: &Matrix,
+    bits: u8,
+    seed: u64,
+) -> Result<QuantizedLinear> {
+    let (m, n) = (w.rows, w.cols);
+    let d = 8usize;
+    anyhow::ensure!(n % d == 0);
+    let n_vec = m * n / d;
+    let k_target = 1usize << (bits as usize * d); // 2^{8·bits}
+    let k = k_target.min(n_vec / 2).max(16);
+    // Train on the layer's blocks, normalized.
+    let sigma = sigma_w(w).max(1e-12);
+    let data: Vec<f64> = w.data.iter().map(|&v| v / sigma).collect();
+    let mut rng = Pcg64::new(seed ^ 0x41514c4d); // "AQLM"
+    let cb = KMeansCodebook::train(d, k, &data, 6, &mut rng);
+    let storage = cb.codebook_storage_bits();
+    let res = block_ldlq(w, h, &cb, sigma)?;
+    let diff = res.w_hat.sub(w);
+    let base = w.matmul(h).matmul_transb(w).trace();
+    let code_bits = (k as f64).log2() / d as f64;
+    Ok(QuantizedLinear {
+        method: method.clone(),
+        m,
+        n,
+        w_eff: res.w_hat.to_f32(),
+        packed: None,
+        ctx: None,
+        w_hat_tilde: None,
+        bits: BitAccounting::new(m, n, code_bits, false, 1, storage),
+        stats: QuantStats {
+            proxy_err: res.proxy_err,
+            proxy_rel: res.proxy_err / base.max(1e-30),
+            frob_rel: diff.frob_norm() / w.frob_norm().max(1e-30),
+            mu_before: mu_w(w),
+            mu_after: mu_w(w),
+        },
+    })
+}
+
+/// Quantize one linear layer with any method. `seed` controls the random
+/// transforms (stored in the result for inference).
+pub fn quantize_matrix(
+    method: &Method,
+    w: &Matrix,
+    h: &Matrix,
+    seed: u64,
+) -> Result<QuantizedLinear> {
+    match method {
+        Method::Fp16 => {
+            let (m, n) = (w.rows, w.cols);
+            Ok(QuantizedLinear {
+                method: method.clone(),
+                m,
+                n,
+                w_eff: w.to_f32(),
+                packed: None,
+                ctx: None,
+                w_hat_tilde: None,
+                bits: BitAccounting::new(m, n, 16.0, false, 0, 0),
+                stats: QuantStats {
+                    mu_before: mu_w(w),
+                    mu_after: mu_w(w),
+                    ..Default::default()
+                },
+            })
+        }
+        Method::QuipSharp { bits, ft } => {
+            let q = build_e8p_quantizer(*bits);
+            quantize_incoherent(method, w, h, IncoherenceKind::Rht, q.as_ref(), seed, *ft, 0)
+        }
+        Method::QuipSharpNoE8 { bits } => {
+            let q = HalfIntGrid::new(*bits as u32);
+            quantize_incoherent(method, w, h, IncoherenceKind::Rht, &q, seed, false, 0)
+        }
+        Method::QuipSharpRfft { bits } => {
+            let q = build_e8p_quantizer(*bits);
+            quantize_incoherent(method, w, h, IncoherenceKind::Rfft, q.as_ref(), seed, false, 0)
+        }
+        Method::QuipKron { bits } => {
+            let q = HalfIntGrid::new(*bits as u32);
+            quantize_incoherent(method, w, h, IncoherenceKind::Kron2, &q, seed, false, 0)
+        }
+        Method::OmniquantLike { bits, group } => {
+            Ok(quantize_omniquant(method, w, h, *bits, *group))
+        }
+        Method::AwqLike { bits } => Ok(quantize_awq(method, w, h, *bits)),
+        Method::AqlmLike { bits } => quantize_aqlm(method, w, h, *bits, seed),
+        Method::CodebookSwap { cb } => match cb {
+            SwapCodebook::D4Two => {
+                let q = D4Ball::with_size(256);
+                quantize_incoherent(method, w, h, IncoherenceKind::Rht, &q, seed, false, 0)
+            }
+            SwapCodebook::D4TwoTwentyOne => {
+                let q = D4Ball::with_size(460);
+                quantize_incoherent(method, w, h, IncoherenceKind::Rht, &q, seed, false, 0)
+            }
+            SwapCodebook::E8TwoThirtySeven => {
+                let q = E8Ball::with_size(1 << 19);
+                quantize_incoherent(method, w, h, IncoherenceKind::Rht, &q, seed, false, 0)
+            }
+            SwapCodebook::KMeansTwo => {
+                let q = KMeansCodebook::train_gaussian(8, 1 << 16, 1 << 17, 4, 99);
+                let storage = q.codebook_storage_bits();
+                quantize_incoherent(method, w, h, IncoherenceKind::Rht, &q, seed, false, storage)
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ldl::random_spd;
+
+    fn setup(m: usize, n: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Pcg64::new(seed);
+        let w = Matrix::gaussian(m, n, 0.02, &mut rng);
+        let h = random_spd(n, 0.05, &mut rng);
+        (w, h)
+    }
+
+    #[test]
+    fn quip_sharp_2bit_roundtrip() {
+        let (w, h) = setup(16, 32, 1);
+        let ql = quantize_matrix(&Method::QuipSharp { bits: 2, ft: false }, &w, &h, 7).unwrap();
+        assert_eq!(ql.w_eff.len(), 16 * 32);
+        assert!(ql.stats.frob_rel < 0.8, "frob_rel={}", ql.stats.frob_rel);
+        assert!(ql.packed.is_some());
+        let p = ql.packed.as_ref().unwrap();
+        assert_eq!(p.stage_codes.len(), 1);
+        assert_eq!(p.stage_codes[0].len(), 16 * 4);
+        assert!((ql.bits.code_bits - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let (w, h) = setup(16, 32, 2);
+        let e2 = quantize_matrix(&Method::QuipSharp { bits: 2, ft: false }, &w, &h, 7)
+            .unwrap()
+            .stats
+            .proxy_err;
+        let e4 = quantize_matrix(&Method::QuipSharp { bits: 4, ft: false }, &w, &h, 7)
+            .unwrap()
+            .stats
+            .proxy_err;
+        assert!(e4 < e2, "4-bit {e4} !< 2-bit {e2}");
+    }
+
+    #[test]
+    fn quip_sharp_beats_grid_baselines_at_2bit() {
+        let (w, h) = setup(24, 64, 3);
+        let qs = quantize_matrix(&Method::QuipSharp { bits: 2, ft: false }, &w, &h, 7)
+            .unwrap()
+            .stats
+            .proxy_rel;
+        let om = quantize_matrix(&Method::OmniquantLike { bits: 2, group: None }, &w, &h, 7)
+            .unwrap()
+            .stats
+            .proxy_rel;
+        let aw = quantize_matrix(&Method::AwqLike { bits: 2 }, &w, &h, 7)
+            .unwrap()
+            .stats
+            .proxy_rel;
+        assert!(qs < om, "quip# {qs} !< omniq {om}");
+        assert!(qs < aw, "quip# {qs} !< awq {aw}");
+    }
+
+    #[test]
+    fn grid_methods_work_at_4bit() {
+        let (w, h) = setup(16, 32, 4);
+        for m in [
+            Method::OmniquantLike { bits: 4, group: Some(16) },
+            Method::AwqLike { bits: 4 },
+        ] {
+            let ql = quantize_matrix(&m, &w, &h, 7).unwrap();
+            assert!(
+                ql.stats.frob_rel < 0.2,
+                "{}: frob_rel={}",
+                m.label(),
+                ql.stats.frob_rel
+            );
+        }
+    }
+
+    #[test]
+    fn fp16_is_exact() {
+        let (w, h) = setup(8, 16, 5);
+        let ql = quantize_matrix(&Method::Fp16, &w, &h, 7).unwrap();
+        for (a, b) in ql.w_eff.iter().zip(&w.to_f32()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn refresh_w_eff_consistent() {
+        let (w, h) = setup(8, 16, 6);
+        let mut ql = quantize_matrix(&Method::QuipSharp { bits: 2, ft: false }, &w, &h, 7).unwrap();
+        let before = ql.w_eff.clone();
+        ql.refresh_w_eff();
+        for (a, b) in before.iter().zip(&ql.w_eff) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn labels_unique() {
+        let methods = [
+            Method::Fp16,
+            Method::QuipSharp { bits: 2, ft: true },
+            Method::QuipSharp { bits: 2, ft: false },
+            Method::QuipSharpNoE8 { bits: 2 },
+            Method::QuipSharpRfft { bits: 2 },
+            Method::QuipKron { bits: 2 },
+            Method::OmniquantLike { bits: 2, group: None },
+            Method::OmniquantLike { bits: 2, group: Some(64) },
+            Method::AwqLike { bits: 2 },
+            Method::AqlmLike { bits: 2 },
+        ];
+        let labels: std::collections::HashSet<String> =
+            methods.iter().map(|m| m.label()).collect();
+        assert_eq!(labels.len(), methods.len());
+    }
+}

@@ -1,0 +1,146 @@
+//! Residual vector quantization (paper §4.3): quantize to p bits with a
+//! set of q_i-bit codebooks by repeatedly quantizing the residual,
+//! RVQ(x) = Σ_i s_i · Q_i((x − Σ_{j<i} δ_j)/s_i).
+//!
+//! QuIP# 4-bit = E8P ∘ E8P, 3-bit = E8P ∘ 1-bit-E8; the per-stage scales
+//! s_i play the role of the paper's §F.5 stage scales.
+
+use super::codebook::VectorQuantizer;
+
+/// Multi-stage residual quantizer. All stages must share `dim()`.
+pub struct Rvq {
+    stages: Vec<(Box<dyn VectorQuantizer>, f64)>,
+    name: String,
+}
+
+impl Rvq {
+    pub fn new(stages: Vec<(Box<dyn VectorQuantizer>, f64)>) -> Self {
+        assert!(!stages.is_empty());
+        let d = stages[0].0.dim();
+        assert!(stages.iter().all(|(q, _)| q.dim() == d));
+        let name = format!(
+            "rvq[{}]",
+            stages
+                .iter()
+                .map(|(q, s)| format!("{}@{s:.3}", q.name()))
+                .collect::<Vec<_>>()
+                .join("+")
+        );
+        Rvq { stages, name }
+    }
+
+}
+
+impl VectorQuantizer for Rvq {
+    fn dim(&self) -> usize {
+        self.stages[0].0.dim()
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        self.stages.iter().map(|(q, _)| q.bits_per_weight()).sum()
+    }
+
+    fn num_codes(&self) -> usize {
+        self.stages.iter().map(|(q, _)| q.num_codes()).sum()
+    }
+
+    fn quantize(&self, x: &[f64], codes: &mut [u32]) -> Vec<f64> {
+        let d = self.dim();
+        debug_assert_eq!(x.len(), d);
+        let mut residual = x.to_vec();
+        let mut acc = vec![0.0f64; d];
+        let mut off = 0usize;
+        for (q, s) in &self.stages {
+            let nc = q.num_codes();
+            let scaled: Vec<f64> = residual.iter().map(|v| v / s).collect();
+            let dec = q.quantize(&scaled, &mut codes[off..off + nc]);
+            for i in 0..d {
+                let delta = dec[i] * s;
+                acc[i] += delta;
+                residual[i] -= delta;
+            }
+            off += nc;
+        }
+        acc
+    }
+
+    fn decode(&self, codes: &[u32]) -> Vec<f64> {
+        let d = self.dim();
+        let mut acc = vec![0.0f64; d];
+        let mut off = 0usize;
+        for (q, s) in &self.stages {
+            let nc = q.num_codes();
+            let dec = q.decode(&codes[off..off + nc]);
+            for i in 0..d {
+                acc[i] += dec[i] * s;
+            }
+            off += nc;
+        }
+        acc
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn stage_scales(&self) -> Vec<f64> {
+        self.stages.iter().map(|(_, s)| *s).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::e8::E8OneBit;
+    use crate::quant::codebook::e8p::E8P;
+    use crate::quant::codebook::gaussian_mse;
+    use crate::util::proptest_lite::check;
+    use crate::util::rng::Pcg64;
+
+    fn rvq_4bit() -> Rvq {
+        Rvq::new(vec![
+            (Box::new(E8P::new()), 1.0),
+            (Box::new(E8P::new()), 0.3),
+        ])
+    }
+
+    #[test]
+    fn bits_add_up() {
+        let q = rvq_4bit();
+        assert!((q.bits_per_weight() - 4.0).abs() < 1e-12);
+        assert_eq!(q.num_codes(), 2);
+        let q3 = Rvq::new(vec![
+            (Box::new(E8P::new()) as Box<dyn VectorQuantizer>, 1.0),
+            (Box::new(E8OneBit::new()), 0.4),
+        ]);
+        assert!((q3.bits_per_weight() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantize_decode_consistent() {
+        let q = rvq_4bit();
+        check("rvq_decode", 50, |rng| {
+            let x: Vec<f64> = (0..8).map(|_| rng.gaussian()).collect();
+            let mut codes = vec![0u32; q.num_codes()];
+            let dec = q.quantize(&x, &mut codes);
+            let dec2 = q.decode(&codes);
+            for (a, b) in dec.iter().zip(&dec2) {
+                if (a - b).abs() > 1e-12 {
+                    return Err(format!("{a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn telescoping_improves_error() {
+        // 2 stages must beat stage 1 alone on the same input.
+        let one = E8P::new();
+        let two = rvq_4bit();
+        let mut rng = Pcg64::new(4);
+        let m1 = gaussian_mse(&one, 1.0, 8000, &mut rng);
+        let m2 = gaussian_mse(&two, 1.0, 8000, &mut rng);
+        assert!(m2 < m1 * 0.5, "RVQ {m2} should be well below single {m1}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Codebook input-scale optimization (paper §F.5): find the ρ that
+//! minimizes the MSE of quantizing a unit Gaussian with the codebook at
+//! input scale ρ (weights are divided by ρ·σ_W before rounding and
+//! multiplied back after). Results are cached per codebook name.
+
+use super::codebook::{gaussian_mse, VectorQuantizer};
+use crate::util::rng::Pcg64;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+static CACHE: Mutex<Option<HashMap<String, (f64, f64)>>> = Mutex::new(None);
+
+/// Sweep ρ over a log-ish grid and refine once; returns (ρ*, mse(ρ*)).
+pub fn optimal_rho(q: &dyn VectorQuantizer, samples: usize, seed: u64) -> (f64, f64) {
+    {
+        let cache = CACHE.lock().unwrap();
+        if let Some(map) = cache.as_ref() {
+            if let Some(&hit) = map.get(&q.name()) {
+                return hit;
+            }
+        }
+    }
+    let mut best = (1.0, f64::INFINITY);
+    let coarse: Vec<f64> = (0..=24).map(|i| 0.3 + 0.1 * i as f64).collect();
+    for rho in coarse {
+        let mut rng = Pcg64::new(seed);
+        let mse = gaussian_mse(q, rho, samples, &mut rng);
+        if mse < best.1 {
+            best = (rho, mse);
+        }
+    }
+    // Refine around the coarse winner.
+    let center = best.0;
+    for i in -4i32..=4 {
+        let rho = center + 0.025 * i as f64;
+        if rho <= 0.05 {
+            continue;
+        }
+        let mut rng = Pcg64::new(seed);
+        let mse = gaussian_mse(q, rho, samples, &mut rng);
+        if mse < best.1 {
+            best = (rho, mse);
+        }
+    }
+    let mut cache = CACHE.lock().unwrap();
+    cache
+        .get_or_insert_with(HashMap::new)
+        .insert(q.name(), best);
+    best
+}
+
+/// Default per-stage scales for the paper's RVQ configurations, expressed
+/// as residual-std multipliers. Stage 1 quantizes x/σ≈N(0,1) at its own
+/// ρ*; the residual of an E8P stage has std ≈ sqrt(mse), so stage 2's
+/// scale is ρ*₂ · residual_std. Computed empirically once.
+pub fn rvq_stage_scales(stage1: &dyn VectorQuantizer, stage2: &dyn VectorQuantizer) -> (f64, f64) {
+    let (rho1, mse1) = optimal_rho(stage1, 30_000, 11);
+    let resid_std = mse1.sqrt();
+    let (rho2, _) = optimal_rho(stage2, 30_000, 11);
+    (rho1, rho2 * resid_std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::e8p::E8P;
+    use crate::quant::codebook::scalar::HalfIntGrid;
+
+    #[test]
+    fn rho_is_cached() {
+        let g = HalfIntGrid::new(2);
+        let a = optimal_rho(&g, 3000, 1);
+        let b = optimal_rho(&g, 3000, 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn grid_2bit_rho_reasonable() {
+        // Optimal input scale for a 2-bit half-integer grid on N(0,1) is
+        // around 1.0 (grid covers ±1.5): accept a broad sanity band.
+        let g = HalfIntGrid::new(2);
+        let (rho, mse) = optimal_rho(&g, 20_000, 2);
+        assert!(rho > 0.4 && rho < 1.6, "rho={rho}");
+        assert!(mse > 0.05 && mse < 0.3, "mse={mse}");
+    }
+
+    #[test]
+    fn e8p_beats_scalar_grid_at_optimum() {
+        // The paper's core claim at 2 bits (Figure 3 ordering).
+        let e8p = E8P::new();
+        let grid = HalfIntGrid::new(2);
+        let (_, mse_e8p) = optimal_rho(&e8p, 20_000, 3);
+        let (_, mse_grid) = optimal_rho(&grid, 20_000, 3);
+        assert!(
+            mse_e8p < mse_grid,
+            "E8P {mse_e8p} must beat 2-bit grid {mse_grid}"
+        );
+    }
+}

@@ -1,0 +1,290 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client, and
+//! executes them from the serving path. Python never runs here.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax ≥ 0.5
+//! serialized protos with 64-bit ids — see /opt/xla-example/README.md).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// dtype tags used by the manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtDtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: ArtDtype,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub raw: Json,
+}
+
+fn parse_iospec(j: &Json) -> Result<IoSpec> {
+    let dtype = match j.get("dtype").as_str() {
+        Some("f32") => ArtDtype::F32,
+        Some("i32") => ArtDtype::I32,
+        other => bail!("bad dtype {other:?}"),
+    };
+    let shape = j
+        .get("shape")
+        .as_arr()
+        .context("shape")?
+        .iter()
+        .map(|v| v.as_usize().context("dim"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(IoSpec {
+        name: j.get("name").as_str().unwrap_or("").to_string(),
+        dtype,
+        shape,
+    })
+}
+
+impl Manifest {
+    pub fn load(art_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = art_dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let raw = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        if let Some(arts) = raw.get("artifacts").as_obj() {
+            for (name, spec) in arts {
+                let inputs = spec
+                    .get("inputs")
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .map(parse_iospec)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = spec
+                    .get("outputs")
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(parse_iospec)
+                    .collect::<Result<Vec<_>>>()?;
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        name: name.clone(),
+                        path: spec.get("path").as_str().context("path")?.to_string(),
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+        }
+        Ok(Manifest { artifacts, raw })
+    }
+}
+
+/// Typed host-side value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(s, _) => s,
+            HostTensor::I32(s, _) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(_, d) => Ok(d),
+            _ => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(_, d) => Ok(d),
+            _ => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            HostTensor::F32(shape, data) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            HostTensor::I32(shape, data) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<HostTensor> {
+        Ok(match spec.dtype {
+            ArtDtype::F32 => HostTensor::F32(spec.shape.clone(), lit.to_vec::<f32>()?),
+            ArtDtype::I32 => HostTensor::I32(spec.shape.clone(), lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+/// The PJRT runtime: client + lazily-compiled executables.
+pub struct Runtime {
+    pub art_dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new(art_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&art_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            art_dir: art_dir.as_ref().to_path_buf(),
+            manifest,
+            client,
+            compiled: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn get_exe(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.compiled.lock().unwrap();
+            if let Some(exe) = cache.get(name) {
+                return Ok(exe.clone());
+            }
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let path = self.art_dir.join(&spec.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors, checking shapes against the
+    /// manifest, and return the (untupled) outputs.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}': {} inputs given, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape() != s.shape.as_slice() {
+                bail!(
+                    "artifact '{name}' input {i} ({}): shape {:?} != manifest {:?}",
+                    s.name,
+                    t.shape(),
+                    s.shape
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let exe = self.get_exe(name)?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{name}': got {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, os)| HostTensor::from_literal(lit, os))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_spec() {
+        let dir = std::env::temp_dir().join(format!("rtm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":{"foo":{"path":"foo.hlo.txt",
+                "inputs":[{"name":"x","dtype":"f32","shape":[2,3]}],
+                "outputs":[{"dtype":"f32","shape":[2,3]}]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = &m.artifacts["foo"];
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].dtype, ArtDtype::F32);
+        assert_eq!(a.inputs[0].numel(), 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::F32(vec![2], vec![1.0, 2.0]);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.shape(), &[2]);
+    }
+}

@@ -1,0 +1,234 @@
+//! The inference engine: request queue + continuous batcher + KV slots.
+//!
+//! Scheduler loop (runs on its own thread):
+//!   1. admit queued requests into free KV slots (up to `max_batch`),
+//!   2. one decode step across every active sequence (sequence-parallel),
+//!   3. retire finished sequences and answer their requests.
+//! Requests join/leave at step boundaries — continuous batching.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::generation::{argmax, Generator, KvCache};
+use crate::model::Model;
+use crate::qmodel::QuantizedModel;
+
+use super::metrics::Metrics;
+
+#[derive(Clone, Debug)]
+pub struct EngineRequest {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct EngineResponse {
+    pub id: u64,
+    pub tokens: Vec<u8>,
+    pub latency_ms: f64,
+    pub prompt_len: usize,
+}
+
+/// Trait implemented by serving backends.
+pub trait Engine: Send + Sync {
+    /// Submit a request; the response arrives on the returned receiver.
+    fn submit(&self, req: EngineRequest) -> Receiver<EngineResponse>;
+    fn metrics(&self) -> Arc<Metrics>;
+    fn stop(&self);
+}
+
+struct Active {
+    req: EngineRequest,
+    tx: Sender<EngineResponse>,
+    cache: KvCache,
+    generated: Vec<u8>,
+    /// Pending prompt tokens not yet prefilled.
+    pending_prompt: usize,
+    last_logits: Vec<f32>,
+    t0: Instant,
+}
+
+struct Shared {
+    queue: Mutex<Vec<(EngineRequest, Sender<EngineResponse>)>>,
+    stop: AtomicBool,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+/// Native-backend engine: owns the model (optionally quantized) and a
+/// scheduler thread.
+pub struct NativeEngine {
+    shared: Arc<Shared>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl NativeEngine {
+    /// `qm` enables the fused E8P decode path per layer.
+    pub fn start(model: Arc<Model>, qm: Option<Arc<QuantizedModel>>, max_batch: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            metrics: Arc::new(Metrics::new()),
+            next_id: AtomicU64::new(1),
+        });
+        let sh = shared.clone();
+        let handle = std::thread::spawn(move || {
+            let generator = match &qm {
+                Some(q) => Generator::quantized(&model, q),
+                None => Generator::dense(&model),
+            };
+            let mut active: Vec<Active> = Vec::new();
+            loop {
+                if sh.stop.load(Ordering::Relaxed) && active.is_empty() {
+                    break;
+                }
+                // Admit.
+                {
+                    let mut q = sh.queue.lock().unwrap();
+                    while active.len() < max_batch && !q.is_empty() {
+                        let (req, tx) = q.remove(0);
+                        let cache = KvCache::new(&model);
+                        let pending = req.prompt.len();
+                        active.push(Active {
+                            req,
+                            tx,
+                            cache,
+                            generated: Vec::new(),
+                            pending_prompt: pending,
+                            last_logits: Vec::new(),
+                            t0: Instant::now(),
+                        });
+                    }
+                }
+                if active.is_empty() {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    continue;
+                }
+                // One decode step per active sequence (prefill consumes one
+                // prompt token per step; sequences are independent so the
+                // hot matvecs parallelize internally).
+                sh.metrics.record_step(active.len());
+                for a in active.iter_mut() {
+                    let next_tok = if a.pending_prompt > 0 {
+                        let idx = a.req.prompt.len() - a.pending_prompt;
+                        a.pending_prompt -= 1;
+                        a.req.prompt[idx]
+                    } else {
+                        let t = argmax(&a.last_logits) as u8;
+                        a.generated.push(t);
+                        t
+                    };
+                    a.last_logits = generator.decode_one(next_tok, &mut a.cache);
+                }
+                // Retire.
+                let ctx = model.cfg.ctx;
+                active.retain_mut(|a| {
+                    let done = a.pending_prompt == 0
+                        && (a.generated.len() >= a.req.max_new || a.cache.len >= ctx);
+                    if done {
+                        let resp = EngineResponse {
+                            id: a.req.id,
+                            tokens: std::mem::take(&mut a.generated),
+                            latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+                            prompt_len: a.req.prompt.len(),
+                        };
+                        sh.metrics.record_request(resp.tokens.len(), resp.latency_ms);
+                        let _ = a.tx.send(resp);
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+        });
+        NativeEngine {
+            shared,
+            handle: Mutex::new(Some(handle)),
+        }
+    }
+
+    pub fn fresh_id(&self) -> u64 {
+        self.shared.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn join(&self) {
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn submit(&self, req: EngineRequest) -> Receiver<EngineResponse> {
+        let (tx, rx) = channel();
+        self.shared.queue.lock().unwrap().push((req, tx));
+        rx
+    }
+
+    fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    fn stop(&self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for NativeEngine {
+    fn drop(&mut self) {
+        self.stop();
+        self.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tests_support::tiny_model;
+
+    #[test]
+    fn engine_serves_requests() {
+        let model = Arc::new(tiny_model(1));
+        let eng = NativeEngine::start(model.clone(), None, 4);
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let rx = eng.submit(EngineRequest {
+                id: i,
+                prompt: vec![1, 2, 3, (i % 60) as u8],
+                max_new: 5,
+            });
+            rxs.push(rx);
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.tokens.len(), 5);
+        }
+        let m = eng.metrics();
+        assert_eq!(m.requests_completed.load(Ordering::Relaxed), 6);
+        // With max_batch 4 and 6 requests, some steps must have batched >1.
+        assert!(m.mean_batch() > 1.0, "mean batch {}", m.mean_batch());
+        eng.stop();
+        eng.join();
+    }
+
+    #[test]
+    fn engine_matches_offline_generation() {
+        let model = Arc::new(tiny_model(2));
+        let eng = NativeEngine::start(model.clone(), None, 2);
+        let prompt = vec![4u8, 8, 15];
+        let rx = eng.submit(EngineRequest {
+            id: 9,
+            prompt: prompt.clone(),
+            max_new: 6,
+        });
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        let offline = Generator::dense(&model).generate(&prompt, 6);
+        assert_eq!(resp.tokens, offline);
+        eng.stop();
+        eng.join();
+    }
+}

@@ -1,0 +1,107 @@
+//! Serving metrics: throughput and latency counters, exported as JSON
+//! through the `stats` API command.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+#[derive(Debug)]
+pub struct Metrics {
+    start: Instant,
+    pub requests_completed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub decode_steps: AtomicU64,
+    pub batched_sequences: AtomicU64,
+    latencies_ms: Mutex<Vec<f64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            start: Instant::now(),
+            requests_completed: AtomicU64::new(0),
+            tokens_generated: AtomicU64::new(0),
+            decode_steps: AtomicU64::new(0),
+            batched_sequences: AtomicU64::new(0),
+            latencies_ms: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn record_request(&self, tokens: usize, latency_ms: f64) {
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated
+            .fetch_add(tokens as u64, Ordering::Relaxed);
+        self.latencies_ms.lock().unwrap().push(latency_ms);
+    }
+
+    pub fn record_step(&self, batch: usize) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.batched_sequences
+            .fetch_add(batch as u64, Ordering::Relaxed);
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let toks = self.tokens_generated.load(Ordering::Relaxed) as f64;
+        toks / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// Mean batch occupancy per decode step.
+    pub fn mean_batch(&self) -> f64 {
+        let steps = self.decode_steps.load(Ordering::Relaxed).max(1) as f64;
+        self.batched_sequences.load(Ordering::Relaxed) as f64 / steps
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let lats = self.latencies_ms.lock().unwrap();
+        let mut sorted = lats.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| -> f64 {
+            if sorted.is_empty() {
+                return 0.0;
+            }
+            sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+        };
+        Json::obj(vec![
+            (
+                "requests",
+                Json::num(self.requests_completed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "tokens",
+                Json::num(self.tokens_generated.load(Ordering::Relaxed) as f64),
+            ),
+            ("tok_per_sec", Json::num(self.tokens_per_sec())),
+            ("mean_batch", Json::num(self.mean_batch())),
+            ("p50_ms", Json::num(pct(0.5))),
+            ("p99_ms", Json::num(pct(0.99))),
+            ("uptime_sec", Json::num(self.start.elapsed().as_secs_f64())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_request(10, 5.0);
+        m.record_request(20, 15.0);
+        m.record_step(2);
+        m.record_step(4);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").as_f64(), Some(2.0));
+        assert_eq!(s.get("tokens").as_f64(), Some(30.0));
+        assert_eq!(s.get("mean_batch").as_f64(), Some(3.0));
+        assert!(s.get("p50_ms").as_f64().unwrap() >= 5.0);
+    }
+}

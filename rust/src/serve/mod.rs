@@ -1,0 +1,20 @@
+//! L3 serving stack: request router, continuous batcher, KV-slot manager,
+//! metrics, and a line-delimited JSON TCP API.
+//!
+//! The paper's thesis (§6.3) is that QuIP# makes *memory-bound decoding*
+//! faster; this engine is where that shows up end-to-end. Two backends:
+//!
+//! * `native` — the Rust hot path (fused E8P decode matvec / dense f32),
+//!   per-sequence KV caches, continuous batching at step granularity with
+//!   sequence-parallel decode.
+//! * `pjrt` — the AOT JAX/Pallas artifacts executed through the PJRT
+//!   runtime (lockstep batch; demonstrates the three-layer path).
+
+pub mod engine;
+pub mod metrics;
+pub mod pjrt_engine;
+pub mod server;
+
+pub use engine::{Engine, EngineRequest, EngineResponse, NativeEngine};
+pub use metrics::Metrics;
+pub use server::{serve_blocking, Client, ServerConfig, ServerHandle};

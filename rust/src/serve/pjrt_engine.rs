@@ -1,0 +1,196 @@
+//! PJRT-backed batched decode: drives the AOT-lowered `{size}_decode_fp` /
+//! `{size}_decode_e8p` artifacts (L2 JAX + L1 Pallas, compiled once) in a
+//! lockstep batch of B sequences. Demonstrates the full three-layer path;
+//! the native engine remains the latency-optimized default.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::generation::argmax;
+use crate::model::Model;
+use crate::qmodel::QuantizedModel;
+use crate::runtime::{ArtDtype, HostTensor, Runtime};
+
+/// Lockstep batched generator over a decode artifact.
+pub struct PjrtBatchEngine<'a> {
+    rt: &'a Runtime,
+    artifact: String,
+    /// Fixed leading inputs (weights / packed codes), in manifest order.
+    fixed: Vec<HostTensor>,
+    batch: usize,
+    n_layers: usize,
+    ctx: usize,
+    heads: usize,
+    head_dim: usize,
+    vocab: usize,
+}
+
+impl<'a> PjrtBatchEngine<'a> {
+    /// fp backend: weights are streamed from the native model's params in
+    /// the manifest's input order.
+    pub fn new_fp(rt: &'a Runtime, model: &Model, artifact: &str) -> Result<Self> {
+        let spec = rt
+            .manifest
+            .artifacts
+            .get(artifact)
+            .with_context(|| format!("artifact {artifact}"))?;
+        let mut fixed = Vec::new();
+        for inp in &spec.inputs {
+            match inp.name.as_str() {
+                "token" | "pos" | "kv_k" | "kv_v" => break,
+                name => {
+                    let t = model.p(name);
+                    fixed.push(HostTensor::F32(t.shape.clone(), t.data.clone()));
+                }
+            }
+        }
+        Self::finish(rt, model, artifact, fixed)
+    }
+
+    /// e8p backend: packed codes / scales / sign vectors from the
+    /// quantized model plug into the artifact's runtime inputs.
+    pub fn new_e8p(rt: &'a Runtime, qm: &QuantizedModel, artifact: &str) -> Result<Self> {
+        let model = &qm.model;
+        let spec = rt
+            .manifest
+            .artifacts
+            .get(artifact)
+            .with_context(|| format!("artifact {artifact}"))?;
+        let mut per_layer: BTreeMap<&str, &crate::quant::pipeline::QuantizedLinear> =
+            BTreeMap::new();
+        for (k, v) in &qm.layers {
+            per_layer.insert(k.as_str(), v);
+        }
+        let mut fixed = Vec::new();
+        for inp in &spec.inputs {
+            let name = inp.name.as_str();
+            if matches!(name, "token" | "pos" | "kv_k" | "kv_v") {
+                break;
+            }
+            if let Some((layer, field)) = name.rsplit_once('.') {
+                if let Some(ql) = per_layer.get(layer) {
+                    let p = ql.packed.as_ref().context("layer not packed (not an E8P method?)")?;
+                    let t = match field {
+                        "scales" => HostTensor::F32(
+                            vec![p.stage_scales.len()],
+                            p.stage_scales.clone(),
+                        ),
+                        "su" => HostTensor::F32(vec![p.su.len()], p.su.clone()),
+                        "sv" => HostTensor::F32(vec![p.sv.len()], p.sv.clone()),
+                        f if f.starts_with("codes") => {
+                            let stage: usize = f["codes".len()..].parse()?;
+                            let codes: Vec<i32> = p.stage_codes[stage]
+                                .iter()
+                                .map(|&c| c as i32)
+                                .collect();
+                            HostTensor::I32(inp.shape.clone(), codes)
+                        }
+                        other => bail!("unknown e8p input field {other}"),
+                    };
+                    fixed.push(t);
+                    continue;
+                }
+            }
+            // Plain fp parameter (embed, norms, head).
+            let t = model.p(name);
+            fixed.push(HostTensor::F32(t.shape.clone(), t.data.clone()));
+        }
+        Self::finish(rt, model, artifact, fixed)
+    }
+
+    fn finish(
+        rt: &'a Runtime,
+        model: &Model,
+        artifact: &str,
+        fixed: Vec<HostTensor>,
+    ) -> Result<Self> {
+        let spec = &rt.manifest.artifacts[artifact];
+        // kv_k spec: (L, B, ctx, H, hd)
+        let kv_spec = spec
+            .inputs
+            .iter()
+            .find(|i| i.name == "kv_k")
+            .context("artifact lacks kv_k input")?;
+        let token_spec = spec
+            .inputs
+            .iter()
+            .find(|i| i.name == "token")
+            .context("artifact lacks token input")?;
+        anyhow::ensure!(token_spec.dtype == ArtDtype::I32);
+        Ok(PjrtBatchEngine {
+            rt,
+            artifact: artifact.to_string(),
+            fixed,
+            batch: kv_spec.shape[1],
+            n_layers: kv_spec.shape[0],
+            ctx: kv_spec.shape[2],
+            heads: kv_spec.shape[3],
+            head_dim: kv_spec.shape[4],
+            vocab: model.cfg.vocab,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Lockstep batched generation: all prompts must share one length.
+    /// Returns `max_new` generated tokens per sequence.
+    pub fn generate_batch(&self, prompts: &[Vec<u8>], max_new: usize) -> Result<Vec<Vec<u8>>> {
+        anyhow::ensure!(!prompts.is_empty() && prompts.len() <= self.batch);
+        let plen = prompts[0].len();
+        anyhow::ensure!(
+            prompts.iter().all(|p| p.len() == plen),
+            "lockstep batch needs equal prompt lengths"
+        );
+        anyhow::ensure!(plen + max_new <= self.ctx, "exceeds artifact ctx");
+        let b = self.batch;
+        let kv_numel = self.n_layers * b * self.ctx * self.heads * self.head_dim;
+        let kv_shape = vec![self.n_layers, b, self.ctx, self.heads, self.head_dim];
+        let mut kv_k = vec![0.0f32; kv_numel];
+        let mut kv_v = vec![0.0f32; kv_numel];
+        let mut outs: Vec<Vec<u8>> = vec![Vec::new(); prompts.len()];
+        let mut tokens: Vec<i32> = (0..b)
+            .map(|i| prompts.get(i).map(|p| p[0] as i32).unwrap_or(0))
+            .collect();
+        let mut last_logits: Vec<f32> = Vec::new();
+        for step in 0..plen + max_new - 1 {
+            let mut inputs = self.fixed.clone();
+            inputs.push(HostTensor::I32(vec![b], tokens.clone()));
+            inputs.push(HostTensor::I32(vec![], vec![step as i32]));
+            inputs.push(HostTensor::F32(kv_shape.clone(), kv_k));
+            inputs.push(HostTensor::F32(kv_shape.clone(), kv_v));
+            let mut result = self.rt.execute(&self.artifact, &inputs)?;
+            // outputs: logits (B,V), kv_k', kv_v'
+            let kv_v_out = result.pop().context("kv_v")?;
+            let kv_k_out = result.pop().context("kv_k")?;
+            let logits = result.pop().context("logits")?;
+            kv_k = match kv_k_out {
+                HostTensor::F32(_, d) => d,
+                _ => bail!("kv dtype"),
+            };
+            kv_v = match kv_v_out {
+                HostTensor::F32(_, d) => d,
+                _ => bail!("kv dtype"),
+            };
+            last_logits = logits.as_f32()?.to_vec();
+            // Next input token per lane.
+            for lane in 0..b {
+                let next = if step + 1 < plen {
+                    prompts.get(lane).map(|p| p[step + 1] as i32).unwrap_or(0)
+                } else {
+                    let row = &last_logits[lane * self.vocab..(lane + 1) * self.vocab];
+                    let t = argmax(row) as i32;
+                    if lane < outs.len() {
+                        outs[lane].push(t as u8);
+                    }
+                    t
+                };
+                tokens[lane] = next;
+            }
+        }
+        let _ = last_logits;
+        Ok(outs)
+    }
+}

@@ -1,0 +1,185 @@
+//! TCP front-end: line-delimited JSON over a listener socket.
+//!
+//! Protocol (one JSON object per line):
+//!   {"prompt": [1,2,3], "max_new": 16}  → {"id":…, "tokens":[…], "ms":…}
+//!   {"cmd": "stats"}                    → metrics snapshot
+//!   {"cmd": "shutdown"}                 → stops the server
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::engine::{Engine, EngineRequest};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks a free port.
+    pub addr: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+        }
+    }
+}
+
+pub struct ServerHandle {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock accept() with a dummy connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the TCP server on a background thread.
+pub fn serve_blocking(engine: Arc<dyn Engine>, cfg: ServerConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr).context("binding server socket")?;
+    let local_addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let next_id = Arc::new(AtomicU64::new(1));
+    let thread = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::Relaxed) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let engine = engine.clone();
+            let stop3 = stop2.clone();
+            let ids = next_id.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, engine, stop3, ids);
+            });
+        }
+    });
+    Ok(ServerHandle {
+        local_addr,
+        stop,
+        thread: Some(thread),
+    })
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    engine: Arc<dyn Engine>,
+    stop: Arc<AtomicBool>,
+    ids: Arc<AtomicU64>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let msg = match Json::parse(line.trim()) {
+            Ok(m) => m,
+            Err(e) => {
+                writeln!(writer, "{}", Json::obj(vec![("error", Json::str(e.to_string()))]).emit())?;
+                continue;
+            }
+        };
+        match msg.get("cmd").as_str() {
+            Some("stats") => {
+                writeln!(writer, "{}", engine.metrics().snapshot().emit())?;
+            }
+            Some("shutdown") => {
+                stop.store(true, Ordering::Relaxed);
+                engine.stop();
+                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).emit())?;
+                return Ok(());
+            }
+            _ => {
+                let prompt: Vec<u8> = msg
+                    .get("prompt")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|v| v.as_usize()).map(|v| v as u8).collect())
+                    .unwrap_or_default();
+                let max_new = msg.get("max_new").as_usize().unwrap_or(16);
+                let id = ids.fetch_add(1, Ordering::Relaxed);
+                let rx = engine.submit(EngineRequest {
+                    id,
+                    prompt,
+                    max_new,
+                });
+                let resp = rx.recv().context("engine dropped request")?;
+                let out = Json::obj(vec![
+                    ("id", Json::num(resp.id as f64)),
+                    (
+                        "tokens",
+                        Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                    ),
+                    ("ms", Json::num(resp.latency_ms)),
+                ]);
+                writeln!(writer, "{}", out.emit())?;
+            }
+        }
+    }
+}
+
+/// Minimal blocking client for tests / examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn request(&mut self, prompt: &[u8], max_new: usize) -> Result<(Vec<u8>, f64)> {
+        let msg = Json::obj(vec![
+            (
+                "prompt",
+                Json::Arr(prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("max_new", Json::num(max_new as f64)),
+        ]);
+        writeln!(self.writer, "{}", msg.emit())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = Json::parse(line.trim()).context("bad response")?;
+        let tokens = resp
+            .get("tokens")
+            .as_arr()
+            .context("tokens")?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .map(|v| v as u8)
+            .collect();
+        Ok((tokens, resp.get("ms").as_f64().unwrap_or(0.0)))
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        writeln!(self.writer, "{}", r#"{"cmd":"stats"}"#)?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        writeln!(self.writer, "{}", r#"{"cmd":"shutdown"}"#)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,113 @@
+//! Tiny command-line argument parser (clap is not in the offline crate
+//! set). Supports `--key value`, `--flag`, and positionals; subcommands are
+//! handled by the caller peeling the first positional.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    /// A `--key` followed by a value that does not start with `--` binds the
+    /// value; a `--key` followed by another option or end-of-args is a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.options.insert(key.to_string(), v);
+                        }
+                        _ => out.flags.push(key.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = parse(&["serve", "--port", "8080", "--verbose", "--size=L", "extra"]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("size"), Some("L"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--ft"]);
+        assert!(a.has_flag("ft"));
+    }
+
+    #[test]
+    fn numeric_helpers() {
+        let a = parse(&["--n", "12", "--rho", "0.9"]);
+        assert_eq!(a.get_usize("n", 0), 12);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert!((a.get_f64("rho", 0.0) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["--ft", "--bits", "2"]);
+        assert!(a.has_flag("ft"));
+        assert_eq!(a.get("bits"), Some("2"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! deterministic RNG, minimal JSON, scoped thread-pool helpers, the shared
+//! `.qtz` tensor container, a tiny CLI parser, and a seeded property-test
+//! harness.
+
+pub mod cli;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod tensorio;
+pub mod threadpool;

@@ -1,0 +1,82 @@
+//! Seeded property-testing helper (proptest is not in the offline crate
+//! set). Each case gets a deterministic RNG derived from the case index; a
+//! failing property reports the case index and message so the exact case
+//! replays by construction.
+
+use super::rng::Pcg64;
+
+/// Run `prop` over `cases` deterministic random cases. `prop` returns
+/// `Err(msg)` (or panics) to fail; the harness re-raises with the replay
+/// seed in the message.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Pcg64::new_stream(0xC0FFEE ^ case, case.wrapping_mul(2) + 1);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case}: {msg}");
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` bodies for `check`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate-equality helper for floating point slices.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("trivial", 16, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failer'")]
+    fn check_reports_failure() {
+        check("failer", 8, |rng| {
+            let x = rng.below(4);
+            if x == 3 {
+                Err("hit 3".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_behaviour() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

@@ -1,0 +1,305 @@
+//! `.qtz` — the binary tensor container shared between the python build
+//! path (`python/compile/tensorio.py`) and the rust runtime. Little-endian
+//! throughout.
+//!
+//! Layout:
+//! ```text
+//! magic   b"QTZ1"
+//! u32     tensor count
+//! repeat:
+//!   u16   name length, then name bytes (utf-8)
+//!   u8    dtype  (0=f32, 1=i32, 2=u16, 3=u8, 4=i64)
+//!   u8    ndim
+//!   u32*  dims
+//!   u64   payload byte length
+//!   raw   payload
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I32 = 1,
+    U16 = 2,
+    U8 = 3,
+    I64 = 4,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U16 => 2,
+            DType::U8 => 1,
+            DType::I64 => 8,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U16,
+            3 => DType::U8,
+            4 => DType::I64,
+            _ => bail!("unknown dtype tag {v}"),
+        })
+    }
+}
+
+/// One named tensor: dtype + shape + raw little-endian payload.
+#[derive(Clone, Debug)]
+pub struct TensorData {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+impl TensorData {
+    pub fn from_f32(shape: Vec<usize>, data: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        TensorData {
+            dtype: DType::F32,
+            shape,
+            bytes,
+        }
+    }
+
+    pub fn from_u16(shape: Vec<usize>, data: &[u16]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 2);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        TensorData {
+            dtype: DType::U16,
+            shape,
+            bytes,
+        }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        TensorData {
+            dtype: DType::I32,
+            shape,
+            bytes,
+        }
+    }
+
+    pub fn from_u8(shape: Vec<usize>, data: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorData {
+            dtype: DType::U8,
+            shape,
+            bytes: data,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, expected F32", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_u16(&self) -> Result<Vec<u16>> {
+        if self.dtype != DType::U16 {
+            bail!("tensor is {:?}, expected U16", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect())
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, expected I32", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// An ordered collection of named tensors (a checkpoint / corpus / packed
+/// quantized model).
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, TensorData>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: TensorData) {
+        self.tensors.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TensorData> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor '{name}' not found"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<Vec<f32>> {
+        self.get(name)?.to_f32()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref())
+                .with_context(|| format!("create {:?}", path.as_ref()))?,
+        );
+        w.write_all(b"QTZ1")?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u16).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&[t.dtype as u8, t.shape.len() as u8])?;
+            for &d in &t.shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            w.write_all(&(t.bytes.len() as u64).to_le_bytes())?;
+            w.write_all(&t.bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("open {:?}", path.as_ref()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"QTZ1" {
+            bail!("bad magic {:?} in {:?}", magic, path.as_ref());
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut tf = TensorFile::new();
+        for _ in 0..count {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name not utf8")?;
+            let mut hdr = [0u8; 2];
+            r.read_exact(&mut hdr)?;
+            let dtype = DType::from_u8(hdr[0])?;
+            let ndim = hdr[1] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let nbytes = read_u64(&mut r)? as usize;
+            let expect = shape.iter().product::<usize>() * dtype.size();
+            if nbytes != expect {
+                bail!("tensor '{name}': payload {nbytes} != shape-implied {expect}");
+            }
+            let mut bytes = vec![0u8; nbytes];
+            r.read_exact(&mut bytes)?;
+            tf.insert(name, TensorData { dtype, shape, bytes });
+        }
+        Ok(tf)
+    }
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("qtz_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_mixed_dtypes() {
+        let mut tf = TensorFile::new();
+        tf.insert("w", TensorData::from_f32(vec![2, 3], &[1.0, -2.5, 3.0, 0.0, 1e-9, 7.5]));
+        tf.insert("codes", TensorData::from_u16(vec![4], &[0, 65535, 12345, 1]));
+        tf.insert("ids", TensorData::from_i32(vec![2], &[-5, 123456]));
+        tf.insert("bytes", TensorData::from_u8(vec![3], vec![0, 128, 255]));
+        let p = tmpfile("roundtrip");
+        tf.save(&p).unwrap();
+        let tf2 = TensorFile::load(&p).unwrap();
+        assert_eq!(tf2.tensors.len(), 4);
+        assert_eq!(tf2.f32("w").unwrap(), vec![1.0, -2.5, 3.0, 0.0, 1e-9, 7.5]);
+        assert_eq!(tf2.get("codes").unwrap().to_u16().unwrap(), vec![0, 65535, 12345, 1]);
+        assert_eq!(tf2.get("ids").unwrap().to_i32().unwrap(), vec![-5, 123456]);
+        assert_eq!(tf2.get("bytes").unwrap().bytes, vec![0, 128, 255]);
+        assert_eq!(tf2.get("w").unwrap().shape, vec![2, 3]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let tf = TensorFile::new();
+        assert!(tf.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmpfile("badmagic");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(TensorFile::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = TensorData::from_u16(vec![1], &[3]);
+        assert!(t.to_f32().is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Data-parallel helpers over `std::thread::scope` (rayon is not in the
+//! offline crate set). Quantization parallelizes over weight-matrix rows /
+//! layers; the serving hot path parallelizes matvec rows.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `QUIPSHARP_THREADS` env override, else
+/// available parallelism, clamped to at least 1.
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("QUIPSHARP_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `f(start, end)` over disjoint contiguous chunks of `0..len` on up to
+/// `num_threads()` scoped threads. Blocks until all chunks finish. `f` must
+/// be `Sync` because it is shared by reference across threads.
+pub fn par_chunks<F>(len: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let nt = num_threads().min(len.max(1));
+    if nt <= 1 || len == 0 {
+        f(0, len);
+        return;
+    }
+    let chunk = len.div_ceil(nt);
+    std::thread::scope(|s| {
+        for t in 0..nt {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(len);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Parallel map over indices `0..len`, preserving order. Each worker owns a
+/// disjoint slice of the output vector.
+pub fn par_map<T, F>(len: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); len];
+    let nt = num_threads().min(len.max(1));
+    if nt <= 1 || len == 0 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        return out;
+    }
+    let chunk = len.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (t, block) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (off, slot) in block.iter_mut().enumerate() {
+                    *slot = f(t * chunk + off);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Minimum useful work (in rough flop units) before spawning threads is
+/// worth it: scoped-thread spawn costs ~10–50 µs, i.e. ~10⁵ flops.
+pub const PAR_MIN_WORK: usize = 1 << 19;
+
+/// [`par_rows`] with an explicit per-row work hint: runs serially when
+/// rows·work_per_row is below [`PAR_MIN_WORK`] — the generation hot path
+/// calls matvecs small enough that thread spawn would dominate.
+pub fn par_rows_work<T, F>(data: &mut [T], cols: usize, work_per_row: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(cols > 0 && data.len() % cols == 0);
+    let rows = data.len() / cols;
+    if rows.saturating_mul(work_per_row) < PAR_MIN_WORK {
+        for (r, row) in data.chunks_mut(cols).enumerate() {
+            f(r, row);
+        }
+        return;
+    }
+    par_rows(data, cols, f);
+}
+
+/// Parallel-for over rows of a mutable row-major matrix:
+/// `f(row_index, row_slice)`. This is the hot-path shape (matvec rows,
+/// per-row quantization).
+pub fn par_rows<T, F>(data: &mut [T], cols: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(cols > 0 && data.len() % cols == 0);
+    let rows = data.len() / cols;
+    let nt = num_threads().min(rows.max(1));
+    if nt <= 1 {
+        for (r, row) in data.chunks_mut(cols).enumerate() {
+            f(r, row);
+        }
+        return;
+    }
+    let rows_per = rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (t, block) in data.chunks_mut(rows_per * cols).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (i, row) in block.chunks_mut(cols).enumerate() {
+                    f(t * rows_per + i, row);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_chunks_covers_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        par_chunks(1000, |a, b| {
+            for i in a..b {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_chunks_empty_ok() {
+        par_chunks(0, |_, _| {});
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let got = par_map(257, |i| i * i);
+        let want: Vec<usize> = (0..257).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_rows_touches_each_row() {
+        let mut m = vec![0.0f32; 7 * 13];
+        par_rows(&mut m, 13, |r, row| {
+            for v in row.iter_mut() {
+                *v = r as f32;
+            }
+        });
+        for (r, row) in m.chunks(13).enumerate() {
+            assert!(row.iter().all(|&v| v == r as f32));
+        }
+    }
+}
