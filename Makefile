@@ -1,0 +1,33 @@
+# Tier-1 verification and developer entry points.
+#
+# `make verify` is the one-command tier-1 gate: release build, tests,
+# and formatting. The PJRT path needs the offline xla crate and is off
+# by default (see Cargo.toml's `pjrt` feature).
+
+.PHONY: verify build test fmt bench-batch artifacts
+
+verify:
+	cargo build --release
+	cargo test -q
+	cargo fmt --check
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt
+
+# Batch-sweep generation benchmark; writes BENCH_generation.json.
+bench-batch:
+	cargo bench --bench bench_generation
+
+# Trained weights + corpus + AOT HLO artifacts (needs the python/JAX
+# toolchain; see python/compile/aot.py). Integration tests skip cleanly
+# when these are absent.
+artifacts:
+	python3 python/compile/datagen.py
+	python3 python/compile/train.py
+	python3 python/compile/aot.py

@@ -1,25 +1,169 @@
-//! Table 5 — generation throughput: tok/s and % of memory-bandwidth
-//! roofline for 2-bit / 4-bit QuIP# vs fp32, on the trained model family
-//! (requires `make artifacts`). The paper's shape: 2-bit > 4-bit > fp16
-//! tok/s, with %-of-roofline growing with model size.
+//! Table 5 — generation throughput — plus the serving batch sweep.
+//!
+//! Part 1 (always runs, no artifacts needed): decode-once/multiply-many
+//! batch sweep on a synthetic 2-bit QuIP# model. For B ∈ {1, 2, 4, 8, 16}
+//! it measures (a) the sequence-at-a-time baseline (B independent
+//! `decode_one` loops — the old engine hot path, which re-decodes every
+//! codeword B times per step) against (b) one batched `decode_batch`
+//! call per step, and writes tokens/s, speedup and effective weight
+//! bytes/token to `BENCH_generation.json`.
+//!
+//! Part 2 (requires `make artifacts`): the paper's Table 5 — tok/s and %
+//! of memory-bandwidth roofline for 2-bit / 4-bit QuIP# vs fp32 on the
+//! trained model family. The paper's shape: 2-bit > 4-bit > fp16 tok/s,
+//! with %-of-roofline growing with model size.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use quipsharp::bench::{memcpy_roofline_mt_gbps, Table};
 use quipsharp::experiments::Runner;
-use quipsharp::generation::{Generator, KvCache};
+use quipsharp::generation::{argmax, Generator, KvCache};
+use quipsharp::model::{Model, ModelConfig};
+use quipsharp::qmodel::quantize_model;
 use quipsharp::quant::pipeline::Method;
+use quipsharp::util::json::Json;
 
-fn main() {
+/// Sequence-at-a-time baseline: B independent decode_one loops.
+fn time_loop(gen: &Generator, bsz: usize, prompt: &[u8], warmup: usize, steps: usize) -> f64 {
+    let mut caches: Vec<KvCache> = (0..bsz).map(|_| KvCache::new(gen.model)).collect();
+    let mut logits: Vec<Vec<f32>> = vec![Vec::new(); bsz];
+    for (b, c) in caches.iter_mut().enumerate() {
+        for &t in prompt {
+            logits[b] = gen.decode_one(t, c);
+        }
+    }
+    let mut advance = |logits: &mut Vec<Vec<f32>>, caches: &mut Vec<KvCache>| {
+        for b in 0..bsz {
+            let t = argmax(&logits[b]) as u8;
+            logits[b] = gen.decode_one(t, &mut caches[b]);
+        }
+    };
+    for _ in 0..warmup {
+        advance(&mut logits, &mut caches);
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        advance(&mut logits, &mut caches);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Batch-native path: one decode_batch call per step.
+fn time_batched(gen: &Generator, bsz: usize, prompt: &[u8], warmup: usize, steps: usize) -> f64 {
+    let mut caches: Vec<KvCache> = (0..bsz).map(|_| KvCache::new(gen.model)).collect();
+    let mut logits: Vec<Vec<f32>> = vec![vec![0.0f32]; bsz];
+    for &t in prompt {
+        let toks = vec![t; bsz];
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        logits = gen.decode_batch(&toks, &mut refs);
+    }
+    let mut advance = |logits: &mut Vec<Vec<f32>>, caches: &mut Vec<KvCache>| {
+        let toks: Vec<u8> = logits.iter().map(|l| argmax(l) as u8).collect();
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        *logits = gen.decode_batch(&toks, &mut refs);
+    };
+    for _ in 0..warmup {
+        advance(&mut logits, &mut caches);
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        advance(&mut logits, &mut caches);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn best_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
+    (0..reps).map(|_| f()).fold(f64::INFINITY, f64::min)
+}
+
+fn batch_sweep() {
+    println!("== batch sweep: decode-once/multiply-many vs sequence-at-a-time ==");
+    println!("(synthetic 's' model, 2-bit QuIP#, greedy decode)\n");
+    let model = Model::random(ModelConfig::by_name("s").unwrap(), 11);
+    // Identity Hessians: quantization quality is irrelevant to decode
+    // throughput, and skipping calibration keeps the bench fast.
+    let qm = quantize_model(
+        &model,
+        &BTreeMap::new(),
+        &Method::QuipSharp { bits: 2, ft: false },
+        7,
+    )
+    .unwrap();
+    let gen = qm.generator();
+    let wbpt = gen.weight_bytes_per_token() as f64;
+    let prompt: Vec<u8> = vec![10, 4, 7, 1];
+    let (warmup, steps, reps) = (4usize, 32usize, 3usize);
+
+    let mut t = Table::new(&[
+        "B",
+        "loop tok/s",
+        "batched tok/s",
+        "speedup",
+        "loop B/tok",
+        "batched B/tok",
+    ]);
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    let mut b1_loop_tps = 0.0f64;
+    for &bsz in &[1usize, 2, 4, 8, 16] {
+        let dt_loop = best_of(reps, || time_loop(&gen, bsz, &prompt, warmup, steps));
+        let dt_batch = best_of(reps, || time_batched(&gen, bsz, &prompt, warmup, steps));
+        let toks = (bsz * steps) as f64;
+        let tps_loop = toks / dt_loop;
+        let tps_batch = toks / dt_batch;
+        if bsz == 1 {
+            b1_loop_tps = tps_loop;
+        }
+        // Effective weight bytes streamed per generated token: the loop
+        // re-decodes every codeword per sequence; the batched step
+        // amortizes packed codes across the batch (the fp32 lm_head still
+        // streams per lane — `weight_bytes_streamed_per_step` accounts
+        // for both, so this is the honest figure, not wbpt/B).
+        let bytes_loop = wbpt;
+        let bytes_batch = gen.weight_bytes_streamed_per_step(bsz) as f64 / bsz as f64;
+        let speedup = tps_batch / tps_loop;
+        t.row(&[
+            format!("{bsz}"),
+            format!("{tps_loop:.1}"),
+            format!("{tps_batch:.1}"),
+            format!("{speedup:.2}x"),
+            format!("{bytes_loop:.0}"),
+            format!("{bytes_batch:.0}"),
+        ]);
+        sweep_rows.push(Json::obj(vec![
+            ("batch", Json::num(bsz as f64)),
+            ("loop_tok_per_sec", Json::num(tps_loop)),
+            ("batched_tok_per_sec", Json::num(tps_batch)),
+            ("speedup", Json::num(speedup)),
+            ("loop_bytes_per_token", Json::num(bytes_loop)),
+            ("batched_bytes_per_token", Json::num(bytes_batch)),
+        ]));
+    }
+    t.print();
+    t.write_csv("bench_generation_batch").ok();
+    let out = Json::obj(vec![
+        ("model", Json::str("s-synthetic")),
+        ("method", Json::str("quip#-2bit")),
+        ("decode_steps", Json::num(steps as f64)),
+        ("weight_bytes_per_token", Json::num(wbpt)),
+        ("b1_loop_tok_per_sec", Json::num(b1_loop_tps)),
+        ("sweep", Json::Arr(sweep_rows)),
+    ]);
+    if std::fs::write("BENCH_generation.json", out.emit()).is_ok() {
+        println!("\nwrote BENCH_generation.json");
+    }
+}
+
+fn table5() {
     let mut runner = match Runner::new("artifacts") {
         Ok(r) => r,
         Err(e) => {
-            println!("bench_generation skipped (run `make artifacts`): {e}");
+            println!("\nTable 5 skipped (run `make artifacts`): {e}");
             return;
         }
     };
     let roof = memcpy_roofline_mt_gbps(64 << 20);
-    println!("== Table 5: generation throughput (roofline {roof:.1} GB/s) ==\n");
+    println!("\n== Table 5: generation throughput (roofline {roof:.1} GB/s) ==\n");
     let mut t = Table::new(&["model", "variant", "tok/s", "weight GB/s", "% roofline"]);
 
     for size in ["s", "m"] {
@@ -32,7 +176,7 @@ fn main() {
         for (label, method) in variants {
             let qm = method.as_ref().map(|m| runner.qmodel(size, m).unwrap());
             let gen = match &qm {
-                Some(q) => Generator::quantized(&q.model, q),
+                Some(q) => q.generator(),
                 None => Generator::dense(&model),
             };
             // Generate tokens (decode-only timing after a short prompt).
@@ -45,7 +189,7 @@ fn main() {
             let n_tokens = gen.model.cfg.ctx - prompt.len() - 1;
             let t0 = Instant::now();
             for _ in 0..n_tokens {
-                let next = quipsharp::generation::argmax(&logits) as u8;
+                let next = argmax(&logits) as u8;
                 logits = gen.decode_one(next, &mut cache);
             }
             let dt = t0.elapsed().as_secs_f64();
@@ -63,4 +207,9 @@ fn main() {
     }
     t.print();
     t.write_csv("bench_generation_table5").ok();
+}
+
+fn main() {
+    batch_sweep();
+    table5();
 }

@@ -19,6 +19,7 @@ fn main() {
     println!("memcpy roofline: {roof_1t:.1} GB/s single-thread, {roof_mt:.1} GB/s multithread\n");
 
     let mut table = Table::new(&["kernel", "m×n", "bytes/iter", "median", "GB/s", "% MT roofline"]);
+    let mut sweep = Table::new(&["m×n", "B", "loop/step", "batched/step", "speedup", "eff B/vec"]);
     let mut rng = Pcg64::new(1);
 
     // 4096² exceeds the CI box budget (quantization-time, not matvec);
@@ -68,8 +69,42 @@ fn main() {
             format!("{:.2}", r.gbps().unwrap()),
             format!("{:.1}%", 100.0 * r.gbps().unwrap() / roof_mt),
         ]);
+
+        // Batch sweep: one decode-once/multiply-many `matmul` step against
+        // B sequence-at-a-time `matvec` calls. The codes are streamed once
+        // per step either way counted per *batch*, so effective bytes per
+        // multiplied vector drop 1/B on the batched path.
+        for &bsz in &[1usize, 2, 4, 8, 16] {
+            let xs: Vec<f32> = rng.gaussian_vec(bsz * n, 1.0);
+            let mut ys = vec![0.0f32; bsz * m];
+            let r_loop = Bench::new(format!("e8p loop B={bsz} {m}x{n}"))
+                .budget(Duration::from_millis(400))
+                .run(|| {
+                    for b in 0..bsz {
+                        qm.matvec(&xs[b * n..(b + 1) * n], &mut ys[b * m..(b + 1) * m]);
+                    }
+                    ys[0]
+                });
+            let r_bat = Bench::new(format!("e8p batched B={bsz} {m}x{n}"))
+                .budget(Duration::from_millis(400))
+                .run(|| {
+                    qm.matmul(&xs, bsz, &mut ys);
+                    ys[0]
+                });
+            sweep.row(&[
+                format!("{m}x{n}"),
+                format!("{bsz}"),
+                format!("{:.3} ms", r_loop.median_ns() as f64 / 1e6),
+                format!("{:.3} ms", r_bat.median_ns() as f64 / 1e6),
+                format!("{:.2}x", r_loop.median_ns() as f64 / r_bat.median_ns() as f64),
+                format!("{:.0}", bytes_q as f64 / bsz as f64),
+            ]);
+        }
     }
     table.print();
     table.write_csv("bench_matvec").ok();
+    println!("\n== batch sweep: fused decode amortized across B right-hand sides ==\n");
+    sweep.print();
+    sweep.write_csv("bench_matvec_batch").ok();
     println!("\n(The paper's >50% target applies at the largest shapes, where decode\n is memory-bound; see EXPERIMENTS.md §Perf for the iteration log.)");
 }

@@ -11,9 +11,17 @@
 //! * `model`, `ft`, `eval`, `hessian`, `data` — the substrate: a native
 //!   Llama-architecture transformer (forward + hand-written backprop for
 //!   fine-tuning), calibration Hessians, perplexity/zeroshot harness, and
-//!   the synthetic-language workload.
+//!   the synthetic-language workload. `model::qlinear` holds the
+//!   batch-native serving kernel: fused E8P decode that reads each 16-bit
+//!   codeword once per step and multiplies it against all B sequences.
+//! * `generation` — KV-cached autoregressive decode over the batched
+//!   kernel: `decode_batch` advances B sequences in lockstep
+//!   (per-sequence attention, decode-once linear layers); `decode_one` is
+//!   its batch-1 special case.
 //! * `runtime`, `serve` — the L3 coordinator: PJRT execution of the
-//!   AOT-lowered JAX/Pallas artifacts and a batching inference server.
+//!   AOT-lowered JAX/Pallas artifacts (behind the `pjrt` feature) and the
+//!   continuous-batching inference server: VecDeque admission queue,
+//!   chunked prefill, batched decode steps, amortization metrics.
 //! * `util`, `bench`, `linalg` — offline-environment substrates (RNG, JSON,
 //!   thread pool, tensor IO, bench harness, dense linear algebra).
 

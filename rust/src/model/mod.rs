@@ -156,6 +156,55 @@ impl Model {
         Ok(Model::new(cfg, params))
     }
 
+    /// Random-weight model for a config (benchmarks and demos: weight
+    /// values don't affect decode throughput). Covers every [`Arch`]
+    /// variant, including MoE routers and NonLlama positional/bias
+    /// parameters.
+    pub fn random(cfg: ModelConfig, seed: u64) -> Model {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(seed);
+        let mut params = Params::new();
+        let (d, ff) = (cfg.d_model, cfg.d_ff);
+        let mut dense = |m: usize, n: usize, rng: &mut Pcg64| {
+            Tensor::new(vec![m, n], rng.gaussian_vec(m * n, 1.0 / (n as f32).sqrt()))
+        };
+        let arch = cfg.arch;
+        let norm = |name: &str, params: &mut Params| {
+            params.insert(name.to_string(), Tensor::new(vec![d], vec![1.0; d]));
+            if arch == Arch::NonLlama {
+                params.insert(format!("{name}_bias"), Tensor::new(vec![d], vec![0.0; d]));
+            }
+        };
+        params.insert("embed".into(), dense(cfg.vocab, d, &mut rng));
+        params.insert("lm_head".into(), dense(cfg.vocab, d, &mut rng));
+        if arch == Arch::NonLlama {
+            let pe = rng.gaussian_vec(cfg.ctx * d, 0.02);
+            params.insert("pos_embed".into(), Tensor::new(vec![cfg.ctx, d], pe));
+        }
+        norm("final_norm", &mut params);
+        for i in 0..cfg.n_layers {
+            let p = format!("layers.{i}.");
+            norm(&format!("{p}attn_norm"), &mut params);
+            norm(&format!("{p}mlp_norm"), &mut params);
+            for nm in ["wq", "wk", "wv", "wo"] {
+                params.insert(format!("{p}{nm}"), dense(d, d, &mut rng));
+            }
+            if arch == Arch::Moe {
+                params.insert(format!("{p}router"), dense(cfg.n_experts, d, &mut rng));
+                for e in 0..cfg.n_experts {
+                    params.insert(format!("{p}w_gate.{e}"), dense(ff, d, &mut rng));
+                    params.insert(format!("{p}w_up.{e}"), dense(ff, d, &mut rng));
+                    params.insert(format!("{p}w_down.{e}"), dense(d, ff, &mut rng));
+                }
+            } else {
+                params.insert(format!("{p}w_gate"), dense(ff, d, &mut rng));
+                params.insert(format!("{p}w_up"), dense(ff, d, &mut rng));
+                params.insert(format!("{p}w_down"), dense(d, ff, &mut rng));
+            }
+        }
+        Model::new(cfg, params)
+    }
+
     pub fn p(&self, name: &str) -> &Tensor {
         self.params
             .get(name)
@@ -362,9 +411,11 @@ impl Model {
 #[cfg(test)]
 pub mod tests_support {
     use super::*;
-    use crate::util::rng::Pcg64;
 
     pub fn tiny_model(seed: u64) -> Model {
+        // Delegates to Model::random, which draws the identical parameter
+        // sequence for a Llama config (same init scale, same RNG order) —
+        // seed-sensitive test expectations are unchanged.
         let cfg = ModelConfig {
             name: "tiny".into(),
             d_model: 32,
@@ -376,28 +427,7 @@ pub mod tests_support {
             arch: Arch::Llama,
             n_experts: 2,
         };
-        let mut rng = Pcg64::new(seed);
-        let mut params = Params::new();
-        let d = cfg.d_model;
-        let ff = cfg.d_ff;
-        let mut dense = |m: usize, n: usize, rng: &mut Pcg64| {
-            Tensor::new(vec![m, n], rng.gaussian_vec(m * n, 1.0 / (n as f32).sqrt()))
-        };
-        params.insert("embed".into(), dense(cfg.vocab, d, &mut rng));
-        params.insert("lm_head".into(), dense(cfg.vocab, d, &mut rng));
-        params.insert("final_norm".into(), Tensor::new(vec![d], vec![1.0; d]));
-        for i in 0..cfg.n_layers {
-            let p = format!("layers.{i}.");
-            params.insert(format!("{p}attn_norm"), Tensor::new(vec![d], vec![1.0; d]));
-            params.insert(format!("{p}mlp_norm"), Tensor::new(vec![d], vec![1.0; d]));
-            for nm in ["wq", "wk", "wv", "wo"] {
-                params.insert(format!("{p}{nm}"), dense(d, d, &mut rng));
-            }
-            params.insert(format!("{p}w_gate"), dense(ff, d, &mut rng));
-            params.insert(format!("{p}w_up"), dense(ff, d, &mut rng));
-            params.insert(format!("{p}w_down"), dense(d, ff, &mut rng));
-        }
-        Model::new(cfg, params)
+        Model::random(cfg, seed)
     }
 }
 
@@ -446,6 +476,17 @@ mod tests {
             assert!(c.0.contains(&name), "hook missed {name}");
         }
         assert!(c.0.contains("lm_head"));
+    }
+
+    #[test]
+    fn random_model_every_arch_forwards() {
+        for size in ["s", "moe", "nonllama"] {
+            let cfg = ModelConfig::by_name(size).unwrap();
+            let m = Model::random(cfg, 1);
+            let logits = m.forward(&[1, 2, 3, 4], &mut NoHook);
+            assert_eq!(logits.len(), 4 * m.cfg.vocab, "{size}");
+            assert!(logits.iter().all(|v| v.is_finite()), "{size}");
+        }
     }
 
     #[test]

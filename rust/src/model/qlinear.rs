@@ -7,6 +7,15 @@
 //! f32 here — still L1-resident) plus branch-free sign/parity/shift bit
 //! arithmetic. Memory traffic per row is 2 bytes/weight at 2 bits —
 //! the memory-bound decode throughput Table 5/6 measure.
+//!
+//! The kernel is *batch-native*: `matmul` decodes each codeword exactly
+//! once per step and multiplies it against all B right-hand sides, so the
+//! memory-bound decode cost is amortized 1/B per sequence (`matvec` is
+//! the B = 1 special case). The codeword payload is held behind an `Arc`
+//! and the decode tables behind a process-wide shared handle, so building
+//! a generator over a packed model copies no weight data.
+
+use std::sync::{Arc, OnceLock};
 
 use crate::linalg::hadamard::fwht_f32;
 use crate::quant::codebook::e8p::E8P;
@@ -20,6 +29,8 @@ pub struct E8PTables {
     pub parity: [u8; 256],
 }
 
+static SHARED_TABLES: OnceLock<E8PTables> = OnceLock::new();
+
 impl E8PTables {
     pub fn new() -> Self {
         let cb = E8P::new();
@@ -29,6 +40,13 @@ impl E8PTables {
             parity[i] = p;
         }
         E8PTables { abs, parity }
+    }
+
+    /// Process-wide shared tables: the 8 KiB LUT is identical for every
+    /// layer, so every `QuantMatvec` borrows one copy instead of building
+    /// its own.
+    pub fn shared() -> &'static E8PTables {
+        SHARED_TABLES.get_or_init(E8PTables::new)
     }
 }
 
@@ -58,16 +76,21 @@ pub fn decode8(tables: &E8PTables, code: u16, out: &mut [f32]) {
     }
 }
 
+/// Batch lanes processed per decode: codewords are decoded once per tile,
+/// so any batch up to this width pays exactly one decode per codeword.
+pub const BATCH_TILE: usize = 16;
+
 /// A packed E8P weight matrix ready for the serving hot path.
 pub struct QuantMatvec {
     pub m: usize,
     pub n: usize,
-    /// Per-stage codes (m × n/8), row-major.
-    pub stage_codes: Vec<Vec<u16>>,
+    /// Per-stage codes (m × n/8), row-major — shared with the packed
+    /// layer, not copied.
+    pub stage_codes: Arc<Vec<Vec<u16>>>,
     pub stage_scales: Vec<f32>,
     pub su: Vec<f32>,
     pub sv: Vec<f32>,
-    pub tables: E8PTables,
+    pub tables: &'static E8PTables,
 }
 
 impl QuantMatvec {
@@ -79,75 +102,161 @@ impl QuantMatvec {
             stage_scales: p.stage_scales.clone(),
             su: p.su.clone(),
             sv: p.sv.clone(),
-            tables: E8PTables::new(),
+            tables: E8PTables::shared(),
         }
     }
 
     /// Bytes of quantized weights streamed per matvec (the memory-bound
-    /// cost Table 5 normalizes against).
+    /// cost Table 5 normalizes against). A batched step streams the same
+    /// bytes once for the whole batch.
     pub fn bytes_per_matvec(&self) -> u64 {
         (self.stage_codes.len() * self.m * (self.n / 8) * 2) as u64
     }
 
-    /// y = Ŵ_eff · x, with the RHT applied on both sides. Requires m, n
-    /// powers of two (pure-FWHT fast path; the serving models satisfy
-    /// this; d = 384 models route through the generic path in
-    /// `pipeline::QuantizedLinear::w_eff`).
+    /// y = Ŵ_eff · x, with the RHT applied on both sides — the B = 1
+    /// special case of [`QuantMatvec::matmul`].
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), self.n);
-        assert_eq!(y.len(), self.m);
+        self.matmul(x, 1, y);
+    }
+
+    /// Batched fused decode: ys_b = Ŵ_eff · xs_b for all B right-hand
+    /// sides, decoding each codeword once per step. `xs` and `ys` are
+    /// sequence-major (sequence b occupies `xs[b·n..(b+1)·n]` and
+    /// `ys[b·m..(b+1)·m]`). Requires m, n powers of two (pure-FWHT fast
+    /// path; the serving models satisfy this; d = 384 models route
+    /// through the generic path in `pipeline::QuantizedLinear::w_eff`).
+    pub fn matmul(&self, xs: &[f32], batch: usize, ys: &mut [f32]) {
+        assert!(batch > 0);
+        assert_eq!(xs.len(), batch * self.n);
+        assert_eq!(ys.len(), batch * self.m);
         assert!(self.n.is_power_of_two() && self.m.is_power_of_two());
-        // u = H_n (s_v ⊙ x) / sqrt(n)
-        let mut u = vec![0.0f32; self.n];
-        for (ui, (&xi, &si)) in u.iter_mut().zip(x.iter().zip(&self.sv)) {
-            *ui = xi * si;
-        }
-        fwht_f32(&mut u);
         let inv_sqrt_n = 1.0 / (self.n as f32).sqrt();
-        for v in u.iter_mut() {
-            *v *= inv_sqrt_n;
-        }
-        // z = Σ_s scale_s · Ŵ_s u — fused decode+dot, parallel over rows.
-        self.matvec_tilde(&u, y);
-        // y = s_u ⊙ H_mᵀ z / sqrt(m)
-        fwht_f32(y);
         let inv_sqrt_m = 1.0 / (self.m as f32).sqrt();
-        for (yv, &su) in y.iter_mut().zip(&self.su) {
-            *yv *= inv_sqrt_m * su;
+        if batch == 1 {
+            // B = 1 fast path: the interleaved layouts coincide with the
+            // plain vector layouts, so transform in place into `ys` with
+            // one scratch allocation (the decode_one / Table 5 hot path).
+            let mut u = vec![0.0f32; self.n];
+            for ((s, &xv), &sv) in u.iter_mut().zip(xs).zip(&self.sv) {
+                *s = xv * sv;
+            }
+            fwht_f32(&mut u);
+            for v in u.iter_mut() {
+                *v *= inv_sqrt_n;
+            }
+            self.matmul_tilde(&u, 1, ys);
+            fwht_f32(ys);
+            for (yv, &su) in ys.iter_mut().zip(&self.su) {
+                *yv *= inv_sqrt_m * su;
+            }
+            return;
+        }
+        // u_b = H_n (s_v ⊙ x_b) / sqrt(n), per sequence, scattered into an
+        // n × batch interleaved layout so the decode kernel's inner loop
+        // is stride-1 across batch lanes.
+        let mut ut = vec![0.0f32; batch * self.n];
+        let mut scratch = vec![0.0f32; self.n];
+        for b in 0..batch {
+            let x = &xs[b * self.n..(b + 1) * self.n];
+            for ((s, &xv), &sv) in scratch.iter_mut().zip(x).zip(&self.sv) {
+                *s = xv * sv;
+            }
+            fwht_f32(&mut scratch);
+            for (j, &v) in scratch.iter().enumerate() {
+                ut[j * batch + b] = v * inv_sqrt_n;
+            }
+        }
+        // z = Σ_s scale_s · Ŵ_s u — fused decode-once/multiply-many.
+        let mut z = vec![0.0f32; batch * self.m];
+        self.matmul_tilde(&ut, batch, &mut z);
+        // y_b = s_u ⊙ H_mᵀ z_b / sqrt(m), per sequence.
+        for b in 0..batch {
+            let y = &mut ys[b * self.m..(b + 1) * self.m];
+            for (i, yv) in y.iter_mut().enumerate() {
+                *yv = z[i * batch + b];
+            }
+            fwht_f32(y);
+            for (yv, &su) in y.iter_mut().zip(&self.su) {
+                *yv *= inv_sqrt_m * su;
+            }
         }
     }
 
-    /// z = Σ_s scale_s · Ŵ_s u (processed domain, no RHT) — the pure
-    /// decode+GEMV kernel the §6.3 benchmark times.
+    /// z = Σ_s scale_s · Ŵ_s u (processed domain, no RHT) — the B = 1
+    /// special case of [`QuantMatvec::matmul_tilde`].
     pub fn matvec_tilde(&self, u: &[f32], z: &mut [f32]) {
+        self.matmul_tilde(u, 1, z);
+    }
+
+    /// Batched pure decode+GEMM kernel (the §6.3 benchmark's inner loop):
+    /// `ut` is n × batch interleaved (`ut[j·batch + b]` = coordinate j of
+    /// sequence b), `z` is m × batch interleaved. Each 16-bit codeword is
+    /// decoded once per [`BATCH_TILE`]-lane tile and accumulated against
+    /// every lane, so at serving batch sizes (≤ 16) the 2-bytes/weight
+    /// code stream is read exactly once per step.
+    pub fn matmul_tilde(&self, ut: &[f32], batch: usize, z: &mut [f32]) {
+        assert_eq!(ut.len(), batch * self.n);
+        assert_eq!(z.len(), batch * self.m);
         let nb = self.n / 8;
-        let tables = &self.tables;
+        let tables = self.tables;
         let stages: Vec<(&[u16], f32)> = self
             .stage_codes
             .iter()
             .map(|c| c.as_slice())
             .zip(self.stage_scales.iter().copied())
             .collect();
-        // ~n flops per output row (decode + dot); serial below the
+        // ~n·B flops per output row (decode + B dots); serial below the
         // spawn-amortization threshold.
-        threadpool::par_rows_work(z, 1, self.n * self.stage_codes.len(), |i, zi| {
-            let mut acc_total = 0.0f32;
+        let work = self.n * stages.len() * batch;
+        if batch == 1 {
+            // Single-lane kernel (decode_one hot path). Accumulation
+            // order matches the tiled path at bw = 1, keeping batched
+            // and sequential decode bit-identical.
+            threadpool::par_rows_work(z, 1, work, |i, zi| {
+                zi[0] = 0.0;
+                for (codes, scale) in &stages {
+                    let row = &codes[i * nb..(i + 1) * nb];
+                    let mut acc = 0.0f32;
+                    let mut dec = [0.0f32; 8];
+                    for (kb, &code) in row.iter().enumerate() {
+                        decode8(tables, code, &mut dec);
+                        let ub = &ut[kb * 8..kb * 8 + 8];
+                        for j in 0..8 {
+                            acc += dec[j] * ub[j];
+                        }
+                    }
+                    zi[0] += acc * scale;
+                }
+            });
+            return;
+        }
+        threadpool::par_rows_work(z, batch, work, |i, zrow| {
+            for zv in zrow.iter_mut() {
+                *zv = 0.0;
+            }
             for (codes, scale) in &stages {
                 let row = &codes[i * nb..(i + 1) * nb];
-                let mut dec = [0.0f32; 8];
-                let mut acc = 0.0f32;
-                for (b, &code) in row.iter().enumerate() {
-                    decode8(tables, code, &mut dec);
-                    let ub = &u[b * 8..b * 8 + 8];
-                    let mut s = 0.0f32;
-                    for j in 0..8 {
-                        s += dec[j] * ub[j];
+                let mut b0 = 0;
+                while b0 < batch {
+                    let bw = (batch - b0).min(BATCH_TILE);
+                    let mut acc = [0.0f32; BATCH_TILE];
+                    let mut dec = [0.0f32; 8];
+                    for (kb, &code) in row.iter().enumerate() {
+                        decode8(tables, code, &mut dec);
+                        let base = kb * 8 * batch + b0;
+                        for (j, &w) in dec.iter().enumerate() {
+                            let urow = &ut[base + j * batch..base + j * batch + bw];
+                            for (a, &u) in acc[..bw].iter_mut().zip(urow) {
+                                *a += w * u;
+                            }
+                        }
                     }
-                    acc += s;
+                    for (zv, &a) in zrow[b0..b0 + bw].iter_mut().zip(&acc[..bw]) {
+                        *zv += a * scale;
+                    }
+                    b0 += bw;
                 }
-                acc_total += acc * scale;
             }
-            zi[0] = acc_total;
         });
     }
 }
@@ -163,6 +272,36 @@ pub fn dense_matvec(w: &[f32], x: &[f32], _m: usize, n: usize, y: &mut [f32]) {
         }
         yi[0] = acc;
     });
+}
+
+/// Batched dense baseline: each weight row is streamed once per step and
+/// dotted against all B inputs. `xs`/`ys` are sequence-major, matching
+/// [`QuantMatvec::matmul`].
+pub fn dense_matmul(w: &[f32], xs: &[f32], m: usize, n: usize, batch: usize, ys: &mut [f32]) {
+    assert!(batch > 0);
+    assert_eq!(xs.len(), batch * n);
+    assert_eq!(ys.len(), batch * m);
+    if batch == 1 {
+        dense_matvec(w, xs, m, n, ys);
+        return;
+    }
+    let mut z = vec![0.0f32; m * batch];
+    threadpool::par_rows_work(&mut z, batch, n * batch, |i, zrow| {
+        let row = &w[i * n..(i + 1) * n];
+        for (b, zv) in zrow.iter_mut().enumerate() {
+            let x = &xs[b * n..(b + 1) * n];
+            let mut acc = 0.0f32;
+            for (a, xv) in row.iter().zip(x) {
+                acc += a * xv;
+            }
+            *zv = acc;
+        }
+    });
+    for b in 0..batch {
+        for i in 0..m {
+            ys[b * m + i] = z[i * batch + b];
+        }
+    }
 }
 
 /// "AQLM-like" matvec: unstructured fp16-class codebook of `k` entries ×
@@ -200,6 +339,45 @@ impl BigCodebookMatvec {
             }
             yi[0] = acc;
         });
+    }
+
+    /// Batched variant (Table 6 comparison stays apples-to-apples with the
+    /// batch-native E8P kernel): each codebook entry is gathered once per
+    /// row block and multiplied against all B inputs — but the 2 MiB table
+    /// still spills L1/L2, which is the failure mode Table 6 measures.
+    pub fn matmul(&self, xs: &[f32], batch: usize, ys: &mut [f32]) {
+        assert!(batch > 0);
+        assert_eq!(xs.len(), batch * self.n);
+        assert_eq!(ys.len(), batch * self.m);
+        if batch == 1 {
+            self.matvec(xs, ys);
+            return;
+        }
+        let nb = self.n / 8;
+        let n = self.n;
+        let mut z = vec![0.0f32; self.m * batch];
+        threadpool::par_rows_work(&mut z, batch, self.n * batch, |i, zrow| {
+            let row = &self.codes[i * nb..(i + 1) * nb];
+            for zv in zrow.iter_mut() {
+                *zv = 0.0;
+            }
+            for (kb, &code) in row.iter().enumerate() {
+                let entry = &self.table[code as usize * 8..code as usize * 8 + 8];
+                for (b, zv) in zrow.iter_mut().enumerate() {
+                    let xb = &xs[b * n + kb * 8..b * n + kb * 8 + 8];
+                    let mut s = 0.0f32;
+                    for j in 0..8 {
+                        s += entry[j] * xb[j];
+                    }
+                    *zv += s;
+                }
+            }
+        });
+        for b in 0..batch {
+            for i in 0..self.m {
+                ys[b * self.m + i] = z[i * batch + b];
+            }
+        }
     }
 }
 
@@ -269,6 +447,87 @@ mod tests {
         for (a, b) in y_fast.iter().zip(&y_dense) {
             assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn batched_matmul_matches_looped_matvec_exactly() {
+        // decode-once/multiply-many must be bit-identical to B independent
+        // matvec calls: each lane's accumulation order is the same.
+        let mut rng = Pcg64::new(5);
+        let (m, n) = (32usize, 64usize);
+        let w = Matrix::gaussian(m, n, 0.05, &mut rng);
+        let h = random_spd(n, 0.1, &mut rng);
+        let ql = quantize_matrix(&Method::QuipSharp { bits: 4, ft: false }, &w, &h, 3).unwrap();
+        let qm = QuantMatvec::from_packed(m, n, ql.packed.as_ref().unwrap());
+        for &batch in &[1usize, 2, 5, 8] {
+            let xs: Vec<f32> = rng.gaussian_vec(batch * n, 1.0);
+            let mut ys = vec![0.0f32; batch * m];
+            qm.matmul(&xs, batch, &mut ys);
+            for b in 0..batch {
+                let mut y1 = vec![0.0f32; m];
+                qm.matvec(&xs[b * n..(b + 1) * n], &mut y1);
+                for (i, (a, bb)) in ys[b * m..(b + 1) * m].iter().zip(&y1).enumerate() {
+                    assert!(
+                        a.to_bits() == bb.to_bits(),
+                        "batch {batch} lane {b} row {i}: {a} vs {bb}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_matmul_matches_looped_matvec() {
+        let mut rng = Pcg64::new(6);
+        let (m, n) = (24usize, 48usize);
+        let w: Vec<f32> = rng.gaussian_vec(m * n, 0.1);
+        for &batch in &[1usize, 3, 8] {
+            let xs: Vec<f32> = rng.gaussian_vec(batch * n, 1.0);
+            let mut ys = vec![0.0f32; batch * m];
+            dense_matmul(&w, &xs, m, n, batch, &mut ys);
+            for b in 0..batch {
+                let mut y1 = vec![0.0f32; m];
+                dense_matvec(&w, &xs[b * n..(b + 1) * n], m, n, &mut y1);
+                for (a, bb) in ys[b * m..(b + 1) * m].iter().zip(&y1) {
+                    assert!((a - bb).abs() < 1e-5, "{a} vs {bb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn big_codebook_matmul_matches_looped() {
+        let (m, n) = (16usize, 32usize);
+        let big = BigCodebookMatvec::random(m, n, 1 << 10, 3);
+        let mut rng = Pcg64::new(7);
+        for &batch in &[1usize, 4] {
+            let xs: Vec<f32> = rng.gaussian_vec(batch * n, 1.0);
+            let mut ys = vec![0.0f32; batch * m];
+            big.matmul(&xs, batch, &mut ys);
+            for b in 0..batch {
+                let mut y1 = vec![0.0f32; m];
+                big.matvec(&xs[b * n..(b + 1) * n], &mut y1);
+                for (a, bb) in ys[b * m..(b + 1) * m].iter().zip(&y1) {
+                    assert!((a - bb).abs() < 1e-5, "{a} vs {bb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tables_are_shared_and_codes_not_cloned() {
+        let mut rng = Pcg64::new(4);
+        let (m, n) = (16usize, 32usize);
+        let w = Matrix::gaussian(m, n, 0.05, &mut rng);
+        let h = random_spd(n, 0.1, &mut rng);
+        let ql = quantize_matrix(&Method::QuipSharp { bits: 2, ft: false }, &w, &h, 3).unwrap();
+        let p = ql.packed.as_ref().unwrap();
+        let a = QuantMatvec::from_packed(m, n, p);
+        let b = QuantMatvec::from_packed(m, n, p);
+        assert!(std::ptr::eq(a.tables, b.tables), "decode tables not shared");
+        let shared = Arc::ptr_eq(&a.stage_codes, &p.stage_codes)
+            && Arc::ptr_eq(&a.stage_codes, &b.stage_codes);
+        assert!(shared, "codes deep-cloned instead of Arc-shared");
     }
 
     #[test]

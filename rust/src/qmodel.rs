@@ -39,6 +39,24 @@ impl QuantizedModel {
         s / self.layers.len().max(1) as f64
     }
 
+    /// Fused-decode generator over this model's packed layers — the
+    /// batch-native serving entry point. Packed codewords are shared by
+    /// `Arc`, so building a generator copies no weight payload.
+    pub fn generator(&self) -> crate::generation::Generator<'_> {
+        crate::generation::Generator::quantized(&self.model, self)
+    }
+
+    /// Total packed-codeword bytes across layers (the per-step weight
+    /// stream of a fully batched decode; dense fallback layers excluded).
+    pub fn packed_code_bytes(&self) -> u64 {
+        self.layers
+            .values()
+            .filter_map(|ql| ql.packed.as_ref())
+            .flat_map(|p| p.stage_codes.iter())
+            .map(|codes| (codes.len() * 2) as u64)
+            .sum()
+    }
+
     /// Re-materialize every layer's dense effective weight into the model
     /// (after fine-tuning mutates sign vectors).
     pub fn refresh(&mut self) {
@@ -105,6 +123,11 @@ mod tests {
         assert!(ppl_q < ppl_fp * 3.0, "fp {ppl_fp} vs q {ppl_q}");
         let bits = qm.avg_bits();
         assert!(bits > 4.0 && bits < 4.5, "avg bits {bits}");
+        // 4-bit E8P = two 2-byte code stages per 8 weights → n_w / 2 bytes.
+        let n_w: usize = qm.layers.values().map(|l| l.m * l.n).sum();
+        assert_eq!(qm.packed_code_bytes(), (n_w / 2) as u64);
+        // The generator convenience wires every packed layer in.
+        assert_eq!(qm.generator().qlayers.len(), qm.layers.len());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use super::scales::{optimal_rho, rvq_stage_scales};
 use crate::linalg::Matrix;
 use crate::util::rng::Pcg64;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Every quantization method the experiment tables exercise.
 #[derive(Clone, Debug, PartialEq)]
@@ -104,8 +105,10 @@ pub struct QuantStats {
 /// and the AOT artifacts consume).
 #[derive(Clone, Debug)]
 pub struct PackedE8P {
-    /// Per-stage 16-bit codewords, each stage m×(n/8) row-major.
-    pub stage_codes: Vec<Vec<u16>>,
+    /// Per-stage 16-bit codewords, each stage m×(n/8) row-major. Held by
+    /// `Arc` so the serving hot path (`QuantMatvec::from_packed`) shares
+    /// the payload instead of deep-cloning it per layer.
+    pub stage_codes: Arc<Vec<Vec<u16>>>,
     /// Per-stage global scale (σ_w · ρ · stage multiplier).
     pub stage_scales: Vec<f32>,
     /// RHT sign vectors (±1, or real after fine-tuning).
@@ -256,7 +259,7 @@ fn quantize_incoherent(
             .map(|s| s.iter().map(|&v| v as f32).collect())
             .unwrap_or_default();
         Some(PackedE8P {
-            stage_codes,
+            stage_codes: Arc::new(stage_codes),
             stage_scales: muls.iter().map(|&s| (s * scale) as f32).collect(),
             su,
             sv,

@@ -4,9 +4,16 @@
 //!
 //! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax ≥ 0.5
 //! serialized protos with 64-bit ids — see /opt/xla-example/README.md).
+//!
+//! The `xla` bindings are an offline crate that is not always present;
+//! the execution path is gated behind the `pjrt` cargo feature. Without
+//! it, manifest parsing and [`HostTensor`] stay available (the native
+//! engine and every test that cross-checks against PJRT artifacts skips
+//! cleanly), and [`Runtime::new`] returns a descriptive error.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
@@ -134,6 +141,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         Ok(match self {
             HostTensor::F32(shape, data) => {
@@ -147,6 +155,7 @@ impl HostTensor {
         })
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<HostTensor> {
         Ok(match spec.dtype {
             ArtDtype::F32 => HostTensor::F32(spec.shape.clone(), lit.to_vec::<f32>()?),
@@ -159,11 +168,14 @@ impl HostTensor {
 pub struct Runtime {
     pub art_dir: PathBuf,
     pub manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     compiled: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
+    #[cfg(feature = "pjrt")]
     pub fn new(art_dir: impl AsRef<Path>) -> Result<Runtime> {
         let manifest = Manifest::load(&art_dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
@@ -175,10 +187,28 @@ impl Runtime {
         })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn new(art_dir: impl AsRef<Path>) -> Result<Runtime> {
+        // Validate the manifest so error messages stay useful, then refuse:
+        // without the offline xla crate there is nothing to execute with.
+        let _ = Manifest::load(&art_dir)?;
+        bail!(
+            "PJRT runtime disabled: rebuild with `--features pjrt` (and the \
+             offline xla crate in [dependencies]) to execute AOT artifacts"
+        )
+    }
+
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "disabled (built without the pjrt feature)".to_string()
+    }
+
+    #[cfg(feature = "pjrt")]
     fn get_exe(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         {
             let cache = self.compiled.lock().unwrap();
@@ -212,6 +242,15 @@ impl Runtime {
     /// Execute an artifact with host tensors, checking shapes against the
     /// manifest, and return the (untupled) outputs.
     pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.execute_ref(name, &refs)
+    }
+
+    /// [`Runtime::execute`] over borrowed inputs. The batched decode loop
+    /// calls this every step with the same fixed weight tensors, so the
+    /// host-side copy of the weights is never cloned per step.
+    #[cfg(feature = "pjrt")]
+    pub fn execute_ref(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let spec = self
             .manifest
             .artifacts
@@ -255,6 +294,11 @@ impl Runtime {
             .map(|(lit, os)| HostTensor::from_literal(lit, os))
             .collect()
     }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute_ref(&self, _name: &str, _inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        bail!("PJRT runtime disabled: rebuild with `--features pjrt`")
+    }
 }
 
 #[cfg(test)]
@@ -286,5 +330,16 @@ mod tests {
         assert!(t.as_f32().is_ok());
         assert!(t.as_i32().is_err());
         assert_eq!(t.shape(), &[2]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn runtime_disabled_without_pjrt_feature() {
+        let dir = std::env::temp_dir().join(format!("rtd_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts":{}}"#).unwrap();
+        let err = Runtime::new(&dir).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,5 +1,6 @@
-//! Serving metrics: throughput and latency counters, exported as JSON
-//! through the `stats` API command.
+//! Serving metrics: throughput, latency, batch-occupancy and
+//! decode-bytes-amortization counters, exported as JSON through the
+//! `stats` API command.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -14,6 +15,15 @@ pub struct Metrics {
     pub tokens_generated: AtomicU64,
     pub decode_steps: AtomicU64,
     pub batched_sequences: AtomicU64,
+    /// Prompt tokens consumed by chunked prefill.
+    pub prefill_tokens: AtomicU64,
+    /// Largest batch observed in a single decode step.
+    pub peak_batch: AtomicU64,
+    /// Weight bytes actually streamed by the decode-once batched kernel.
+    weight_bytes_streamed: AtomicU64,
+    /// Weight bytes the same steps would stream decoding one sequence at
+    /// a time (batch × bytes/step).
+    weight_bytes_logical: AtomicU64,
     latencies_ms: Mutex<Vec<f64>>,
 }
 
@@ -31,6 +41,10 @@ impl Metrics {
             tokens_generated: AtomicU64::new(0),
             decode_steps: AtomicU64::new(0),
             batched_sequences: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
+            peak_batch: AtomicU64::new(0),
+            weight_bytes_streamed: AtomicU64::new(0),
+            weight_bytes_logical: AtomicU64::new(0),
             latencies_ms: Mutex::new(Vec::new()),
         }
     }
@@ -46,6 +60,23 @@ impl Metrics {
         self.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.batched_sequences
             .fetch_add(batch as u64, Ordering::Relaxed);
+        self.peak_batch.fetch_max(batch as u64, Ordering::Relaxed);
+    }
+
+    /// Prompt tokens consumed this step by sequences still in prefill.
+    pub fn record_prefill(&self, tokens: usize) {
+        self.prefill_tokens
+            .fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    /// Weight-traffic accounting for one batched decode step: `streamed`
+    /// is what the decode-once kernel read, `logical` what B independent
+    /// sequence decodes would have read.
+    pub fn record_decode_bytes(&self, streamed: u64, logical: u64) {
+        self.weight_bytes_streamed
+            .fetch_add(streamed, Ordering::Relaxed);
+        self.weight_bytes_logical
+            .fetch_add(logical, Ordering::Relaxed);
     }
 
     pub fn tokens_per_sec(&self) -> f64 {
@@ -57,6 +88,17 @@ impl Metrics {
     pub fn mean_batch(&self) -> f64 {
         let steps = self.decode_steps.load(Ordering::Relaxed).max(1) as f64;
         self.batched_sequences.load(Ordering::Relaxed) as f64 / steps
+    }
+
+    /// Decode-bytes amortization ratio: logical bytes over streamed bytes.
+    /// Equals the mean batch size when every step is fully batch-native;
+    /// 1.0 for a sequence-at-a-time decode loop.
+    pub fn bytes_amortization(&self) -> f64 {
+        let s = self.weight_bytes_streamed.load(Ordering::Relaxed);
+        if s == 0 {
+            return 1.0;
+        }
+        self.weight_bytes_logical.load(Ordering::Relaxed) as f64 / s as f64
     }
 
     pub fn snapshot(&self) -> Json {
@@ -80,6 +122,15 @@ impl Metrics {
             ),
             ("tok_per_sec", Json::num(self.tokens_per_sec())),
             ("mean_batch", Json::num(self.mean_batch())),
+            (
+                "peak_batch",
+                Json::num(self.peak_batch.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "prefill_tokens",
+                Json::num(self.prefill_tokens.load(Ordering::Relaxed) as f64),
+            ),
+            ("bytes_amortization", Json::num(self.bytes_amortization())),
             ("p50_ms", Json::num(pct(0.5))),
             ("p99_ms", Json::num(pct(0.99))),
             ("uptime_sec", Json::num(self.start.elapsed().as_secs_f64())),
@@ -102,6 +153,20 @@ mod tests {
         assert_eq!(s.get("requests").as_f64(), Some(2.0));
         assert_eq!(s.get("tokens").as_f64(), Some(30.0));
         assert_eq!(s.get("mean_batch").as_f64(), Some(3.0));
+        assert_eq!(s.get("peak_batch").as_f64(), Some(4.0));
         assert!(s.get("p50_ms").as_f64().unwrap() >= 5.0);
+    }
+
+    #[test]
+    fn amortization_tracks_batch() {
+        let m = Metrics::new();
+        // No traffic recorded yet → neutral ratio.
+        assert_eq!(m.bytes_amortization(), 1.0);
+        // Two steps at batch 4 and 2 over the same 100-byte weights.
+        m.record_decode_bytes(100, 400);
+        m.record_decode_bytes(100, 200);
+        assert!((m.bytes_amortization() - 3.0).abs() < 1e-12);
+        m.record_prefill(5);
+        assert_eq!(m.prefill_tokens.load(Ordering::Relaxed), 5);
     }
 }

@@ -4,9 +4,11 @@
 //! The paper's thesis (§6.3) is that QuIP# makes *memory-bound decoding*
 //! faster; this engine is where that shows up end-to-end. Two backends:
 //!
-//! * `native` — the Rust hot path (fused E8P decode matvec / dense f32),
-//!   per-sequence KV caches, continuous batching at step granularity with
-//!   sequence-parallel decode.
+//! * `native` — the Rust hot path (fused E8P decode / dense f32), lazily
+//!   grown per-sequence KV caches, continuous batching at step granularity
+//!   with *batch-native* decode: one `decode_batch` call per step decodes
+//!   each packed codeword once and multiplies it against every active
+//!   sequence, and freshly admitted prompts prefill in chunked slices.
 //! * `pjrt` — the AOT JAX/Pallas artifacts executed through the PJRT
 //!   runtime (lockstep batch; demonstrates the three-layer path).
 

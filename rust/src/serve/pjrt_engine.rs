@@ -156,12 +156,18 @@ impl<'a> PjrtBatchEngine<'a> {
             .collect();
         let mut last_logits: Vec<f32> = Vec::new();
         for step in 0..plen + max_new - 1 {
-            let mut inputs = self.fixed.clone();
-            inputs.push(HostTensor::I32(vec![b], tokens.clone()));
-            inputs.push(HostTensor::I32(vec![], vec![step as i32]));
-            inputs.push(HostTensor::F32(kv_shape.clone(), kv_k));
-            inputs.push(HostTensor::F32(kv_shape.clone(), kv_v));
-            let mut result = self.rt.execute(&self.artifact, &inputs)?;
+            // Fixed inputs (weights / packed codes) are passed by
+            // reference — the decode loop never clones them per step.
+            let token_t = HostTensor::I32(vec![b], tokens.clone());
+            let pos_t = HostTensor::I32(vec![], vec![step as i32]);
+            let kv_k_t = HostTensor::F32(kv_shape.clone(), kv_k);
+            let kv_v_t = HostTensor::F32(kv_shape.clone(), kv_v);
+            let mut inputs: Vec<&HostTensor> = self.fixed.iter().collect();
+            inputs.push(&token_t);
+            inputs.push(&pos_t);
+            inputs.push(&kv_k_t);
+            inputs.push(&kv_v_t);
+            let mut result = self.rt.execute_ref(&self.artifact, &inputs)?;
             // outputs: logits (B,V), kv_k', kv_v'
             let kv_v_out = result.pop().context("kv_v")?;
             let kv_k_out = result.pop().context("kv_k")?;
