@@ -4,7 +4,7 @@
 # and formatting. The PJRT path needs the offline xla crate and is off
 # by default (see Cargo.toml's `pjrt` feature).
 
-.PHONY: verify build test fmt bench-batch artifacts
+.PHONY: verify build test fmt lint bench-batch bench-serve artifacts
 
 verify:
 	cargo build --release
@@ -20,9 +20,19 @@ test:
 fmt:
 	cargo fmt
 
+# Lint gate mirrored by the CI `lint` job.
+lint:
+	cargo fmt --check
+	cargo clippy --all-targets -- -D warnings
+
 # Batch-sweep generation benchmark; writes BENCH_generation.json.
 bench-batch:
 	cargo bench --bench bench_generation
+
+# Serving benches: the batch sweep plus the paged-KV pool-pressure sweep
+# (admitted sequences, preemptions, tok/s under a half-worst-case pool);
+# writes BENCH_generation.json.
+bench-serve: bench-batch
 
 # Trained weights + corpus + AOT HLO artifacts (needs the python/JAX
 # toolchain; see python/compile/aot.py). Integration tests skip cleanly

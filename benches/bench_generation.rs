@@ -8,12 +8,20 @@
 //! call per step, and writes tokens/s, speedup and effective weight
 //! bytes/token to `BENCH_generation.json`.
 //!
-//! Part 2 (requires `make artifacts`): the paper's Table 5 — tok/s and %
+//! Part 2 (always runs): the paged-KV pool-pressure sweep — the engine
+//! with a pool sized for ~half the worst-case batch, driven by more
+//! requests than worst-case-ctx reservation could ever admit at once.
+//! Reports peak concurrently admitted sequences, preemptions, and
+//! tokens/s into the same `BENCH_generation.json`.
+//!
+//! Part 3 (requires `make artifacts`): the paper's Table 5 — tok/s and %
 //! of memory-bandwidth roofline for 2-bit / 4-bit QuIP# vs fp32 on the
 //! trained model family. The paper's shape: 2-bit > 4-bit > fp16 tok/s,
 //! with %-of-roofline growing with model size.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Instant;
 
 use quipsharp::bench::{memcpy_roofline_mt_gbps, Table};
@@ -22,6 +30,7 @@ use quipsharp::generation::{argmax, Generator, KvCache};
 use quipsharp::model::{Model, ModelConfig};
 use quipsharp::qmodel::quantize_model;
 use quipsharp::quant::pipeline::Method;
+use quipsharp::serve::{Engine, EngineRequest, NativeEngine};
 use quipsharp::util::json::Json;
 
 /// Sequence-at-a-time baseline: B independent decode_one loops.
@@ -77,7 +86,7 @@ fn best_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
     (0..reps).map(|_| f()).fold(f64::INFINITY, f64::min)
 }
 
-fn batch_sweep() {
+fn batch_sweep() -> Vec<(&'static str, Json)> {
     println!("== batch sweep: decode-once/multiply-many vs sequence-at-a-time ==");
     println!("(synthetic 's' model, 2-bit QuIP#, greedy decode)\n");
     let model = Model::random(ModelConfig::by_name("s").unwrap(), 11);
@@ -141,17 +150,98 @@ fn batch_sweep() {
     }
     t.print();
     t.write_csv("bench_generation_batch").ok();
-    let out = Json::obj(vec![
+    vec![
         ("model", Json::str("s-synthetic")),
         ("method", Json::str("quip#-2bit")),
         ("decode_steps", Json::num(steps as f64)),
         ("weight_bytes_per_token", Json::num(wbpt)),
         ("b1_loop_tok_per_sec", Json::num(b1_loop_tps)),
         ("sweep", Json::Arr(sweep_rows)),
-    ]);
-    if std::fs::write("BENCH_generation.json", out.emit()).is_ok() {
-        println!("\nwrote BENCH_generation.json");
+    ]
+}
+
+/// Pool-pressure sweep: the paged engine with a KV pool sized for ~half
+/// the worst-case batch. Worst-case-ctx contiguous reservation could
+/// admit only `pool_pages / pages_per_seq` sequences; the paged engine
+/// admits by actual usage and preempts under pressure, so it runs
+/// strictly more concurrently while every request still completes.
+fn pool_pressure() -> Json {
+    println!("\n== pool pressure: paged admission vs worst-case-ctx reservation ==");
+    let model = Model::random(ModelConfig::by_name("s").unwrap(), 12);
+    let qm = Arc::new(
+        quantize_model(
+            &model,
+            &BTreeMap::new(),
+            &Method::QuipSharp { bits: 2, ft: false },
+            7,
+        )
+        .unwrap(),
+    );
+    let model_arc = Arc::new(Model::new(qm.model.cfg.clone(), qm.model.params.clone()));
+    let max_batch = 8usize;
+    let pages_per_seq = quipsharp::generation::paged::pages_per_seq(&model_arc.cfg);
+    // Half the worst-case batch footprint.
+    let pool_pages = max_batch * pages_per_seq / 2;
+    let worst_case_admissible = pool_pages / pages_per_seq;
+    let eng = NativeEngine::start_with_pool(model_arc, Some(qm), max_batch, pool_pages);
+    // Sequences grow to 4 + 140 = 144 rows = 5 pages, so a full batch
+    // outgrows the pool mid-flight and preemption must kick in.
+    let (n_requests, max_new) = (16usize, 140usize);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        rxs.push(eng.submit(EngineRequest {
+            id: i as u64,
+            prompt: vec![(i % 50) as u8, 3, 9, 27],
+            max_new,
+        }));
     }
+    let mut tokens = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        tokens += resp.tokens.len();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = eng.metrics();
+    eng.stop();
+    eng.join();
+    let peak_admitted = m.peak_batch.load(Ordering::Relaxed) as usize;
+    let preemptions = m.preemptions.load(Ordering::Relaxed);
+    let tps = tokens as f64 / dt;
+    let mut t = Table::new(&[
+        "pool pages",
+        "worst-case admits",
+        "peak admitted",
+        "preemptions",
+        "tok/s",
+    ]);
+    t.row(&[
+        format!("{pool_pages}"),
+        format!("{worst_case_admissible}"),
+        format!("{peak_admitted}"),
+        format!("{preemptions}"),
+        format!("{tps:.1}"),
+    ]);
+    t.print();
+    t.write_csv("bench_generation_pool").ok();
+    assert!(
+        peak_admitted > worst_case_admissible,
+        "paged admission ({peak_admitted}) must beat worst-case reservation ({worst_case_admissible})"
+    );
+    Json::obj(vec![
+        ("pool_pages", Json::num(pool_pages as f64)),
+        ("pages_per_seq_worst_case", Json::num(pages_per_seq as f64)),
+        (
+            "worst_case_admissible",
+            Json::num(worst_case_admissible as f64),
+        ),
+        ("peak_admitted", Json::num(peak_admitted as f64)),
+        ("preemptions", Json::num(preemptions as f64)),
+        ("requests", Json::num(n_requests as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        ("tok_per_sec", Json::num(tps)),
+    ])
 }
 
 fn table5() {
@@ -210,6 +300,11 @@ fn table5() {
 }
 
 fn main() {
-    batch_sweep();
+    let mut entries = batch_sweep();
+    entries.push(("pool_pressure", pool_pressure()));
+    let out = Json::obj(entries);
+    if std::fs::write("BENCH_generation.json", out.emit()).is_ok() {
+        println!("\nwrote BENCH_generation.json");
+    }
     table5();
 }

@@ -4,19 +4,29 @@
 //! hot path per linear layer.
 //!
 //! The decode path is batch-native: [`Generator::decode_batch`] advances
-//! B sequences one token in lockstep, running RHT/norm/RoPE/attention
-//! per sequence (each against its own [`KvCache`]) while routing every
-//! linear layer through the decode-once/multiply-many batched kernel in
-//! [`crate::model::qlinear`], so the packed codewords are streamed once
-//! per step instead of once per sequence. [`Generator::decode_one`] is
-//! the batch-1 special case.
+//! B sequences one token in lockstep, routing every linear layer through
+//! the decode-once/multiply-many batched kernel in
+//! [`crate::model::qlinear`] and running one fused blocked attention
+//! pass over the batch ([`paged::blocked_attention`]), so the packed
+//! codewords are streamed once per step instead of once per sequence.
+//! [`Generator::decode_one`] is the batch-1 special case.
+//!
+//! KV storage comes in two layouts behind one decode implementation:
+//! per-sequence contiguous slabs ([`KvCache`], the parity baseline) and
+//! page tables over a shared [`paged::KvPagePool`]
+//! ([`Generator::decode_batch_paged`], the serving path). Both walk
+//! their rows through the same [`paged::PAGE_ROWS`]-blocked attention
+//! routine, so the two layouts produce bit-identical logits.
 
 use std::collections::BTreeMap;
+
+pub mod paged;
 
 use crate::linalg::hadamard::{fwht_f32, HadTransform};
 use crate::model::ops::*;
 use crate::model::qlinear::{dense_matmul, QuantMatvec};
 use crate::model::{Arch, Model};
+use paged::{blocked_attention, KvPagePool, PagedKv, PAGE_ROWS};
 
 /// Apply a scaled orthogonal Hadamard transform to an f32 vector
 /// (pure-FWHT fast path; f64 round-trip for the H_q ⊗ H_p case).
@@ -52,9 +62,10 @@ pub fn had_apply_inverse_f32(t: &HadTransform, x: &mut [f32]) {
     }
 }
 
-/// Per-sequence KV cache. Storage grows lazily in [`KvCache::GROW_ROWS`]
-/// slabs as the sequence lengthens, so admitting a short request never
-/// pays the full `ctx × d_model` per-layer allocation up front.
+/// Per-sequence contiguous KV cache — the parity baseline for the paged
+/// layout. Storage grows lazily in [`KvCache::GROW_ROWS`] slabs as the
+/// sequence lengthens, so admitting a short request never pays the full
+/// `ctx × d_model` per-layer allocation up front.
 pub struct KvCache {
     /// per layer: (grown_len, d) k and v rows.
     pub k: Vec<Vec<f32>>,
@@ -65,8 +76,10 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    /// Token rows added per growth step.
-    pub const GROW_ROWS: usize = 32;
+    /// Token rows added per growth step — equal to the paged layout's
+    /// page size so blocked attention covers identical row ranges in
+    /// both layouts.
+    pub const GROW_ROWS: usize = PAGE_ROWS;
 
     pub fn new(model: &Model) -> Self {
         let l = model.cfg.n_layers;
@@ -98,6 +111,55 @@ impl KvCache {
         }
         self.k[layer][pos * self.d..need].copy_from_slice(kx);
         self.v[layer][pos * self.d..need].copy_from_slice(vx);
+    }
+}
+
+/// KV storage backing one batched decode step: per-sequence contiguous
+/// slabs (the baseline) or page tables over a shared pool (the serving
+/// layout). One decode implementation serves both.
+enum KvBatch<'a, 'b> {
+    Contig(&'a mut [&'b mut KvCache]),
+    Paged {
+        pool: &'a mut KvPagePool,
+        seqs: &'a mut [&'b mut PagedKv],
+    },
+}
+
+impl KvBatch<'_, '_> {
+    fn batch(&self) -> usize {
+        match self {
+            KvBatch::Contig(caches) => caches.len(),
+            KvBatch::Paged { seqs, .. } => seqs.len(),
+        }
+    }
+
+    fn positions(&self) -> Vec<usize> {
+        match self {
+            KvBatch::Contig(caches) => caches.iter().map(|c| c.len).collect(),
+            KvBatch::Paged { seqs, .. } => seqs.iter().map(|s| s.len).collect(),
+        }
+    }
+
+    fn store(&mut self, b: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        match self {
+            KvBatch::Contig(caches) => caches[b].store(layer, pos, k, v),
+            KvBatch::Paged { pool, seqs } => seqs[b].store(pool, layer, pos, k, v),
+        }
+    }
+
+    fn advance(&mut self) {
+        match self {
+            KvBatch::Contig(caches) => {
+                for c in caches.iter_mut() {
+                    c.len += 1;
+                }
+            }
+            KvBatch::Paged { seqs, .. } => {
+                for s in seqs.iter_mut() {
+                    s.len += 1;
+                }
+            }
+        }
     }
 }
 
@@ -194,19 +256,53 @@ impl<'a> Generator<'a> {
         self.decode_batch(&[token], &mut [cache]).pop().unwrap()
     }
 
-    /// Advance every sequence one token in lockstep, returning one logits
-    /// row per sequence. Sequences may sit at different positions: RoPE,
-    /// KV writes and attention run per sequence against each sequence's
-    /// own cache, while every linear layer is applied once for the whole
-    /// batch so each packed codeword is decoded exactly once per step.
+    /// Advance every sequence one token in lockstep against per-sequence
+    /// contiguous caches — the parity baseline layout. See
+    /// [`Generator::decode_batch_paged`] for the pooled layout; both run
+    /// the identical decode implementation.
     pub fn decode_batch(&self, tokens: &[u8], caches: &mut [&mut KvCache]) -> Vec<Vec<f32>> {
+        self.decode_batch_kv(tokens, &mut KvBatch::Contig(caches))
+    }
+
+    /// Advance every sequence one token in lockstep against page tables
+    /// over a shared [`KvPagePool`] — the serving layout. Pages are
+    /// reserved up front for this step; the call panics if the pool is
+    /// exhausted, so schedulers must preempt (release a sequence's pages
+    /// via [`PagedKv::release`]) or size the pool before stepping.
+    /// Bit-exact with [`Generator::decode_batch`] and with sequential
+    /// [`Generator::decode_one`]: every layout runs the same blocked
+    /// attention and decode-once linear kernels in the same order.
+    pub fn decode_batch_paged(
+        &self,
+        tokens: &[u8],
+        pool: &mut KvPagePool,
+        seqs: &mut [&mut PagedKv],
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(tokens.len(), seqs.len());
+        for s in seqs.iter_mut() {
+            let new_len = s.len + 1;
+            assert!(
+                s.reserve(pool, new_len),
+                "KV page pool exhausted ({} pages): preempt a sequence or enlarge the pool",
+                pool.pages_total()
+            );
+        }
+        self.decode_batch_kv(tokens, &mut KvBatch::Paged { pool, seqs })
+    }
+
+    /// The shared decode step over either KV layout. Sequences may sit at
+    /// different positions: RoPE and KV writes run per sequence, every
+    /// linear layer is applied once for the whole batch (each packed
+    /// codeword decoded exactly once per step), and attention runs as one
+    /// fused blocked pass over the batch.
+    fn decode_batch_kv(&self, tokens: &[u8], kvb: &mut KvBatch) -> Vec<Vec<f32>> {
         let bsz = tokens.len();
         assert!(bsz > 0, "empty decode batch");
-        assert_eq!(bsz, caches.len());
+        assert_eq!(bsz, kvb.batch());
         let cfg = &self.model.cfg;
         let (d, heads, hd, ff) = (cfg.d_model, cfg.n_heads, cfg.head_dim(), cfg.d_ff);
         let model = self.model;
-        let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        let positions = kvb.positions();
         for &pos in &positions {
             assert!(pos < cfg.ctx, "KV cache full");
         }
@@ -264,6 +360,8 @@ impl<'a> Generator<'a> {
             self.apply_linear_batch(&format!("{pre}wq"), &h, bsz, &mut q);
             self.apply_linear_batch(&format!("{pre}wk"), &h, bsz, &mut kx);
             self.apply_linear_batch(&format!("{pre}wv"), &h, bsz, &mut vx);
+            // RoPE + KV write per sequence (each against its own page
+            // table or slab).
             for b in 0..bsz {
                 let pos = positions[b];
                 let qb = &mut q[b * d..(b + 1) * d];
@@ -272,34 +370,12 @@ impl<'a> Generator<'a> {
                     rope_apply(qb, heads, hd, pos, &rope_cos, &rope_sin);
                     rope_apply(kb, heads, hd, pos, &rope_cos, &rope_sin);
                 }
-                caches[b].store(layer, pos, kb, &vx[b * d..(b + 1) * d]);
-                // Attention over this sequence's cache[0..=pos].
-                let kc = &caches[b].k[layer];
-                let vc = &caches[b].v[layer];
-                let scale = 1.0 / (hd as f32).sqrt();
-                let attb = &mut att[b * d..(b + 1) * d];
-                for hh in 0..heads {
-                    let qh = &qb[hh * hd..(hh + 1) * hd];
-                    let mut scores = vec![0.0f32; pos + 1];
-                    for t in 0..=pos {
-                        let kt = &kc[t * d + hh * hd..t * d + (hh + 1) * hd];
-                        let mut s = 0.0f32;
-                        for j in 0..hd {
-                            s += qh[j] * kt[j];
-                        }
-                        scores[t] = s * scale;
-                    }
-                    softmax_rows(&mut scores, 1, pos + 1);
-                    let out = &mut attb[hh * hd..(hh + 1) * hd];
-                    out.iter_mut().for_each(|v| *v = 0.0);
-                    for (t, &sc) in scores.iter().enumerate() {
-                        let vt = &vc[t * d + hh * hd..t * d + (hh + 1) * hd];
-                        for j in 0..hd {
-                            out[j] += sc * vt[j];
-                        }
-                    }
-                }
+                kvb.store(b, layer, pos, kb, &vx[b * d..(b + 1) * d]);
             }
+            // Fused batched attention: one blocked (flash-style) pass
+            // over every sequence's KV blocks, sharing the Q/K/V
+            // projections computed above.
+            attend_batch(kvb, layer, &positions, &q, &mut att, heads, hd);
             self.apply_linear_batch(&format!("{pre}wo"), &att, bsz, &mut tmp_d);
             for (xv, &o) in xs.iter_mut().zip(&tmp_d) {
                 *xv += o;
@@ -361,9 +437,7 @@ impl<'a> Generator<'a> {
         let head = model.p("lm_head");
         let mut logits = vec![0.0f32; bsz * cfg.vocab];
         matmul_nt(&h, &head.data, bsz, d, cfg.vocab, &mut logits);
-        for c in caches.iter_mut() {
-            c.len += 1;
-        }
+        kvb.advance();
         logits.chunks(cfg.vocab).map(|r| r.to_vec()).collect()
     }
 
@@ -399,6 +473,48 @@ impl<'a> Generator<'a> {
             logits = self.decode_one(next, &mut cache);
         }
         out
+    }
+}
+
+/// The fused batched attention pass: for each sequence, walk its KV
+/// blocks (pages or slab slices) through the shared flash-style routine.
+/// Both layouts feed [`blocked_attention`] identical row ranges, which is
+/// what keeps paged and contiguous decode bit-identical.
+fn attend_batch(
+    kvb: &KvBatch,
+    layer: usize,
+    positions: &[usize],
+    q: &[f32],
+    att: &mut [f32],
+    heads: usize,
+    hd: usize,
+) {
+    let d = heads * hd;
+    for (b, &pos) in positions.iter().enumerate() {
+        let qb = &q[b * d..(b + 1) * d];
+        let attb = &mut att[b * d..(b + 1) * d];
+        match kvb {
+            KvBatch::Contig(caches) => {
+                let kc = &caches[b].k[layer];
+                let vc = &caches[b].v[layer];
+                blocked_attention(qb, attb, pos, heads, hd, |blk| {
+                    let lo = blk * PAGE_ROWS * d;
+                    let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+                    (&kc[lo..lo + rows * d], &vc[lo..lo + rows * d])
+                });
+            }
+            KvBatch::Paged { pool, seqs } => {
+                let pages = &seqs[b].pages;
+                blocked_attention(qb, attb, pos, heads, hd, |blk| {
+                    let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+                    let page = pages[blk];
+                    (
+                        &pool.k_block(page, layer)[..rows * d],
+                        &pool.v_block(page, layer)[..rows * d],
+                    )
+                });
+            }
+        }
     }
 }
 
@@ -567,6 +683,90 @@ mod tests {
         batch_parity(&gen, 3, None);
     }
 
+    /// Drive B paged sequences of *unequal* lengths against B sequential
+    /// contiguous `decode_one` runs. Prompts are prefilled per sequence
+    /// (so positions diverge), then the batch advances jointly; logits
+    /// must agree at every joint step.
+    fn paged_parity(gen: &Generator, bsz: usize, tol: Option<f32>) {
+        let m = gen.model;
+        let mut pool = KvPagePool::for_model(m, bsz * paged::pages_per_seq(&m.cfg));
+        let prompts: Vec<Vec<u8>> = (0..bsz)
+            .map(|b| {
+                let plen = 2 + (b % 3); // unequal prompt lengths
+                (0..plen).map(|i| ((i * 11 + b * 17 + 3) % 60) as u8).collect()
+            })
+            .collect();
+        let mut c_ref: Vec<KvCache> = (0..bsz).map(|_| KvCache::new(m)).collect();
+        let mut kvs: Vec<PagedKv> = (0..bsz).map(|_| PagedKv::new()).collect();
+        let mut l_ref: Vec<Vec<f32>> = vec![Vec::new(); bsz];
+        // Per-sequence prefill: sequences end at different positions
+        // (prefill logits parity is implied by the first joint step).
+        for b in 0..bsz {
+            for &t in &prompts[b] {
+                l_ref[b] = gen.decode_one(t, &mut c_ref[b]);
+                gen.decode_batch_paged(&[t], &mut pool, &mut [&mut kvs[b]]);
+            }
+        }
+        // Joint batched decode over unequal positions.
+        for step in 0..6 {
+            let toks: Vec<u8> = (0..bsz).map(|b| argmax(&l_ref[b]) as u8).collect();
+            for b in 0..bsz {
+                l_ref[b] = gen.decode_one(toks[b], &mut c_ref[b]);
+            }
+            let batched = {
+                let mut refs: Vec<&mut PagedKv> = kvs.iter_mut().collect();
+                gen.decode_batch_paged(&toks, &mut pool, &mut refs)
+            };
+            for (b, row) in batched.into_iter().enumerate() {
+                for (i, (x, y)) in row.iter().zip(&l_ref[b]).enumerate() {
+                    match tol {
+                        Some(t) => assert!(
+                            (x - y).abs() < t,
+                            "step {step} lane {b} logit {i}: {x} vs {y}"
+                        ),
+                        None => assert!(
+                            x.to_bits() == y.to_bits(),
+                            "step {step} lane {b} logit {i}: {x} vs {y}"
+                        ),
+                    }
+                }
+            }
+        }
+        // Everything allocated goes back to the pool on release.
+        for kv in kvs.iter_mut() {
+            kv.release(&mut pool);
+        }
+        assert_eq!(pool.pages_free(), pool.pages_total());
+    }
+
+    #[test]
+    fn paged_decode_matches_contiguous_dense() {
+        let m = tiny_model(9);
+        let gen = Generator::dense(&m);
+        for &bsz in &[1usize, 4] {
+            paged_parity(&gen, bsz, Some(1e-5));
+        }
+    }
+
+    #[test]
+    fn paged_decode_matches_contiguous_quantized_exactly() {
+        use crate::hessian::collect_hessians;
+        use crate::qmodel::quantize_model;
+        use crate::quant::pipeline::Method;
+        let m = tiny_model(10);
+        let calib: Vec<u8> = (0..128).map(|i| (i * 3 % 64) as u8).collect();
+        let hs = collect_hessians(&m, &calib, 4, 32);
+        let qm = quantize_model(&m, &hs, &Method::QuipSharp { bits: 2, ft: false }, 1).unwrap();
+        let gen = Generator::quantized(&qm.model, &qm);
+        assert!(!gen.qlayers.is_empty());
+        // The paged layout must be bit-exact against sequential contiguous
+        // decode for the fused E8P path, across batch sizes and unequal
+        // sequence lengths.
+        for &bsz in &[1usize, 4, 8] {
+            paged_parity(&gen, bsz, None);
+        }
+    }
+
     #[test]
     fn kv_cache_grows_lazily() {
         let m = tiny_model(8);
@@ -585,5 +785,20 @@ mod tests {
         }
         assert!(cache.allocated_f32() <= full);
         assert_eq!(cache.len, 9);
+    }
+
+    #[test]
+    fn paged_decode_allocates_on_demand() {
+        let m = tiny_model(11);
+        let gen = Generator::dense(&m);
+        let mut pool = KvPagePool::for_model(&m, 4);
+        let mut kv = PagedKv::new();
+        assert_eq!(kv.allocated_f32(&pool), 0, "admission pins no pages");
+        gen.decode_batch_paged(&[3], &mut pool, &mut [&mut kv]);
+        // tiny_model ctx = PAGE_ROWS: one page covers the whole context.
+        assert_eq!(kv.pages.len(), 1);
+        assert_eq!(pool.pages_in_use(), 1);
+        kv.release(&mut pool);
+        assert_eq!(pool.pages_in_use(), 0);
     }
 }

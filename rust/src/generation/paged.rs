@@ -1,0 +1,386 @@
+//! Paged KV storage: fixed-size KV pages owned by a shared pool, with
+//! per-sequence page tables — the serving engine's KV subsystem.
+//!
+//! A contiguous per-sequence cache forces admission control to reason
+//! about worst-case context (`ctx × d_model` per layer per sequence).
+//! Paging breaks that coupling: the pool owns `pages` blocks of
+//! [`PAGE_ROWS`] token rows each (all layers, K and V), sequences
+//! allocate pages on demand as they lengthen, release them on
+//! completion, and the engine can preempt a sequence — returning its
+//! pages to the pool and requeueing its request — when allocation
+//! fails. Admission is then bounded by *actual* KV usage, so a pool
+//! sized well below `max_batch × ctx` still serves full batches of
+//! typical requests (the over-subscription behavior the ROADMAP
+//! north-star asks for).
+//!
+//! The same module owns [`blocked_attention`]: a flash-style
+//! score/softmax/weighted-sum pass that walks KV rows block-by-block
+//! with a running max, so paged sequences never need their KV rows
+//! gathered into one contiguous buffer. The contiguous
+//! [`crate::generation::KvCache`] path drives the identical routine over
+//! [`PAGE_ROWS`]-sized slices of its slab, which keeps paged and
+//! contiguous decode bit-exact (same floating-point operation order).
+
+use crate::model::{Model, ModelConfig};
+
+/// Token rows per KV page. Equal to the contiguous cache's growth slab
+/// so the blocked attention traversal covers identical row ranges in
+/// both layouts.
+pub const PAGE_ROWS: usize = 32;
+
+/// KV pages a worst-case (full-context) sequence pins — the unit
+/// contiguous admission would have to reserve per sequence, and the
+/// unit the paged pool oversubscribes against. Engines size their
+/// default (preemption-free) pool as `max_batch ×` this.
+pub fn pages_per_seq(cfg: &ModelConfig) -> usize {
+    cfg.ctx.div_ceil(PAGE_ROWS)
+}
+
+/// Shared KV page pool: one flat f32 arena plus a free list. Pages are
+/// identified by index; a page's payload is laid out per layer as
+/// `[K rows | V rows]`, each `PAGE_ROWS × d_model` row-major.
+///
+/// Sizing: one page holds [`PAGE_ROWS`] token rows of K and V across
+/// every layer, i.e. `n_layers × 2 × PAGE_ROWS × d_model` f32 slots. A
+/// worst-case (full-context) sequence pins [`pages_per_seq`] pages;
+/// sizing the pool below `max_batch ×` that enables over-subscription
+/// with preemption.
+pub struct KvPagePool {
+    n_layers: usize,
+    d: usize,
+    data: Vec<f32>,
+    free: Vec<u32>,
+    capacity: usize,
+}
+
+impl KvPagePool {
+    pub fn new(n_layers: usize, d_model: usize, pages: usize) -> Self {
+        assert!(n_layers > 0 && d_model > 0 && pages > 0, "empty KV pool");
+        let stride = n_layers * 2 * PAGE_ROWS * d_model;
+        KvPagePool {
+            n_layers,
+            d: d_model,
+            data: vec![0.0; pages * stride],
+            // Pop order is LIFO; ids are handed out low-first initially.
+            free: (0..pages as u32).rev().collect(),
+            capacity: pages,
+        }
+    }
+
+    /// Pool over a model's geometry.
+    pub fn for_model(model: &Model, pages: usize) -> Self {
+        Self::new(model.cfg.n_layers, model.cfg.d_model, pages)
+    }
+
+    pub fn pages_total(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn pages_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    /// f32 slots per page (all layers, K and V).
+    pub fn page_stride(&self) -> usize {
+        self.n_layers * 2 * PAGE_ROWS * self.d
+    }
+
+    fn try_alloc(&mut self) -> Option<u32> {
+        self.free.pop()
+    }
+
+    fn free_page(&mut self, page: u32) {
+        debug_assert!((page as usize) < self.capacity);
+        debug_assert!(!self.free.contains(&page), "double free of page {page}");
+        self.free.push(page);
+    }
+
+    fn layer_base(&self, page: u32, layer: usize) -> usize {
+        debug_assert!(layer < self.n_layers);
+        page as usize * self.page_stride() + layer * 2 * PAGE_ROWS * self.d
+    }
+
+    /// K rows of `page` for `layer`: `PAGE_ROWS × d_model` row-major.
+    pub fn k_block(&self, page: u32, layer: usize) -> &[f32] {
+        let base = self.layer_base(page, layer);
+        &self.data[base..base + PAGE_ROWS * self.d]
+    }
+
+    /// V rows of `page` for `layer`: `PAGE_ROWS × d_model` row-major.
+    pub fn v_block(&self, page: u32, layer: usize) -> &[f32] {
+        let base = self.layer_base(page, layer) + PAGE_ROWS * self.d;
+        &self.data[base..base + PAGE_ROWS * self.d]
+    }
+
+    /// Write the K/V rows for one token at `row` within `page`.
+    pub fn store_row(&mut self, page: u32, layer: usize, row: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(row < PAGE_ROWS);
+        assert_eq!(k.len(), self.d);
+        assert_eq!(v.len(), self.d);
+        let base = self.layer_base(page, layer);
+        let ko = base + row * self.d;
+        self.data[ko..ko + self.d].copy_from_slice(k);
+        let vo = base + PAGE_ROWS * self.d + row * self.d;
+        self.data[vo..vo + self.d].copy_from_slice(v);
+    }
+}
+
+/// Per-sequence view into a [`KvPagePool`]: a page table plus the
+/// sequence length. Rows `[i·PAGE_ROWS, (i+1)·PAGE_ROWS)` live in
+/// `pages[i]`.
+#[derive(Default)]
+pub struct PagedKv {
+    pub pages: Vec<u32>,
+    pub len: usize,
+}
+
+impl PagedKv {
+    pub fn new() -> Self {
+        PagedKv::default()
+    }
+
+    /// Pages a sequence of `len` rows occupies.
+    pub fn pages_needed(len: usize) -> usize {
+        len.div_ceil(PAGE_ROWS)
+    }
+
+    /// Ensure the page table covers `new_len` rows, allocating from the
+    /// pool on demand. On exhaustion every page allocated by *this call*
+    /// is returned to the pool and `false` comes back — the caller
+    /// (engine) preempts or fails the request; nothing is half-grown.
+    pub fn reserve(&mut self, pool: &mut KvPagePool, new_len: usize) -> bool {
+        let need = Self::pages_needed(new_len);
+        let start = self.pages.len();
+        while self.pages.len() < need {
+            match pool.try_alloc() {
+                Some(p) => self.pages.push(p),
+                None => {
+                    for p in self.pages.drain(start..) {
+                        pool.free_page(p);
+                    }
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Store the K/V rows for position `pos` in `layer`. The page table
+    /// must already cover `pos` (see [`PagedKv::reserve`]).
+    pub fn store(&self, pool: &mut KvPagePool, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let page = self.pages[pos / PAGE_ROWS];
+        pool.store_row(page, layer, pos % PAGE_ROWS, k, v);
+    }
+
+    /// Return every page to the pool and reset the sequence — the
+    /// completion and preemption path.
+    pub fn release(&mut self, pool: &mut KvPagePool) {
+        for p in self.pages.drain(..) {
+            pool.free_page(p);
+        }
+        self.len = 0;
+    }
+
+    /// f32 slots currently pinned in the pool by this sequence.
+    pub fn allocated_f32(&self, pool: &KvPagePool) -> usize {
+        self.pages.len() * pool.page_stride()
+    }
+}
+
+/// Flash-style blocked attention for one sequence, all heads: walk KV
+/// rows `0..=pos` in [`PAGE_ROWS`]-sized blocks, keeping a per-head
+/// running max `m`, running normalizer `l`, and unnormalized output
+/// accumulator — score/softmax/weighted-sum fused per block, so no
+/// full-length score vector is ever materialized and paged KV needs no
+/// gather.
+///
+/// `blocks(i)` returns the K and V rows for block `i` (row range
+/// `[i·PAGE_ROWS, min((i+1)·PAGE_ROWS, pos+1))`), each `rows × d_model`
+/// row-major. Both the paged and the contiguous layout satisfy this
+/// with plain slices, and because the routine is shared, the two decode
+/// paths execute identical floating-point operations in identical
+/// order — the bit-exactness the parity tests pin down.
+///
+/// `q` and `out` are `heads × hd` (= `d_model`) vectors.
+pub fn blocked_attention<'a, F>(
+    q: &[f32],
+    out: &mut [f32],
+    pos: usize,
+    heads: usize,
+    hd: usize,
+    blocks: F,
+) where
+    F: Fn(usize) -> (&'a [f32], &'a [f32]),
+{
+    let d = heads * hd;
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), d);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let n_rows = pos + 1;
+    let n_blocks = n_rows.div_ceil(PAGE_ROWS);
+    let mut run_max = vec![f32::NEG_INFINITY; heads];
+    let mut run_sum = vec![0.0f32; heads];
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    let mut scores = [0.0f32; PAGE_ROWS];
+    for blk in 0..n_blocks {
+        let (kb, vb) = blocks(blk);
+        let rows = (n_rows - blk * PAGE_ROWS).min(PAGE_ROWS);
+        debug_assert!(kb.len() >= rows * d && vb.len() >= rows * d);
+        for h in 0..heads {
+            let qh = &q[h * hd..(h + 1) * hd];
+            let mut blk_max = f32::NEG_INFINITY;
+            for (r, sc) in scores.iter_mut().enumerate().take(rows) {
+                let kr = &kb[r * d + h * hd..r * d + (h + 1) * hd];
+                let mut s = 0.0f32;
+                for (a, b) in qh.iter().zip(kr) {
+                    s += a * b;
+                }
+                let s = s * scale;
+                *sc = s;
+                blk_max = blk_max.max(s);
+            }
+            let oh = &mut out[h * hd..(h + 1) * hd];
+            if blk_max > run_max[h] {
+                // New running max: rescale the accumulated sum/output.
+                // First block: exp(-inf - finite) = 0 zeroes the (already
+                // zero) state.
+                let c = (run_max[h] - blk_max).exp();
+                run_sum[h] *= c;
+                for o in oh.iter_mut() {
+                    *o *= c;
+                }
+                run_max[h] = blk_max;
+            }
+            for (r, &sc) in scores.iter().enumerate().take(rows) {
+                let p = (sc - run_max[h]).exp();
+                run_sum[h] += p;
+                let vr = &vb[r * d + h * hd..r * d + (h + 1) * hd];
+                for (o, &vv) in oh.iter_mut().zip(vr) {
+                    *o += p * vv;
+                }
+            }
+        }
+    }
+    for h in 0..heads {
+        let inv = 1.0 / run_sum[h];
+        for o in out[h * hd..(h + 1) * hd].iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_pool(pages: usize) -> KvPagePool {
+        KvPagePool::new(2, 8, pages)
+    }
+
+    #[test]
+    fn alloc_free_accounting() {
+        let mut pool = tiny_pool(3);
+        assert_eq!(pool.pages_total(), 3);
+        assert_eq!(pool.pages_free(), 3);
+        assert_eq!(pool.pages_in_use(), 0);
+        let mut a = PagedKv::new();
+        assert!(a.reserve(&mut pool, 1));
+        assert_eq!(a.pages.len(), 1);
+        assert_eq!(pool.pages_in_use(), 1);
+        // Same page covers the whole first PAGE_ROWS rows.
+        assert!(a.reserve(&mut pool, PAGE_ROWS));
+        assert_eq!(a.pages.len(), 1);
+        // One row past the boundary takes a second page.
+        assert!(a.reserve(&mut pool, PAGE_ROWS + 1));
+        assert_eq!(a.pages.len(), 2);
+        assert_eq!(pool.pages_free(), 1);
+        a.release(&mut pool);
+        assert_eq!(pool.pages_free(), 3);
+        assert_eq!(a.pages.len(), 0);
+        assert_eq!(a.len, 0);
+    }
+
+    #[test]
+    fn reserve_rolls_back_on_exhaustion() {
+        let mut pool = tiny_pool(2);
+        let mut a = PagedKv::new();
+        assert!(a.reserve(&mut pool, PAGE_ROWS)); // 1 page
+        // Needs 3 more pages but only 1 is free: the partial grab must be
+        // returned, and the existing allocation stay intact.
+        assert!(!a.reserve(&mut pool, 4 * PAGE_ROWS));
+        assert_eq!(a.pages.len(), 1);
+        assert_eq!(pool.pages_free(), 1);
+        // A request that fits still succeeds afterwards.
+        assert!(a.reserve(&mut pool, 2 * PAGE_ROWS));
+        assert_eq!(pool.pages_free(), 0);
+    }
+
+    #[test]
+    fn store_roundtrip_across_pages() {
+        let d = 8;
+        let mut pool = tiny_pool(2);
+        let mut a = PagedKv::new();
+        assert!(a.reserve(&mut pool, PAGE_ROWS + 2));
+        for pos in [0usize, 1, PAGE_ROWS - 1, PAGE_ROWS, PAGE_ROWS + 1] {
+            for layer in 0..2 {
+                let k: Vec<f32> = (0..d).map(|j| (pos * 100 + layer * 10 + j) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                a.store(&mut pool, layer, pos, &k, &v);
+                let page = a.pages[pos / PAGE_ROWS];
+                let row = pos % PAGE_ROWS;
+                let kb = pool.k_block(page, layer);
+                let vb = pool.v_block(page, layer);
+                assert_eq!(&kb[row * d..(row + 1) * d], &k[..]);
+                assert_eq!(&vb[row * d..(row + 1) * d], &v[..]);
+            }
+        }
+        assert_eq!(a.allocated_f32(&pool), 2 * pool.page_stride());
+    }
+
+    #[test]
+    fn blocked_attention_matches_two_pass_softmax() {
+        // Reference: materialize all scores, softmax once, weighted sum.
+        let (heads, hd) = (2usize, 4usize);
+        let d = heads * hd;
+        let n_rows = 2 * PAGE_ROWS + 5; // three blocks, last partial
+        let mut rng = crate::util::rng::Pcg64::new(9);
+        let q: Vec<f32> = rng.gaussian_vec(d, 1.0);
+        let kv: Vec<f32> = rng.gaussian_vec(n_rows * d, 1.0);
+        let vv: Vec<f32> = rng.gaussian_vec(n_rows * d, 1.0);
+        let mut out = vec![0.0f32; d];
+        blocked_attention(&q, &mut out, n_rows - 1, heads, hd, |blk| {
+            let lo = blk * PAGE_ROWS * d;
+            let rows = (n_rows - blk * PAGE_ROWS).min(PAGE_ROWS);
+            (&kv[lo..lo + rows * d], &vv[lo..lo + rows * d])
+        });
+        let scale = 1.0 / (hd as f32).sqrt();
+        for h in 0..heads {
+            let qh = &q[h * hd..(h + 1) * hd];
+            let scores: Vec<f32> = (0..n_rows)
+                .map(|t| {
+                    let kt = &kv[t * d + h * hd..t * d + (h + 1) * hd];
+                    qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale
+                })
+                .collect();
+            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = scores.iter().map(|s| (s - m).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            for j in 0..hd {
+                let want: f32 = (0..n_rows)
+                    .map(|t| exps[t] / z * vv[t * d + h * hd + j])
+                    .sum();
+                let got = out[h * hd + j];
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "head {h} coord {j}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}

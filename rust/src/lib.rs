@@ -15,13 +15,20 @@
 //!   batch-native serving kernel: fused E8P decode that reads each 16-bit
 //!   codeword once per step and multiplies it against all B sequences.
 //! * `generation` — KV-cached autoregressive decode over the batched
-//!   kernel: `decode_batch` advances B sequences in lockstep
-//!   (per-sequence attention, decode-once linear layers); `decode_one` is
-//!   its batch-1 special case.
+//!   kernel: `decode_batch` / `decode_batch_paged` advance B sequences in
+//!   lockstep (decode-once linear layers, one fused blocked-attention
+//!   pass over the batch); `decode_one` is the batch-1 special case.
+//!   `generation::paged` is the KV subsystem: a shared page pool
+//!   (`KvPagePool`, fixed `PAGE_ROWS`-row pages), per-sequence page
+//!   tables (`PagedKv`), and the flash-style `blocked_attention` routine
+//!   both the paged and the contiguous (`KvCache`) layouts share, which
+//!   keeps them bit-exact.
 //! * `runtime`, `serve` — the L3 coordinator: PJRT execution of the
 //!   AOT-lowered JAX/Pallas artifacts (behind the `pjrt` feature) and the
 //!   continuous-batching inference server: VecDeque admission queue,
-//!   chunked prefill, batched decode steps, amortization metrics.
+//!   pool-aware admission with preemption/requeue under KV pressure,
+//!   chunked prefill, batched paged decode steps, amortization + pool
+//!   metrics.
 //! * `util`, `bench`, `linalg` — offline-environment substrates (RNG, JSON,
 //!   thread pool, tensor IO, bench harness, dense linear algebra).
 

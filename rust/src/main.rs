@@ -137,22 +137,36 @@ fn cmd_serve(args: &Args, art: &str) -> Result<()> {
     let max_batch = args.get_usize("max-batch", 8);
     let mut runner = Runner::new(art)?;
     let model = runner.model(&size)?;
+    // --pool-pages: KV pool size in pages. Absent → the engine's own
+    // worst-case default (no preemption); smaller values oversubscribe
+    // KV and enable preemption/requeue.
+    let pool_pages: Option<usize> = args
+        .get("pool-pages")
+        .map(|s| s.parse().context("--pool-pages"))
+        .transpose()?;
+    let start = |m: Arc<quipsharp::model::Model>, q| match pool_pages {
+        Some(pages) => NativeEngine::start_with_pool(m, q, max_batch, pages),
+        None => NativeEngine::start(m, q, max_batch),
+    };
+    let pool_desc = pool_pages
+        .map(|p| format!("KV pool {p} pages"))
+        .unwrap_or_else(|| "worst-case KV pool".to_string());
     let engine = if let Some(bits) = args.get("bits") {
         let bits: u8 = bits.parse().context("--bits")?;
         let ft = args.has_flag("ft");
         let qm = runner.qmodel(&size, &Method::QuipSharp { bits, ft })?;
         println!(
-            "serving '{size}' quantized to {bits} bits (avg {:.2} b/w)",
+            "serving '{size}' quantized to {bits} bits (avg {:.2} b/w, {pool_desc})",
             qm.avg_bits()
         );
         let model_arc = Arc::new(quipsharp::model::Model::new(
             qm.model.cfg.clone(),
             qm.model.params.clone(),
         ));
-        NativeEngine::start(model_arc, Some(qm), max_batch)
+        start(model_arc, Some(qm))
     } else {
-        println!("serving '{size}' fp32");
-        NativeEngine::start(model.clone(), None, max_batch)
+        println!("serving '{size}' fp32 ({pool_desc})");
+        start(model.clone(), None)
     };
     let engine: Arc<dyn quipsharp::serve::Engine> = Arc::new(engine);
     let handle = serve_blocking(engine, ServerConfig { addr })?;

@@ -58,6 +58,12 @@ impl Default for E8PTables {
 
 /// Decode one 16-bit codeword into 8 f32 weights (branch-free except the
 /// LUT loads). `out` must have length ≥ 8.
+///
+/// The sign-application loop iterates fixed-width 8-element chunks
+/// (bounds hoisted out, sign masks precomputed into a stack array) so
+/// the compiler can autovectorize it into a masked-XOR + add over one
+/// SIMD register — the CPU counterpart of the paper's shuffle-based
+/// sign application. Bit-exact with [`decode8_scalar`].
 #[inline(always)]
 pub fn decode8(tables: &E8PTables, code: u16, out: &mut [f32]) {
     let s_idx = (code & 0xff) as usize;
@@ -65,8 +71,29 @@ pub fn decode8(tables: &E8PTables, code: u16, out: &mut [f32]) {
     let shift = if code & 0x8000 != 0 { 0.25f32 } else { -0.25f32 };
     let parity = tables.parity[s_idx] as u32;
     let flip7 = (sign_bits.count_ones() & 1) ^ parity; // 1 → negate coord 7
+    let full_bits = sign_bits | (flip7 << 7);
+    // Fixed-size chunks: one bounds check each, then a branch-free lane
+    // loop over (abs, sign-mask) pairs.
+    let abs: &[f32; 8] = tables.abs[s_idx * 8..s_idx * 8 + 8].try_into().unwrap();
+    let out: &mut [f32] = &mut out[..8];
+    let mut masks = [0u32; 8];
+    for (j, m) in masks.iter_mut().enumerate() {
+        *m = ((full_bits >> j) & 1) << 31;
+    }
+    for ((o, &a), &m) in out.iter_mut().zip(abs).zip(&masks) {
+        *o = f32::from_bits(a.to_bits() ^ m) + shift;
+    }
+}
+
+/// Scalar reference decode — the pre-vectorization loop, kept as the
+/// parity oracle for [`decode8`].
+pub fn decode8_scalar(tables: &E8PTables, code: u16, out: &mut [f32]) {
+    let s_idx = (code & 0xff) as usize;
+    let sign_bits = ((code >> 8) & 0x7f) as u32;
+    let shift = if code & 0x8000 != 0 { 0.25f32 } else { -0.25f32 };
+    let parity = tables.parity[s_idx] as u32;
+    let flip7 = (sign_bits.count_ones() & 1) ^ parity;
     let abs = &tables.abs[s_idx * 8..s_idx * 8 + 8];
-    // Branch-free sign application: sign bit set → negate.
     let full_bits = sign_bits | (flip7 << 7);
     for j in 0..8 {
         let neg = (full_bits >> j) & 1;
@@ -405,6 +432,27 @@ mod tests {
                     "code {code:#06x} coord {j}: {} vs {}",
                     out[j],
                     want[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode8_bit_exact_with_scalar_reference() {
+        // The autovectorizable chunked path must match the scalar loop
+        // bit-for-bit over the entire 16-bit code space.
+        let tables = E8PTables::new();
+        let mut fast = [0.0f32; 8];
+        let mut slow = [0.0f32; 8];
+        for code in 0..=u16::MAX {
+            decode8(&tables, code, &mut fast);
+            decode8_scalar(&tables, code, &mut slow);
+            for j in 0..8 {
+                assert!(
+                    fast[j].to_bits() == slow[j].to_bits(),
+                    "code {code:#06x} coord {j}: {} vs {}",
+                    fast[j],
+                    slow[j]
                 );
             }
         }

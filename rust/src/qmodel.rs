@@ -46,6 +46,15 @@ impl QuantizedModel {
         crate::generation::Generator::quantized(&self.model, self)
     }
 
+    /// Shared KV page pool sized at `pages` pages over this model's
+    /// geometry — the serving engine's KV subsystem
+    /// ([`crate::generation::paged`]). Pass
+    /// `max_batch × paged::pages_per_seq(&cfg)` for worst-case
+    /// (preemption-free) capacity, or less to oversubscribe.
+    pub fn kv_pool(&self, pages: usize) -> crate::generation::paged::KvPagePool {
+        crate::generation::paged::KvPagePool::for_model(&self.model, pages)
+    }
+
     /// Total packed-codeword bytes across layers (the per-step weight
     /// stream of a fully batched decode; dense fallback layers excluded).
     pub fn packed_code_bytes(&self) -> u64 {
@@ -128,6 +137,14 @@ mod tests {
         assert_eq!(qm.packed_code_bytes(), (n_w / 2) as u64);
         // The generator convenience wires every packed layer in.
         assert_eq!(qm.generator().qlayers.len(), qm.layers.len());
+        // The pool convenience matches the model geometry.
+        let pool = qm.kv_pool(3);
+        assert_eq!(pool.pages_total(), 3);
+        let cfg = &qm.model.cfg;
+        assert_eq!(
+            pool.page_stride(),
+            cfg.n_layers * 2 * crate::generation::paged::PAGE_ROWS * cfg.d_model
+        );
     }
 
     #[test]

@@ -1,14 +1,22 @@
-//! The inference engine: request queue + continuous batcher + KV slots.
+//! The inference engine: request queue + continuous batcher + paged KV
+//! pool.
 //!
 //! Scheduler loop (runs on its own thread):
-//!   1. admit queued requests into free KV slots (up to `max_batch`),
-//!   2. one *batched* decode step across every active sequence — a single
-//!      `Generator::decode_batch` call, so each packed codeword is decoded
-//!      once per step and multiplied against all B sequences,
-//!   3. extra prefill rounds: sequences still consuming their prompt take
+//!   1. admit queued requests while the shared KV page pool has a free
+//!      page (up to `max_batch`) — admission is bounded by *actual* KV
+//!      usage, not worst-case context reservation,
+//!   2. reserve this step's KV pages; on exhaustion, preempt the
+//!      youngest active sequence (release its pages back to the pool,
+//!      requeue its request at the queue front),
+//!   3. one *batched* decode step across every active sequence — a single
+//!      `Generator::decode_batch_paged` call, so each packed codeword is
+//!      decoded once per step and attention runs as one fused blocked
+//!      pass over every sequence's page list,
+//!   4. extra prefill rounds: sequences still consuming their prompt take
 //!      up to [`PREFILL_CHUNK`] tokens per step in batched slices instead
 //!      of one token per step,
-//!   4. retire finished sequences and answer their requests.
+//!   5. retire finished sequences (pages back to the pool) and answer
+//!      their requests.
 //! Requests join/leave at step boundaries — continuous batching.
 
 use std::collections::VecDeque;
@@ -17,7 +25,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::generation::{argmax, streamed_bytes_for_batch, Generator, KvCache};
+use crate::generation::paged::{pages_per_seq, KvPagePool, PagedKv};
+use crate::generation::{argmax, streamed_bytes_for_batch, Generator};
 use crate::model::Model;
 use crate::qmodel::QuantizedModel;
 
@@ -41,6 +50,10 @@ pub struct EngineResponse {
     pub tokens: Vec<u8>,
     pub latency_ms: f64,
     pub prompt_len: usize,
+    /// Set when the request was rejected or failed instead of completing
+    /// (e.g. prompt longer than the model context, or a sequence that
+    /// can never fit in the KV page pool).
+    pub error: Option<String>,
 }
 
 /// Trait implemented by serving backends.
@@ -54,36 +67,65 @@ pub trait Engine: Send + Sync {
 struct Active {
     req: EngineRequest,
     tx: Sender<EngineResponse>,
-    cache: KvCache,
+    kv: PagedKv,
     generated: Vec<u8>,
     /// Pending prompt tokens not yet prefilled.
     pending_prompt: usize,
     last_logits: Vec<f32>,
+    /// Submission time — carried through preemption/requeue so reported
+    /// latency covers the request's whole life, queue wait included.
     t0: Instant,
+    /// Admission order: preemption evicts the youngest admission first,
+    /// so the oldest sequence always makes progress.
+    admit_seq: u64,
 }
 
 struct Shared {
-    queue: Mutex<VecDeque<(EngineRequest, Sender<EngineResponse>)>>,
+    queue: Mutex<VecDeque<(EngineRequest, Sender<EngineResponse>, Instant)>>,
     stop: AtomicBool,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    /// Model context length, for submit-time validation.
+    ctx: usize,
 }
 
-/// Native-backend engine: owns the model (optionally quantized) and a
-/// scheduler thread.
+/// Native-backend engine: owns the model (optionally quantized), the
+/// shared KV page pool, and a scheduler thread.
 pub struct NativeEngine {
     shared: Arc<Shared>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl NativeEngine {
-    /// `qm` enables the fused E8P decode path per layer.
+    /// `qm` enables the fused E8P decode path per layer. The KV pool is
+    /// sized for the worst case (`max_batch` full-context sequences), so
+    /// this constructor never preempts; see
+    /// [`NativeEngine::start_with_pool`] to oversubscribe.
     pub fn start(model: Arc<Model>, qm: Option<Arc<QuantizedModel>>, max_batch: usize) -> Self {
+        let pages = max_batch.max(1) * pages_per_seq(&model.cfg);
+        Self::start_with_pool(model, qm, max_batch, pages)
+    }
+
+    /// Start with an explicit KV pool size (in pages of
+    /// [`crate::generation::paged::PAGE_ROWS`] token rows; one page holds
+    /// every layer's K and V for those rows). Sizing the pool below
+    /// `max_batch × paged::pages_per_seq(&cfg)` oversubscribes KV: admission
+    /// continues while pages remain, and when an allocation fails the
+    /// youngest active sequence is preempted — its pages return to the
+    /// pool and its request is requeued (restarted later; greedy decode
+    /// makes the retry deterministic).
+    pub fn start_with_pool(
+        model: Arc<Model>,
+        qm: Option<Arc<QuantizedModel>>,
+        max_batch: usize,
+        pool_pages: usize,
+    ) -> Self {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             stop: AtomicBool::new(false),
             metrics: Arc::new(Metrics::new()),
             next_id: AtomicU64::new(1),
+            ctx: model.cfg.ctx,
         });
         let sh = shared.clone();
         let handle = std::thread::spawn(move || {
@@ -93,27 +135,40 @@ impl NativeEngine {
             };
             let wb_split = generator.weight_bytes_split();
             let weight_bytes = wb_split.0 + wb_split.1 + wb_split.2;
+            let mut pool = KvPagePool::for_model(&model, pool_pages.max(1));
+            sh.metrics.set_pool_capacity(pool.pages_total());
             let mut active: Vec<Active> = Vec::new();
+            let mut admit_counter: u64 = 0;
+            let ctx = model.cfg.ctx;
             loop {
                 if sh.stop.load(Ordering::Relaxed) && active.is_empty() {
                     break;
                 }
-                // Admit (FIFO; the queue is a VecDeque so admission is O(1)
-                // per request, not O(queue) as with Vec::remove(0)).
+                // Admit (FIFO): pool-aware — a request joins while free
+                // pages outnumber this round's admissions (each admission
+                // will claim its first page at the first decode round),
+                // rather than reserving worst-case `ctx` pages up front.
+                // Counting admissions against the free pages avoids
+                // admit-then-evict churn when only one page is left.
                 {
                     let mut q = sh.queue.lock().unwrap();
-                    while active.len() < max_batch {
-                        let Some((req, tx)) = q.pop_front() else { break };
-                        let cache = KvCache::new(&model);
+                    let mut newly = 0usize;
+                    while active.len() < max_batch
+                        && (active.is_empty() || pool.pages_free() > newly)
+                    {
+                        let Some((req, tx, t0)) = q.pop_front() else { break };
+                        newly += 1;
                         let pending = req.prompt.len();
+                        admit_counter += 1;
                         active.push(Active {
                             req,
                             tx,
-                            cache,
+                            kv: PagedKv::new(),
                             generated: Vec::new(),
                             pending_prompt: pending,
                             last_logits: Vec::new(),
-                            t0: Instant::now(),
+                            t0,
+                            admit_seq: admit_counter,
                         });
                     }
                 }
@@ -128,33 +183,148 @@ impl NativeEngine {
                 // prefill, so long prompts are consumed in batched slices
                 // without re-decoding weights per sequence.
                 for round in 0..PREFILL_CHUNK {
-                    let mut sel: Vec<(&mut Active, u8)> = Vec::new();
-                    let mut prefill_count = 0usize;
-                    for a in active.iter_mut() {
+                    // Select (active index, token, is_prefill) triples,
+                    // in admission order.
+                    let mut sel: Vec<(usize, u8, bool)> = Vec::new();
+                    for (i, a) in active.iter_mut().enumerate() {
                         if a.pending_prompt > 0 {
                             let idx = a.req.prompt.len() - a.pending_prompt;
                             a.pending_prompt -= 1;
-                            prefill_count += 1;
-                            let tok = a.req.prompt[idx];
-                            sel.push((a, tok));
+                            sel.push((i, a.req.prompt[idx], true));
                         } else if round == 0 {
                             let t = argmax(&a.last_logits) as u8;
                             a.generated.push(t);
-                            sel.push((a, t));
+                            sel.push((i, t, false));
                         }
                     }
                     if sel.is_empty() {
                         break;
                     }
-                    let toks: Vec<u8> = sel.iter().map(|(_, t)| *t).collect();
+                    // Reserve this round's KV pages, preempting under
+                    // pressure: when a selected sequence cannot get a
+                    // page, the youngest active sequence is evicted (its
+                    // pages freed, its request requeued at the front) and
+                    // reservation retries. The oldest sequence is never
+                    // evicted on behalf of a younger one, so the batch
+                    // always makes progress.
+                    loop {
+                        let mut exhausted = false;
+                        for &(i, _, _) in &sel {
+                            let need = active[i].kv.len + 1;
+                            if !active[i].kv.reserve(&mut pool, need) {
+                                exhausted = true;
+                                break;
+                            }
+                        }
+                        if !exhausted {
+                            break;
+                        }
+                        // Prefer retiring an already-finished sequence
+                        // (one that crossed max_new in round 0 and is
+                        // waiting for the post-rounds retire sweep): that
+                        // frees its pages AND answers its request —
+                        // strictly better than evicting live work.
+                        let finished = active.iter().position(|a| {
+                            a.pending_prompt == 0
+                                && (a.generated.len() >= a.req.max_new || a.kv.len >= ctx)
+                        });
+                        let victim = match finished {
+                            Some(fin) => {
+                                let mut a = active.remove(fin);
+                                a.kv.release(&mut pool);
+                                let resp = EngineResponse {
+                                    id: a.req.id,
+                                    tokens: std::mem::take(&mut a.generated),
+                                    latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+                                    prompt_len: a.req.prompt.len(),
+                                    error: None,
+                                };
+                                sh.metrics.record_request(resp.tokens.len(), resp.latency_ms);
+                                let _ = a.tx.send(resp);
+                                fin
+                            }
+                            None => {
+                                if active.len() == 1 {
+                                    // Nothing left to evict: the pool
+                                    // itself is smaller than this one
+                                    // sequence. Fail the request
+                                    // descriptively instead of spinning.
+                                    let mut a = active.pop().unwrap();
+                                    let need = PagedKv::pages_needed(a.kv.len + 1);
+                                    a.kv.release(&mut pool);
+                                    sh.metrics.record_failed();
+                                    let resp = EngineResponse {
+                                        id: a.req.id,
+                                        tokens: Vec::new(),
+                                        latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+                                        prompt_len: a.req.prompt.len(),
+                                        error: Some(format!(
+                                            "KV pool too small: sequence needs {need} pages but the pool holds {}",
+                                            pool.pages_total()
+                                        )),
+                                    };
+                                    let _ = a.tx.send(resp);
+                                    sel.clear();
+                                    break;
+                                }
+                                // Evict the youngest admission: release
+                                // its pages, requeue its request at the
+                                // queue front.
+                                let young = active
+                                    .iter()
+                                    .enumerate()
+                                    .max_by_key(|(_, a)| a.admit_seq)
+                                    .map(|(i, _)| i)
+                                    .unwrap();
+                                let mut a = active.remove(young);
+                                a.kv.release(&mut pool);
+                                sh.metrics.record_preemption();
+                                sh.queue.lock().unwrap().push_front((a.req, a.tx, a.t0));
+                                young
+                            }
+                        };
+                        sel.retain(|&(j, _, _)| j != victim);
+                        for e in sel.iter_mut() {
+                            if e.0 > victim {
+                                e.0 -= 1;
+                            }
+                        }
+                        if sel.is_empty() {
+                            break;
+                        }
+                    }
+                    if sel.is_empty() {
+                        break;
+                    }
+                    // Count prefill tokens only for sequences that made
+                    // it past reservation — evicted sequences' prompt
+                    // tokens were never decoded this round (and will be
+                    // recounted honestly when the request restarts).
+                    let prefill_count = sel.iter().filter(|&&(_, _, p)| p).count();
+                    let toks: Vec<u8> = sel.iter().map(|&(_, t, _)| t).collect();
                     let logits = {
-                        let mut caches: Vec<&mut KvCache> =
-                            sel.iter_mut().map(|(a, _)| &mut a.cache).collect();
-                        generator.decode_batch(&toks, &mut caches)
+                        // Collect the selected sequences' page tables via
+                        // one ordered walk (sel indices are increasing).
+                        let mut seqs: Vec<&mut PagedKv> = Vec::with_capacity(sel.len());
+                        let mut si = 0usize;
+                        for (i, a) in active.iter_mut().enumerate() {
+                            if si < sel.len() && sel[si].0 == i {
+                                seqs.push(&mut a.kv);
+                                si += 1;
+                            }
+                        }
+                        generator.decode_batch_paged(&toks, &mut pool, &mut seqs)
                     };
-                    let batch = sel.len();
-                    for ((a, _), lg) in sel.iter_mut().zip(logits) {
-                        a.last_logits = lg;
+                    let batch = toks.len();
+                    {
+                        let mut logit_it = logits.into_iter();
+                        let mut si = 0usize;
+                        for (i, a) in active.iter_mut().enumerate() {
+                            if si < sel.len() && sel[si].0 == i {
+                                a.last_logits = logit_it.next().unwrap();
+                                si += 1;
+                            }
+                        }
                     }
                     sh.metrics.record_step(batch);
                     sh.metrics.record_prefill(prefill_count);
@@ -167,18 +337,20 @@ impl NativeEngine {
                         streamed_bytes_for_batch(wb_split, batch),
                         weight_bytes * batch as u64,
                     );
+                    sh.metrics.set_pages_in_use(pool.pages_in_use());
                 }
-                // Retire.
-                let ctx = model.cfg.ctx;
+                // Retire: release pages back to the pool and answer.
                 active.retain_mut(|a| {
                     let done = a.pending_prompt == 0
-                        && (a.generated.len() >= a.req.max_new || a.cache.len >= ctx);
+                        && (a.generated.len() >= a.req.max_new || a.kv.len >= ctx);
                     if done {
+                        a.kv.release(&mut pool);
                         let resp = EngineResponse {
                             id: a.req.id,
                             tokens: std::mem::take(&mut a.generated),
                             latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
                             prompt_len: a.req.prompt.len(),
+                            error: None,
                         };
                         sh.metrics.record_request(resp.tokens.len(), resp.latency_ms);
                         let _ = a.tx.send(resp);
@@ -187,6 +359,7 @@ impl NativeEngine {
                         true
                     }
                 });
+                sh.metrics.set_pages_in_use(pool.pages_in_use());
             }
         });
         NativeEngine {
@@ -209,7 +382,29 @@ impl NativeEngine {
 impl Engine for NativeEngine {
     fn submit(&self, req: EngineRequest) -> Receiver<EngineResponse> {
         let (tx, rx) = channel();
-        self.shared.queue.lock().unwrap().push_back((req, tx));
+        // Validate at submit time: a prompt that fills (or overflows) the
+        // context can never produce a token, and used to fail only as an
+        // assert deep in the generator.
+        if req.prompt.len() >= self.shared.ctx {
+            self.shared.metrics.record_rejected();
+            let _ = tx.send(EngineResponse {
+                id: req.id,
+                tokens: Vec::new(),
+                latency_ms: 0.0,
+                prompt_len: req.prompt.len(),
+                error: Some(format!(
+                    "prompt length {} exceeds model context {} (no room to generate)",
+                    req.prompt.len(),
+                    self.shared.ctx
+                )),
+            });
+            return rx;
+        }
+        self.shared
+            .queue
+            .lock()
+            .unwrap()
+            .push_back((req, tx, Instant::now()));
         rx
     }
 
@@ -233,6 +428,7 @@ impl Drop for NativeEngine {
 mod tests {
     use super::*;
     use crate::model::tests_support::tiny_model;
+    use crate::model::{Arch, ModelConfig};
 
     #[test]
     fn engine_serves_requests() {
@@ -251,6 +447,7 @@ mod tests {
             let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
             assert_eq!(resp.id, i as u64);
             assert_eq!(resp.tokens.len(), 5);
+            assert!(resp.error.is_none());
         }
         let m = eng.metrics();
         assert_eq!(m.requests_completed.load(Ordering::Relaxed), 6);
@@ -260,6 +457,12 @@ mod tests {
         assert!(m.bytes_amortization() > 1.0, "amortization {}", m.bytes_amortization());
         eng.stop();
         eng.join();
+        // Worst-case pool: everything fits, nothing is ever preempted,
+        // and retirement returns every page (gauge read after join, when
+        // the scheduler thread has quiesced).
+        assert_eq!(m.preemptions.load(Ordering::Relaxed), 0);
+        assert_eq!(m.pages_in_use.load(Ordering::Relaxed), 0);
+        assert!(m.peak_pages_in_use.load(Ordering::Relaxed) > 0);
     }
 
     #[test]
@@ -315,5 +518,153 @@ mod tests {
         assert_eq!(prefill, long_prompt.len() + short_prompt.len());
         eng.stop();
         eng.join();
+    }
+
+    #[test]
+    fn rejects_overlong_prompt_at_submit() {
+        let model = Arc::new(tiny_model(4));
+        let ctx = model.cfg.ctx;
+        let eng = NativeEngine::start(model.clone(), None, 2);
+        // Exactly ctx (no room to generate) and well past ctx: both are
+        // answered immediately with a descriptive error, never enqueued.
+        for plen in [ctx, ctx + 9] {
+            let rx = eng.submit(EngineRequest {
+                id: 77,
+                prompt: vec![1u8; plen],
+                max_new: 4,
+            });
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            assert!(resp.tokens.is_empty());
+            assert_eq!(resp.prompt_len, plen);
+            let err = resp.error.expect("expected a rejection error");
+            assert!(err.contains("exceeds model context"), "{err}");
+        }
+        assert_eq!(eng.metrics().requests_rejected.load(Ordering::Relaxed), 2);
+        // A fitting prompt still goes through on the same engine.
+        let rx = eng.submit(EngineRequest {
+            id: 78,
+            prompt: vec![1, 2, 3],
+            max_new: 2,
+        });
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(resp.error.is_none());
+        assert_eq!(resp.tokens.len(), 2);
+        eng.stop();
+        eng.join();
+    }
+
+    /// ctx = 64 = two KV pages per worst-case sequence, so a small pool
+    /// creates real paging pressure (tiny_model's ctx is a single page).
+    fn two_page_model(seed: u64) -> Model {
+        let cfg = ModelConfig {
+            name: "tiny2p".into(),
+            d_model: 32,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 64,
+            vocab: 64,
+            ctx: 64,
+            arch: Arch::Llama,
+            n_experts: 2,
+        };
+        Model::random(cfg, seed)
+    }
+
+    #[test]
+    fn preemption_requeues_and_completes() {
+        // Pool of 2 pages, but each finished sequence spans 2 pages and
+        // up to two run concurrently: allocations must fail, the youngest
+        // sequence must be preempted (pages released, request requeued),
+        // and every request must still complete with the exact offline
+        // greedy continuation.
+        let model = Arc::new(two_page_model(5));
+        assert_eq!(pages_per_seq(&model.cfg), 2);
+        let eng = NativeEngine::start_with_pool(model.clone(), None, 2, 2);
+        let gen = Generator::dense(&model);
+        let max_new = 40; // 2 + 40 rows = 2 pages per sequence
+        let mut rxs = Vec::new();
+        let mut prompts = Vec::new();
+        for i in 0..3u64 {
+            let prompt = vec![(3 + 5 * i) as u8, (7 + i) as u8];
+            rxs.push(eng.submit(EngineRequest {
+                id: i,
+                prompt: prompt.clone(),
+                max_new,
+            }));
+            prompts.push(prompt);
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+            assert_eq!(
+                resp.tokens,
+                gen.generate(&prompts[i], max_new),
+                "request {i} diverged after preemption/requeue"
+            );
+        }
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        assert!(
+            m.preemptions.load(Ordering::Relaxed) > 0,
+            "pool pressure never triggered a preemption"
+        );
+        assert_eq!(m.pages_in_use.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn paged_admission_beats_worst_case_reservation() {
+        // Pool of 3 pages with 2-page worst-case sequences: contiguous
+        // worst-case-ctx reservation could admit only one sequence, but
+        // short requests touch a single page each, so the paged engine
+        // runs several concurrently.
+        let model = Arc::new(two_page_model(6));
+        let pool_pages = 3;
+        let worst_case_admissible = pool_pages / pages_per_seq(&model.cfg);
+        assert_eq!(worst_case_admissible, 1);
+        let eng = NativeEngine::start_with_pool(model.clone(), None, 4, pool_pages);
+        let mut rxs = Vec::new();
+        for i in 0..4u64 {
+            rxs.push(eng.submit(EngineRequest {
+                id: i,
+                prompt: vec![2, (i + 1) as u8],
+                max_new: 20, // 22 rows: one page per sequence
+            }));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert!(resp.error.is_none());
+            assert_eq!(resp.tokens.len(), 20);
+        }
+        let m = eng.metrics();
+        let peak = m.peak_batch.load(Ordering::Relaxed) as usize;
+        assert!(
+            peak > worst_case_admissible,
+            "paged admission reached {peak}, no better than worst-case {worst_case_admissible}"
+        );
+        eng.stop();
+        eng.join();
+    }
+
+    #[test]
+    fn oversized_sequence_fails_descriptively() {
+        // A pool smaller than a single sequence cannot ever serve it:
+        // the engine must answer with an error instead of spinning.
+        let model = Arc::new(two_page_model(7));
+        let eng = NativeEngine::start_with_pool(model.clone(), None, 2, 1);
+        let rx = eng.submit(EngineRequest {
+            id: 1,
+            prompt: vec![1, 2, 3],
+            max_new: 60, // needs 2 pages; pool holds 1
+        });
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let err = resp.error.expect("expected pool-too-small error");
+        assert!(err.contains("KV pool too small"), "{err}");
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        // Mid-flight failure, not a submit-time rejection.
+        assert_eq!(m.requests_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.requests_rejected.load(Ordering::Relaxed), 0);
     }
 }

@@ -1,6 +1,6 @@
-//! Serving metrics: throughput, latency, batch-occupancy and
-//! decode-bytes-amortization counters, exported as JSON through the
-//! `stats` API command.
+//! Serving metrics: throughput, latency, batch-occupancy,
+//! decode-bytes-amortization and KV-page-pool counters, exported as
+//! JSON through the `stats` API command.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -19,6 +19,22 @@ pub struct Metrics {
     pub prefill_tokens: AtomicU64,
     /// Largest batch observed in a single decode step.
     pub peak_batch: AtomicU64,
+    /// Sequences evicted from the KV page pool (pages released, request
+    /// requeued) because an allocation failed under over-subscription.
+    pub preemptions: AtomicU64,
+    /// Requests rejected at submit time (e.g. prompt exceeds context).
+    pub requests_rejected: AtomicU64,
+    /// Requests that failed mid-flight (e.g. an admitted sequence that
+    /// can never fit the KV pool) — distinct from submit-time
+    /// rejections so operators can tell client error from pool
+    /// misconfiguration.
+    pub requests_failed: AtomicU64,
+    /// Total pages in the shared KV pool (set once at engine start).
+    pub pool_pages: AtomicU64,
+    /// Pages currently allocated to live sequences (gauge).
+    pub pages_in_use: AtomicU64,
+    /// High-water mark of `pages_in_use`.
+    pub peak_pages_in_use: AtomicU64,
     /// Weight bytes actually streamed by the decode-once batched kernel.
     weight_bytes_streamed: AtomicU64,
     /// Weight bytes the same steps would stream decoding one sequence at
@@ -43,6 +59,12 @@ impl Metrics {
             batched_sequences: AtomicU64::new(0),
             prefill_tokens: AtomicU64::new(0),
             peak_batch: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            requests_rejected: AtomicU64::new(0),
+            requests_failed: AtomicU64::new(0),
+            pool_pages: AtomicU64::new(0),
+            pages_in_use: AtomicU64::new(0),
+            peak_pages_in_use: AtomicU64::new(0),
             weight_bytes_streamed: AtomicU64::new(0),
             weight_bytes_logical: AtomicU64::new(0),
             latencies_ms: Mutex::new(Vec::new()),
@@ -67,6 +89,33 @@ impl Metrics {
     pub fn record_prefill(&self, tokens: usize) {
         self.prefill_tokens
             .fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    /// A sequence was evicted back to the queue under pool pressure.
+    pub fn record_preemption(&self) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was rejected at submit time.
+    pub fn record_rejected(&self) {
+        self.requests_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An admitted request failed mid-flight.
+    pub fn record_failed(&self) {
+        self.requests_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Capacity of the shared KV page pool (once, at engine start).
+    pub fn set_pool_capacity(&self, pages: usize) {
+        self.pool_pages.store(pages as u64, Ordering::Relaxed);
+    }
+
+    /// Current pool occupancy gauge (also tracks the high-water mark).
+    pub fn set_pages_in_use(&self, pages: usize) {
+        self.pages_in_use.store(pages as u64, Ordering::Relaxed);
+        self.peak_pages_in_use
+            .fetch_max(pages as u64, Ordering::Relaxed);
     }
 
     /// Weight-traffic accounting for one batched decode step: `streamed`
@@ -131,6 +180,30 @@ impl Metrics {
                 Json::num(self.prefill_tokens.load(Ordering::Relaxed) as f64),
             ),
             ("bytes_amortization", Json::num(self.bytes_amortization())),
+            (
+                "pool_pages",
+                Json::num(self.pool_pages.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "pages_in_use",
+                Json::num(self.pages_in_use.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "peak_pages_in_use",
+                Json::num(self.peak_pages_in_use.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "preemptions",
+                Json::num(self.preemptions.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "requests_rejected",
+                Json::num(self.requests_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "requests_failed",
+                Json::num(self.requests_failed.load(Ordering::Relaxed) as f64),
+            ),
             ("p50_ms", Json::num(pct(0.5))),
             ("p99_ms", Json::num(pct(0.99))),
             ("uptime_sec", Json::num(self.start.elapsed().as_secs_f64())),
@@ -168,5 +241,24 @@ mod tests {
         assert!((m.bytes_amortization() - 3.0).abs() < 1e-12);
         m.record_prefill(5);
         assert_eq!(m.prefill_tokens.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn pool_counters_and_peaks() {
+        let m = Metrics::new();
+        m.set_pool_capacity(16);
+        m.set_pages_in_use(9);
+        m.set_pages_in_use(4);
+        m.record_preemption();
+        m.record_preemption();
+        m.record_rejected();
+        m.record_failed();
+        let s = m.snapshot();
+        assert_eq!(s.get("pool_pages").as_f64(), Some(16.0));
+        assert_eq!(s.get("pages_in_use").as_f64(), Some(4.0));
+        assert_eq!(s.get("peak_pages_in_use").as_f64(), Some(9.0));
+        assert_eq!(s.get("preemptions").as_f64(), Some(2.0));
+        assert_eq!(s.get("requests_rejected").as_f64(), Some(1.0));
+        assert_eq!(s.get("requests_failed").as_f64(), Some(1.0));
     }
 }

@@ -1,16 +1,43 @@
-//! L3 serving stack: request router, continuous batcher, KV-slot manager,
+//! L3 serving stack: request router, continuous batcher, paged KV pool,
 //! metrics, and a line-delimited JSON TCP API.
 //!
 //! The paper's thesis (§6.3) is that QuIP# makes *memory-bound decoding*
 //! faster; this engine is where that shows up end-to-end. Two backends:
 //!
-//! * `native` — the Rust hot path (fused E8P decode / dense f32), lazily
-//!   grown per-sequence KV caches, continuous batching at step granularity
-//!   with *batch-native* decode: one `decode_batch` call per step decodes
-//!   each packed codeword once and multiplies it against every active
-//!   sequence, and freshly admitted prompts prefill in chunked slices.
+//! * `native` — the Rust hot path (fused E8P decode / dense f32) over a
+//!   shared **paged KV pool** ([`crate::generation::paged`]): fixed-size
+//!   pages, per-sequence page tables, allocation on demand, preemption
+//!   under pressure. Continuous batching at step granularity with
+//!   *batch-native* decode: one `decode_batch_paged` call per step
+//!   decodes each packed codeword once, runs one fused blocked attention
+//!   pass over every active sequence's page list, and freshly admitted
+//!   prompts prefill in chunked slices.
 //! * `pjrt` — the AOT JAX/Pallas artifacts executed through the PJRT
 //!   runtime (lockstep batch; demonstrates the three-layer path).
+//!
+//! # Pool sizing knobs
+//!
+//! The native engine's KV capacity is set in *pages* of
+//! [`crate::generation::paged::PAGE_ROWS`] token rows (one page holds K
+//! and V for every layer over those rows, i.e.
+//! `n_layers × 2 × PAGE_ROWS × d_model` f32 slots):
+//!
+//! * [`engine::NativeEngine::start`] sizes the pool for the worst case —
+//!   `max_batch × paged::pages_per_seq(&cfg)` pages — so admission never
+//!   has to preempt (the pre-paging behavior, at the pre-paging
+//!   footprint).
+//! * [`engine::NativeEngine::start_with_pool`] takes an explicit page
+//!   count. Sizing below worst case **oversubscribes** KV: requests are
+//!   admitted while any page is free (actual usage, not reserved ctx),
+//!   and if an allocation fails mid-step the youngest active sequence is
+//!   preempted — its pages return to the pool and its request requeues
+//!   at the queue front. Greedy decode makes the retry deterministic, so
+//!   responses are unchanged; only latency shifts.
+//! * Metrics expose `pool_pages`, `pages_in_use`, `peak_pages_in_use`,
+//!   `preemptions`, and `requests_rejected` for tuning. The
+//!   `bench_generation` pool-pressure sweep (`make bench-serve`) reports
+//!   how far a half-sized pool over-admits versus worst-case
+//!   reservation.
 
 pub mod engine;
 pub mod metrics;

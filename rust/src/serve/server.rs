@@ -119,15 +119,18 @@ fn handle_conn(
                     max_new,
                 });
                 let resp = rx.recv().context("engine dropped request")?;
-                let out = Json::obj(vec![
+                let mut fields = vec![
                     ("id", Json::num(resp.id as f64)),
                     (
                         "tokens",
                         Json::Arr(resp.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
                     ),
                     ("ms", Json::num(resp.latency_ms)),
-                ]);
-                writeln!(writer, "{}", out.emit())?;
+                ];
+                if let Some(err) = &resp.error {
+                    fields.push(("error", Json::str(err.clone())));
+                }
+                writeln!(writer, "{}", Json::obj(fields).emit())?;
             }
         }
     }
@@ -160,6 +163,9 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         let resp = Json::parse(line.trim()).context("bad response")?;
+        if let Some(err) = resp.get("error").as_str() {
+            anyhow::bail!("server error: {err}");
+        }
         let tokens = resp
             .get("tokens")
             .as_arr()
