@@ -4,7 +4,7 @@
 # and formatting. The PJRT path needs the offline xla crate and is off
 # by default (see Cargo.toml's `pjrt` feature).
 
-.PHONY: verify build test fmt lint bench-batch bench-serve artifacts
+.PHONY: verify build test fmt lint doc bench-batch bench-serve artifacts
 
 verify:
 	cargo build --release
@@ -24,6 +24,11 @@ fmt:
 lint:
 	cargo fmt --check
 	cargo clippy --all-targets -- -D warnings
+
+# Rustdoc must stay buildable with intra-doc links intact (broken links
+# are warnings, promoted to errors here). Mirrored by the CI `lint` job.
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # Batch-sweep generation benchmark; writes BENCH_generation.json.
 bench-batch:

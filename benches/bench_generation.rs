@@ -14,7 +14,13 @@
 //! Reports peak concurrently admitted sequences, preemptions, and
 //! tokens/s into the same `BENCH_generation.json`.
 //!
-//! Part 3 (requires `make artifacts`): the paper's Table 5 — tok/s and %
+//! Part 3 (always runs): the shared-prefix sweep — N sequences over one
+//! long registered system prompt, with and without copy-on-write prefix
+//! sharing, plus a constrained-pool run sized at the shared working set.
+//! Reports peak pool pages, admitted sequences, skipped prefill and
+//! tokens/s into the same `BENCH_generation.json`.
+//!
+//! Part 4 (requires `make artifacts`): the paper's Table 5 — tok/s and %
 //! of memory-bandwidth roofline for 2-bit / 4-bit QuIP# vs fp32 on the
 //! trained model family. The paper's shape: 2-bit > 4-bit > fp16 tok/s,
 //! with %-of-roofline growing with model size.
@@ -194,6 +200,7 @@ fn pool_pressure() -> Json {
             id: i as u64,
             prompt: vec![(i % 50) as u8, 3, 9, 27],
             max_new,
+            prefix_id: None,
         }));
     }
     let mut tokens = 0usize;
@@ -241,6 +248,166 @@ fn pool_pressure() -> Json {
         ("requests", Json::num(n_requests as f64)),
         ("max_new", Json::num(max_new as f64)),
         ("tok_per_sec", Json::num(tps)),
+    ])
+}
+
+/// Shared-prefix sweep: N sequences over one long registered system
+/// prompt, with and without copy-on-write prefix sharing. Sharing must
+/// strictly lower peak pool pressure (the prefix's pages are held once,
+/// not N times) and skip the prefix's prefill compute on every hit; a
+/// constrained pool then shows the freed pages translating directly
+/// into admitted concurrency.
+fn shared_prefix() -> Json {
+    println!("\n== shared prefix: copy-on-write forks vs per-request prefill ==");
+    let model = Model::random(ModelConfig::by_name("s").unwrap(), 13);
+    let qm = Arc::new(
+        quantize_model(
+            &model,
+            &BTreeMap::new(),
+            &Method::QuipSharp { bits: 2, ft: false },
+            7,
+        )
+        .unwrap(),
+    );
+    let model_arc = Arc::new(Model::new(qm.model.cfg.clone(), qm.model.params.clone()));
+    let page_rows = quipsharp::generation::paged::PAGE_ROWS;
+    let pages_per_seq = quipsharp::generation::paged::pages_per_seq(&model_arc.cfg);
+    let max_batch = 8usize;
+    let n_requests = 8usize;
+    // Four full pages of system prompt, a short unique suffix each.
+    let prefix_tokens = 4 * page_rows;
+    let prefix: Vec<u8> = (0..prefix_tokens).map(|i| ((i * 7 + 3) % 50) as u8).collect();
+    let (suffix_len, max_new) = (4usize, 24usize);
+
+    let run = |share: bool, pool_pages: usize| -> Json {
+        let eng = NativeEngine::start_with_pool(
+            model_arc.clone(),
+            Some(qm.clone()),
+            max_batch,
+            pool_pages,
+        );
+        if share {
+            assert!(eng.register_prefix(1, prefix.clone()));
+        }
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..n_requests {
+            let mut prompt = prefix.clone();
+            prompt.extend((0..suffix_len).map(|j| ((i * 11 + j * 5 + 1) % 50) as u8));
+            rxs.push(eng.submit(EngineRequest {
+                id: i as u64,
+                prompt,
+                max_new,
+                prefix_id: None,
+            }));
+        }
+        let mut tokens = 0usize;
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            tokens += resp.tokens.len();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        let peak_pages = m.peak_pages_in_use.load(Ordering::Relaxed);
+        Json::obj(vec![
+            ("sharing", Json::Bool(share)),
+            ("pool_pages", Json::num(pool_pages as f64)),
+            ("peak_pages_in_use", Json::num(peak_pages as f64)),
+            (
+                "peak_admitted",
+                Json::num(m.peak_batch.load(Ordering::Relaxed) as f64),
+            ),
+            ("mean_batch", Json::num(m.mean_batch())),
+            (
+                "prefix_hits",
+                Json::num(m.prefix_hits.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "pages_saved",
+                Json::num(m.pages_saved.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "prefill_tokens",
+                Json::num(m.prefill_tokens.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "preemptions",
+                Json::num(m.preemptions.load(Ordering::Relaxed) as f64),
+            ),
+            ("tok_per_sec", Json::num(tokens as f64 / dt)),
+        ])
+    };
+
+    // An ample (worst-case) pool isolates the footprint effect…
+    let ample = max_batch * pages_per_seq;
+    let unshared = run(false, ample);
+    let shared = run(true, ample);
+    // …and a pool sized at the shared working set (prefix pages + one
+    // growth page per sequence) shows the capacity effect: unshared it
+    // sustains ⌊pool / pages-per-request⌋ sequences of this shape,
+    // shared it runs all N at once.
+    let pages_per_request = (prefix_tokens + suffix_len + max_new).div_ceil(page_rows);
+    let constrained_pool = prefix_tokens / page_rows + n_requests;
+    let unshared_sustainable = constrained_pool / pages_per_request;
+    let shared_tight = run(true, constrained_pool);
+
+    let mut t = Table::new(&[
+        "mode",
+        "pool pages",
+        "peak pages",
+        "peak admitted",
+        "prefill toks",
+        "tok/s",
+    ]);
+    for (label, r) in [
+        ("unshared", &unshared),
+        ("shared", &shared),
+        ("shared (tight pool)", &shared_tight),
+    ] {
+        t.row(&[
+            label.to_string(),
+            format!("{}", r.get("pool_pages").as_f64().unwrap_or(0.0)),
+            format!("{}", r.get("peak_pages_in_use").as_f64().unwrap_or(0.0)),
+            format!("{}", r.get("peak_admitted").as_f64().unwrap_or(0.0)),
+            format!("{}", r.get("prefill_tokens").as_f64().unwrap_or(0.0)),
+            format!("{:.1}", r.get("tok_per_sec").as_f64().unwrap_or(0.0)),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_generation_shared_prefix").ok();
+
+    let peak_unshared = unshared.get("peak_pages_in_use").as_f64().unwrap();
+    let peak_shared = shared.get("peak_pages_in_use").as_f64().unwrap();
+    assert!(
+        peak_shared < peak_unshared,
+        "sharing must strictly lower peak pool pressure ({peak_shared} vs {peak_unshared})"
+    );
+    let tight_admitted = shared_tight.get("peak_admitted").as_f64().unwrap() as usize;
+    assert!(
+        tight_admitted > unshared_sustainable,
+        "a {constrained_pool}-page pool admitted {tight_admitted} shared sequences, \
+         not above the unshared sustainable {unshared_sustainable}"
+    );
+
+    Json::obj(vec![
+        ("prefix_tokens", Json::num(prefix_tokens as f64)),
+        ("suffix_tokens", Json::num(suffix_len as f64)),
+        ("n_requests", Json::num(n_requests as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        (
+            "pages_per_request_unshared",
+            Json::num(pages_per_request as f64),
+        ),
+        (
+            "unshared_sustainable_in_constrained_pool",
+            Json::num(unshared_sustainable as f64),
+        ),
+        ("unshared", unshared),
+        ("shared", shared),
+        ("shared_constrained_pool", shared_tight),
     ])
 }
 
@@ -302,6 +469,7 @@ fn table5() {
 fn main() {
     let mut entries = batch_sweep();
     entries.push(("pool_pressure", pool_pressure()));
+    entries.push(("shared_prefix", shared_prefix()));
     let out = Json::obj(entries);
     if std::fs::write("BENCH_generation.json", out.emit()).is_ok() {
         println!("\nwrote BENCH_generation.json");

@@ -272,6 +272,16 @@ impl<'a> Generator<'a> {
     /// Bit-exact with [`Generator::decode_batch`] and with sequential
     /// [`Generator::decode_one`]: every layout runs the same blocked
     /// attention and decode-once linear kernels in the same order.
+    ///
+    /// Sequences may alias each other's pages: after
+    /// [`PagedKv::fork_prefix`], several page tables (in the same batch
+    /// or across batches) can point at the same physical prefix pages.
+    /// Attention only *reads* through the table, so aliased rows are
+    /// indistinguishable from owned rows and the logits stay bit-exact
+    /// against unshared decode; the per-step reserve clones any shared
+    /// page before this step's KV rows are written into it
+    /// (copy-on-write), so no write ever lands in a page another
+    /// sequence still reads.
     pub fn decode_batch_paged(
         &self,
         tokens: &[u8],
@@ -764,6 +774,116 @@ mod tests {
         // sequence lengths.
         for &bsz in &[1usize, 4, 8] {
             paged_parity(&gen, bsz, None);
+        }
+    }
+
+    /// Multi-page context so prompt prefixes span several KV pages, with
+    /// power-of-two linear shapes so the fused E8P path applies.
+    fn prefix_model(seed: u64) -> Model {
+        let cfg = crate::model::ModelConfig {
+            name: "tinypfx".into(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            vocab: 64,
+            ctx: 4 * PAGE_ROWS,
+            arch: Arch::Llama,
+            n_experts: 2,
+        };
+        Model::random(cfg, seed)
+    }
+
+    /// Fork `bsz` sequences off one shared prompt prefix and decode them
+    /// batched; an unshared control group prefills the identical tokens
+    /// from scratch. Logits must match bit-for-bit at every step: the
+    /// children's early page-table entries alias the parent's pages, and
+    /// attention reads them through the same indirection the control
+    /// group uses for its own pages.
+    fn shared_prefix_parity(gen: &Generator, bsz: usize) {
+        let m = gen.model;
+        let prefix_len = PAGE_ROWS + 7; // one full page + a partial tail
+        let prefix: Vec<u8> = (0..prefix_len).map(|i| ((i * 13 + 2) % 60) as u8).collect();
+        let mut pool = KvPagePool::for_model(m, 2 * bsz * paged::pages_per_seq(&m.cfg));
+        // Parent: prefill the shared prefix once.
+        let mut parent = PagedKv::new();
+        for &t in &prefix {
+            gen.decode_batch_paged(&[t], &mut pool, &mut [&mut parent]);
+        }
+        let parent_pages = PagedKv::pages_needed(prefix_len);
+        // Children fork the prefix; controls prefill it from scratch.
+        let mut shared: Vec<PagedKv> = (0..bsz).map(|_| PagedKv::new()).collect();
+        let mut control: Vec<PagedKv> = (0..bsz).map(|_| PagedKv::new()).collect();
+        for b in 0..bsz {
+            shared[b].fork_prefix(&mut pool, &parent, prefix_len);
+            for &t in &prefix {
+                gen.decode_batch_paged(&[t], &mut pool, &mut [&mut control[b]]);
+            }
+        }
+        assert_eq!(pool.shared_pages(), parent_pages, "fork must share the prefix pages");
+        // Unique per-lane suffix tokens diverge the sequences, then the
+        // greedy continuation advances both groups through the same
+        // batched call over a page boundary.
+        let mut l_control: Vec<Vec<f32>> = vec![Vec::new(); bsz];
+        for step in 0..PAGE_ROWS + 4 {
+            let toks: Vec<u8> = (0..bsz)
+                .map(|b| {
+                    if step == 0 {
+                        ((7 * b + 5) % 60) as u8
+                    } else {
+                        argmax(&l_control[b]) as u8
+                    }
+                })
+                .collect();
+            let l_shared = {
+                let mut refs: Vec<&mut PagedKv> = shared.iter_mut().collect();
+                gen.decode_batch_paged(&toks, &mut pool, &mut refs)
+            };
+            l_control = {
+                let mut refs: Vec<&mut PagedKv> = control.iter_mut().collect();
+                gen.decode_batch_paged(&toks, &mut pool, &mut refs)
+            };
+            for b in 0..bsz {
+                for (i, (x, y)) in l_shared[b].iter().zip(&l_control[b]).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "step {step} lane {b} logit {i}: shared {x} vs unshared {y}"
+                    );
+                }
+            }
+        }
+        // The fully occupied prefix page is still shared (only partial
+        // tails are ever cloned), and releases return every page.
+        assert!(pool.shared_pages() > 0, "full prefix pages should stay shared");
+        for kv in shared.iter_mut().chain(control.iter_mut()) {
+            kv.release(&mut pool);
+        }
+        parent.release(&mut pool);
+        assert_eq!(pool.pages_free(), pool.pages_total());
+    }
+
+    #[test]
+    fn shared_prefix_decode_matches_unshared_dense() {
+        let m = prefix_model(12);
+        let gen = Generator::dense(&m);
+        for &bsz in &[2usize, 4, 8] {
+            shared_prefix_parity(&gen, bsz);
+        }
+    }
+
+    #[test]
+    fn shared_prefix_decode_matches_unshared_quantized() {
+        use crate::qmodel::quantize_model;
+        use crate::quant::pipeline::Method;
+        let m = prefix_model(13);
+        // Identity Hessians: decode parity is independent of quantization
+        // quality, and skipping calibration keeps the test fast.
+        let hs = BTreeMap::new();
+        let qm = quantize_model(&m, &hs, &Method::QuipSharp { bits: 2, ft: false }, 1).unwrap();
+        let gen = Generator::quantized(&qm.model, &qm);
+        assert!(!gen.qlayers.is_empty());
+        for &bsz in &[2usize, 4, 8] {
+            shared_prefix_parity(&gen, bsz);
         }
     }
 

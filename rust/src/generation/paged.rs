@@ -20,6 +20,39 @@
 //! [`crate::generation::KvCache`] path drives the identical routine over
 //! [`PAGE_ROWS`]-sized slices of its slab, which keeps paged and
 //! contiguous decode bit-exact (same floating-point operation order).
+//!
+//! # Copy-on-write prefix sharing
+//!
+//! Pages are **refcounted**, which makes prompt-prefix sharing a page
+//! table operation instead of a KV copy: [`PagedKv::fork_prefix`] builds
+//! a new sequence whose first `prefix_rows` rows alias a parent's pages
+//! (each shared page's refcount is incremented; no payload moves). The
+//! invariants that keep this sound:
+//!
+//! * **Reads are always safe.** Attention only ever reads rows
+//!   `< seq.len` through the sequence's own page table, and a forked
+//!   sequence's aliased rows are, by construction, the rows it would
+//!   have computed itself (KV rows at position `p` depend only on tokens
+//!   `0..=p`, which fork requires to match). So shared pages need no
+//!   synchronization and decode stays bit-exact.
+//! * **Writes require unique ownership.** [`PagedKv::reserve`] — which a
+//!   scheduler must call (directly or via
+//!   [`crate::generation::Generator::decode_batch_paged`]) before any
+//!   row in `[len, new_len)` is stored — clones any still-shared page
+//!   that the upcoming rows land in (allocate + memcpy + move one ref),
+//!   so [`PagedKv::store`] only ever touches pages with refcount 1. In
+//!   practice only the partial tail page at fork time is ever cloned;
+//!   fully occupied prefix pages are never written again and stay shared
+//!   for the sequences' whole lifetime.
+//! * **Release drops one reference, never the page.** [`PagedKv::release`]
+//!   decrements each page's refcount and only pages reaching zero return
+//!   to the free list — preempting or retiring a forked sequence can
+//!   never free pages a parent (or sibling fork) still reads, and the
+//!   parent's release symmetrically leaves the children's shared pages
+//!   alive.
+//! * On exhaustion, `reserve` rolls back everything *it* did (fresh
+//!   pages freed, clones undone by re-retaining the original), so a
+//!   failed grow leaves the sequence exactly as it was.
 
 use crate::model::{Model, ModelConfig};
 
@@ -36,20 +69,33 @@ pub fn pages_per_seq(cfg: &ModelConfig) -> usize {
     cfg.ctx.div_ceil(PAGE_ROWS)
 }
 
-/// Shared KV page pool: one flat f32 arena plus a free list. Pages are
-/// identified by index; a page's payload is laid out per layer as
-/// `[K rows | V rows]`, each `PAGE_ROWS × d_model` row-major.
+/// Shared KV page pool: one flat f32 arena, a free list, and per-page
+/// refcounts. Pages are identified by index; a page's payload is laid
+/// out per layer as `[K rows | V rows]`, each `PAGE_ROWS × d_model`
+/// row-major.
 ///
 /// Sizing: one page holds [`PAGE_ROWS`] token rows of K and V across
 /// every layer, i.e. `n_layers × 2 × PAGE_ROWS × d_model` f32 slots. A
 /// worst-case (full-context) sequence pins [`pages_per_seq`] pages;
 /// sizing the pool below `max_batch ×` that enables over-subscription
 /// with preemption.
+///
+/// Refcount rules: freshly allocated pages start at refcount 1;
+/// [`PagedKv::fork_prefix`] retains (increments) pages it shares;
+/// releasing decrements and only a page reaching refcount 0 re-enters
+/// the free list. A page with refcount > 1 is *shared* and must never
+/// be written (see [`PagedKv::reserve`] for the copy-on-write path).
 pub struct KvPagePool {
     n_layers: usize,
     d: usize,
     data: Vec<f32>,
     free: Vec<u32>,
+    /// Per-page reference count: 0 = free, 1 = uniquely owned,
+    /// >1 = shared read-only across forked sequences.
+    refs: Vec<u32>,
+    /// Pages with refcount > 1, maintained incrementally on the 1 ↔ 2
+    /// crossings so the scheduler's per-step gauge read is O(1).
+    shared: usize,
     capacity: usize,
 }
 
@@ -63,6 +109,8 @@ impl KvPagePool {
             data: vec![0.0; pages * stride],
             // Pop order is LIFO; ids are handed out low-first initially.
             free: (0..pages as u32).rev().collect(),
+            refs: vec![0; pages],
+            shared: 0,
             capacity: pages,
         }
     }
@@ -84,19 +132,65 @@ impl KvPagePool {
         self.capacity - self.free.len()
     }
 
+    /// Pages currently shared by more than one sequence (refcount > 1).
+    pub fn shared_pages(&self) -> usize {
+        self.shared
+    }
+
+    /// Reference count of `page` (0 = free).
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refs[page as usize]
+    }
+
     /// f32 slots per page (all layers, K and V).
     pub fn page_stride(&self) -> usize {
         self.n_layers * 2 * PAGE_ROWS * self.d
     }
 
     fn try_alloc(&mut self) -> Option<u32> {
-        self.free.pop()
+        let page = self.free.pop()?;
+        debug_assert_eq!(self.refs[page as usize], 0, "free page {page} had refs");
+        self.refs[page as usize] = 1;
+        Some(page)
     }
 
-    fn free_page(&mut self, page: u32) {
+    /// Add one reference to an already-allocated page (prefix sharing).
+    fn retain_page(&mut self, page: u32) {
+        let r = self.refs[page as usize];
+        debug_assert!(r > 0, "retain of free page {page}");
+        if r == 1 {
+            self.shared += 1;
+        }
+        self.refs[page as usize] = r + 1;
+    }
+
+    /// Drop one reference; the page returns to the free list only when
+    /// no sequence holds it any more. This is the only way pages are
+    /// freed, so releasing a forked sequence can never free pages its
+    /// parent (or a sibling fork) still reads.
+    fn release_page(&mut self, page: u32) {
         debug_assert!((page as usize) < self.capacity);
-        debug_assert!(!self.free.contains(&page), "double free of page {page}");
-        self.free.push(page);
+        let r = self.refs[page as usize];
+        debug_assert!(r > 0, "release of free page {page}");
+        if r == 2 {
+            self.shared -= 1;
+        }
+        self.refs[page as usize] = r - 1;
+        if r == 1 {
+            debug_assert!(!self.free.contains(&page), "double free of page {page}");
+            self.free.push(page);
+        }
+    }
+
+    /// Copy-on-write clone: allocate a fresh page and copy `src`'s whole
+    /// payload into it. Refcounts are the caller's business (the caller
+    /// swaps its table entry to the clone and releases its ref on `src`).
+    fn clone_page(&mut self, src: u32) -> Option<u32> {
+        let dst = self.try_alloc()?;
+        let stride = self.page_stride();
+        let lo = src as usize * stride;
+        self.data.copy_within(lo..lo + stride, dst as usize * stride);
+        Some(dst)
     }
 
     fn layer_base(&self, page: u32, layer: usize) -> usize {
@@ -116,9 +210,15 @@ impl KvPagePool {
         &self.data[base..base + PAGE_ROWS * self.d]
     }
 
-    /// Write the K/V rows for one token at `row` within `page`.
+    /// Write the K/V rows for one token at `row` within `page`. The page
+    /// must be uniquely owned (refcount 1): shared pages are read-only
+    /// and must be cloned first (see [`PagedKv::reserve`]).
     pub fn store_row(&mut self, page: u32, layer: usize, row: usize, k: &[f32], v: &[f32]) {
         debug_assert!(row < PAGE_ROWS);
+        debug_assert_eq!(
+            self.refs[page as usize], 1,
+            "store into shared or free page {page}"
+        );
         assert_eq!(k.len(), self.d);
         assert_eq!(v.len(), self.d);
         let base = self.layer_base(page, layer);
@@ -148,20 +248,83 @@ impl PagedKv {
         len.div_ceil(PAGE_ROWS)
     }
 
-    /// Ensure the page table covers `new_len` rows, allocating from the
-    /// pool on demand. On exhaustion every page allocated by *this call*
-    /// is returned to the pool and `false` comes back — the caller
-    /// (engine) preempts or fails the request; nothing is half-grown.
+    /// Fork this (empty) sequence off `parent`'s first `prefix_rows`
+    /// rows by *sharing* the covering pages: each shared page's refcount
+    /// is incremented and its id copied into this table — no KV payload
+    /// is touched, so forking costs O(pages), not O(tokens).
+    ///
+    /// `prefix_rows` may end mid-page; the partial tail page is shared
+    /// too and lazily cloned by [`PagedKv::reserve`] the first time
+    /// either side grows into it (copy-on-write). Requires `self` to be
+    /// empty and `prefix_rows ≤ parent.len`, and never allocates, so it
+    /// cannot fail.
+    pub fn fork_prefix(&mut self, pool: &mut KvPagePool, parent: &PagedKv, prefix_rows: usize) {
+        assert!(
+            self.pages.is_empty() && self.len == 0,
+            "fork into a non-empty sequence"
+        );
+        assert!(
+            prefix_rows <= parent.len,
+            "prefix of {prefix_rows} rows exceeds parent length {}",
+            parent.len
+        );
+        for &p in &parent.pages[..Self::pages_needed(prefix_rows)] {
+            pool.retain_page(p);
+            self.pages.push(p);
+        }
+        self.len = prefix_rows;
+    }
+
+    /// Ensure the page table covers `new_len` rows *writably*: the rows
+    /// `[len, new_len)` an upcoming decode step will store must land in
+    /// uniquely owned pages, so any still-shared page in that range is
+    /// first cloned (copy-on-write: allocate, memcpy, swap the table
+    /// entry, drop the ref on the original), then missing pages are
+    /// allocated from the pool.
+    ///
+    /// On exhaustion everything *this call* did is rolled back — fresh
+    /// pages freed, clones undone by re-retaining the original — and
+    /// `false` comes back; the caller (engine) preempts or fails the
+    /// request. Nothing is half-grown.
     pub fn reserve(&mut self, pool: &mut KvPagePool, new_len: usize) -> bool {
         let need = Self::pages_needed(new_len);
+        // Copy-on-write: un-share existing pages the rows [len, new_len)
+        // will be written into. After a fork this is at most the partial
+        // tail page; fully occupied prefix pages are never written again.
+        let first_write = self.len / PAGE_ROWS;
+        let mut cloned: Vec<(usize, u32)> = Vec::new();
+        let rollback_cow = |pages: &mut [u32], pool: &mut KvPagePool, cloned: &[(usize, u32)]| {
+            for &(idx, orig) in cloned {
+                pool.retain_page(orig);
+                pool.release_page(pages[idx]);
+                pages[idx] = orig;
+            }
+        };
+        for idx in first_write..need.min(self.pages.len()) {
+            let page = self.pages[idx];
+            if pool.refcount(page) > 1 {
+                match pool.clone_page(page) {
+                    Some(fresh) => {
+                        pool.release_page(page);
+                        self.pages[idx] = fresh;
+                        cloned.push((idx, page));
+                    }
+                    None => {
+                        rollback_cow(&mut self.pages, pool, &cloned);
+                        return false;
+                    }
+                }
+            }
+        }
         let start = self.pages.len();
         while self.pages.len() < need {
             match pool.try_alloc() {
                 Some(p) => self.pages.push(p),
                 None => {
                     for p in self.pages.drain(start..) {
-                        pool.free_page(p);
+                        pool.release_page(p);
                     }
+                    rollback_cow(&mut self.pages, pool, &cloned);
                     return false;
                 }
             }
@@ -170,17 +333,19 @@ impl PagedKv {
     }
 
     /// Store the K/V rows for position `pos` in `layer`. The page table
-    /// must already cover `pos` (see [`PagedKv::reserve`]).
+    /// must already cover `pos` writably (see [`PagedKv::reserve`]).
     pub fn store(&self, pool: &mut KvPagePool, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         let page = self.pages[pos / PAGE_ROWS];
         pool.store_row(page, layer, pos % PAGE_ROWS, k, v);
     }
 
-    /// Return every page to the pool and reset the sequence — the
-    /// completion and preemption path.
+    /// Drop this sequence's reference on every page and reset it — the
+    /// completion and preemption path. Pages shared with a parent or a
+    /// fork stay allocated until their last holder releases; only pages
+    /// this sequence uniquely owned return to the free list.
     pub fn release(&mut self, pool: &mut KvPagePool) {
         for p in self.pages.drain(..) {
-            pool.free_page(p);
+            pool.release_page(p);
         }
         self.len = 0;
     }
@@ -341,6 +506,177 @@ mod tests {
             }
         }
         assert_eq!(a.allocated_f32(&pool), 2 * pool.page_stride());
+    }
+
+    /// Fill rows `[0, len)` of `kv` with position-tagged values.
+    fn fill(kv: &PagedKv, pool: &mut KvPagePool, d: usize, upto: usize, tag: f32) {
+        for pos in 0..upto {
+            for layer in 0..2 {
+                let k: Vec<f32> = (0..d).map(|j| tag + (pos * 10 + j) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                kv.store(pool, layer, pos, &k, &v);
+            }
+        }
+    }
+
+    #[test]
+    fn fork_shares_pages_and_refcounts() {
+        let mut pool = tiny_pool(4);
+        let mut parent = PagedKv::new();
+        assert!(parent.reserve(&mut pool, PAGE_ROWS + 5));
+        parent.len = PAGE_ROWS + 5;
+        let mut child = PagedKv::new();
+        child.fork_prefix(&mut pool, &parent, PAGE_ROWS + 5);
+        // Same physical pages, two references each, no new allocation.
+        assert_eq!(child.pages, parent.pages);
+        assert_eq!(child.len, PAGE_ROWS + 5);
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.shared_pages(), 2);
+        for &p in &parent.pages {
+            assert_eq!(pool.refcount(p), 2);
+        }
+        child.release(&mut pool);
+        assert_eq!(pool.shared_pages(), 0);
+        assert_eq!(pool.pages_in_use(), 2, "parent pages must survive child release");
+        parent.release(&mut pool);
+        assert_eq!(pool.pages_free(), 4);
+    }
+
+    #[test]
+    fn fork_at_exact_page_boundary_never_clones() {
+        let d = 8;
+        let mut pool = tiny_pool(4);
+        let mut parent = PagedKv::new();
+        assert!(parent.reserve(&mut pool, 2 * PAGE_ROWS));
+        parent.len = 2 * PAGE_ROWS;
+        fill(&parent, &mut pool, d, 2 * PAGE_ROWS, 1000.0);
+        let mut child = PagedKv::new();
+        child.fork_prefix(&mut pool, &parent, 2 * PAGE_ROWS);
+        // Growing past a boundary prefix allocates a fresh page; the two
+        // shared pages stay shared (no copy-on-write needed — nothing
+        // writes into a fully occupied prefix page).
+        assert!(child.reserve(&mut pool, 2 * PAGE_ROWS + 1));
+        assert_eq!(pool.pages_in_use(), 3);
+        assert_eq!(pool.shared_pages(), 2);
+        assert_eq!(&child.pages[..2], &parent.pages[..]);
+        assert_ne!(child.pages[2], parent.pages[0]);
+        assert_ne!(child.pages[2], parent.pages[1]);
+        child.store(&mut pool, 0, 2 * PAGE_ROWS, &[5.0; 8], &[6.0; 8]);
+        // Parent's payload is untouched.
+        assert_eq!(pool.k_block(parent.pages[0], 0)[0], 1000.0);
+    }
+
+    #[test]
+    fn cow_clones_partial_tail_on_first_write() {
+        let d = 8;
+        let prefix = PAGE_ROWS + 5; // partial second page
+        let mut pool = tiny_pool(4);
+        let mut parent = PagedKv::new();
+        assert!(parent.reserve(&mut pool, prefix));
+        parent.len = prefix;
+        fill(&parent, &mut pool, d, prefix, 0.0);
+        let mut child = PagedKv::new();
+        child.fork_prefix(&mut pool, &parent, prefix);
+        let shared_tail = parent.pages[1];
+        // First growth writes into the shared tail page → it must be
+        // cloned for the child; the full first page stays shared.
+        assert!(child.reserve(&mut pool, prefix + 1));
+        assert_eq!(child.pages[0], parent.pages[0], "full prefix page stays shared");
+        assert_ne!(child.pages[1], shared_tail, "tail page must be cloned");
+        assert_eq!(pool.refcount(shared_tail), 1, "parent keeps the original tail");
+        assert_eq!(pool.refcount(child.pages[1]), 1);
+        assert_eq!(pool.pages_in_use(), 3);
+        // The clone carried the prefix rows and diverges after a write.
+        let row = 4; // pos PAGE_ROWS+4, within the shared prefix
+        let want: Vec<f32> = (0..d).map(|j| ((PAGE_ROWS + row) * 10 + j) as f32).collect();
+        let got = &pool.k_block(child.pages[1], 0)[row * d..(row + 1) * d];
+        assert_eq!(got, &want[..]);
+        child.store(&mut pool, 0, prefix, &[9.0; 8], &[8.0; 8]);
+        child.len = prefix + 1;
+        let parent_tail_row5 = pool.k_block(shared_tail, 0)[5 * d];
+        let child_tail_row5 = pool.k_block(child.pages[1], 0)[5 * d];
+        assert_eq!(child_tail_row5, 9.0);
+        assert_ne!(parent_tail_row5, 9.0, "CoW write leaked into the parent");
+        // The parent growing into its (now uniquely owned) tail page
+        // clones nothing further.
+        assert!(parent.reserve(&mut pool, prefix + 1));
+        assert_eq!(parent.pages[1], shared_tail);
+        assert_eq!(pool.pages_in_use(), 3);
+    }
+
+    #[test]
+    fn fork_then_parent_release_keeps_shared_pages_alive() {
+        let d = 8;
+        let prefix = PAGE_ROWS + 3;
+        let mut pool = tiny_pool(4);
+        let mut parent = PagedKv::new();
+        assert!(parent.reserve(&mut pool, prefix));
+        parent.len = prefix;
+        fill(&parent, &mut pool, d, prefix, 0.0);
+        let pages = parent.pages.clone();
+        let mut child = PagedKv::new();
+        child.fork_prefix(&mut pool, &parent, prefix);
+        // Parent preempted/retired immediately after the fork: its
+        // release drops refs but the child still holds both pages.
+        parent.release(&mut pool);
+        assert_eq!(parent.pages.len(), 0);
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.shared_pages(), 0);
+        for &p in &pages {
+            assert_eq!(pool.refcount(p), 1);
+        }
+        // The child's view of the prefix is intact and now writable
+        // without any clone (it is the sole owner).
+        let want: Vec<f32> = (0..d).map(|j| j as f32).collect();
+        assert_eq!(&pool.k_block(child.pages[0], 0)[..d], &want[..]);
+        assert!(child.reserve(&mut pool, prefix + 1));
+        assert_eq!(child.pages[..2], pages[..]);
+        assert_eq!(pool.pages_in_use(), 2);
+        child.release(&mut pool);
+        assert_eq!(pool.pages_free(), 4);
+    }
+
+    #[test]
+    fn double_release_is_safe_and_exact() {
+        let mut pool = tiny_pool(4);
+        let mut parent = PagedKv::new();
+        assert!(parent.reserve(&mut pool, 2 * PAGE_ROWS));
+        parent.len = 2 * PAGE_ROWS;
+        let mut child = PagedKv::new();
+        child.fork_prefix(&mut pool, &parent, 2 * PAGE_ROWS);
+        child.release(&mut pool);
+        // A second release of the same sequence is a no-op (its table is
+        // empty), not a double-decrement of the parent's pages.
+        child.release(&mut pool);
+        assert_eq!(pool.pages_in_use(), 2);
+        for &p in &parent.pages {
+            assert_eq!(pool.refcount(p), 1);
+        }
+        parent.release(&mut pool);
+        assert_eq!(pool.pages_free(), 4);
+    }
+
+    #[test]
+    fn cow_rolls_back_on_exhaustion() {
+        let prefix = PAGE_ROWS + 2;
+        let mut pool = tiny_pool(2); // exactly the prefix, nothing spare
+        let mut parent = PagedKv::new();
+        assert!(parent.reserve(&mut pool, prefix));
+        parent.len = prefix;
+        let mut child = PagedKv::new();
+        child.fork_prefix(&mut pool, &parent, prefix);
+        let before: Vec<u32> = child.pages.clone();
+        // Growing the child needs a CoW clone of the tail but the pool is
+        // exhausted: reserve must fail and restore the shared state.
+        assert!(!child.reserve(&mut pool, prefix + 1));
+        assert_eq!(child.pages, before);
+        assert_eq!(pool.refcount(child.pages[1]), 2);
+        assert_eq!(pool.pages_free(), 0);
+        // Preempting the parent frees nothing (pages shared) but makes
+        // the child sole owner, and growth then succeeds without allocating.
+        parent.release(&mut pool);
+        assert!(child.reserve(&mut pool, prefix + 1));
+        assert_eq!(pool.pages_in_use(), 2);
     }
 
     #[test]

@@ -19,16 +19,22 @@
 //!   lockstep (decode-once linear layers, one fused blocked-attention
 //!   pass over the batch); `decode_one` is the batch-1 special case.
 //!   `generation::paged` is the KV subsystem: a shared page pool
-//!   (`KvPagePool`, fixed `PAGE_ROWS`-row pages), per-sequence page
-//!   tables (`PagedKv`), and the flash-style `blocked_attention` routine
-//!   both the paged and the contiguous (`KvCache`) layouts share, which
-//!   keeps them bit-exact.
+//!   (`KvPagePool`, fixed `PAGE_ROWS`-row pages, refcounted for
+//!   copy-on-write prompt-prefix sharing), per-sequence page tables
+//!   (`PagedKv`, with `fork_prefix` to alias a parent's prefix pages),
+//!   and the flash-style `blocked_attention` routine both the paged and
+//!   the contiguous (`KvCache`) layouts share, which keeps them
+//!   bit-exact.
 //! * `runtime`, `serve` — the L3 coordinator: PJRT execution of the
 //!   AOT-lowered JAX/Pallas artifacts (behind the `pjrt` feature) and the
 //!   continuous-batching inference server: VecDeque admission queue,
 //!   pool-aware admission with preemption/requeue under KV pressure,
-//!   chunked prefill, batched paged decode steps, amortization + pool
-//!   metrics.
+//!   registered-prefix forking (share a system prompt's KV across
+//!   requests instead of re-prefilling it), chunked prefill, batched
+//!   paged decode steps, amortization + pool + sharing metrics.
+//!
+//! `ARCHITECTURE.md` at the repo root walks this stack top-down with a
+//! diagram; `BENCHMARKS.md` documents the benchmark outputs.
 //! * `util`, `bench`, `linalg` — offline-environment substrates (RNG, JSON,
 //!   thread pool, tensor IO, bench harness, dense linear algebra).
 

@@ -178,7 +178,7 @@ impl Matrix {
         }
     }
 
-    /// Scale row i by d[i] (diag(d) * self).
+    /// Scale row i by `d[i]` (`diag(d) * self`).
     pub fn scale_rows(&self, d: &[f64]) -> Matrix {
         assert_eq!(d.len(), self.rows);
         let mut out = self.clone();
@@ -190,7 +190,7 @@ impl Matrix {
         out
     }
 
-    /// Scale col j by d[j] (self * diag(d)).
+    /// Scale col j by `d[j]` (`self * diag(d)`).
     pub fn scale_cols(&self, d: &[f64]) -> Matrix {
         assert_eq!(d.len(), self.cols);
         let mut out = self.clone();

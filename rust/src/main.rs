@@ -4,7 +4,15 @@
 //!   quantize  --size m --method quip#-2bit [--out path.qtz]
 //!   eval      --size m --method quip#-2bit [--corpus w2] [--window 256]
 //!   zeroshot  --size m --method quip#-2bit
-//!   serve     --size m [--bits 2] [--addr 127.0.0.1:7140]
+//!   serve     --size m [--bits 2 [--ft]] [--addr 127.0.0.1:7140]
+//!             [--max-batch 8] [--pool-pages N]
+//!     --bits quantizes the served model (omit for fp32); --max-batch
+//!     caps concurrent sequences (default 8); --pool-pages sets the KV
+//!     pool size in 32-token-row pages — omitted, the pool is sized for
+//!     the worst case (max-batch × ctx/32 pages, never preempts), while
+//!     smaller values oversubscribe KV and preempt under pressure.
+//!     Prompt-prefix sharing is driven by the wire protocol
+//!     (register_prefix / prefix_id), not by flags.
 //!   export-codebook --out path.qtz      (E8P tables for cross-lang tests)
 //!   runtime-info                         (PJRT platform + artifact list)
 
@@ -59,7 +67,9 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: quipsharp <quantize|eval|zeroshot|serve|export-codebook|runtime-info> \
-                 [--size s|m|l|moe|nonllama] [--method quip#-2bit|…] [--art artifacts]"
+                 [--size s|m|l|moe|nonllama] [--method quip#-2bit|…] [--art artifacts]\n\
+                 serve also takes: [--bits 2 [--ft]] [--addr 127.0.0.1:7140] [--max-batch 8] \
+                 [--pool-pages N] (KV pool pages; default = worst case, smaller oversubscribes)"
             );
             Ok(())
         }

@@ -14,6 +14,25 @@
 //! the B = 1 special case). The codeword payload is held behind an `Arc`
 //! and the decode tables behind a process-wide shared handle, so building
 //! a generator over a packed model copies no weight data.
+//!
+//! # Decode-once tiling invariants
+//!
+//! Lanes are processed in [`BATCH_TILE`]-wide tiles: within a tile each
+//! 16-bit codeword is decoded into its 8 f32 weights exactly once and
+//! accumulated against every lane, so a batch of B ≤ `BATCH_TILE` reads
+//! the code stream exactly once per step and a larger batch reads it
+//! `⌈B / BATCH_TILE⌉` times (the figure
+//! [`crate::generation::streamed_bytes_for_batch`] accounts for). Two
+//! orderings are load-bearing and pinned by tests:
+//!
+//! * **Per-lane accumulation order is batch-invariant.** A lane's dot
+//!   product accumulates codeword-by-codeword in the same order at every
+//!   tile width (the `bw = 1` special case included), which is why
+//!   batched, paged, and sequential decode produce bit-identical logits
+//!   rather than merely close ones.
+//! * **Sign application is chunked, not branched.** `decode8`'s sign
+//!   loop runs over fixed-width slices for autovectorization, with
+//!   `decode8_scalar` kept as the bit-parity oracle over all 2¹⁶ codes.
 
 use std::sync::{Arc, OnceLock};
 
@@ -25,7 +44,7 @@ use crate::util::threadpool;
 pub struct E8PTables {
     /// 256 × 8 absolute values.
     pub abs: Vec<f32>,
-    /// parity[i] = 1 when an odd number of sign flips is required.
+    /// `parity[i]` = 1 when an odd number of sign flips is required.
     pub parity: [u8; 256],
 }
 

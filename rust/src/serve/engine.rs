@@ -1,31 +1,59 @@
 //! The inference engine: request queue + continuous batcher + paged KV
-//! pool.
+//! pool with copy-on-write prompt-prefix sharing.
 //!
 //! Scheduler loop (runs on its own thread):
 //!   1. admit queued requests while the shared KV page pool has a free
 //!      page (up to `max_batch`) — admission is bounded by *actual* KV
-//!      usage, not worst-case context reservation,
-//!   2. reserve this step's KV pages; on exhaustion, preempt the
+//!      usage, not worst-case context reservation. If a request's prompt
+//!      starts with a registered prefix ([`Engine::register_prefix`],
+//!      matched by longest common token prefix or named explicitly via
+//!      [`EngineRequest::prefix_id`]), the scheduler *forks* the cached
+//!      prefix — sharing its KV pages and skipping its prefill compute —
+//!      instead of re-prefilling it,
+//!   2. reserve this step's KV pages (cloning any shared page the step
+//!      would write into — copy-on-write); on exhaustion, preempt the
 //!      youngest active sequence (release its pages back to the pool,
 //!      requeue its request at the queue front),
 //!   3. one *batched* decode step across every active sequence — a single
 //!      `Generator::decode_batch_paged` call, so each packed codeword is
 //!      decoded once per step and attention runs as one fused blocked
-//!      pass over every sequence's page list,
+//!      pass over every sequence's page list (page tables may alias the
+//!      shared prefix pages; logits are bit-exact either way),
 //!   4. extra prefill rounds: sequences still consuming their prompt take
 //!      up to [`PREFILL_CHUNK`] tokens per step in batched slices instead
 //!      of one token per step,
 //!   5. retire finished sequences (pages back to the pool) and answer
 //!      their requests.
 //! Requests join/leave at step boundaries — continuous batching.
+//!
+//! Preemption ordering invariants: the youngest admission is always the
+//! victim (the oldest sequence keeps making progress, so the batch never
+//! livelocks), an already-finished sequence is retired in preference to
+//! evicting live work, and eviction releases only the victim's *own*
+//! page references — pages shared with the prefix cache or sibling forks
+//! survive until their last holder lets go, so preempting a forked
+//! sequence can never corrupt another sequence's KV. A preempted forked
+//! request re-forks on re-admission, making its restart cheap (only the
+//! unshared rows are re-prefilled).
+//!
+//! The prefix cache itself is built lazily by the scheduler (one
+//! sequential prefill, the first time a registered prefix meaningfully
+//! matches) and its pages stay pinned — refcounted like any other
+//! holder — for the engine's lifetime, so a hot system prompt is paid
+//! for once. Two deliberate trade-offs: the build runs inside the
+//! admission step, so in-flight sequences pause for one prefix prefill
+//! (once per registered prefix — amortized across every later hit), and
+//! a build is refused unless the pool keeps at least one free page of
+//! headroom beyond the cache, so pinning can never consume the last
+//! pages the forked sequences themselves need.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::generation::paged::{pages_per_seq, KvPagePool, PagedKv};
+use crate::generation::paged::{pages_per_seq, KvPagePool, PagedKv, PAGE_ROWS};
 use crate::generation::{argmax, streamed_bytes_for_batch, Generator};
 use crate::model::Model;
 use crate::qmodel::QuantizedModel;
@@ -42,6 +70,11 @@ pub struct EngineRequest {
     pub id: u64,
     pub prompt: Vec<u8>,
     pub max_new: usize,
+    /// Fork the prefix registered under this id (when the prompt starts
+    /// with its tokens) instead of letting the engine auto-detect the
+    /// longest matching registered prefix. `None` = auto-detect; an
+    /// unknown id is simply a miss, never an error.
+    pub prefix_id: Option<u64>,
 }
 
 #[derive(Clone, Debug)]
@@ -62,6 +95,128 @@ pub trait Engine: Send + Sync {
     fn submit(&self, req: EngineRequest) -> Receiver<EngineResponse>;
     fn metrics(&self) -> Arc<Metrics>;
     fn stop(&self);
+    /// Register a reusable prompt prefix (e.g. a system prompt) under
+    /// `id`. Requests whose prompts start with these tokens can then be
+    /// admitted by sharing the cached prefix's KV pages (copy-on-write)
+    /// instead of re-prefilling them. Re-registering an id replaces its
+    /// tokens. Returns `false` when the backend does not support prefix
+    /// sharing or the tokens are unusable (empty, or ≥ model context).
+    fn register_prefix(&self, id: u64, tokens: Vec<u8>) -> bool {
+        let _ = (id, tokens);
+        false
+    }
+}
+
+/// A registered, reusable prompt prefix (e.g. a system prompt).
+struct PrefixDef {
+    id: u64,
+    tokens: Arc<Vec<u8>>,
+}
+
+/// Scheduler-side cache for one registered prefix: its KV rows,
+/// prefilled once into pooled pages that forks then share, plus the
+/// logits after its final token (used when a prompt *equals* the prefix,
+/// so even the first generated token needs no prefill).
+struct PrefixCache {
+    tokens: Arc<Vec<u8>>,
+    kv: PagedKv,
+    last_logits: Vec<f32>,
+}
+
+/// Longest common prefix of two token streams.
+fn common_prefix_len(a: &[u8], b: &[u8]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Try to admit `req` by forking a registered prompt prefix into `kv`.
+///
+/// Picks the registered prefix with the longest common token prefix
+/// against the request's prompt (or the one named by `req.prefix_id`),
+/// lazily prefills its KV rows once into pooled pages, and forks the
+/// common rows into `kv` by sharing those pages. Returns the forked row
+/// count and, when the whole prompt was covered, the cached logits of
+/// its final token. `None` is a miss — nothing registered, nothing
+/// matching, or the cache not buildable under current pool pressure —
+/// and the caller prefills normally.
+fn try_fork_prefix(
+    req: &EngineRequest,
+    sh: &Shared,
+    generator: &Generator,
+    pool: &mut KvPagePool,
+    cache: &mut HashMap<u64, PrefixCache>,
+    kv: &mut PagedKv,
+) -> Option<(usize, Option<Vec<f32>>)> {
+    let (pid, common, tokens) = {
+        let defs = sh.prefixes.lock().unwrap();
+        let score =
+            |d: &PrefixDef| (d.id, common_prefix_len(&req.prompt, &d.tokens), d.tokens.clone());
+        match req.prefix_id {
+            Some(want) => defs.iter().find(|d| d.id == want).map(score),
+            None => defs.iter().map(score).max_by_key(|&(_, common, _)| common),
+        }?
+    };
+    // Only a *meaningful* match justifies building (and pinning) the
+    // cache: the prompt must contain the whole registered prefix, or at
+    // least one fully shareable page of it. A shorter coincidental
+    // overlap would pay the full cache prefill to share nothing but a
+    // partial tail page that the very next write clones back.
+    if common < tokens.len().min(PAGE_ROWS) {
+        return None;
+    }
+    // (Re)build the cache entry if missing or re-registered since.
+    let stale = match cache.get(&pid) {
+        Some(c) => !Arc::ptr_eq(&c.tokens, &tokens),
+        None => true,
+    };
+    if stale {
+        if let Some(mut old) = cache.remove(&pid) {
+            old.kv.release(pool);
+        }
+        // Check capacity before spending any prefill compute: the
+        // scheduler is single-threaded, so free pages now means the
+        // whole build succeeds. Demand a page of headroom beyond the
+        // cache — its pages stay pinned for the engine's lifetime, so
+        // building into the last free pages would leave nothing for the
+        // sequences the cache exists to serve. Too tight → fall back to
+        // a normal prefill; a later admission retries once pages free.
+        if PagedKv::pages_needed(tokens.len()) + 1 > pool.pages_free() {
+            return None;
+        }
+        let mut pkv = PagedKv::new();
+        let mut logits = Vec::new();
+        for &t in tokens.iter() {
+            if !pkv.reserve(pool, pkv.len + 1) {
+                pkv.release(pool);
+                return None;
+            }
+            logits = generator
+                .decode_batch_paged(&[t], pool, &mut [&mut pkv])
+                .pop()
+                .unwrap();
+        }
+        sh.metrics.record_prefill(tokens.len());
+        let entry = PrefixCache {
+            tokens: tokens.clone(),
+            kv: pkv,
+            last_logits: logits,
+        };
+        cache.insert(pid, entry);
+    }
+    let entry = cache.get(&pid)?;
+    // The fork must leave at least one prompt token to decode — unless
+    // the prompt *is* the whole prefix, whose final logits are cached.
+    let whole = common == req.prompt.len() && common == entry.tokens.len();
+    let fork_rows = if whole {
+        common
+    } else {
+        common.min(req.prompt.len() - 1)
+    };
+    if fork_rows == 0 {
+        return None;
+    }
+    kv.fork_prefix(pool, &entry.kv, fork_rows);
+    let logits = whole.then(|| entry.last_logits.clone());
+    Some((fork_rows, logits))
 }
 
 struct Active {
@@ -87,6 +242,9 @@ struct Shared {
     next_id: AtomicU64,
     /// Model context length, for submit-time validation.
     ctx: usize,
+    /// Registered reusable prompt prefixes (the scheduler caches their
+    /// KV lazily, keyed by id, and rebuilds on re-registration).
+    prefixes: Mutex<Vec<PrefixDef>>,
 }
 
 /// Native-backend engine: owns the model (optionally quantized), the
@@ -126,6 +284,7 @@ impl NativeEngine {
             metrics: Arc::new(Metrics::new()),
             next_id: AtomicU64::new(1),
             ctx: model.cfg.ctx,
+            prefixes: Mutex::new(Vec::new()),
         });
         let sh = shared.clone();
         let handle = std::thread::spawn(move || {
@@ -138,6 +297,7 @@ impl NativeEngine {
             let mut pool = KvPagePool::for_model(&model, pool_pages.max(1));
             sh.metrics.set_pool_capacity(pool.pages_total());
             let mut active: Vec<Active> = Vec::new();
+            let mut prefix_cache: HashMap<u64, PrefixCache> = HashMap::new();
             let mut admit_counter: u64 = 0;
             let ctx = model.cfg.ctx;
             loop {
@@ -149,28 +309,50 @@ impl NativeEngine {
                 // will claim its first page at the first decode round),
                 // rather than reserving worst-case `ctx` pages up front.
                 // Counting admissions against the free pages avoids
-                // admit-then-evict churn when only one page is left.
-                {
-                    let mut q = sh.queue.lock().unwrap();
-                    let mut newly = 0usize;
-                    while active.len() < max_batch
-                        && (active.is_empty() || pool.pages_free() > newly)
-                    {
-                        let Some((req, tx, t0)) = q.pop_front() else { break };
-                        newly += 1;
-                        let pending = req.prompt.len();
-                        admit_counter += 1;
-                        active.push(Active {
-                            req,
-                            tx,
-                            kv: PagedKv::new(),
-                            generated: Vec::new(),
-                            pending_prompt: pending,
-                            last_logits: Vec::new(),
-                            t0,
-                            admit_seq: admit_counter,
-                        });
+                // admit-then-evict churn when only one page is left. The
+                // queue lock is taken per pop, so a slow admission (a
+                // one-time prefix-cache prefill) never blocks submitters.
+                let mut newly = 0usize;
+                while active.len() < max_batch && (active.is_empty() || pool.pages_free() > newly) {
+                    let popped = sh.queue.lock().unwrap().pop_front();
+                    let Some((req, tx, t0)) = popped else { break };
+                    newly += 1;
+                    admit_counter += 1;
+                    let mut kv = PagedKv::new();
+                    let mut pending_prompt = req.prompt.len();
+                    let mut last_logits = Vec::new();
+                    // Prefix sharing: fork a registered prompt prefix
+                    // (sharing its KV pages, skipping its prefill) and
+                    // only decode the unshared remainder of the prompt.
+                    let fork = try_fork_prefix(
+                        &req,
+                        &sh,
+                        &generator,
+                        &mut pool,
+                        &mut prefix_cache,
+                        &mut kv,
+                    );
+                    if let Some((fork_rows, logits)) = fork {
+                        pending_prompt = req.prompt.len() - fork_rows;
+                        if let Some(l) = logits {
+                            last_logits = l;
+                        }
+                        // Count only fully occupied pages as saved: the
+                        // partial tail page is also shared at fork, but
+                        // the first write clones it back (copy-on-write),
+                        // so it is not a lasting saving.
+                        sh.metrics.record_prefix_hit(fork_rows / PAGE_ROWS);
                     }
+                    active.push(Active {
+                        req,
+                        tx,
+                        kv,
+                        generated: Vec::new(),
+                        pending_prompt,
+                        last_logits,
+                        t0,
+                        admit_seq: admit_counter,
+                    });
                 }
                 if active.is_empty() {
                     std::thread::sleep(std::time::Duration::from_millis(1));
@@ -191,7 +373,13 @@ impl NativeEngine {
                             let idx = a.req.prompt.len() - a.pending_prompt;
                             a.pending_prompt -= 1;
                             sel.push((i, a.req.prompt[idx], true));
-                        } else if round == 0 {
+                        } else if round == 0 && a.generated.len() < a.req.max_new {
+                            // The budget check matters for whole-prompt
+                            // prefix hits, which arrive with pending 0
+                            // and ready logits: a max_new = 0 request
+                            // must retire with 0 tokens, exactly like
+                            // the unshared path (where the retire sweep
+                            // runs before any round-0 continuation).
                             let t = argmax(&a.last_logits) as u8;
                             a.generated.push(t);
                             sel.push((i, t, false));
@@ -253,15 +441,27 @@ impl NativeEngine {
                                     let need = PagedKv::pages_needed(a.kv.len + 1);
                                     a.kv.release(&mut pool);
                                     sh.metrics.record_failed();
+                                    // Pages pinned by resident prefix
+                                    // caches shrink the effective pool;
+                                    // say so instead of misdiagnosing
+                                    // the pool as undersized.
+                                    let pinned: usize =
+                                        prefix_cache.values().map(|c| c.kv.pages.len()).sum();
+                                    let mut msg = format!(
+                                        "KV pool too small: sequence needs {need} pages but the pool holds {}",
+                                        pool.pages_total()
+                                    );
+                                    if pinned > 0 {
+                                        msg.push_str(&format!(
+                                            " ({pinned} pinned by prefix caches)"
+                                        ));
+                                    }
                                     let resp = EngineResponse {
                                         id: a.req.id,
                                         tokens: Vec::new(),
                                         latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
                                         prompt_len: a.req.prompt.len(),
-                                        error: Some(format!(
-                                            "KV pool too small: sequence needs {need} pages but the pool holds {}",
-                                            pool.pages_total()
-                                        )),
+                                        error: Some(msg),
                                     };
                                     let _ = a.tx.send(resp);
                                     sel.clear();
@@ -338,6 +538,7 @@ impl NativeEngine {
                         weight_bytes * batch as u64,
                     );
                     sh.metrics.set_pages_in_use(pool.pages_in_use());
+                    sh.metrics.set_shared_pages(pool.shared_pages());
                 }
                 // Retire: release pages back to the pool and answer.
                 active.retain_mut(|a| {
@@ -360,6 +561,7 @@ impl NativeEngine {
                     }
                 });
                 sh.metrics.set_pages_in_use(pool.pages_in_use());
+                sh.metrics.set_shared_pages(pool.shared_pages());
             }
         });
         NativeEngine {
@@ -415,6 +617,21 @@ impl Engine for NativeEngine {
     fn stop(&self) {
         self.shared.stop.store(true, Ordering::Relaxed);
     }
+
+    fn register_prefix(&self, id: u64, tokens: Vec<u8>) -> bool {
+        // A usable prefix must leave room to generate: prompts of length
+        // ≥ ctx are rejected at submit time anyway.
+        if tokens.is_empty() || tokens.len() >= self.shared.ctx {
+            return false;
+        }
+        let mut defs = self.shared.prefixes.lock().unwrap();
+        let tokens = Arc::new(tokens);
+        match defs.iter_mut().find(|d| d.id == id) {
+            Some(d) => d.tokens = tokens,
+            None => defs.push(PrefixDef { id, tokens }),
+        }
+        true
+    }
 }
 
 impl Drop for NativeEngine {
@@ -440,6 +657,7 @@ mod tests {
                 id: i,
                 prompt: vec![1, 2, 3, (i % 60) as u8],
                 max_new: 5,
+                prefix_id: None,
             });
             rxs.push(rx);
         }
@@ -474,6 +692,7 @@ mod tests {
             id: 9,
             prompt: prompt.clone(),
             max_new: 6,
+            prefix_id: None,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         let offline = Generator::dense(&model).generate(&prompt, 6);
@@ -497,11 +716,13 @@ mod tests {
             id: 1,
             prompt: long_prompt.clone(),
             max_new: 6,
+            prefix_id: None,
         });
         let rx_short = eng.submit(EngineRequest {
             id: 2,
             prompt: short_prompt.clone(),
             max_new: 6,
+            prefix_id: None,
         });
         let gen = Generator::dense(&model);
         let resp_long = rx_long
@@ -532,6 +753,7 @@ mod tests {
                 id: 77,
                 prompt: vec![1u8; plen],
                 max_new: 4,
+                prefix_id: None,
             });
             let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
             assert!(resp.tokens.is_empty());
@@ -545,6 +767,7 @@ mod tests {
             id: 78,
             prompt: vec![1, 2, 3],
             max_new: 2,
+            prefix_id: None,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -553,9 +776,9 @@ mod tests {
         eng.join();
     }
 
-    /// ctx = 64 = two KV pages per worst-case sequence, so a small pool
-    /// creates real paging pressure (tiny_model's ctx is a single page).
-    fn two_page_model(seed: u64) -> Model {
+    /// Tiny model with a configurable multi-page context (tiny_model's
+    /// ctx is a single page, so it can't exercise paging pressure).
+    fn multi_page_model(seed: u64, ctx: usize) -> Model {
         let cfg = ModelConfig {
             name: "tiny2p".into(),
             d_model: 32,
@@ -563,11 +786,17 @@ mod tests {
             n_heads: 2,
             d_ff: 64,
             vocab: 64,
-            ctx: 64,
+            ctx,
             arch: Arch::Llama,
             n_experts: 2,
         };
         Model::random(cfg, seed)
+    }
+
+    /// ctx = 64 = two KV pages per worst-case sequence, so a small pool
+    /// creates real paging pressure.
+    fn two_page_model(seed: u64) -> Model {
+        multi_page_model(seed, 64)
     }
 
     #[test]
@@ -590,6 +819,7 @@ mod tests {
                 id: i,
                 prompt: prompt.clone(),
                 max_new,
+                prefix_id: None,
             }));
             prompts.push(prompt);
         }
@@ -629,6 +859,7 @@ mod tests {
                 id: i,
                 prompt: vec![2, (i + 1) as u8],
                 max_new: 20, // 22 rows: one page per sequence
+                prefix_id: None,
             }));
         }
         for rx in rxs {
@@ -647,6 +878,147 @@ mod tests {
     }
 
     #[test]
+    fn prefix_sharing_forks_instead_of_prefilling() {
+        let model = Arc::new(two_page_model(8));
+        let eng = NativeEngine::start(model.clone(), None, 4);
+        let gen = Generator::dense(&model);
+        // A system prompt spanning one full KV page plus a partial tail.
+        let prefix: Vec<u8> = (0..40).map(|i| ((i * 3 + 1) % 60) as u8).collect();
+        assert!(eng.register_prefix(7, prefix.clone()));
+        let mut rxs = Vec::new();
+        let mut prompts = Vec::new();
+        for i in 0..4u64 {
+            let mut prompt = prefix.clone();
+            prompt.push((i + 1) as u8);
+            rxs.push(eng.submit(EngineRequest {
+                id: i,
+                prompt: prompt.clone(),
+                max_new: 6,
+                prefix_id: None, // auto-detect against the registry
+            }));
+            prompts.push(prompt);
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert!(resp.error.is_none());
+            assert_eq!(
+                resp.tokens,
+                gen.generate(&prompts[i], 6),
+                "request {i} diverged under prefix sharing"
+            );
+        }
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        assert_eq!(m.prefix_hits.load(Ordering::Relaxed), 4);
+        // Each fork lastingly shared the prefix's one full page (the
+        // partial tail page is cloned back by the first write, so it is
+        // not counted as saved).
+        assert_eq!(m.pages_saved.load(Ordering::Relaxed), 4);
+        // Forked prompts skip the shared rows: total prefill is the
+        // prefix once (the cache build) plus one unshared token per
+        // request.
+        let prefill = m.prefill_tokens.load(Ordering::Relaxed) as usize;
+        assert_eq!(prefill, prefix.len() + 4);
+        // Retirement released every per-request page; only the pinned
+        // prefix cache stays resident.
+        assert_eq!(m.pages_in_use.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn explicit_prefix_id_and_whole_prompt_fork() {
+        let model = Arc::new(two_page_model(9));
+        let eng = NativeEngine::start(model.clone(), None, 2);
+        let gen = Generator::dense(&model);
+        let sys: Vec<u8> = (0..36).map(|i| ((i * 5 + 2) % 60) as u8).collect();
+        assert!(eng.register_prefix(1, sys.clone()));
+        // Unusable registrations are refused outright.
+        assert!(!eng.register_prefix(2, Vec::new()));
+        assert!(!eng.register_prefix(2, vec![1u8; model.cfg.ctx]));
+        // Prompt exactly equal to the registered prefix: the fork covers
+        // the whole prompt and generation starts from cached logits.
+        let rx = eng.submit(EngineRequest {
+            id: 5,
+            prompt: sys.clone(),
+            max_new: 5,
+            prefix_id: Some(1),
+        });
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(resp.error.is_none());
+        assert_eq!(resp.tokens, gen.generate(&sys, 5));
+        let m = eng.metrics();
+        assert_eq!(m.prefix_hits.load(Ordering::Relaxed), 1);
+        // No prefill beyond the one-time cache build.
+        assert_eq!(m.prefill_tokens.load(Ordering::Relaxed), sys.len() as u64);
+        // An unknown prefix_id is a miss, not an error.
+        let rx = eng.submit(EngineRequest {
+            id: 6,
+            prompt: vec![1, 2, 3],
+            max_new: 3,
+            prefix_id: Some(99),
+        });
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(resp.error.is_none());
+        assert_eq!(resp.tokens, gen.generate(&[1, 2, 3], 3));
+        assert_eq!(m.prefix_hits.load(Ordering::Relaxed), 1);
+        // max_new = 0 on a whole-prompt hit retires with 0 tokens, same
+        // as the unshared path (the cached logits must not leak a free
+        // continuation token).
+        let rx = eng.submit(EngineRequest {
+            id: 7,
+            prompt: sys.clone(),
+            max_new: 0,
+            prefix_id: Some(1),
+        });
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(resp.error.is_none());
+        assert!(resp.tokens.is_empty());
+        eng.stop();
+        eng.join();
+    }
+
+    #[test]
+    fn forked_children_under_pool_pressure_complete_exactly() {
+        // ctx = 96 (3 pages/seq worst case); the pool holds the 2-page
+        // prefix cache plus 4 more pages, while 3 children each need up
+        // to 2 own pages (CoW tail clone + one growth page). Whatever
+        // preemptions the timing produces, every response must equal the
+        // offline continuation and the shared cache must survive.
+        let model = Arc::new(multi_page_model(10, 96));
+        let eng = NativeEngine::start_with_pool(model.clone(), None, 3, 6);
+        let gen = Generator::dense(&model);
+        let prefix: Vec<u8> = (0..40).map(|i| ((i * 7 + 3) % 60) as u8).collect();
+        assert!(eng.register_prefix(3, prefix.clone()));
+        let mut rxs = Vec::new();
+        let mut prompts = Vec::new();
+        for i in 0..3u64 {
+            let mut prompt = prefix.clone();
+            prompt.push((40 + i) as u8);
+            rxs.push(eng.submit(EngineRequest {
+                id: i,
+                prompt: prompt.clone(),
+                max_new: 24, // 41 + 24 = 65 rows: crosses into a 3rd page
+                prefix_id: Some(3),
+            }));
+            prompts.push(prompt);
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+            assert_eq!(resp.tokens, gen.generate(&prompts[i], 24), "request {i} diverged");
+        }
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        // Every admission forked (re-admissions after any preemption
+        // fork again, so hits ≥ the request count).
+        assert!(m.prefix_hits.load(Ordering::Relaxed) >= 3);
+        assert!(m.pages_saved.load(Ordering::Relaxed) >= 3);
+        // Only the pinned prefix cache stays resident.
+        assert_eq!(m.pages_in_use.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
     fn oversized_sequence_fails_descriptively() {
         // A pool smaller than a single sequence cannot ever serve it:
         // the engine must answer with an error instead of spinning.
@@ -656,6 +1028,7 @@ mod tests {
             id: 1,
             prompt: vec![1, 2, 3],
             max_new: 60, // needs 2 pages; pool holds 1
+            prefix_id: None,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         let err = resp.error.expect("expected pool-too-small error");

@@ -1,6 +1,15 @@
 //! Serving metrics: throughput, latency, batch-occupancy,
-//! decode-bytes-amortization and KV-page-pool counters, exported as
-//! JSON through the `stats` API command.
+//! decode-bytes-amortization, KV-page-pool and prefix-sharing counters,
+//! exported as JSON through the `stats` API command.
+//!
+//! Conventions: counters (`requests_*`, `preemptions`, `prefix_hits`,
+//! `pages_saved`, token/byte totals) only ever grow; gauges
+//! (`pages_in_use`, `shared_pages`) are overwritten by the scheduler at
+//! step boundaries, with `peak_pages_in_use` tracking the pool gauge's
+//! high-water mark. Everything is atomics (plus one latency vector
+//! behind a mutex), so the engine's scheduler thread records without
+//! coordination and any number of API threads snapshot concurrently;
+//! a snapshot is *per-field* consistent, not a cross-field transaction.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -35,6 +44,17 @@ pub struct Metrics {
     pub pages_in_use: AtomicU64,
     /// High-water mark of `pages_in_use`.
     pub peak_pages_in_use: AtomicU64,
+    /// Pages currently referenced by more than one sequence — the
+    /// copy-on-write prefix-sharing gauge.
+    pub shared_pages: AtomicU64,
+    /// Requests admitted by forking a registered prompt prefix instead
+    /// of re-prefilling it.
+    pub prefix_hits: AtomicU64,
+    /// Fully occupied prefix pages a fork shared instead of allocating,
+    /// summed over all prefix hits. Partial tail pages are excluded:
+    /// they are shared at fork too, but the first write clones them
+    /// back (copy-on-write), so they are not a lasting saving.
+    pub pages_saved: AtomicU64,
     /// Weight bytes actually streamed by the decode-once batched kernel.
     weight_bytes_streamed: AtomicU64,
     /// Weight bytes the same steps would stream decoding one sequence at
@@ -65,6 +85,9 @@ impl Metrics {
             pool_pages: AtomicU64::new(0),
             pages_in_use: AtomicU64::new(0),
             peak_pages_in_use: AtomicU64::new(0),
+            shared_pages: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            pages_saved: AtomicU64::new(0),
             weight_bytes_streamed: AtomicU64::new(0),
             weight_bytes_logical: AtomicU64::new(0),
             latencies_ms: Mutex::new(Vec::new()),
@@ -116,6 +139,20 @@ impl Metrics {
         self.pages_in_use.store(pages as u64, Ordering::Relaxed);
         self.peak_pages_in_use
             .fetch_max(pages as u64, Ordering::Relaxed);
+    }
+
+    /// Current count of pages shared by more than one sequence (gauge).
+    pub fn set_shared_pages(&self, pages: usize) {
+        self.shared_pages.store(pages as u64, Ordering::Relaxed);
+    }
+
+    /// A request was admitted by forking a cached prefix: `pages_shared`
+    /// pages were referenced instead of allocated (and that many rows of
+    /// prefill compute skipped).
+    pub fn record_prefix_hit(&self, pages_shared: usize) {
+        self.prefix_hits.fetch_add(1, Ordering::Relaxed);
+        self.pages_saved
+            .fetch_add(pages_shared as u64, Ordering::Relaxed);
     }
 
     /// Weight-traffic accounting for one batched decode step: `streamed`
@@ -193,6 +230,18 @@ impl Metrics {
                 Json::num(self.peak_pages_in_use.load(Ordering::Relaxed) as f64),
             ),
             (
+                "shared_pages",
+                Json::num(self.shared_pages.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "prefix_hits",
+                Json::num(self.prefix_hits.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "pages_saved",
+                Json::num(self.pages_saved.load(Ordering::Relaxed) as f64),
+            ),
+            (
                 "preemptions",
                 Json::num(self.preemptions.load(Ordering::Relaxed) as f64),
             ),
@@ -260,5 +309,21 @@ mod tests {
         assert_eq!(s.get("preemptions").as_f64(), Some(2.0));
         assert_eq!(s.get("requests_rejected").as_f64(), Some(1.0));
         assert_eq!(s.get("requests_failed").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn prefix_sharing_counters() {
+        let m = Metrics::new();
+        // Two forks off a 3-page prefix, one off a 1-page prefix.
+        m.record_prefix_hit(3);
+        m.record_prefix_hit(3);
+        m.record_prefix_hit(1);
+        // shared_pages is a gauge: overwritten, not accumulated.
+        m.set_shared_pages(4);
+        m.set_shared_pages(3);
+        let s = m.snapshot();
+        assert_eq!(s.get("prefix_hits").as_f64(), Some(3.0));
+        assert_eq!(s.get("pages_saved").as_f64(), Some(7.0));
+        assert_eq!(s.get("shared_pages").as_f64(), Some(3.0));
     }
 }

@@ -38,6 +38,22 @@
 //!   `bench_generation` pool-pressure sweep (`make bench-serve`) reports
 //!   how far a half-sized pool over-admits versus worst-case
 //!   reservation.
+//!
+//! # Prompt-prefix sharing
+//!
+//! Many-users-one-system-prompt workloads hit the pool hardest through
+//! duplicated prefix KV. [`engine::Engine::register_prefix`] (TCP:
+//! `{"cmd":"register_prefix","id":…,"tokens":[…]}`) registers a
+//! reusable prefix; a request whose prompt starts with it — matched by
+//! longest common token prefix, or pinned via the request's `prefix_id`
+//! field — is admitted by *forking* the cached prefix: its page-table
+//! entries alias the cached pages (refcounted, copy-on-write on first
+//! divergent write) and only the unshared prompt remainder is
+//! prefilled. Decode over aliased pages is bit-exact with unshared
+//! decode, so responses never change — only pages and prefill compute
+//! are saved. Metrics: `shared_pages` (gauge), `prefix_hits`,
+//! `pages_saved`; the `bench_generation` shared-prefix sweep measures
+//! the peak-page and throughput effect at N sequences over one prompt.
 
 pub mod engine;
 pub mod metrics;

@@ -1,9 +1,15 @@
 //! TCP front-end: line-delimited JSON over a listener socket.
 //!
-//! Protocol (one JSON object per line):
-//!   {"prompt": [1,2,3], "max_new": 16}  → {"id":…, "tokens":[…], "ms":…}
-//!   {"cmd": "stats"}                    → metrics snapshot
-//!   {"cmd": "shutdown"}                 → stops the server
+//! Protocol (one JSON object per line; see `rust/src/serve/README.md`
+//! for the full field-by-field reference):
+//!   {"prompt": [1,2,3], "max_new": 16, "prefix_id": 1}
+//!       → {"id":…, "tokens":[…], "ms":…} (plus "error" on failure;
+//!         "prefix_id" is optional — without it the engine auto-detects
+//!         registered prefixes)
+//!   {"cmd": "register_prefix", "id": 1, "tokens": [5,6,7]}
+//!       → {"ok": true|false}  (share this prompt prefix's KV)
+//!   {"cmd": "stats"}     → metrics snapshot
+//!   {"cmd": "shutdown"}  → stops the server
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -99,6 +105,18 @@ fn handle_conn(
             Some("stats") => {
                 writeln!(writer, "{}", engine.metrics().snapshot().emit())?;
             }
+            Some("register_prefix") => {
+                let tokens: Vec<u8> = msg
+                    .get("tokens")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|v| v.as_usize()).map(|v| v as u8).collect())
+                    .unwrap_or_default();
+                let ok = match msg.get("id").as_usize() {
+                    Some(id) => engine.register_prefix(id as u64, tokens),
+                    None => false,
+                };
+                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(ok))]).emit())?;
+            }
             Some("shutdown") => {
                 stop.store(true, Ordering::Relaxed);
                 engine.stop();
@@ -112,11 +130,13 @@ fn handle_conn(
                     .map(|a| a.iter().filter_map(|v| v.as_usize()).map(|v| v as u8).collect())
                     .unwrap_or_default();
                 let max_new = msg.get("max_new").as_usize().unwrap_or(16);
+                let prefix_id = msg.get("prefix_id").as_usize().map(|v| v as u64);
                 let id = ids.fetch_add(1, Ordering::Relaxed);
                 let rx = engine.submit(EngineRequest {
                     id,
                     prompt,
                     max_new,
+                    prefix_id,
                 });
                 let resp = rx.recv().context("engine dropped request")?;
                 let mut fields = vec![
@@ -152,13 +172,29 @@ impl Client {
     }
 
     pub fn request(&mut self, prompt: &[u8], max_new: usize) -> Result<(Vec<u8>, f64)> {
-        let msg = Json::obj(vec![
+        self.request_with_prefix(prompt, max_new, None)
+    }
+
+    /// Like [`Client::request`], optionally pinning a registered prefix
+    /// id (see [`Client::register_prefix`]) for the engine to fork
+    /// instead of letting it auto-detect.
+    pub fn request_with_prefix(
+        &mut self,
+        prompt: &[u8],
+        max_new: usize,
+        prefix_id: Option<u64>,
+    ) -> Result<(Vec<u8>, f64)> {
+        let mut fields = vec![
             (
                 "prompt",
                 Json::Arr(prompt.iter().map(|&t| Json::num(t as f64)).collect()),
             ),
             ("max_new", Json::num(max_new as f64)),
-        ]);
+        ];
+        if let Some(pid) = prefix_id {
+            fields.push(("prefix_id", Json::num(pid as f64)));
+        }
+        let msg = Json::obj(fields);
         writeln!(self.writer, "{}", msg.emit())?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
@@ -175,6 +211,24 @@ impl Client {
             .map(|v| v as u8)
             .collect();
         Ok((tokens, resp.get("ms").as_f64().unwrap_or(0.0)))
+    }
+
+    /// Register `tokens` as a shareable prompt prefix under `id`.
+    /// Returns whether the server accepted it.
+    pub fn register_prefix(&mut self, id: u64, tokens: &[u8]) -> Result<bool> {
+        let msg = Json::obj(vec![
+            ("cmd", Json::str("register_prefix")),
+            ("id", Json::num(id as f64)),
+            (
+                "tokens",
+                Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+        ]);
+        writeln!(self.writer, "{}", msg.emit())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = Json::parse(line.trim()).context("bad response")?;
+        Ok(resp.get("ok").as_bool().unwrap_or(false))
     }
 
     pub fn stats(&mut self) -> Result<Json> {

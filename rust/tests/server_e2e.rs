@@ -78,6 +78,41 @@ fn tcp_server_round_trip_with_batching() {
 }
 
 #[test]
+fn tcp_prefix_sharing_round_trip() {
+    let model = Arc::new(make_model(3));
+    let engine = Arc::new(NativeEngine::start(model.clone(), None, 4));
+    let eng_dyn: Arc<dyn Engine> = engine.clone();
+    let handle = serve_blocking(eng_dyn, ServerConfig::default()).unwrap();
+    let addr = handle.local_addr;
+
+    // Register a system prompt over the wire, then serve requests that
+    // extend it — once pinning the prefix id explicitly, once relying on
+    // the engine's longest-common-prefix auto-detection.
+    let sys: Vec<u8> = (0..40).map(|i| ((i * 3 + 2) % 60) as u8).collect();
+    let mut c = Client::connect(addr).unwrap();
+    assert!(c.register_prefix(1, &sys).unwrap());
+    let mut with_suffix = sys.clone();
+    with_suffix.push(9);
+    let (explicit, _) = c.request_with_prefix(&with_suffix, 6, Some(1)).unwrap();
+    let (auto, _) = c.request(&with_suffix, 6).unwrap();
+    assert_eq!(explicit.len(), 6);
+    // Same prompt, same greedy continuation, shared or not.
+    assert_eq!(explicit, auto);
+
+    // The metrics snapshot reports the sharing counters.
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("prefix_hits").as_f64(), Some(2.0));
+    // One full prefix page lastingly shared per hit (the partial tail
+    // page is cloned back on first write and not counted).
+    assert!(stats.get("pages_saved").as_f64().unwrap() >= 2.0);
+
+    c.shutdown().unwrap();
+    handle.stop();
+    engine.stop();
+    engine.join();
+}
+
+#[test]
 fn direct_engine_api_under_load() {
     let model = Arc::new(make_model(2));
     let engine = NativeEngine::start(model.clone(), None, 3);
@@ -87,6 +122,7 @@ fn direct_engine_api_under_load() {
                 id: i,
                 prompt: vec![(i % 60) as u8, 5, 9],
                 max_new: 4,
+                prefix_id: None,
             })
         })
         .collect();
