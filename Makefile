@@ -4,7 +4,8 @@
 # and formatting. The PJRT path needs the offline xla crate and is off
 # by default (see Cargo.toml's `pjrt` feature).
 
-.PHONY: verify build test fmt lint doc bench-batch bench-serve artifacts
+.PHONY: verify build test fmt lint doc bench-batch bench-serve bench-attention \
+        bench-attention-smoke artifacts
 
 verify:
 	cargo build --release
@@ -26,9 +27,11 @@ lint:
 	cargo clippy --all-targets -- -D warnings
 
 # Rustdoc must stay buildable with intra-doc links intact (broken links
-# are warnings, promoted to errors here). Mirrored by the CI `lint` job.
+# are warnings, promoted to errors here). Private items are documented
+# too, so module-internal docs (the attention kernels, the scheduler
+# internals) stay link-checked. Mirrored by the CI `lint` job.
 doc:
-	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --document-private-items
 
 # Batch-sweep generation benchmark; writes BENCH_generation.json.
 bench-batch:
@@ -38,6 +41,17 @@ bench-batch:
 # (admitted sequences, preemptions, tok/s under a half-worst-case pool);
 # writes BENCH_generation.json.
 bench-serve: bench-batch
+
+# Attention-kernel micro-bench: the cross-sequence fused block walk vs
+# the per-sequence baseline, shared-prefix vs unshared, B sweep; writes
+# BENCH_attention.json.
+bench-attention:
+	cargo bench --bench bench_attention
+
+# Seconds-scale smoke run of the same binary (tiny shapes, bit-parity
+# checks, no perf assertion). Mirrored by the CI `tier1` job.
+bench-attention-smoke:
+	cargo bench --bench bench_attention -- --smoke
 
 # Trained weights + corpus + AOT HLO artifacts (needs the python/JAX
 # toolchain; see python/compile/aot.py). Integration tests skip cleanly

@@ -1,0 +1,288 @@
+//! Attention-kernel micro-bench — the cross-sequence fused block walk
+//! (`fused_batch_attention`) against the per-sequence baseline
+//! (`blocked_attention`), isolated from the rest of decode. Writes
+//! `BENCH_attention.json` (field reference in `BENCHMARKS.md`).
+//!
+//! Two scenarios per batch size B:
+//!
+//! * **shared**: B sequences forked off one prefilled parent
+//!   (`PagedKv::fork_prefix`), so every lane's page table aliases the
+//!   same physical pool pages — the shape prompt-prefix sharing
+//!   produces in the serving engine. The fused walk loads each K/V
+//!   block from memory once per step and services all B lanes while it
+//!   is cache-hot; the per-sequence walk re-streams it B times.
+//! * **unshared**: B private sequences of the same length — no
+//!   aliasing, so the kernels differ only in loop order and locality.
+//!
+//! Each measurement times full attention passes (every lane attends
+//! over the whole prefix at a fixed position) and reports lanes
+//! processed per second as `tok_per_sec` — the attention share of a
+//! decode step, not end-to-end decode throughput (the batch sweep in
+//! `BENCH_generation.json` covers that). Fused and per-sequence
+//! outputs are compared bit-for-bit before any timing; the full run
+//! additionally asserts that the fused kernel beats the per-sequence
+//! walk on the shared-prefix B = 8 case.
+//!
+//! `--smoke` (wired as `make bench-attention-smoke`, run in CI)
+//! shrinks the shapes to run in seconds and skips the perf assertion
+//! (bit-parity is still checked); the full run
+//! (`make bench-attention`) sizes the prefix well past cache so the
+//! shared-block reuse is visible.
+
+use std::time::Instant;
+
+use quipsharp::bench::{best_of, Table};
+use quipsharp::generation::paged::{
+    blocked_attention, fused_batch_attention, AttnLane, KvPagePool, PagedKv, PAGE_ROWS,
+};
+use quipsharp::util::json::Json;
+use quipsharp::util::rng::Pcg64;
+
+/// Workload shape: one layer, `rows` prefix rows per lane, a
+/// `heads × hd` attention geometry.
+struct Shape {
+    heads: usize,
+    hd: usize,
+    rows: usize,
+    batches: &'static [usize],
+    warmup: usize,
+    steps: usize,
+    reps: usize,
+}
+
+/// Full run: 32 MiB of K+V per lane image (8192 rows × 512 d_model),
+/// far past any L2, so re-streaming shared blocks per sequence costs
+/// real memory traffic.
+const FULL: Shape = Shape {
+    heads: 8,
+    hd: 64,
+    rows: 8192,
+    batches: &[1, 2, 4, 8, 16],
+    warmup: 1,
+    steps: 4,
+    reps: 3,
+};
+
+/// Smoke run (CI): three blocks with a partial tail, a head_dim off
+/// the chunk width — seconds of runtime, parity checks only.
+const SMOKE: Shape = Shape {
+    heads: 2,
+    hd: 12,
+    rows: 2 * PAGE_ROWS + 5,
+    batches: &[1, 4, 8],
+    warmup: 1,
+    steps: 2,
+    reps: 2,
+};
+
+/// Fill rows `[0, rows)` of `kv` (layer 0) with uniform random K/V.
+fn fill_rows(kv: &PagedKv, pool: &mut KvPagePool, d: usize, rows: usize, rng: &mut Pcg64) {
+    let mut k = vec![0.0f32; d];
+    let mut v = vec![0.0f32; d];
+    for pos in 0..rows {
+        for x in k.iter_mut() {
+            *x = rng.f32() - 0.5;
+        }
+        for x in v.iter_mut() {
+            *x = rng.f32() - 0.5;
+        }
+        kv.store(pool, 0, pos, &k, &v);
+    }
+}
+
+/// Build B lanes over `rows` KV rows each: forks of one shared parent
+/// (aliased page tables) or fully private sequences.
+fn setup(shape: &Shape, bsz: usize, shared: bool, seed: u64) -> (KvPagePool, Vec<PagedKv>) {
+    let d = shape.heads * shape.hd;
+    let pages_per_lane = shape.rows.div_ceil(PAGE_ROWS);
+    let mut rng = Pcg64::new(seed);
+    if shared {
+        let mut pool = KvPagePool::new(1, d, pages_per_lane);
+        let mut parent = PagedKv::new();
+        assert!(parent.reserve(&mut pool, shape.rows));
+        parent.len = shape.rows;
+        fill_rows(&parent, &mut pool, d, shape.rows, &mut rng);
+        let mut seqs = Vec::with_capacity(bsz);
+        for _ in 0..bsz {
+            let mut kv = PagedKv::new();
+            kv.fork_prefix(&mut pool, &parent, shape.rows);
+            seqs.push(kv);
+        }
+        // The parent's page table is dropped without releasing its
+        // refs, mirroring a pinned prefix cache: the pages stay shared
+        // for the lanes' lifetime. The pool is torn down per config.
+        (pool, seqs)
+    } else {
+        let mut pool = KvPagePool::new(1, d, bsz * pages_per_lane);
+        let mut seqs = Vec::with_capacity(bsz);
+        for _ in 0..bsz {
+            let mut kv = PagedKv::new();
+            assert!(kv.reserve(&mut pool, shape.rows));
+            fill_rows(&kv, &mut pool, d, shape.rows, &mut rng);
+            kv.len = shape.rows;
+            seqs.push(kv);
+        }
+        (pool, seqs)
+    }
+}
+
+/// Per-sequence baseline: each lane walks its own pages through
+/// `blocked_attention`.
+fn perseq_walk(pool: &KvPagePool, seqs: &[&PagedKv], q: &[f32], out: &mut [f32], shape: &Shape) {
+    let (heads, hd) = (shape.heads, shape.hd);
+    let d = heads * hd;
+    for (b, kv) in seqs.iter().enumerate() {
+        let pos = kv.len - 1;
+        blocked_attention(
+            &q[b * d..(b + 1) * d],
+            &mut out[b * d..(b + 1) * d],
+            pos,
+            heads,
+            hd,
+            |blk| {
+                let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+                let page = kv.pages[blk];
+                (
+                    &pool.k_block(page, 0)[..rows * d],
+                    &pool.v_block(page, 0)[..rows * d],
+                )
+            },
+        );
+    }
+}
+
+/// Fused cross-sequence walk: one pass over block indices, lanes
+/// grouped by physical page.
+fn fused_walk(pool: &KvPagePool, seqs: &[&PagedKv], q: &[f32], out: &mut [f32], shape: &Shape) {
+    let (heads, hd) = (shape.heads, shape.hd);
+    let d = heads * hd;
+    let mut lanes: Vec<AttnLane> = out
+        .chunks_exact_mut(d)
+        .enumerate()
+        .map(|(b, ob)| AttnLane {
+            q: &q[b * d..(b + 1) * d],
+            out: ob,
+            pos: seqs[b].len - 1,
+        })
+        .collect();
+    fused_batch_attention(&mut lanes, heads, hd, |b, blk| {
+        let pos = seqs[b].len - 1;
+        let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+        let page = seqs[b].pages[blk];
+        (
+            page as u64,
+            &pool.k_block(page, 0)[..rows * d],
+            &pool.v_block(page, 0)[..rows * d],
+        )
+    });
+}
+
+fn time_passes<F: FnMut()>(warmup: usize, steps: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        f();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn run_config(shape: &Shape, bsz: usize, shared: bool) -> Json {
+    let d = shape.heads * shape.hd;
+    let (pool, seqs) = setup(shape, bsz, shared, 42 + 2 * bsz as u64 + shared as u64);
+    let seq_refs: Vec<&PagedKv> = seqs.iter().collect();
+    let mut rng = Pcg64::new_stream(7, bsz as u64);
+    let q: Vec<f32> = (0..bsz * d).map(|_| rng.f32() - 0.5).collect();
+    let mut out_seq = vec![0.0f32; bsz * d];
+    let mut out_fused = vec![0.0f32; bsz * d];
+    // Bit-parity before timing: the two kernels must agree exactly.
+    perseq_walk(&pool, &seq_refs, &q, &mut out_seq, shape);
+    fused_walk(&pool, &seq_refs, &q, &mut out_fused, shape);
+    for (i, (a, b)) in out_fused.iter().zip(&out_seq).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "fused vs per-seq mismatch at {i}: {a} vs {b} (B={bsz} shared={shared})"
+        );
+    }
+    let dt_seq = best_of(shape.reps, || {
+        time_passes(shape.warmup, shape.steps, || {
+            perseq_walk(&pool, &seq_refs, &q, &mut out_seq, shape)
+        })
+    });
+    let dt_fused = best_of(shape.reps, || {
+        time_passes(shape.warmup, shape.steps, || {
+            fused_walk(&pool, &seq_refs, &q, &mut out_fused, shape)
+        })
+    });
+    let lanes = (bsz * shape.steps) as f64;
+    let tps_seq = lanes / dt_seq;
+    let tps_fused = lanes / dt_fused;
+    Json::obj(vec![
+        ("batch", Json::num(bsz as f64)),
+        ("shared", Json::Bool(shared)),
+        ("perseq_tok_per_sec", Json::num(tps_seq)),
+        ("fused_tok_per_sec", Json::num(tps_fused)),
+        ("speedup", Json::num(tps_fused / tps_seq)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let shape = if smoke { SMOKE } else { FULL };
+    let d = shape.heads * shape.hd;
+    println!("== attention micro-bench: fused cross-sequence walk vs per-sequence ==");
+    println!(
+        "(1 layer, d_model {d}, {} heads x {} head_dim, {} prefix rows{})\n",
+        shape.heads,
+        shape.hd,
+        shape.rows,
+        if smoke { ", SMOKE" } else { "" }
+    );
+    let mut t = Table::new(&["B", "mode", "per-seq tok/s", "fused tok/s", "speedup"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut shared_b8_speedup = None;
+    for &shared in &[false, true] {
+        for &bsz in shape.batches {
+            let r = run_config(&shape, bsz, shared);
+            let tps_seq = r.get("perseq_tok_per_sec").as_f64().unwrap();
+            let tps_fused = r.get("fused_tok_per_sec").as_f64().unwrap();
+            let speedup = r.get("speedup").as_f64().unwrap();
+            if shared && bsz == 8 {
+                shared_b8_speedup = Some(speedup);
+            }
+            let mode = if shared { "shared" } else { "unshared" };
+            t.row(&[
+                format!("{bsz}"),
+                mode.to_string(),
+                format!("{tps_seq:.1}"),
+                format!("{tps_fused:.1}"),
+                format!("{speedup:.2}x"),
+            ]);
+            rows_json.push(r);
+        }
+    }
+    t.print();
+    t.write_csv("bench_attention").ok();
+    let out = Json::obj(vec![
+        ("heads", Json::num(shape.heads as f64)),
+        ("head_dim", Json::num(shape.hd as f64)),
+        ("d_model", Json::num(d as f64)),
+        ("prefix_rows", Json::num(shape.rows as f64)),
+        ("page_rows", Json::num(PAGE_ROWS as f64)),
+        ("attn_steps", Json::num(shape.steps as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("sweep", Json::Arr(rows_json)),
+    ]);
+    if std::fs::write("BENCH_attention.json", out.emit()).is_ok() {
+        println!("\nwrote BENCH_attention.json");
+    }
+    if !smoke {
+        let s = shared_b8_speedup.expect("B=8 shared row missing");
+        assert!(
+            s > 1.0,
+            "fused attention must beat the per-sequence walk on the shared-prefix \
+             B=8 case (speedup {s:.2}x)"
+        );
+    }
+}

@@ -6,7 +6,11 @@
 //! `decode_one` loops — the old engine hot path, which re-decodes every
 //! codeword B times per step) against (b) one batched `decode_batch`
 //! call per step, and writes tokens/s, speedup and effective weight
-//! bytes/token to `BENCH_generation.json`.
+//! bytes/token to `BENCH_generation.json`. The batched step is also
+//! timed with the per-sequence attention walk (`AttnMode::PerSeq`) so
+//! the attention columns isolate what the cross-sequence fused kernel
+//! contributes end to end; the kernel-level picture (shared-prefix
+//! block reuse) is `bench_attention.rs` / `BENCH_attention.json`.
 //!
 //! Part 2 (always runs): the paged-KV pool-pressure sweep — the engine
 //! with a pool sized for ~half the worst-case batch, driven by more
@@ -30,9 +34,9 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-use quipsharp::bench::{memcpy_roofline_mt_gbps, Table};
+use quipsharp::bench::{best_of, memcpy_roofline_mt_gbps, Table};
 use quipsharp::experiments::Runner;
-use quipsharp::generation::{argmax, Generator, KvCache};
+use quipsharp::generation::{argmax, AttnMode, Generator, KvCache};
 use quipsharp::model::{Model, ModelConfig};
 use quipsharp::qmodel::quantize_model;
 use quipsharp::quant::pipeline::Method;
@@ -88,10 +92,6 @@ fn time_batched(gen: &Generator, bsz: usize, prompt: &[u8], warmup: usize, steps
     t0.elapsed().as_secs_f64()
 }
 
-fn best_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
-    (0..reps).map(|_| f()).fold(f64::INFINITY, f64::min)
-}
-
 fn batch_sweep() -> Vec<(&'static str, Json)> {
     println!("== batch sweep: decode-once/multiply-many vs sequence-at-a-time ==");
     println!("(synthetic 's' model, 2-bit QuIP#, greedy decode)\n");
@@ -106,6 +106,8 @@ fn batch_sweep() -> Vec<(&'static str, Json)> {
     )
     .unwrap();
     let gen = qm.generator();
+    let mut gen_perseq = qm.generator();
+    gen_perseq.attn_mode = AttnMode::PerSeq;
     let wbpt = gen.weight_bytes_per_token() as f64;
     let prompt: Vec<u8> = vec![10, 4, 7, 1];
     let (warmup, steps, reps) = (4usize, 32usize, 3usize);
@@ -115,6 +117,8 @@ fn batch_sweep() -> Vec<(&'static str, Json)> {
         "loop tok/s",
         "batched tok/s",
         "speedup",
+        "perseq-attn tok/s",
+        "attn speedup",
         "loop B/tok",
         "batched B/tok",
     ]);
@@ -123,9 +127,11 @@ fn batch_sweep() -> Vec<(&'static str, Json)> {
     for &bsz in &[1usize, 2, 4, 8, 16] {
         let dt_loop = best_of(reps, || time_loop(&gen, bsz, &prompt, warmup, steps));
         let dt_batch = best_of(reps, || time_batched(&gen, bsz, &prompt, warmup, steps));
+        let dt_perseq = best_of(reps, || time_batched(&gen_perseq, bsz, &prompt, warmup, steps));
         let toks = (bsz * steps) as f64;
         let tps_loop = toks / dt_loop;
         let tps_batch = toks / dt_batch;
+        let tps_perseq = toks / dt_perseq;
         if bsz == 1 {
             b1_loop_tps = tps_loop;
         }
@@ -137,11 +143,14 @@ fn batch_sweep() -> Vec<(&'static str, Json)> {
         let bytes_loop = wbpt;
         let bytes_batch = gen.weight_bytes_streamed_per_step(bsz) as f64 / bsz as f64;
         let speedup = tps_batch / tps_loop;
+        let attn_speedup = tps_batch / tps_perseq;
         t.row(&[
             format!("{bsz}"),
             format!("{tps_loop:.1}"),
             format!("{tps_batch:.1}"),
             format!("{speedup:.2}x"),
+            format!("{tps_perseq:.1}"),
+            format!("{attn_speedup:.2}x"),
             format!("{bytes_loop:.0}"),
             format!("{bytes_batch:.0}"),
         ]);
@@ -150,6 +159,8 @@ fn batch_sweep() -> Vec<(&'static str, Json)> {
             ("loop_tok_per_sec", Json::num(tps_loop)),
             ("batched_tok_per_sec", Json::num(tps_batch)),
             ("speedup", Json::num(speedup)),
+            ("perseq_attn_tok_per_sec", Json::num(tps_perseq)),
+            ("attn_speedup", Json::num(attn_speedup)),
             ("loop_bytes_per_token", Json::num(bytes_loop)),
             ("batched_bytes_per_token", Json::num(bytes_batch)),
         ]));

@@ -203,6 +203,13 @@ pub fn memcpy_roofline_mt_gbps(size: usize) -> f64 {
     res.gbps().unwrap()
 }
 
+/// Best-of-N timing: run `f` N times (each returning elapsed seconds)
+/// and keep the minimum — the noise floor shared by the serving and
+/// attention bench drivers.
+pub fn best_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
+    (0..reps).map(|_| f()).fold(f64::INFINITY, f64::min)
+}
+
 /// Simple aligned table printer shared by the paper-table drivers.
 pub struct Table {
     pub header: Vec<String>,

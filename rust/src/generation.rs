@@ -6,17 +6,24 @@
 //! The decode path is batch-native: [`Generator::decode_batch`] advances
 //! B sequences one token in lockstep, routing every linear layer through
 //! the decode-once/multiply-many batched kernel in
-//! [`crate::model::qlinear`] and running one fused blocked attention
-//! pass over the batch ([`paged::blocked_attention`]), so the packed
-//! codewords are streamed once per step instead of once per sequence.
-//! [`Generator::decode_one`] is the batch-1 special case.
+//! [`crate::model::qlinear`] and running one cross-sequence fused
+//! attention pass over the batch ([`paged::fused_batch_attention`]): a
+//! single walk over K/V block indices per step services every sequence
+//! and head attending to each block, so packed codewords *and* shared
+//! K/V blocks are streamed once per step instead of once per sequence.
+//! [`Generator::decode_one`] is the batch-1 special case, and
+//! [`AttnMode::PerSeq`] keeps the per-sequence block walk
+//! ([`paged::blocked_attention`]) as a bit-exact baseline.
 //!
 //! KV storage comes in two layouts behind one decode implementation:
 //! per-sequence contiguous slabs ([`KvCache`], the parity baseline) and
 //! page tables over a shared [`paged::KvPagePool`]
 //! ([`Generator::decode_batch_paged`], the serving path). Both walk
 //! their rows through the same [`paged::PAGE_ROWS`]-blocked attention
-//! routine, so the two layouts produce bit-identical logits.
+//! kernels, so the two layouts produce bit-identical logits.
+//!
+//! `rust/src/generation/README.md` tours the decode/attention data flow
+//! end to end.
 
 use std::collections::BTreeMap;
 
@@ -26,7 +33,7 @@ use crate::linalg::hadamard::{fwht_f32, HadTransform};
 use crate::model::ops::*;
 use crate::model::qlinear::{dense_matmul, QuantMatvec};
 use crate::model::{Arch, Model};
-use paged::{blocked_attention, KvPagePool, PagedKv, PAGE_ROWS};
+use paged::{blocked_attention, fused_batch_attention, AttnLane, KvPagePool, PagedKv, PAGE_ROWS};
 
 /// Apply a scaled orthogonal Hadamard transform to an f32 vector
 /// (pure-FWHT fast path; f64 round-trip for the H_q ⊗ H_p case).
@@ -170,10 +177,34 @@ pub enum DecodeLinear<'a> {
     Quant(&'a QuantMatvec),
 }
 
+/// Which attention kernel a [`Generator`] runs per decode step.
+///
+/// Both kernels execute identical per-sequence floating-point ops (see
+/// the bit-exactness notes on [`paged::fused_batch_attention`]), so
+/// the mode changes performance, never logits — pinned by bitwise
+/// parity tests. [`AttnMode::Fused`] is the default;
+/// [`AttnMode::PerSeq`] remains as the parity oracle and the
+/// micro-bench baseline (`benches/bench_attention.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnMode {
+    /// Walk each sequence's K/V blocks separately (the pre-fusion hot
+    /// path): simple, but a K-block aliased by B forked siblings is
+    /// re-streamed B times per step.
+    PerSeq,
+    /// One cross-sequence block walk per step: every sequence and head
+    /// attending to a physical block is serviced while the block is
+    /// cache-hot ([`paged::fused_batch_attention`]).
+    Fused,
+}
+
 /// Generator with per-layer quantized matvec overrides.
 pub struct Generator<'a> {
     pub model: &'a Model,
     pub qlayers: BTreeMap<String, QuantMatvec>,
+    /// Attention kernel selection — [`AttnMode::Fused`] by default;
+    /// swap to [`AttnMode::PerSeq`] for the per-sequence baseline
+    /// walk (bit-exact either way).
+    pub attn_mode: AttnMode,
     _marker: std::marker::PhantomData<&'a ()>,
 }
 
@@ -182,6 +213,7 @@ impl<'a> Generator<'a> {
         Generator {
             model,
             qlayers: BTreeMap::new(),
+            attn_mode: AttnMode::Fused,
             _marker: Default::default(),
         }
     }
@@ -197,6 +229,7 @@ impl<'a> Generator<'a> {
         Generator {
             model,
             qlayers,
+            attn_mode: AttnMode::Fused,
             _marker: Default::default(),
         }
     }
@@ -304,7 +337,9 @@ impl<'a> Generator<'a> {
     /// different positions: RoPE and KV writes run per sequence, every
     /// linear layer is applied once for the whole batch (each packed
     /// codeword decoded exactly once per step), and attention runs as one
-    /// fused blocked pass over the batch.
+    /// cross-sequence fused block walk over the batch (see
+    /// [`Generator::attn_mode`]), so K/V blocks aliased across forked
+    /// sequences are loaded once per step.
     fn decode_batch_kv(&self, tokens: &[u8], kvb: &mut KvBatch) -> Vec<Vec<f32>> {
         let bsz = tokens.len();
         assert!(bsz > 0, "empty decode batch");
@@ -384,8 +419,9 @@ impl<'a> Generator<'a> {
             }
             // Fused batched attention: one blocked (flash-style) pass
             // over every sequence's KV blocks, sharing the Q/K/V
-            // projections computed above.
-            attend_batch(kvb, layer, &positions, &q, &mut att, heads, hd);
+            // projections computed above (cross-sequence block walk by
+            // default — see [`AttnMode`]).
+            self.attend_batch(kvb, layer, &positions, &q, &mut att);
             self.apply_linear_batch(&format!("{pre}wo"), &att, bsz, &mut tmp_d);
             for (xv, &o) in xs.iter_mut().zip(&tmp_d) {
                 *xv += o;
@@ -451,6 +487,95 @@ impl<'a> Generator<'a> {
         logits.chunks(cfg.vocab).map(|r| r.to_vec()).collect()
     }
 
+    /// One attention pass over the batch for `layer`, dispatching on
+    /// [`Generator::attn_mode`]. Both arms feed identical row ranges
+    /// through the same chunked inner loops, so they are bit-exact; the
+    /// fused arm additionally groups sequences by *physical* K/V block,
+    /// so page tables aliased by [`PagedKv::fork_prefix`] load each
+    /// shared block once per step instead of once per sequence.
+    fn attend_batch(
+        &self,
+        kvb: &KvBatch,
+        layer: usize,
+        positions: &[usize],
+        q: &[f32],
+        att: &mut [f32],
+    ) {
+        let (heads, hd) = (self.model.cfg.n_heads, self.model.cfg.head_dim());
+        let d = heads * hd;
+        match self.attn_mode {
+            AttnMode::PerSeq => {
+                for (b, &pos) in positions.iter().enumerate() {
+                    let qb = &q[b * d..(b + 1) * d];
+                    let attb = &mut att[b * d..(b + 1) * d];
+                    match kvb {
+                        KvBatch::Contig(caches) => {
+                            let kc = &caches[b].k[layer];
+                            let vc = &caches[b].v[layer];
+                            blocked_attention(qb, attb, pos, heads, hd, |blk| {
+                                let lo = blk * PAGE_ROWS * d;
+                                let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+                                (&kc[lo..lo + rows * d], &vc[lo..lo + rows * d])
+                            });
+                        }
+                        KvBatch::Paged { pool, seqs } => {
+                            let pages = &seqs[b].pages;
+                            blocked_attention(qb, attb, pos, heads, hd, |blk| {
+                                let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+                                let page = pages[blk];
+                                (
+                                    &pool.k_block(page, layer)[..rows * d],
+                                    &pool.v_block(page, layer)[..rows * d],
+                                )
+                            });
+                        }
+                    }
+                }
+            }
+            AttnMode::Fused => {
+                let mut lanes: Vec<AttnLane> = att
+                    .chunks_exact_mut(d)
+                    .enumerate()
+                    .map(|(b, outb)| AttnLane {
+                        q: &q[b * d..(b + 1) * d],
+                        out: outb,
+                        pos: positions[b],
+                    })
+                    .collect();
+                match kvb {
+                    KvBatch::Contig(caches) => {
+                        fused_batch_attention(&mut lanes, heads, hd, |b, blk| {
+                            let pos = positions[b];
+                            let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+                            let lo = blk * PAGE_ROWS * d;
+                            let kc = &caches[b].k[layer];
+                            let vc = &caches[b].v[layer];
+                            // Contiguous slabs never alias: a unique key
+                            // per (lane, block) makes grouping a no-op.
+                            let key = ((b as u64) << 32) | blk as u64;
+                            (key, &kc[lo..lo + rows * d], &vc[lo..lo + rows * d])
+                        });
+                    }
+                    KvBatch::Paged { pool, seqs } => {
+                        fused_batch_attention(&mut lanes, heads, hd, |b, blk| {
+                            let pos = positions[b];
+                            let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+                            // Physical page id as the grouping key:
+                            // forked siblings aliasing a prefix page
+                            // process it back to back, loading it once.
+                            let page = seqs[b].pages[blk];
+                            (
+                                page as u64,
+                                &pool.k_block(page, layer)[..rows * d],
+                                &pool.v_block(page, layer)[..rows * d],
+                            )
+                        });
+                    }
+                }
+            }
+        }
+    }
+
     fn norm_one(&self, name: &str, x: &[f32], d: usize, y: &mut [f32]) {
         match self.model.cfg.arch {
             Arch::NonLlama => {
@@ -483,48 +608,6 @@ impl<'a> Generator<'a> {
             logits = self.decode_one(next, &mut cache);
         }
         out
-    }
-}
-
-/// The fused batched attention pass: for each sequence, walk its KV
-/// blocks (pages or slab slices) through the shared flash-style routine.
-/// Both layouts feed [`blocked_attention`] identical row ranges, which is
-/// what keeps paged and contiguous decode bit-identical.
-fn attend_batch(
-    kvb: &KvBatch,
-    layer: usize,
-    positions: &[usize],
-    q: &[f32],
-    att: &mut [f32],
-    heads: usize,
-    hd: usize,
-) {
-    let d = heads * hd;
-    for (b, &pos) in positions.iter().enumerate() {
-        let qb = &q[b * d..(b + 1) * d];
-        let attb = &mut att[b * d..(b + 1) * d];
-        match kvb {
-            KvBatch::Contig(caches) => {
-                let kc = &caches[b].k[layer];
-                let vc = &caches[b].v[layer];
-                blocked_attention(qb, attb, pos, heads, hd, |blk| {
-                    let lo = blk * PAGE_ROWS * d;
-                    let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
-                    (&kc[lo..lo + rows * d], &vc[lo..lo + rows * d])
-                });
-            }
-            KvBatch::Paged { pool, seqs } => {
-                let pages = &seqs[b].pages;
-                blocked_attention(qb, attb, pos, heads, hd, |blk| {
-                    let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
-                    let page = pages[blk];
-                    (
-                        &pool.k_block(page, layer)[..rows * d],
-                        &pool.v_block(page, layer)[..rows * d],
-                    )
-                });
-            }
-        }
     }
 }
 
@@ -884,6 +967,125 @@ mod tests {
         assert!(!gen.qlayers.is_empty());
         for &bsz in &[2usize, 4, 8] {
             shared_prefix_parity(&gen, bsz);
+        }
+    }
+
+    /// Assert two runs' logits (steps × lanes × vocab) agree bit-for-bit.
+    fn assert_logits_bitwise_eq(a: &[Vec<Vec<f32>>], b: &[Vec<Vec<f32>>], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: step count");
+        for (step, (rows_a, rows_b)) in a.iter().zip(b).enumerate() {
+            assert_eq!(rows_a.len(), rows_b.len(), "{what}: lane count at step {step}");
+            for (lane, (ra, rb)) in rows_a.iter().zip(rows_b).enumerate() {
+                for (i, (x, y)) in ra.iter().zip(rb).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "{what}: step {step} lane {lane} logit {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Drive an identical forked + unshared paged workload through two
+    /// generators that differ only in [`AttnMode`]; every logits row
+    /// (per-lane prefill and joint batched steps alike) must agree
+    /// bitwise. Half the lanes fork the parent prefix (aliased page
+    /// tables), half prefill it privately, and per-lane extras leave
+    /// the batch at unequal positions.
+    fn attn_mode_parity(gen_a: &Generator, gen_b: &Generator, bsz: usize) {
+        let m = gen_a.model;
+        let prefix_len = PAGE_ROWS + 7;
+        let prefix: Vec<u8> = (0..prefix_len).map(|i| ((i * 13 + 2) % 60) as u8).collect();
+        let run = |gen: &Generator| -> Vec<Vec<Vec<f32>>> {
+            let mut pool = KvPagePool::for_model(m, 2 * bsz * paged::pages_per_seq(&m.cfg) + 4);
+            let mut parent = PagedKv::new();
+            let mut steps_out = Vec::new();
+            for &t in &prefix {
+                steps_out.push(gen.decode_batch_paged(&[t], &mut pool, &mut [&mut parent]));
+            }
+            let mut kvs: Vec<PagedKv> = (0..bsz).map(|_| PagedKv::new()).collect();
+            for b in 0..bsz {
+                if b % 2 == 0 {
+                    kvs[b].fork_prefix(&mut pool, &parent, prefix_len);
+                } else {
+                    for &t in &prefix {
+                        let l = gen.decode_batch_paged(&[t], &mut pool, &mut [&mut kvs[b]]);
+                        steps_out.push(l);
+                    }
+                }
+                // Unequal positions: up to two private extra tokens.
+                for j in 0..b % 3 {
+                    let t = (j * 9 + b + 1) as u8;
+                    steps_out.push(gen.decode_batch_paged(&[t], &mut pool, &mut [&mut kvs[b]]));
+                }
+            }
+            for step in 0..PAGE_ROWS + 2 {
+                let toks: Vec<u8> =
+                    (0..bsz).map(|b| ((step * 7 + b * 11 + 1) % 60) as u8).collect();
+                let mut refs: Vec<&mut PagedKv> = kvs.iter_mut().collect();
+                steps_out.push(gen.decode_batch_paged(&toks, &mut pool, &mut refs));
+            }
+            steps_out
+        };
+        let outs_a = run(gen_a);
+        let outs_b = run(gen_b);
+        assert_logits_bitwise_eq(&outs_a, &outs_b, "fused vs per-seq paged decode");
+    }
+
+    #[test]
+    fn fused_attention_matches_per_seq_walk_dense() {
+        let m = prefix_model(14);
+        let gen_fused = Generator::dense(&m);
+        assert_eq!(gen_fused.attn_mode, AttnMode::Fused, "fused must be the default");
+        let mut gen_perseq = Generator::dense(&m);
+        gen_perseq.attn_mode = AttnMode::PerSeq;
+        for &bsz in &[1usize, 4, 8, 16] {
+            attn_mode_parity(&gen_fused, &gen_perseq, bsz);
+        }
+    }
+
+    #[test]
+    fn fused_attention_matches_per_seq_walk_quantized() {
+        use crate::qmodel::quantize_model;
+        use crate::quant::pipeline::Method;
+        let m = prefix_model(15);
+        // Identity Hessians: kernel parity is independent of
+        // quantization quality (see the shared-prefix tests).
+        let hs = BTreeMap::new();
+        let qm = quantize_model(&m, &hs, &Method::QuipSharp { bits: 2, ft: false }, 1).unwrap();
+        let gen_fused = Generator::quantized(&qm.model, &qm);
+        assert!(!gen_fused.qlayers.is_empty());
+        let mut gen_perseq = Generator::quantized(&qm.model, &qm);
+        gen_perseq.attn_mode = AttnMode::PerSeq;
+        for &bsz in &[4usize, 8] {
+            attn_mode_parity(&gen_fused, &gen_perseq, bsz);
+        }
+    }
+
+    #[test]
+    fn fused_attention_contiguous_matches_per_seq_walk() {
+        // The contiguous backend takes the unique-key path through the
+        // fused kernel (no aliasing); logits must still match the
+        // per-sequence walk bitwise.
+        let m = tiny_model(16);
+        let gen_fused = Generator::dense(&m);
+        let mut gen_perseq = Generator::dense(&m);
+        gen_perseq.attn_mode = AttnMode::PerSeq;
+        for &bsz in &[1usize, 4, 8] {
+            let run = |gen: &Generator| -> Vec<Vec<Vec<f32>>> {
+                let mut caches: Vec<KvCache> = (0..bsz).map(|_| KvCache::new(&m)).collect();
+                let mut out = Vec::new();
+                for step in 0..10 {
+                    let toks: Vec<u8> =
+                        (0..bsz).map(|b| ((step * 5 + b * 3 + 2) % 60) as u8).collect();
+                    let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                    out.push(gen.decode_batch(&toks, &mut refs));
+                }
+                out
+            };
+            let outs_a = run(&gen_fused);
+            let outs_b = run(&gen_perseq);
+            assert_logits_bitwise_eq(&outs_a, &outs_b, "fused vs per-seq contiguous decode");
         }
     }
 

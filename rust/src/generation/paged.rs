@@ -13,11 +13,32 @@
 //! typical requests (the over-subscription behavior the ROADMAP
 //! north-star asks for).
 //!
-//! The same module owns [`blocked_attention`]: a flash-style
-//! score/softmax/weighted-sum pass that walks KV rows block-by-block
-//! with a running max, so paged sequences never need their KV rows
-//! gathered into one contiguous buffer. The contiguous
-//! [`crate::generation::KvCache`] path drives the identical routine over
+//! # Attention kernels
+//!
+//! The same module owns the decode attention kernels. Both are
+//! flash-style blocked passes (running max, per-block
+//! score/softmax/weighted-sum) over [`PAGE_ROWS`]-row K/V blocks, so
+//! paged sequences never need their rows gathered into one contiguous
+//! buffer, and both run their inner loops through the shared chunked
+//! primitives ([`dot_chunked`], [`axpy_chunked`], [`rescale_chunked`]:
+//! fixed [`ATTN_CHUNK`]-wide slices the compiler autovectorizes, with
+//! scalar oracles pinning bit-parity):
+//!
+//! * [`blocked_attention`] walks one sequence's blocks — the
+//!   per-sequence baseline and parity oracle.
+//! * [`fused_batch_attention`] walks the step's block indices once for
+//!   the whole batch: at each index every sequence (and head) still
+//!   attending to that block is serviced before the walk moves on,
+//!   with sequences grouped by *physical* block so forked siblings
+//!   whose page tables alias the same pool pages load each K/V block
+//!   once per step instead of once per sequence.
+//!
+//! Per-sequence state is independent and every sequence still meets
+//! its blocks in ascending order, so the fused walk executes the
+//! identical per-sequence floating-point ops as [`blocked_attention`]
+//! — the two kernels are bit-exact (see the bit-exactness notes on
+//! [`fused_batch_attention`]). The contiguous
+//! [`crate::generation::KvCache`] path drives the same kernels over
 //! [`PAGE_ROWS`]-sized slices of its slab, which keeps paged and
 //! contiguous decode bit-exact (same floating-point operation order).
 //!
@@ -356,12 +377,130 @@ impl PagedKv {
     }
 }
 
+/// Fixed chunk width of the attention inner loops ([`dot_chunked`],
+/// [`axpy_chunked`], [`rescale_chunked`]): slices are processed in
+/// `ATTN_CHUNK`-wide fixed-size pieces (bounds hoisted into one check
+/// per chunk, no cross-lane dependency inside a chunk) so the compiler
+/// autovectorizes each piece into SIMD lanes — the same pattern as
+/// `decode8`'s sign loop in [`crate::model::qlinear`].
+pub const ATTN_CHUNK: usize = 8;
+
+// The reduction trees in `dot_chunked` / `dot_chunked_scalar` spell out
+// all eight lanes explicitly; keep the width in sync.
+const _: () = assert!(ATTN_CHUNK == 8, "dot_chunked's reduction tree assumes 8 lanes");
+
+/// Chunked dot product — the attention score (q·k) inner loop.
+///
+/// Accumulates into [`ATTN_CHUNK`] independent lane sums over
+/// fixed-width chunks (so the loop autovectorizes into SIMD FMAs),
+/// adds the sub-chunk tail scalarly, then reduces the lanes in a fixed
+/// pairwise tree. The lane split changes the summation order versus a
+/// plain sequential dot, so the order spelled out here *is* the
+/// kernel's numerical contract: [`dot_chunked_scalar`] replays it
+/// exactly and a property test pins the two bit-for-bit.
+#[inline(always)]
+pub fn dot_chunked(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() - a.len() % ATTN_CHUNK;
+    let mut acc = [0.0f32; ATTN_CHUNK];
+    let ca = a[..split].chunks_exact(ATTN_CHUNK);
+    let cb = b[..split].chunks_exact(ATTN_CHUNK);
+    for (xs, ys) in ca.zip(cb) {
+        let xs: &[f32; ATTN_CHUNK] = xs.try_into().unwrap();
+        let ys: &[f32; ATTN_CHUNK] = ys.try_into().unwrap();
+        for (l, (&x, &y)) in acc.iter_mut().zip(xs.iter().zip(ys.iter())) {
+            *l += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in a[split..].iter().zip(&b[split..]) {
+        tail += x * y;
+    }
+    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+/// Scalar reference for [`dot_chunked`] — identical arithmetic (same
+/// lane split, same reduction tree) written as plain indexed loops,
+/// kept as the bit-parity oracle.
+pub fn dot_chunked_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() - a.len() % ATTN_CHUNK;
+    let mut acc = [0.0f32; ATTN_CHUNK];
+    for i in 0..split {
+        acc[i % ATTN_CHUNK] += a[i] * b[i];
+    }
+    let mut tail = 0.0f32;
+    for i in split..a.len() {
+        tail += a[i] * b[i];
+    }
+    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+/// Chunked in-place `out += p · v` — the attention weighted-sum (AV)
+/// inner loop. Purely elementwise, so chunking only vectorizes it:
+/// each output element sees the same single multiply-add a scalar loop
+/// would apply ([`axpy_chunked_scalar`] is the oracle).
+#[inline(always)]
+pub fn axpy_chunked(p: f32, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    let split = out.len() - out.len() % ATTN_CHUNK;
+    let co = out[..split].chunks_exact_mut(ATTN_CHUNK);
+    let cv = v[..split].chunks_exact(ATTN_CHUNK);
+    for (os, xs) in co.zip(cv) {
+        let os: &mut [f32; ATTN_CHUNK] = os.try_into().unwrap();
+        let xs: &[f32; ATTN_CHUNK] = xs.try_into().unwrap();
+        for (o, &x) in os.iter_mut().zip(xs.iter()) {
+            *o += p * x;
+        }
+    }
+    for (o, &x) in out[split..].iter_mut().zip(&v[split..]) {
+        *o += p * x;
+    }
+}
+
+/// Scalar reference for [`axpy_chunked`] (bit-parity oracle).
+pub fn axpy_chunked_scalar(p: f32, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(v) {
+        *o += p * x;
+    }
+}
+
+/// Chunked in-place `out *= c` — the running-max softmax rescale and
+/// the final `1/l` normalization. Elementwise like [`axpy_chunked`];
+/// [`rescale_chunked_scalar`] is the oracle.
+#[inline(always)]
+pub fn rescale_chunked(c: f32, out: &mut [f32]) {
+    let split = out.len() - out.len() % ATTN_CHUNK;
+    for os in out[..split].chunks_exact_mut(ATTN_CHUNK) {
+        let os: &mut [f32; ATTN_CHUNK] = os.try_into().unwrap();
+        for o in os.iter_mut() {
+            *o *= c;
+        }
+    }
+    for o in out[split..].iter_mut() {
+        *o *= c;
+    }
+}
+
+/// Scalar reference for [`rescale_chunked`] (bit-parity oracle).
+pub fn rescale_chunked_scalar(c: f32, out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o *= c;
+    }
+}
+
 /// Flash-style blocked attention for one sequence, all heads: walk KV
 /// rows `0..=pos` in [`PAGE_ROWS`]-sized blocks, keeping a per-head
 /// running max `m`, running normalizer `l`, and unnormalized output
 /// accumulator — score/softmax/weighted-sum fused per block, so no
 /// full-length score vector is ever materialized and paged KV needs no
-/// gather.
+/// gather. The inner loops run through the chunked primitives
+/// ([`dot_chunked`], [`rescale_chunked`], [`axpy_chunked`]); see
+/// [`fused_batch_attention`] for the cross-sequence walk that services
+/// a whole batch per block — this per-sequence kernel remains as the
+/// parity oracle and the micro-bench baseline
+/// (`benches/bench_attention.rs`).
 ///
 /// `blocks(i)` returns the K and V rows for block `i` (row range
 /// `[i·PAGE_ROWS, min((i+1)·PAGE_ROWS, pos+1))`), each `rows × d_model`
@@ -402,11 +541,7 @@ pub fn blocked_attention<'a, F>(
             let mut blk_max = f32::NEG_INFINITY;
             for (r, sc) in scores.iter_mut().enumerate().take(rows) {
                 let kr = &kb[r * d + h * hd..r * d + (h + 1) * hd];
-                let mut s = 0.0f32;
-                for (a, b) in qh.iter().zip(kr) {
-                    s += a * b;
-                }
-                let s = s * scale;
+                let s = dot_chunked(qh, kr) * scale;
                 *sc = s;
                 blk_max = blk_max.max(s);
             }
@@ -417,25 +552,146 @@ pub fn blocked_attention<'a, F>(
                 // zero) state.
                 let c = (run_max[h] - blk_max).exp();
                 run_sum[h] *= c;
-                for o in oh.iter_mut() {
-                    *o *= c;
-                }
+                rescale_chunked(c, oh);
                 run_max[h] = blk_max;
             }
             for (r, &sc) in scores.iter().enumerate().take(rows) {
                 let p = (sc - run_max[h]).exp();
                 run_sum[h] += p;
-                let vr = &vb[r * d + h * hd..r * d + (h + 1) * hd];
-                for (o, &vv) in oh.iter_mut().zip(vr) {
-                    *o += p * vv;
-                }
+                axpy_chunked(p, &vb[r * d + h * hd..r * d + (h + 1) * hd], oh);
             }
         }
     }
     for h in 0..heads {
         let inv = 1.0 / run_sum[h];
-        for o in out[h * hd..(h + 1) * hd].iter_mut() {
-            *o *= inv;
+        rescale_chunked(inv, &mut out[h * hd..(h + 1) * hd]);
+    }
+}
+
+/// One sequence's slot in a [`fused_batch_attention`] pass: its query
+/// row and output row (each `heads × hd` = `d_model`), and the last KV
+/// position to attend to (the kernel reads rows `0..=pos`).
+pub struct AttnLane<'a> {
+    pub q: &'a [f32],
+    pub out: &'a mut [f32],
+    pub pos: usize,
+}
+
+/// Cross-sequence fused blocked attention: one walk over K/V block
+/// indices per step that services **every sequence and head** still
+/// attending to that block, instead of walking each sequence's blocks
+/// separately.
+///
+/// `blocks(lane, blk)` returns `(key, k_rows, v_rows)` for lane
+/// `lane`'s block `blk` (row range
+/// `[blk·PAGE_ROWS, min((blk+1)·PAGE_ROWS, pos+1))`, each
+/// `rows × d_model` row-major). `key` names the *physical* block: at
+/// each block index, lanes are visited in ascending `(key, lane)`
+/// order, so lanes whose page tables alias the same pool page (forked
+/// siblings after [`PagedKv::fork_prefix`]) process it back to back —
+/// the block's K/V rows are loaded from memory once per step and stay
+/// cache-hot for the whole group, instead of being re-streamed once
+/// per sequence. Layouts without aliasing (the contiguous
+/// [`crate::generation::KvCache`] slabs) pass a unique key per
+/// `(lane, blk)`, which degrades the walk to a plain per-block batch
+/// loop.
+///
+/// # Bit-exactness
+///
+/// Per-lane state (running max `m`, normalizer `l`, unnormalized
+/// output accumulator) is kept independently, every lane still meets
+/// its blocks in ascending block order, and the score / rescale /
+/// weighted-sum inner loops are the same chunked primitives
+/// ([`dot_chunked`], [`rescale_chunked`], [`axpy_chunked`]) applied in
+/// the same per-head order as [`blocked_attention`]. The only
+/// reorderings are *across* lanes (the grouping) and *across* heads
+/// within a block (scores and weighted sums run row-outer so each K/V
+/// row is streamed once) — neither touches any single head's
+/// dependency chain, and the per-block max is an exact reduction
+/// regardless of order. Each lane's floating-point op sequence is
+/// therefore identical to a per-sequence walk: fused and per-sequence
+/// attention are bit-exact, which keeps batched, paged, and
+/// shared-prefix decode bit-identical in turn.
+pub fn fused_batch_attention<'a, F>(lanes: &mut [AttnLane<'_>], heads: usize, hd: usize, blocks: F)
+where
+    F: Fn(usize, usize) -> (u64, &'a [f32], &'a [f32]),
+{
+    let d = heads * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let bsz = lanes.len();
+    let mut run_max = vec![f32::NEG_INFINITY; bsz * heads];
+    let mut run_sum = vec![0.0f32; bsz * heads];
+    let mut max_blocks = 0usize;
+    for lane in lanes.iter_mut() {
+        debug_assert_eq!(lane.q.len(), d);
+        debug_assert_eq!(lane.out.len(), d);
+        lane.out.fill(0.0);
+        max_blocks = max_blocks.max((lane.pos + 1).div_ceil(PAGE_ROWS));
+    }
+    // Scores scratch for one (lane, block) visit: head-major so each
+    // head's row slice is contiguous for the rescale/AV passes.
+    let mut scores = vec![0.0f32; heads * PAGE_ROWS];
+    let mut order: Vec<(u64, usize, &'a [f32], &'a [f32])> = Vec::with_capacity(bsz);
+    for blk in 0..max_blocks {
+        // Lanes still attending at this block index, grouped by
+        // physical block so aliased pages are walked while cache-hot.
+        order.clear();
+        for (b, lane) in lanes.iter().enumerate() {
+            if blk * PAGE_ROWS <= lane.pos {
+                let (key, kb, vb) = blocks(b, blk);
+                order.push((key, b, kb, vb));
+            }
+        }
+        order.sort_unstable_by_key(|&(key, b, _, _)| (key, b));
+        for &(_, b, kb, vb) in order.iter() {
+            let lane = &mut lanes[b];
+            let rows = (lane.pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+            debug_assert!(kb.len() >= rows * d && vb.len() >= rows * d);
+            // Scores row-outer: each K row (contiguous d floats) is
+            // streamed exactly once while every head dots against it.
+            for r in 0..rows {
+                let kr = &kb[r * d..(r + 1) * d];
+                for h in 0..heads {
+                    let qh = &lane.q[h * hd..(h + 1) * hd];
+                    let s = dot_chunked(qh, &kr[h * hd..(h + 1) * hd]) * scale;
+                    scores[h * PAGE_ROWS + r] = s;
+                }
+            }
+            // Running-max rescale per head. The separate max pass
+            // changes no value: f32::max is exact in any order, and the
+            // rescale ops per head match the per-sequence kernel's.
+            for h in 0..heads {
+                let mut blk_max = f32::NEG_INFINITY;
+                for &s in &scores[h * PAGE_ROWS..h * PAGE_ROWS + rows] {
+                    blk_max = blk_max.max(s);
+                }
+                if blk_max > run_max[b * heads + h] {
+                    // First block: exp(-inf - finite) = 0 zeroes the
+                    // (already zero) state, as in the per-seq kernel.
+                    let c = (run_max[b * heads + h] - blk_max).exp();
+                    run_sum[b * heads + h] *= c;
+                    rescale_chunked(c, &mut lane.out[h * hd..(h + 1) * hd]);
+                    run_max[b * heads + h] = blk_max;
+                }
+            }
+            // Weighted sum row-outer: each V row is streamed once; for
+            // a fixed head the accumulation still visits rows in
+            // ascending order, preserving the per-sequence op sequence.
+            for r in 0..rows {
+                let vr = &vb[r * d..(r + 1) * d];
+                for h in 0..heads {
+                    let p = (scores[h * PAGE_ROWS + r] - run_max[b * heads + h]).exp();
+                    run_sum[b * heads + h] += p;
+                    let oh = &mut lane.out[h * hd..(h + 1) * hd];
+                    axpy_chunked(p, &vr[h * hd..(h + 1) * hd], oh);
+                }
+            }
+        }
+    }
+    for (b, lane) in lanes.iter_mut().enumerate() {
+        for h in 0..heads {
+            let inv = 1.0 / run_sum[b * heads + h];
+            rescale_chunked(inv, &mut lane.out[h * hd..(h + 1) * hd]);
         }
     }
 }
@@ -677,6 +933,204 @@ mod tests {
         parent.release(&mut pool);
         assert!(child.reserve(&mut pool, prefix + 1));
         assert_eq!(pool.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn chunked_primitives_match_scalar_oracles() {
+        use crate::util::proptest_lite::check;
+        check("chunked-oracles", 64, |rng| {
+            // Lengths straddling the chunk width: sub-chunk slices,
+            // exact multiples, and multi-chunk slices with tails.
+            let n = 1 + rng.below_usize(3 * ATTN_CHUNK);
+            let a = rng.gaussian_vec(n, 1.0);
+            let b = rng.gaussian_vec(n, 1.0);
+            let dv = dot_chunked(&a, &b);
+            let ds = dot_chunked_scalar(&a, &b);
+            if dv.to_bits() != ds.to_bits() {
+                return Err(format!("dot {dv} vs {ds} at n={n}"));
+            }
+            let p = rng.gaussian() as f32;
+            let c = rng.gaussian() as f32;
+            let mut o1 = rng.gaussian_vec(n, 1.0);
+            let mut o2 = o1.clone();
+            axpy_chunked(p, &a, &mut o1);
+            axpy_chunked_scalar(p, &a, &mut o2);
+            rescale_chunked(c, &mut o1);
+            rescale_chunked_scalar(c, &mut o2);
+            for (i, (x, y)) in o1.iter().zip(&o2).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("axpy/rescale elem {i}: {x} vs {y} at n={n}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Fill rows `[lo, hi)` of `kv` (layer 0) with random K/V rows.
+    /// The covering pages must be uniquely owned (post-`reserve`).
+    fn fill_rows(
+        kv: &PagedKv,
+        pool: &mut KvPagePool,
+        d: usize,
+        lo: usize,
+        hi: usize,
+        rng: &mut crate::util::rng::Pcg64,
+    ) {
+        for pos in lo..hi {
+            let k = rng.gaussian_vec(d, 1.0);
+            let v = rng.gaussian_vec(d, 1.0);
+            kv.store(pool, 0, pos, &k, &v);
+        }
+    }
+
+    /// Naive reference: materialize every score, one softmax, one
+    /// weighted sum — no blocking, no running max.
+    fn two_pass_reference(q: &[f32], kc: &[f32], vc: &[f32], heads: usize, hd: usize) -> Vec<f32> {
+        let d = heads * hd;
+        let n_rows = kc.len() / d;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = vec![0.0f32; d];
+        for h in 0..heads {
+            let qh = &q[h * hd..(h + 1) * hd];
+            let scores: Vec<f32> = (0..n_rows)
+                .map(|t| {
+                    let kt = &kc[t * d + h * hd..t * d + (h + 1) * hd];
+                    qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale
+                })
+                .collect();
+            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = scores.iter().map(|s| (s - m).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            for (t, &e) in exps.iter().enumerate() {
+                let w = e / z;
+                for j in 0..hd {
+                    out[h * hd + j] += w * vc[t * d + h * hd + j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Property-style fused-kernel parity: random batch sizes
+    /// (B ∈ {1, 2, 4, 8, 16}), unequal lengths, head dims off the chunk
+    /// width, and half the lanes forked off a shared parent so page
+    /// tables alias. The fused walk must be bit-exact against per-lane
+    /// [`blocked_attention`] and close to the naive two-pass oracle.
+    #[test]
+    fn fused_batch_attention_parity_random_shapes() {
+        use crate::util::proptest_lite::{assert_close, check};
+        check("fused-attn-parity", 20, |rng| {
+            let bsz = [1usize, 2, 4, 8, 16][rng.below_usize(5)];
+            let heads = 1 + rng.below_usize(3);
+            let hd = [4usize, 5, 8, 12, 16][rng.below_usize(5)];
+            let d = heads * hd;
+            let mut pool = KvPagePool::new(1, d, 4 * (bsz + 1));
+            // Parent prefix shared by the even lanes (aliased tables).
+            let plen = 1 + rng.below_usize(2 * PAGE_ROWS);
+            let mut parent = PagedKv::new();
+            assert!(parent.reserve(&mut pool, plen));
+            parent.len = plen;
+            fill_rows(&parent, &mut pool, d, 0, plen, rng);
+            let mut seqs: Vec<PagedKv> = Vec::new();
+            for b in 0..bsz {
+                let mut kv = PagedKv::new();
+                if b % 2 == 0 {
+                    // Forked lane: alias a random parent prefix, then
+                    // grow a private tail of random length.
+                    let fork = 1 + rng.below_usize(plen);
+                    kv.fork_prefix(&mut pool, &parent, fork);
+                    let extra = rng.below_usize(PAGE_ROWS);
+                    if extra > 0 {
+                        assert!(kv.reserve(&mut pool, fork + extra));
+                        fill_rows(&kv, &mut pool, d, fork, fork + extra, rng);
+                    }
+                    kv.len = fork + extra;
+                } else {
+                    // Private lane of unrelated length.
+                    let len = 1 + rng.below_usize(3 * PAGE_ROWS);
+                    assert!(kv.reserve(&mut pool, len));
+                    fill_rows(&kv, &mut pool, d, 0, len, rng);
+                    kv.len = len;
+                }
+                seqs.push(kv);
+            }
+            let q = rng.gaussian_vec(bsz * d, 1.0);
+            // Per-sequence walk — the oracle kernel.
+            let mut out_seq = vec![0.0f32; bsz * d];
+            for (b, kv) in seqs.iter().enumerate() {
+                let pos = kv.len - 1;
+                blocked_attention(
+                    &q[b * d..(b + 1) * d],
+                    &mut out_seq[b * d..(b + 1) * d],
+                    pos,
+                    heads,
+                    hd,
+                    |blk| {
+                        let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+                        let page = kv.pages[blk];
+                        (
+                            &pool.k_block(page, 0)[..rows * d],
+                            &pool.v_block(page, 0)[..rows * d],
+                        )
+                    },
+                );
+            }
+            // Fused cross-sequence walk.
+            let mut out_fused = vec![0.0f32; bsz * d];
+            {
+                let mut lanes: Vec<AttnLane> = out_fused
+                    .chunks_exact_mut(d)
+                    .enumerate()
+                    .map(|(b, ob)| AttnLane {
+                        q: &q[b * d..(b + 1) * d],
+                        out: ob,
+                        pos: seqs[b].len - 1,
+                    })
+                    .collect();
+                fused_batch_attention(&mut lanes, heads, hd, |b, blk| {
+                    let pos = seqs[b].len - 1;
+                    let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+                    let page = seqs[b].pages[blk];
+                    (
+                        page as u64,
+                        &pool.k_block(page, 0)[..rows * d],
+                        &pool.v_block(page, 0)[..rows * d],
+                    )
+                });
+            }
+            for (i, (x, y)) in out_fused.iter().zip(&out_seq).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    let (lane, coord) = (i / d, i % d);
+                    return Err(format!("fused vs per-seq lane {lane} coord {coord}: {x} vs {y}"));
+                }
+            }
+            // Two-pass oracle per lane (gather rows, softmax once).
+            for (b, kv) in seqs.iter().enumerate() {
+                let n_rows = kv.len;
+                let mut kc = vec![0.0f32; n_rows * d];
+                let mut vc = vec![0.0f32; n_rows * d];
+                for pos in 0..n_rows {
+                    let page = kv.pages[pos / PAGE_ROWS];
+                    let row = pos % PAGE_ROWS;
+                    kc[pos * d..(pos + 1) * d]
+                        .copy_from_slice(&pool.k_block(page, 0)[row * d..(row + 1) * d]);
+                    vc[pos * d..(pos + 1) * d]
+                        .copy_from_slice(&pool.v_block(page, 0)[row * d..(row + 1) * d]);
+                }
+                let want = two_pass_reference(&q[b * d..(b + 1) * d], &kc, &vc, heads, hd);
+                assert_close(&out_fused[b * d..(b + 1) * d], &want, 1e-4, 1e-4)
+                    .map_err(|e| format!("lane {b} vs two-pass oracle: {e}"))?;
+            }
+            // Releases return every page — no leak through fork/CoW.
+            for kv in seqs.iter_mut() {
+                kv.release(&mut pool);
+            }
+            parent.release(&mut pool);
+            if pool.pages_free() != pool.pages_total() {
+                return Err("pages leaked".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

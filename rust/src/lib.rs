@@ -16,15 +16,19 @@
 //!   codeword once per step and multiplies it against all B sequences.
 //! * `generation` — KV-cached autoregressive decode over the batched
 //!   kernel: `decode_batch` / `decode_batch_paged` advance B sequences in
-//!   lockstep (decode-once linear layers, one fused blocked-attention
-//!   pass over the batch); `decode_one` is the batch-1 special case.
+//!   lockstep (decode-once linear layers, one cross-sequence fused
+//!   attention walk per step); `decode_one` is the batch-1 special case.
 //!   `generation::paged` is the KV subsystem: a shared page pool
 //!   (`KvPagePool`, fixed `PAGE_ROWS`-row pages, refcounted for
 //!   copy-on-write prompt-prefix sharing), per-sequence page tables
 //!   (`PagedKv`, with `fork_prefix` to alias a parent's prefix pages),
-//!   and the flash-style `blocked_attention` routine both the paged and
-//!   the contiguous (`KvCache`) layouts share, which keeps them
-//!   bit-exact.
+//!   and the flash-style attention kernels — `fused_batch_attention`
+//!   walks each physical K/V block once per step for every sequence and
+//!   head attending to it (aliased prefix pages load once, not once per
+//!   fork), with per-sequence `blocked_attention` as the bit-exact
+//!   baseline and chunked SIMD score/rescale/AV inner loops shared by
+//!   both and by the paged and contiguous (`KvCache`) layouts alike,
+//!   which keeps every decode path bit-exact.
 //! * `runtime`, `serve` — the L3 coordinator: PJRT execution of the
 //!   AOT-lowered JAX/Pallas artifacts (behind the `pjrt` feature) and the
 //!   continuous-batching inference server: VecDeque admission queue,

@@ -16,9 +16,12 @@
 //!      requeue its request at the queue front),
 //!   3. one *batched* decode step across every active sequence — a single
 //!      `Generator::decode_batch_paged` call, so each packed codeword is
-//!      decoded once per step and attention runs as one fused blocked
-//!      pass over every sequence's page list (page tables may alias the
-//!      shared prefix pages; logits are bit-exact either way),
+//!      decoded once per step and attention runs as one cross-sequence
+//!      fused block walk ([`crate::generation::paged::fused_batch_attention`]):
+//!      page tables may alias the shared prefix pages, and sequences are
+//!      grouped by physical K/V block so an aliased block is loaded once
+//!      per step for every fork reading it, not once per sequence —
+//!      logits are bit-exact either way,
 //!   4. extra prefill rounds: sequences still consuming their prompt take
 //!      up to [`PREFILL_CHUNK`] tokens per step in batched slices instead
 //!      of one token per step,
