@@ -5,7 +5,7 @@
 # by default (see Cargo.toml's `pjrt` feature).
 
 .PHONY: verify build test fmt lint doc bench-batch bench-serve bench-attention \
-        bench-attention-smoke artifacts
+        bench-attention-smoke bench-spec bench-spec-smoke artifacts
 
 verify:
 	cargo build --release
@@ -52,6 +52,17 @@ bench-attention:
 # checks, no perf assertion). Mirrored by the CI `tier1` job.
 bench-attention-smoke:
 	cargo bench --bench bench_attention -- --smoke
+
+# Self-speculative decode bench: RVQ base-stage draft + chunked verify
+# vs plain batched decode, k × B sweep over a shared-prefix workload;
+# writes BENCH_speculative.json (asserts the k=4 sweep beats baseline).
+bench-spec:
+	cargo bench --bench bench_speculative
+
+# Seconds-scale smoke run: tiny shapes, bitwise spec-vs-plain parity
+# checks, no perf assertion. Mirrored by the CI `tier1` job.
+bench-spec-smoke:
+	cargo bench --bench bench_speculative -- --smoke
 
 # Trained weights + corpus + AOT HLO artifacts (needs the python/JAX
 # toolchain; see python/compile/aot.py). Integration tests skip cleanly

@@ -212,6 +212,7 @@ fn pool_pressure() -> Json {
             prompt: vec![(i % 50) as u8, 3, 9, 27],
             max_new,
             prefix_id: None,
+            speculate_k: None,
         }));
     }
     let mut tokens = 0usize;
@@ -310,6 +311,7 @@ fn shared_prefix() -> Json {
                 prompt,
                 max_new,
                 prefix_id: None,
+                speculate_k: None,
             }));
         }
         let mut tokens = 0usize;

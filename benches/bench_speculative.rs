@@ -1,0 +1,349 @@
+//! Self-speculative decoding bench — the RVQ base-stage draft / full
+//! model verify loop (`generation::speculative`) against plain batched
+//! decode, on the serving-style shared-prefix workload. Writes
+//! `BENCH_speculative.json` (field reference in `BENCHMARKS.md`).
+//!
+//! Workload: a 4-bit (E8P ∘ E8P) synthetic model; B sequences forked
+//! off one prefilled shared prompt prefix (`PagedKv::fork_prefix`, the
+//! shape the engine's prefix cache produces), each greedily decoding
+//! `new_tokens` tokens. For every (B, k) pair it measures:
+//!
+//! * **baseline** (k = 0): one `decode_batch_paged` call per token —
+//!   the batch-native non-speculative hot path.
+//! * **speculative**: `spec_round_paged` rounds — the embedded 2-bit
+//!   base stage drafts k tokens per round (half the code bytes per
+//!   step), the 4-bit target verifies all k + 1 positions in a single
+//!   chunked step, both KVs roll back on rejection.
+//!
+//! Bit-parity preflight: every speculated token stream must equal the
+//! non-speculative stream exactly — acceptance only moves throughput.
+//! Reported per row: tok/s, speedup over the k = 0 baseline at the
+//! same B, and the draft acceptance rate. The full run asserts the
+//! k = 4 sweep beats the baseline somewhere in the B sweep; `--smoke`
+//! (wired as `make bench-spec-smoke`, run in CI) shrinks shapes to
+//! seconds and skips the perf assertion (parity is still checked).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use quipsharp::bench::{best_of, Table};
+use quipsharp::generation::paged::{pages_per_seq, KvPagePool, PagedKv};
+use quipsharp::generation::speculative::{effective_k, spec_round_paged, SpecLane, SpecStats};
+use quipsharp::generation::Generator;
+use quipsharp::model::{Arch, Model, ModelConfig};
+use quipsharp::qmodel::quantize_model;
+use quipsharp::quant::pipeline::Method;
+use quipsharp::util::json::Json;
+
+struct Shape {
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_ff: usize,
+    /// Small vocab keeps the per-lane fp32 lm_head from drowning the
+    /// packed-weight stream the draft halves.
+    vocab: usize,
+    ctx: usize,
+    prefix_rows: usize,
+    new_tokens: usize,
+    batches: &'static [usize],
+    ks: &'static [usize],
+    reps: usize,
+}
+
+/// Full run: the 'm'-class geometry with a serving-style prefix.
+const FULL: Shape = Shape {
+    d_model: 256,
+    n_layers: 4,
+    n_heads: 4,
+    d_ff: 1024,
+    vocab: 64,
+    ctx: 256,
+    prefix_rows: 96,
+    new_tokens: 48,
+    batches: &[1, 4, 8],
+    ks: &[0, 2, 4, 8],
+    reps: 3,
+};
+
+/// Smoke run (CI): seconds of runtime, parity checks only.
+const SMOKE: Shape = Shape {
+    d_model: 32,
+    n_layers: 2,
+    n_heads: 2,
+    d_ff: 64,
+    vocab: 64,
+    ctx: 128,
+    prefix_rows: 40,
+    new_tokens: 12,
+    batches: &[1, 4],
+    ks: &[0, 2, 4],
+    reps: 2,
+};
+
+fn build_model(shape: &Shape, seed: u64) -> Model {
+    let cfg = ModelConfig {
+        name: "spec-bench".into(),
+        d_model: shape.d_model,
+        n_layers: shape.n_layers,
+        n_heads: shape.n_heads,
+        d_ff: shape.d_ff,
+        vocab: shape.vocab,
+        ctx: shape.ctx,
+        arch: Arch::Llama,
+        n_experts: 2,
+    };
+    Model::random(cfg, seed)
+}
+
+/// Shared-prefix setup: prefill the prefix once per generator (target
+/// and draft keep separate KVs of the same tokens), then fork B lanes
+/// off each. Returns (target lanes, draft lanes, per-lane logits after
+/// the prefix + the lane's distinct first token).
+struct Lanes {
+    pool: KvPagePool,
+    t_kvs: Vec<PagedKv>,
+    d_kvs: Vec<PagedKv>,
+    logits: Vec<Vec<f32>>,
+}
+
+fn setup(target: &Generator, draft: &Generator, shape: &Shape, bsz: usize) -> Lanes {
+    let m = target.model;
+    let prefix: Vec<u8> =
+        (0..shape.prefix_rows).map(|i| ((i * 13 + 2) % shape.vocab) as u8).collect();
+    let mut pool = KvPagePool::for_model(m, 2 * (bsz + 1) * pages_per_seq(&m.cfg));
+    // Parents: one target-KV and one draft-KV prefill of the shared
+    // prefix (the engine's prefix cache analogue, kept pinned).
+    let mut t_parent = PagedKv::new();
+    target.decode_chunk_paged(&prefix, &mut pool, &mut t_parent);
+    let mut d_parent = PagedKv::new();
+    draft.decode_chunk_paged(&prefix, &mut pool, &mut d_parent);
+    let mut t_kvs = Vec::with_capacity(bsz);
+    let mut d_kvs = Vec::with_capacity(bsz);
+    let mut logits = Vec::with_capacity(bsz);
+    for b in 0..bsz {
+        let mut t_kv = PagedKv::new();
+        t_kv.fork_prefix(&mut pool, &t_parent, shape.prefix_rows);
+        let mut d_kv = PagedKv::new();
+        d_kv.fork_prefix(&mut pool, &d_parent, shape.prefix_rows);
+        // A distinct first token diverges the lanes off the prefix.
+        let tok = ((7 * b + 5) % shape.vocab) as u8;
+        let l = target
+            .decode_batch_paged(&[tok], &mut pool, &mut [&mut t_kv])
+            .pop()
+            .unwrap();
+        draft.decode_batch_paged(&[tok], &mut pool, &mut [&mut d_kv]);
+        t_kvs.push(t_kv);
+        d_kvs.push(d_kv);
+        logits.push(l);
+    }
+    Lanes { pool, t_kvs, d_kvs, logits }
+}
+
+/// Baseline: plain batched greedy decode of `new_tokens` per lane.
+fn run_baseline(target: &Generator, shape: &Shape, lanes: &mut Lanes) -> Vec<Vec<u8>> {
+    let bsz = lanes.t_kvs.len();
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); bsz];
+    for _ in 0..shape.new_tokens {
+        let toks: Vec<u8> = lanes
+            .logits
+            .iter()
+            .map(|l| quipsharp::generation::argmax(l) as u8)
+            .collect();
+        for (o, &t) in out.iter_mut().zip(&toks) {
+            o.push(t);
+        }
+        let next = {
+            let mut refs: Vec<&mut PagedKv> = lanes.t_kvs.iter_mut().collect();
+            target.decode_batch_paged(&toks, &mut lanes.pool, &mut refs)
+        };
+        lanes.logits = next;
+    }
+    out
+}
+
+/// Speculative: draft/verify rounds until every lane emitted
+/// `new_tokens` tokens. Returns the emitted streams plus round stats.
+fn run_speculative(
+    target: &Generator,
+    draft: &Generator,
+    shape: &Shape,
+    k: usize,
+    lanes: &mut Lanes,
+) -> (Vec<Vec<u8>>, SpecStats) {
+    let bsz = lanes.t_kvs.len();
+    let ctx = target.model.cfg.ctx;
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); bsz];
+    let mut pendings: Vec<Vec<u8>> = vec![Vec::new(); bsz];
+    let mut stats = SpecStats::default();
+    while out.iter().any(|o| o.len() < shape.new_tokens) {
+        let sel: Vec<usize> = (0..bsz).filter(|&b| out[b].len() < shape.new_tokens).collect();
+        let ks: Vec<usize> = sel
+            .iter()
+            .map(|&b| {
+                effective_k(
+                    k,
+                    shape.new_tokens - out[b].len(),
+                    ctx,
+                    lanes.t_kvs[b].len,
+                    lanes.d_kvs[b].len,
+                    pendings[b].len(),
+                )
+            })
+            .collect();
+        let emitted = {
+            let mut round: Vec<SpecLane> = Vec::with_capacity(sel.len());
+            let mut t_it = lanes.t_kvs.iter_mut();
+            let mut d_it = lanes.d_kvs.iter_mut();
+            let mut p_it = pendings.iter_mut();
+            let mut l_it = lanes.logits.iter_mut();
+            let mut si = 0usize;
+            let mut idx = 0usize;
+            loop {
+                let (Some(t), Some(d), Some(p), Some(l)) =
+                    (t_it.next(), d_it.next(), p_it.next(), l_it.next())
+                else {
+                    break;
+                };
+                if si < sel.len() && sel[si] == idx {
+                    round.push(SpecLane {
+                        k: ks[si],
+                        target_kv: t,
+                        draft_kv: d,
+                        pending: p,
+                        logits: l,
+                    });
+                    si += 1;
+                }
+                idx += 1;
+            }
+            spec_round_paged(target, draft, &mut lanes.pool, &mut round, &mut stats)
+        };
+        for (em, &b) in emitted.iter().zip(&sel) {
+            out[b].extend_from_slice(em);
+        }
+    }
+    (out, stats)
+}
+
+fn run_config(
+    target: &Generator,
+    draft: &Generator,
+    shape: &Shape,
+    bsz: usize,
+    k: usize,
+    baseline_tps: Option<f64>,
+) -> (Json, f64, f64) {
+    // Parity preflight: the speculated stream must equal the plain
+    // greedy stream token for token.
+    let mut base_lanes = setup(target, draft, shape, bsz);
+    let want = run_baseline(target, shape, &mut base_lanes);
+    let mut spec_lanes = setup(target, draft, shape, bsz);
+    let (got, preflight_stats) = run_speculative(target, draft, shape, k, &mut spec_lanes);
+    assert_eq!(got, want, "speculative decode diverged (B={bsz}, k={k})");
+    // Timing: best of `reps` fresh runs (setup excluded).
+    let tokens = (bsz * shape.new_tokens) as f64;
+    let dt = best_of(shape.reps, || {
+        if k == 0 {
+            let mut lanes = setup(target, draft, shape, bsz);
+            let t0 = Instant::now();
+            run_baseline(target, shape, &mut lanes);
+            t0.elapsed().as_secs_f64()
+        } else {
+            let mut lanes = setup(target, draft, shape, bsz);
+            let t0 = Instant::now();
+            run_speculative(target, draft, shape, k, &mut lanes);
+            t0.elapsed().as_secs_f64()
+        }
+    });
+    let tps = tokens / dt;
+    let speedup = baseline_tps.map(|b| tps / b).unwrap_or(1.0);
+    let acc = preflight_stats.acceptance_rate();
+    let row = Json::obj(vec![
+        ("batch", Json::num(bsz as f64)),
+        ("k", Json::num(k as f64)),
+        ("tok_per_sec", Json::num(tps)),
+        ("speedup_vs_k0", Json::num(speedup)),
+        ("acceptance_rate", Json::num(acc)),
+        ("tokens_drafted", Json::num(preflight_stats.tokens_drafted as f64)),
+        ("tokens_accepted", Json::num(preflight_stats.tokens_accepted as f64)),
+        ("rounds", Json::num(preflight_stats.rounds as f64)),
+    ]);
+    (row, tps, speedup)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let shape = if smoke { SMOKE } else { FULL };
+    println!("== self-speculative decode: RVQ base-stage draft + chunked verify ==");
+    println!(
+        "(d_model {}, {} layers, vocab {}, 4-bit E8P∘E8P target / 2-bit base-stage draft, \
+         {}-row shared prefix, {} new tokens{})\n",
+        shape.d_model,
+        shape.n_layers,
+        shape.vocab,
+        shape.prefix_rows,
+        shape.new_tokens,
+        if smoke { ", SMOKE" } else { "" }
+    );
+    let model = build_model(&shape, 11);
+    // Identity Hessians: decode throughput does not depend on
+    // quantization quality, and skipping calibration keeps setup fast.
+    let qm = quantize_model(
+        &model,
+        &BTreeMap::new(),
+        &Method::QuipSharp { bits: 4, ft: false },
+        7,
+    )
+    .unwrap();
+    assert!(qm.has_multi_stage(), "4-bit model must embed a base stage");
+    let target = qm.generator();
+    let draft = qm.draft_generator();
+    let mut t = Table::new(&["B", "k", "tok/s", "speedup", "accept"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut best_k4_speedup = f64::NEG_INFINITY;
+    for &bsz in shape.batches {
+        let mut baseline_tps = None;
+        for &k in shape.ks {
+            let (row, tps, speedup) = run_config(&target, &draft, &shape, bsz, k, baseline_tps);
+            if k == 0 {
+                baseline_tps = Some(tps);
+            }
+            if k == 4 {
+                best_k4_speedup = best_k4_speedup.max(speedup);
+            }
+            let acc = row.get("acceptance_rate").as_f64().unwrap();
+            t.row(&[
+                format!("{bsz}"),
+                format!("{k}"),
+                format!("{tps:.1}"),
+                format!("{speedup:.2}x"),
+                format!("{acc:.2}"),
+            ]);
+            rows_json.push(row);
+        }
+    }
+    t.print();
+    t.write_csv("bench_speculative").ok();
+    let out = Json::obj(vec![
+        ("d_model", Json::num(shape.d_model as f64)),
+        ("n_layers", Json::num(shape.n_layers as f64)),
+        ("vocab", Json::num(shape.vocab as f64)),
+        ("prefix_rows", Json::num(shape.prefix_rows as f64)),
+        ("new_tokens", Json::num(shape.new_tokens as f64)),
+        ("target_bits", Json::num(4.0)),
+        ("smoke", Json::Bool(smoke)),
+        ("sweep", Json::Arr(rows_json)),
+    ]);
+    if std::fs::write("BENCH_speculative.json", out.emit()).is_ok() {
+        println!("\nwrote BENCH_speculative.json");
+    }
+    if !smoke && shape.ks.contains(&4) {
+        assert!(
+            best_k4_speedup > 1.0,
+            "speculative decode at k=4 must beat plain decode somewhere in the B sweep \
+             (best speedup {best_k4_speedup:.2}x) — check the acceptance column: a draft \
+             this coarse only pays off when the target keeps agreeing with it"
+        );
+    }
+}

@@ -22,12 +22,21 @@
 //! their rows through the same [`paged::PAGE_ROWS`]-blocked attention
 //! kernels, so the two layouts produce bit-identical logits.
 //!
+//! Lanes and sequences are decoupled: a decode step may advance several
+//! *consecutive* tokens of one sequence as separate lanes
+//! ([`Generator::decode_chunks`] / [`Generator::decode_chunks_paged`] —
+//! prefill-style chunked decode, bitwise identical to one-token-at-a-
+//! time decode), which is what the self-speculative verify step in
+//! [`speculative`] builds on, together with the KV rollback primitives
+//! ([`KvCache::truncate`], [`paged::PagedKv::truncate`]).
+//!
 //! `rust/src/generation/README.md` tours the decode/attention data flow
 //! end to end.
 
 use std::collections::BTreeMap;
 
 pub mod paged;
+pub mod speculative;
 
 use crate::linalg::hadamard::{fwht_f32, HadTransform};
 use crate::model::ops::*;
@@ -119,6 +128,20 @@ impl KvCache {
         self.k[layer][pos * self.d..need].copy_from_slice(kx);
         self.v[layer][pos * self.d..need].copy_from_slice(vx);
     }
+
+    /// Roll the cache back to `new_len` rows — the contiguous analogue of
+    /// [`PagedKv::truncate`] (speculative-decode rejection path). Storage
+    /// is kept; rows `[new_len, old_len)` become stale but are never read
+    /// (attention reads rows `< len` only) and are fully overwritten by
+    /// [`KvCache::store`] before the length covers them again.
+    pub fn truncate(&mut self, new_len: usize) {
+        assert!(
+            new_len <= self.len,
+            "truncate to {new_len} rows but the cache holds {}",
+            self.len
+        );
+        self.len = new_len;
+    }
 }
 
 /// KV storage backing one batched decode step: per-sequence contiguous
@@ -133,38 +156,46 @@ enum KvBatch<'a, 'b> {
 }
 
 impl KvBatch<'_, '_> {
-    fn batch(&self) -> usize {
+    fn seq_count(&self) -> usize {
         match self {
             KvBatch::Contig(caches) => caches.len(),
             KvBatch::Paged { seqs, .. } => seqs.len(),
         }
     }
 
-    fn positions(&self) -> Vec<usize> {
-        match self {
+    /// KV row each lane of `lane_seq` writes and attends up to: a
+    /// sequence's lanes take consecutive positions starting at its
+    /// current length, in lane order (chunked decode maps several
+    /// consecutive lanes onto one sequence; plain batched decode is the
+    /// identity mapping with one lane per sequence).
+    fn lane_positions(&self, lane_seq: &[usize]) -> Vec<usize> {
+        let base: Vec<usize> = match self {
             KvBatch::Contig(caches) => caches.iter().map(|c| c.len).collect(),
             KvBatch::Paged { seqs, .. } => seqs.iter().map(|s| s.len).collect(),
+        };
+        let mut taken = vec![0usize; base.len()];
+        lane_seq
+            .iter()
+            .map(|&s| {
+                let pos = base[s] + taken[s];
+                taken[s] += 1;
+                pos
+            })
+            .collect()
+    }
+
+    fn store(&mut self, seq: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        match self {
+            KvBatch::Contig(caches) => caches[seq].store(layer, pos, k, v),
+            KvBatch::Paged { pool, seqs } => seqs[seq].store(pool, layer, pos, k, v),
         }
     }
 
-    fn store(&mut self, b: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
-        match self {
-            KvBatch::Contig(caches) => caches[b].store(layer, pos, k, v),
-            KvBatch::Paged { pool, seqs } => seqs[b].store(pool, layer, pos, k, v),
-        }
-    }
-
-    fn advance(&mut self) {
-        match self {
-            KvBatch::Contig(caches) => {
-                for c in caches.iter_mut() {
-                    c.len += 1;
-                }
-            }
-            KvBatch::Paged { seqs, .. } => {
-                for s in seqs.iter_mut() {
-                    s.len += 1;
-                }
+    fn advance(&mut self, lane_seq: &[usize]) {
+        for &s in lane_seq {
+            match self {
+                KvBatch::Contig(caches) => caches[s].len += 1,
+                KvBatch::Paged { seqs, .. } => seqs[s].len += 1,
             }
         }
     }
@@ -234,6 +265,21 @@ impl<'a> Generator<'a> {
         }
     }
 
+    /// Build the RVQ *base-stage* generator over a quantized model: every
+    /// packed layer decodes only its stage-0 codes
+    /// ([`QuantMatvec::base_stage`]), so a 4-bit (E8P ∘ E8P) model yields
+    /// its embedded 2-bit model — the self-speculative draft
+    /// ([`crate::generation::speculative`]). Codes stay `Arc`-shared
+    /// with the full generator; unpacked (dense-fallback) layers and the
+    /// embed/norm/lm_head tensors are identical to the target's.
+    pub fn base_stage(model: &'a Model, qm: &crate::qmodel::QuantizedModel) -> Self {
+        let mut gen = Self::quantized(model, qm);
+        for q in gen.qlayers.values_mut() {
+            *q = q.base_stage();
+        }
+        gen
+    }
+
     /// Apply a linear layer to B sequence-major inputs through the
     /// batched kernel (fused E8P decode when packed, dense otherwise).
     fn apply_linear_batch(&self, name: &str, xs: &[f32], batch: usize, ys: &mut [f32]) {
@@ -294,7 +340,47 @@ impl<'a> Generator<'a> {
     /// [`Generator::decode_batch_paged`] for the pooled layout; both run
     /// the identical decode implementation.
     pub fn decode_batch(&self, tokens: &[u8], caches: &mut [&mut KvCache]) -> Vec<Vec<f32>> {
-        self.decode_batch_kv(tokens, &mut KvBatch::Contig(caches))
+        let lane_seq: Vec<usize> = (0..tokens.len()).collect();
+        self.decode_batch_kv(tokens, &mut KvBatch::Contig(caches), &lane_seq)
+    }
+
+    /// Advance one sequence by a *chunk* of consecutive tokens in one
+    /// prefill-style batched step — the contiguous-KV form of
+    /// [`Generator::decode_chunk_paged`]. Returns the logits row after
+    /// every chunk position. Bit-exact with feeding the same tokens one
+    /// [`Generator::decode_one`] call at a time (see
+    /// [`Generator::decode_chunks`] for why).
+    pub fn decode_chunk(&self, tokens: &[u8], cache: &mut KvCache) -> Vec<Vec<f32>> {
+        self.decode_chunks(&[tokens], &mut [cache]).pop().unwrap()
+    }
+
+    /// Advance several sequences by per-sequence token chunks in one
+    /// batched step: every chunk position of every sequence is a lane of
+    /// the same underlying decode call, so each packed codeword is
+    /// decoded once for *all* positions (the speculative-verify hot
+    /// path). Returns, per sequence, the logits row after each of its
+    /// chunk positions.
+    ///
+    /// Bit-exactness: a lane's linear-layer accumulation order is
+    /// batch-invariant (the decode-once tiling invariant pinned in
+    /// [`crate::model::qlinear`]), per-lane RoPE/norm ops are
+    /// independent, and attention for the lane at position `p` walks
+    /// rows `0..=p` through the same blocked kernels a one-token step
+    /// at `p` would — rows `< p` written by earlier lanes of the same
+    /// chunk hold exactly the values sequential decode would have
+    /// stored (every KV write for a layer lands before any lane's
+    /// attention in that layer). Chunked decode is therefore bitwise
+    /// identical to sequential decode, which is what makes speculative
+    /// verification exact ([`crate::generation::speculative`]).
+    pub fn decode_chunks(
+        &self,
+        chunks: &[&[u8]],
+        caches: &mut [&mut KvCache],
+    ) -> Vec<Vec<Vec<f32>>> {
+        assert_eq!(chunks.len(), caches.len());
+        let (tokens, lane_seq) = flatten_chunks(chunks);
+        let flat = self.decode_batch_kv(&tokens, &mut KvBatch::Contig(caches), &lane_seq);
+        unflatten_rows(flat, chunks)
     }
 
     /// Advance every sequence one token in lockstep against page tables
@@ -330,24 +416,71 @@ impl<'a> Generator<'a> {
                 pool.pages_total()
             );
         }
-        self.decode_batch_kv(tokens, &mut KvBatch::Paged { pool, seqs })
+        let lane_seq: Vec<usize> = (0..tokens.len()).collect();
+        self.decode_batch_kv(tokens, &mut KvBatch::Paged { pool, seqs }, &lane_seq)
     }
 
-    /// The shared decode step over either KV layout. Sequences may sit at
-    /// different positions: RoPE and KV writes run per sequence, every
-    /// linear layer is applied once for the whole batch (each packed
-    /// codeword decoded exactly once per step), and attention runs as one
-    /// cross-sequence fused block walk over the batch (see
-    /// [`Generator::attn_mode`]), so K/V blocks aliased across forked
-    /// sequences are loaded once per step.
-    fn decode_batch_kv(&self, tokens: &[u8], kvb: &mut KvBatch) -> Vec<Vec<f32>> {
+    /// [`Generator::decode_chunks`] over page tables — one sequence per
+    /// chunk, all chunk positions decoded as lanes of a single batched
+    /// step. Reserves each sequence's pages up front (panicking on
+    /// exhaustion like [`Generator::decode_batch_paged`]); bit-exact
+    /// with one-token-at-a-time paged decode.
+    pub fn decode_chunks_paged(
+        &self,
+        chunks: &[&[u8]],
+        pool: &mut KvPagePool,
+        seqs: &mut [&mut PagedKv],
+    ) -> Vec<Vec<Vec<f32>>> {
+        assert_eq!(chunks.len(), seqs.len());
+        for (s, chunk) in seqs.iter_mut().zip(chunks) {
+            let new_len = s.len + chunk.len();
+            assert!(
+                s.reserve(pool, new_len),
+                "KV page pool exhausted ({} pages): preempt a sequence or enlarge the pool",
+                pool.pages_total()
+            );
+        }
+        let (tokens, lane_seq) = flatten_chunks(chunks);
+        let flat = self.decode_batch_kv(&tokens, &mut KvBatch::Paged { pool, seqs }, &lane_seq);
+        unflatten_rows(flat, chunks)
+    }
+
+    /// The one-sequence special case of [`Generator::decode_chunks_paged`].
+    pub fn decode_chunk_paged(
+        &self,
+        tokens: &[u8],
+        pool: &mut KvPagePool,
+        kv: &mut PagedKv,
+    ) -> Vec<Vec<f32>> {
+        self.decode_chunks_paged(&[tokens], pool, &mut [kv]).pop().unwrap()
+    }
+
+    /// The shared decode step over either KV layout. Each *lane* advances
+    /// one token; `lane_seq` maps lanes onto sequences (identity for
+    /// plain batched decode; several consecutive lanes per sequence for
+    /// chunked decode, which assigns them consecutive positions). RoPE
+    /// and KV writes run per lane, every linear layer is applied once for
+    /// the whole batch (each packed codeword decoded exactly once per
+    /// step), and attention runs as one cross-sequence fused block walk
+    /// over the batch (see [`Generator::attn_mode`]), so K/V blocks
+    /// aliased across forked sequences are loaded once per step. Within a
+    /// layer every lane's K/V row is stored before any lane attends, so a
+    /// chunk lane at position `p` reads its same-chunk predecessors'
+    /// rows exactly as sequential decode would.
+    fn decode_batch_kv(
+        &self,
+        tokens: &[u8],
+        kvb: &mut KvBatch,
+        lane_seq: &[usize],
+    ) -> Vec<Vec<f32>> {
         let bsz = tokens.len();
         assert!(bsz > 0, "empty decode batch");
-        assert_eq!(bsz, kvb.batch());
+        assert_eq!(bsz, lane_seq.len());
+        debug_assert!(lane_seq.iter().all(|&s| s < kvb.seq_count()));
         let cfg = &self.model.cfg;
         let (d, heads, hd, ff) = (cfg.d_model, cfg.n_heads, cfg.head_dim(), cfg.d_ff);
         let model = self.model;
-        let positions = kvb.positions();
+        let positions = kvb.lane_positions(lane_seq);
         for &pos in &positions {
             assert!(pos < cfg.ctx, "KV cache full");
         }
@@ -415,13 +548,13 @@ impl<'a> Generator<'a> {
                     rope_apply(qb, heads, hd, pos, &rope_cos, &rope_sin);
                     rope_apply(kb, heads, hd, pos, &rope_cos, &rope_sin);
                 }
-                kvb.store(b, layer, pos, kb, &vx[b * d..(b + 1) * d]);
+                kvb.store(lane_seq[b], layer, pos, kb, &vx[b * d..(b + 1) * d]);
             }
             // Fused batched attention: one blocked (flash-style) pass
             // over every sequence's KV blocks, sharing the Q/K/V
             // projections computed above (cross-sequence block walk by
             // default — see [`AttnMode`]).
-            self.attend_batch(kvb, layer, &positions, &q, &mut att);
+            self.attend_batch(kvb, layer, lane_seq, &positions, &q, &mut att);
             self.apply_linear_batch(&format!("{pre}wo"), &att, bsz, &mut tmp_d);
             for (xv, &o) in xs.iter_mut().zip(&tmp_d) {
                 *xv += o;
@@ -483,7 +616,7 @@ impl<'a> Generator<'a> {
         let head = model.p("lm_head");
         let mut logits = vec![0.0f32; bsz * cfg.vocab];
         matmul_nt(&h, &head.data, bsz, d, cfg.vocab, &mut logits);
-        kvb.advance();
+        kvb.advance(lane_seq);
         logits.chunks(cfg.vocab).map(|r| r.to_vec()).collect()
     }
 
@@ -497,6 +630,7 @@ impl<'a> Generator<'a> {
         &self,
         kvb: &KvBatch,
         layer: usize,
+        lane_seq: &[usize],
         positions: &[usize],
         q: &[f32],
         att: &mut [f32],
@@ -510,8 +644,8 @@ impl<'a> Generator<'a> {
                     let attb = &mut att[b * d..(b + 1) * d];
                     match kvb {
                         KvBatch::Contig(caches) => {
-                            let kc = &caches[b].k[layer];
-                            let vc = &caches[b].v[layer];
+                            let kc = &caches[lane_seq[b]].k[layer];
+                            let vc = &caches[lane_seq[b]].v[layer];
                             blocked_attention(qb, attb, pos, heads, hd, |blk| {
                                 let lo = blk * PAGE_ROWS * d;
                                 let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
@@ -519,7 +653,7 @@ impl<'a> Generator<'a> {
                             });
                         }
                         KvBatch::Paged { pool, seqs } => {
-                            let pages = &seqs[b].pages;
+                            let pages = &seqs[lane_seq[b]].pages;
                             blocked_attention(qb, attb, pos, heads, hd, |blk| {
                                 let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
                                 let page = pages[blk];
@@ -548,11 +682,12 @@ impl<'a> Generator<'a> {
                             let pos = positions[b];
                             let rows = (pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
                             let lo = blk * PAGE_ROWS * d;
-                            let kc = &caches[b].k[layer];
-                            let vc = &caches[b].v[layer];
-                            // Contiguous slabs never alias: a unique key
-                            // per (lane, block) makes grouping a no-op.
-                            let key = ((b as u64) << 32) | blk as u64;
+                            let kc = &caches[lane_seq[b]].k[layer];
+                            let vc = &caches[lane_seq[b]].v[layer];
+                            // Contiguous slabs alias only across chunk
+                            // lanes of the same sequence: keying by
+                            // (sequence, block) groups exactly those.
+                            let key = ((lane_seq[b] as u64) << 32) | blk as u64;
                             (key, &kc[lo..lo + rows * d], &vc[lo..lo + rows * d])
                         });
                     }
@@ -563,7 +698,7 @@ impl<'a> Generator<'a> {
                             // Physical page id as the grouping key:
                             // forked siblings aliasing a prefix page
                             // process it back to back, loading it once.
-                            let page = seqs[b].pages[blk];
+                            let page = seqs[lane_seq[b]].pages[blk];
                             (
                                 page as u64,
                                 &pool.k_block(page, layer)[..rows * d],
@@ -609,6 +744,29 @@ impl<'a> Generator<'a> {
         }
         out
     }
+}
+
+/// Flatten per-sequence token chunks into one lane-major token stream
+/// plus its lane → sequence map (chunk lanes stay consecutive and in
+/// token order, which is what assigns them consecutive KV positions).
+fn flatten_chunks(chunks: &[&[u8]]) -> (Vec<u8>, Vec<usize>) {
+    let mut tokens = Vec::new();
+    let mut lane_seq = Vec::new();
+    for (s, chunk) in chunks.iter().enumerate() {
+        assert!(!chunk.is_empty(), "empty chunk for sequence {s}");
+        tokens.extend_from_slice(chunk);
+        lane_seq.extend(std::iter::repeat(s).take(chunk.len()));
+    }
+    (tokens, lane_seq)
+}
+
+/// Regroup flat per-lane logits rows back into per-sequence chunks.
+fn unflatten_rows(flat: Vec<Vec<f32>>, chunks: &[&[u8]]) -> Vec<Vec<Vec<f32>>> {
+    let mut it = flat.into_iter();
+    chunks
+        .iter()
+        .map(|chunk| (0..chunk.len()).map(|_| it.next().unwrap()).collect())
+        .collect()
 }
 
 /// Streamed bytes for one batched decode step given a precomputed
@@ -1107,6 +1265,35 @@ mod tests {
         }
         assert!(cache.allocated_f32() <= full);
         assert_eq!(cache.len, 9);
+    }
+
+    #[test]
+    fn kv_cache_truncate_replays_bitwise() {
+        // Decode, roll back, re-decode the same tokens: the replayed
+        // logits must be bit-identical to the first pass (stale rows
+        // past the truncation point are never read and are fully
+        // overwritten) — the contiguous rollback the speculative
+        // verify/reject path relies on.
+        let m = tiny_model(17);
+        let gen = Generator::dense(&m);
+        let tokens: Vec<u8> = vec![5, 9, 1, 33, 7, 12];
+        let mut cache = KvCache::new(&m);
+        let mut first = Vec::new();
+        for &t in &tokens {
+            first.push(gen.decode_one(t, &mut cache));
+        }
+        cache.truncate(3);
+        assert_eq!(cache.len, 3);
+        for (step, &t) in tokens.iter().enumerate().skip(3) {
+            let replay = gen.decode_one(t, &mut cache);
+            for (i, (x, y)) in replay.iter().zip(&first[step]).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "replayed step {step} logit {i}: {x} vs {y}"
+                );
+            }
+        }
+        assert_eq!(cache.len, tokens.len());
     }
 
     #[test]

@@ -360,6 +360,30 @@ impl PagedKv {
         pool.store_row(page, layer, pos % PAGE_ROWS, k, v);
     }
 
+    /// Roll the sequence back to `new_len` rows — the speculative-decode
+    /// rejection path. Page-table entries wholly past the new length drop
+    /// this sequence's reference (each returns to the free list only when
+    /// no fork or parent still holds it, exactly like [`PagedKv::release`]);
+    /// the partially occupied tail page is kept in place. Rows in
+    /// `[new_len, old_len)` of the tail page become stale but are never
+    /// read (attention reads rows `< len` only) and are fully overwritten
+    /// by [`PagedKv::store`] before the length covers them again — and if
+    /// the tail page is still shared with a fork, the next
+    /// [`PagedKv::reserve`] clones it before any such write
+    /// (copy-on-write), so truncation can never corrupt a sibling's KV.
+    pub fn truncate(&mut self, pool: &mut KvPagePool, new_len: usize) {
+        assert!(
+            new_len <= self.len,
+            "truncate to {new_len} rows but the sequence holds {}",
+            self.len
+        );
+        let keep = Self::pages_needed(new_len);
+        for p in self.pages.drain(keep..) {
+            pool.release_page(p);
+        }
+        self.len = new_len;
+    }
+
     /// Drop this sequence's reference on every page and reset it — the
     /// completion and preemption path. Pages shared with a parent or a
     /// fork stay allocated until their last holder releases; only pages
@@ -933,6 +957,130 @@ mod tests {
         parent.release(&mut pool);
         assert!(child.reserve(&mut pool, prefix + 1));
         assert_eq!(pool.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn truncate_frees_whole_pages_and_keeps_tail() {
+        let mut pool = tiny_pool(4);
+        let mut a = PagedKv::new();
+        assert!(a.reserve(&mut pool, 3 * PAGE_ROWS + 5)); // 4 pages
+        a.len = 3 * PAGE_ROWS + 5;
+        assert_eq!(pool.pages_in_use(), 4);
+        // Truncating into page 1 frees pages 2 and 3 only; the
+        // partially occupied tail page stays.
+        a.truncate(&mut pool, PAGE_ROWS + 3);
+        assert_eq!(a.pages.len(), 2);
+        assert_eq!(a.len, PAGE_ROWS + 3);
+        assert_eq!(pool.pages_in_use(), 2);
+        // An exact page-boundary truncate keeps exactly len/PAGE_ROWS
+        // pages (the boundary page is fully *used*, not fully free).
+        a.truncate(&mut pool, PAGE_ROWS);
+        assert_eq!(a.pages.len(), 1);
+        assert_eq!(pool.pages_in_use(), 1);
+        // Release after truncate frees exactly the remaining pages.
+        let before = pool.pages_free();
+        let remaining = a.pages.len();
+        a.release(&mut pool);
+        assert_eq!(pool.pages_free(), before + remaining);
+        assert_eq!(pool.pages_free(), pool.pages_total());
+        // Truncate to zero on an empty table is a no-op.
+        a.truncate(&mut pool, 0);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    /// Property: any interleaving of grows (`reserve` + len bump) and
+    /// `truncate`s keeps the page table exactly `pages_needed(len)`
+    /// pages, the pool accounting in sync, and releases everything at
+    /// the end — the truncate → reserve round-trip the speculative
+    /// rollback path depends on.
+    #[test]
+    fn truncate_reserve_roundtrips() {
+        use crate::util::proptest_lite::check;
+        check("truncate-reserve-roundtrip", 64, |rng| {
+            let mut pool = KvPagePool::new(1, 4, 8);
+            let mut kv = PagedKv::new();
+            let mut len = 0usize;
+            for step in 0..16 {
+                if rng.bernoulli(0.55) {
+                    let grow = rng.below_usize(PAGE_ROWS + 10);
+                    let new_len = (len + grow).min(8 * PAGE_ROWS);
+                    if !kv.reserve(&mut pool, new_len) {
+                        return Err(format!("step {step}: reserve({new_len}) failed"));
+                    }
+                    kv.len = new_len;
+                    len = new_len;
+                } else {
+                    let new_len = rng.below_usize(len + 1);
+                    kv.truncate(&mut pool, new_len);
+                    len = new_len;
+                }
+                if kv.pages.len() != PagedKv::pages_needed(len) {
+                    return Err(format!(
+                        "step {step}: {} pages cover {len} rows (want {})",
+                        kv.pages.len(),
+                        PagedKv::pages_needed(len)
+                    ));
+                }
+                if pool.pages_in_use() != kv.pages.len() {
+                    return Err(format!(
+                        "step {step}: pool says {} in use, table holds {}",
+                        pool.pages_in_use(),
+                        kv.pages.len()
+                    ));
+                }
+            }
+            kv.release(&mut pool);
+            if pool.pages_free() != pool.pages_total() {
+                return Err("pages leaked through truncate/reserve".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncate_respects_cow_siblings() {
+        // A forked child that speculated ahead (CoW tail clone + growth
+        // page) and rolls back must free only its own pages — the
+        // parent keeps reading the shared prefix untouched.
+        let d = 8;
+        let prefix = PAGE_ROWS + 5;
+        let mut pool = tiny_pool(6);
+        let mut parent = PagedKv::new();
+        assert!(parent.reserve(&mut pool, prefix));
+        parent.len = prefix;
+        fill(&parent, &mut pool, d, prefix, 0.0);
+        let mut child = PagedKv::new();
+        child.fork_prefix(&mut pool, &parent, prefix);
+        assert!(child.reserve(&mut pool, 2 * PAGE_ROWS + 3));
+        child.len = 2 * PAGE_ROWS + 3;
+        let cloned_tail = child.pages[1];
+        assert_ne!(cloned_tail, parent.pages[1], "tail must have been CoW-cloned");
+        assert_eq!(pool.pages_in_use(), 4); // parent 2 + clone + growth
+        // Rejection rolls the child back inside the shared full page:
+        // the clone and the growth page free, the shared page survives
+        // with both references.
+        child.truncate(&mut pool, PAGE_ROWS);
+        assert_eq!(child.pages.len(), 1);
+        assert_eq!(child.pages[0], parent.pages[0]);
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.refcount(parent.pages[0]), 2);
+        assert_eq!(pool.refcount(parent.pages[1]), 1, "parent's tail must survive");
+        // Parent payload is intact after the child's rollback.
+        let want: Vec<f32> = (0..d).map(|j| ((PAGE_ROWS + 4) * 10 + j) as f32).collect();
+        let row = 4 * d;
+        assert_eq!(&pool.k_block(parent.pages[1], 0)[row..row + d], &want[..]);
+        // Truncating to zero drops the child's shared ref without
+        // freeing the parent's page.
+        child.truncate(&mut pool, 0);
+        assert_eq!(pool.pages_in_use(), 2);
+        assert_eq!(pool.refcount(parent.pages[0]), 1);
+        // And the child can regrow from empty afterwards.
+        assert!(child.reserve(&mut pool, 1));
+        child.len = 1;
+        assert_eq!(pool.pages_in_use(), 3);
+        child.release(&mut pool);
+        parent.release(&mut pool);
+        assert_eq!(pool.pages_free(), pool.pages_total());
     }
 
     #[test]

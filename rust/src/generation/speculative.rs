@@ -1,0 +1,693 @@
+//! Self-speculative decoding: the RVQ base stage drafts, the full model
+//! verifies, and greedy accept/reject keeps the output bit-identical to
+//! target-only decode.
+//!
+//! QuIP#'s RVQ construction (paper §4.3) means every multi-stage model
+//! *contains* a coarser model for free: truncating a 4-bit
+//! (E8P ∘ E8P) layer's codes to stage 0 yields exactly the 2-bit model
+//! ([`crate::model::qlinear::QuantMatvec::base_stage`] — the codes stay
+//! `Arc`-shared, only the decoded stage count changes). Speculative
+//! decoding turns that embedded model into decode throughput:
+//!
+//! 1. **Draft.** The base-stage model greedily proposes up to `k`
+//!    tokens against its *own* KV, streaming roughly half the code
+//!    bytes per step (one E8P stage instead of two).
+//! 2. **Verify.** The target model scores all `k + 1` positions — the
+//!    already-determined next token plus the `k` drafts — in **one**
+//!    prefill-style chunked step ([`Generator::decode_chunks_paged`]),
+//!    so each packed codeword is decoded once for every position
+//!    instead of once per token.
+//! 3. **Accept / roll back.** Greedy decode accepts draft `d_j` while
+//!    the target's argmax at the preceding position equals `d_j`; on
+//!    the first disagreement both KVs are truncated back to the last
+//!    accepted row ([`PagedKv::truncate`] / [`KvCache::truncate`] —
+//!    whole pages past the new length return to the pool, respecting
+//!    copy-on-write refcounts).
+//!
+//! # Bit-exactness
+//!
+//! Greedy target-only decode emits the argmax chain
+//! `t_{i+1} = argmax(logits(t_0..t_i))`. A speculative round emits the
+//! known next token `n_0 = argmax(last_logits)` plus drafts accepted
+//! *only while* they equal the target argmax at their position, and the
+//! verify logits come from chunked decode, which is bitwise identical
+//! to one-token-at-a-time decode (per-lane linear accumulation order is
+//! batch-invariant, attention walks the same rows through the same
+//! kernels — see [`Generator::decode_chunks`]). So every emitted token
+//! and every carried-forward logits row is bit-for-bit the one
+//! target-only decode would have produced: drafting changes *when* work
+//! happens, never *what* is computed. The draft model's quality affects
+//! only the acceptance rate (throughput), never the output — pinned by
+//! parity tests at B ∈ {1, 4, 8} over dense and fused-E8P paths, paged
+//! and contiguous KV.
+//!
+//! The serving engine drives [`spec_round_paged`] with draft KV pages
+//! drawn from the same [`KvPagePool`] as the targets (per-request
+//! `speculate_k`); [`Speculator::generate`] is the offline
+//! contiguous-KV form, and `benches/bench_speculative.rs` sweeps
+//! k × batch into `BENCH_speculative.json`.
+
+use super::paged::{KvPagePool, PagedKv};
+use super::{argmax, Generator, KvCache};
+
+/// Running totals of the draft/verify loop (monotonic counters).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecStats {
+    /// Per-lane speculative rounds executed.
+    pub rounds: u64,
+    /// Draft tokens proposed (k per lane-round, after caps).
+    pub tokens_drafted: u64,
+    /// Draft tokens the target accepted.
+    pub tokens_accepted: u64,
+    /// Tokens emitted by speculative rounds (1 + accepted per round).
+    pub tokens_emitted: u64,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens the target accepted (0 when nothing
+    /// was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.tokens_drafted == 0 {
+            return 0.0;
+        }
+        self.tokens_accepted as f64 / self.tokens_drafted as f64
+    }
+}
+
+/// Longest accepted draft prefix: drafts `d_1..d_k` are accepted while
+/// `argmax(verify[j-1]) == d_j` — `verify[j-1]` being the target logits
+/// *after* the previous accepted token, i.e. exactly the logits greedy
+/// target-only decode would have sampled from.
+fn accept_prefix(drafts: &[u8], verify: &[Vec<f32>]) -> usize {
+    let mut a = 0usize;
+    while a < drafts.len() && argmax(&verify[a]) == drafts[a] as usize {
+        a += 1;
+    }
+    a
+}
+
+/// Largest draft length a lane can run this round, respecting the
+/// remaining token budget (a round emits up to `k + 1` tokens), the
+/// target context (the verify chunk writes `k + 1` rows), and the draft
+/// context (drafting consumes `pending + k` rows).
+pub fn effective_k(
+    k: usize,
+    remaining_new: usize,
+    ctx: usize,
+    target_len: usize,
+    draft_len: usize,
+    pending: usize,
+) -> usize {
+    k.min(remaining_new.saturating_sub(1))
+        .min(ctx.saturating_sub(target_len + 1))
+        .min(ctx.saturating_sub(draft_len + pending))
+}
+
+/// One sequence's mutable state for a paged speculative round. The
+/// target and draft page tables must index the same [`KvPagePool`]
+/// passed to [`spec_round_paged`].
+pub struct SpecLane<'x> {
+    /// Draft tokens to propose this round (0 = plain decode through the
+    /// verify path; see [`effective_k`] for the caps).
+    pub k: usize,
+    /// The sequence's target-model KV.
+    pub target_kv: &'x mut PagedKv,
+    /// The sequence's draft-model KV (same pool).
+    pub draft_kv: &'x mut PagedKv,
+    /// Accepted tokens the draft has not consumed yet (≤ 1 after any
+    /// round that drafted; fed as a catch-up chunk before drafting).
+    pub pending: &'x mut Vec<u8>,
+    /// Target logits predicting this sequence's next token; overwritten
+    /// with the post-round logits (bitwise the sequential-decode row).
+    pub logits: &'x mut Vec<f32>,
+}
+
+/// One draft/verify/rollback round over a batch of paged lanes.
+/// Returns the tokens each lane emitted (`1 + accepted`, first always
+/// `argmax(lane.logits)`), in true greedy order.
+///
+/// Page reservations happen inside the decode calls and panic on pool
+/// exhaustion; schedulers must pre-reserve (target `len + k + 1` rows,
+/// draft `len + pending + k` rows) or preempt before calling, exactly
+/// as with [`Generator::decode_batch_paged`].
+pub fn spec_round_paged(
+    target: &Generator,
+    draft: &Generator,
+    pool: &mut KvPagePool,
+    lanes: &mut [SpecLane],
+    stats: &mut SpecStats,
+) -> Vec<Vec<u8>> {
+    let bsz = lanes.len();
+    assert!(bsz > 0, "empty speculative round");
+    // The known next token per lane; correct by definition of greedy
+    // decode, so it is emitted regardless of draft quality.
+    let n0: Vec<u8> = lanes.iter().map(|l| argmax(l.logits) as u8).collect();
+    let target_base: Vec<usize> = lanes.iter().map(|l| l.target_kv.len).collect();
+    let draft_base: Vec<usize> = lanes.iter().map(|l| l.draft_kv.len).collect();
+    let pend_len: Vec<usize> = lanes.iter().map(|l| l.pending.len()).collect();
+    let max_k = lanes.iter().map(|l| l.k).max().unwrap_or(0);
+
+    // Draft phase: lanes with k > 0 first consume their catch-up tokens
+    // plus n0 in one chunk (the draft may lag the true stream by the
+    // final accepted draft of an all-accept round), then advance one
+    // token at a time, each lane feeding its own previous proposal.
+    let mut drafts: Vec<Vec<u8>> = vec![Vec::new(); bsz];
+    if max_k > 0 {
+        let sel: Vec<usize> = (0..bsz).filter(|&b| lanes[b].k > 0).collect();
+        let chunks: Vec<Vec<u8>> = sel
+            .iter()
+            .map(|&b| {
+                let mut c = lanes[b].pending.clone();
+                c.push(n0[b]);
+                c
+            })
+            .collect();
+        let chunk_refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let outs = {
+            let mut kv_refs: Vec<&mut PagedKv> = lanes
+                .iter_mut()
+                .filter(|l| l.k > 0)
+                .map(|l| &mut *l.draft_kv)
+                .collect();
+            draft.decode_chunks_paged(&chunk_refs, pool, &mut kv_refs)
+        };
+        for (rows, &b) in outs.iter().zip(&sel) {
+            drafts[b].push(argmax(rows.last().unwrap()) as u8);
+            lanes[b].pending.clear();
+        }
+        for j in 1..max_k {
+            let sel: Vec<usize> = (0..bsz).filter(|&b| lanes[b].k > j).collect();
+            if sel.is_empty() {
+                break;
+            }
+            let toks: Vec<u8> = sel.iter().map(|&b| *drafts[b].last().unwrap()).collect();
+            let outs = {
+                let mut kv_refs: Vec<&mut PagedKv> = lanes
+                    .iter_mut()
+                    .filter(|l| l.k > j)
+                    .map(|l| &mut *l.draft_kv)
+                    .collect();
+                draft.decode_batch_paged(&toks, pool, &mut kv_refs)
+            };
+            for (row, &b) in outs.iter().zip(&sel) {
+                drafts[b].push(argmax(row) as u8);
+            }
+        }
+    }
+
+    // Verify phase: one chunked target step over every lane's
+    // [n0, d_1..d_k] — all positions of all lanes in a single batched
+    // decode call, each packed codeword decoded once for all of them.
+    let chunks: Vec<Vec<u8>> = (0..bsz)
+        .map(|b| {
+            let mut c = vec![n0[b]];
+            c.extend_from_slice(&drafts[b]);
+            c
+        })
+        .collect();
+    let chunk_refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+    let verify = {
+        let mut kv_refs: Vec<&mut PagedKv> =
+            lanes.iter_mut().map(|l| &mut *l.target_kv).collect();
+        target.decode_chunks_paged(&chunk_refs, pool, &mut kv_refs)
+    };
+
+    // Accept + rollback.
+    let mut emitted = Vec::with_capacity(bsz);
+    for (b, lane) in lanes.iter_mut().enumerate() {
+        let k = lane.k;
+        let a = accept_prefix(&drafts[b], &verify[b]);
+        let mut em = vec![n0[b]];
+        em.extend_from_slice(&drafts[b][..a]);
+        // The target wrote 1 + k rows; rows past the last accepted
+        // token encode rejected context and roll back.
+        lane.target_kv.truncate(pool, target_base[b] + 1 + a);
+        if k > 0 {
+            // The draft fed pending + n0 + d_1..d_{k-1}. Of the k
+            // tokens fed this round, n0..d_{min(a, k-1)} are on the
+            // true stream; later rows encode rejected drafts.
+            let fed_valid = 1 + a.min(k - 1);
+            lane.draft_kv
+                .truncate(pool, draft_base[b] + pend_len[b] + fed_valid);
+            // All accepted: d_k is emitted but the draft never consumed
+            // it — carry it into the next round's catch-up chunk.
+            if a == k {
+                lane.pending.push(drafts[b][k - 1]);
+            }
+        } else {
+            // Nothing drafted: the draft did not see n0 either.
+            lane.pending.push(n0[b]);
+        }
+        // The logits after the last accepted token — bitwise the row
+        // sequential target-only decode would carry forward.
+        *lane.logits = verify[b][a].clone();
+        stats.rounds += 1;
+        stats.tokens_drafted += k as u64;
+        stats.tokens_accepted += a as u64;
+        stats.tokens_emitted += em.len() as u64;
+        emitted.push(em);
+    }
+    emitted
+}
+
+/// Contiguous-KV lane state — the parity-baseline layout (see
+/// [`SpecLane`]).
+pub struct SpecLaneContig<'x> {
+    pub k: usize,
+    pub target_kv: &'x mut KvCache,
+    pub draft_kv: &'x mut KvCache,
+    pub pending: &'x mut Vec<u8>,
+    pub logits: &'x mut Vec<f32>,
+}
+
+/// [`spec_round_paged`] over per-sequence contiguous caches — identical
+/// draft/verify/rollback logic, bit-exact with the paged form (both
+/// layouts run the same chunked decode kernels over the same row
+/// ranges).
+pub fn spec_round(
+    target: &Generator,
+    draft: &Generator,
+    lanes: &mut [SpecLaneContig],
+    stats: &mut SpecStats,
+) -> Vec<Vec<u8>> {
+    let bsz = lanes.len();
+    assert!(bsz > 0, "empty speculative round");
+    let n0: Vec<u8> = lanes.iter().map(|l| argmax(l.logits) as u8).collect();
+    let target_base: Vec<usize> = lanes.iter().map(|l| l.target_kv.len).collect();
+    let draft_base: Vec<usize> = lanes.iter().map(|l| l.draft_kv.len).collect();
+    let pend_len: Vec<usize> = lanes.iter().map(|l| l.pending.len()).collect();
+    let max_k = lanes.iter().map(|l| l.k).max().unwrap_or(0);
+
+    let mut drafts: Vec<Vec<u8>> = vec![Vec::new(); bsz];
+    if max_k > 0 {
+        let sel: Vec<usize> = (0..bsz).filter(|&b| lanes[b].k > 0).collect();
+        let chunks: Vec<Vec<u8>> = sel
+            .iter()
+            .map(|&b| {
+                let mut c = lanes[b].pending.clone();
+                c.push(n0[b]);
+                c
+            })
+            .collect();
+        let chunk_refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let outs = {
+            let mut kv_refs: Vec<&mut KvCache> = lanes
+                .iter_mut()
+                .filter(|l| l.k > 0)
+                .map(|l| &mut *l.draft_kv)
+                .collect();
+            draft.decode_chunks(&chunk_refs, &mut kv_refs)
+        };
+        for (rows, &b) in outs.iter().zip(&sel) {
+            drafts[b].push(argmax(rows.last().unwrap()) as u8);
+            lanes[b].pending.clear();
+        }
+        for j in 1..max_k {
+            let sel: Vec<usize> = (0..bsz).filter(|&b| lanes[b].k > j).collect();
+            if sel.is_empty() {
+                break;
+            }
+            let toks: Vec<u8> = sel.iter().map(|&b| *drafts[b].last().unwrap()).collect();
+            let outs = {
+                let mut kv_refs: Vec<&mut KvCache> = lanes
+                    .iter_mut()
+                    .filter(|l| l.k > j)
+                    .map(|l| &mut *l.draft_kv)
+                    .collect();
+                draft.decode_batch(&toks, &mut kv_refs)
+            };
+            for (row, &b) in outs.iter().zip(&sel) {
+                drafts[b].push(argmax(row) as u8);
+            }
+        }
+    }
+
+    let chunks: Vec<Vec<u8>> = (0..bsz)
+        .map(|b| {
+            let mut c = vec![n0[b]];
+            c.extend_from_slice(&drafts[b]);
+            c
+        })
+        .collect();
+    let chunk_refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+    let verify = {
+        let mut kv_refs: Vec<&mut KvCache> =
+            lanes.iter_mut().map(|l| &mut *l.target_kv).collect();
+        target.decode_chunks(&chunk_refs, &mut kv_refs)
+    };
+
+    let mut emitted = Vec::with_capacity(bsz);
+    for (b, lane) in lanes.iter_mut().enumerate() {
+        let k = lane.k;
+        let a = accept_prefix(&drafts[b], &verify[b]);
+        let mut em = vec![n0[b]];
+        em.extend_from_slice(&drafts[b][..a]);
+        lane.target_kv.truncate(target_base[b] + 1 + a);
+        if k > 0 {
+            let fed_valid = 1 + a.min(k - 1);
+            lane.draft_kv
+                .truncate(draft_base[b] + pend_len[b] + fed_valid);
+            if a == k {
+                lane.pending.push(drafts[b][k - 1]);
+            }
+        } else {
+            lane.pending.push(n0[b]);
+        }
+        *lane.logits = verify[b][a].clone();
+        stats.rounds += 1;
+        stats.tokens_drafted += k as u64;
+        stats.tokens_accepted += a as u64;
+        stats.tokens_emitted += em.len() as u64;
+        emitted.push(em);
+    }
+    emitted
+}
+
+/// Offline speculative generation: a target/draft generator pair over
+/// contiguous KVs, mirroring [`Generator::generate`] — and emitting the
+/// bit-identical token stream (only faster when the draft is cheap and
+/// agreeable).
+pub struct Speculator<'m, 'g> {
+    pub target: &'g Generator<'m>,
+    pub draft: &'g Generator<'m>,
+    /// Draft tokens per round (0 degrades to plain greedy decode
+    /// through the verify path).
+    pub k: usize,
+}
+
+impl Speculator<'_, '_> {
+    /// Greedy speculative generation: prefill both models on the
+    /// prompt, then draft/verify rounds until `max_new` tokens or the
+    /// context fills. Returns the tokens plus the round statistics.
+    pub fn generate(&self, prompt: &[u8], max_new: usize) -> (Vec<u8>, SpecStats) {
+        let cfg = &self.target.model.cfg;
+        let mut target_kv = KvCache::new(self.target.model);
+        let mut draft_kv = KvCache::new(self.draft.model);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        if !prompt.is_empty() {
+            logits = self
+                .target
+                .decode_chunk(prompt, &mut target_kv)
+                .pop()
+                .unwrap();
+            self.draft.decode_chunk(prompt, &mut draft_kv);
+        }
+        let mut pending: Vec<u8> = Vec::new();
+        let mut stats = SpecStats::default();
+        let mut out = Vec::with_capacity(max_new);
+        while out.len() < max_new && target_kv.len < cfg.ctx {
+            let k = effective_k(
+                self.k,
+                max_new - out.len(),
+                cfg.ctx,
+                target_kv.len,
+                draft_kv.len,
+                pending.len(),
+            );
+            let em = spec_round(
+                self.target,
+                self.draft,
+                &mut [SpecLaneContig {
+                    k,
+                    target_kv: &mut target_kv,
+                    draft_kv: &mut draft_kv,
+                    pending: &mut pending,
+                    logits: &mut logits,
+                }],
+                &mut stats,
+            )
+            .pop()
+            .unwrap();
+            out.extend_from_slice(&em);
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generation::paged::{pages_per_seq, PAGE_ROWS};
+    use crate::model::tests_support::tiny_model;
+    use crate::model::{Arch, Model, ModelConfig};
+    use crate::qmodel::quantize_model;
+    use crate::quant::pipeline::Method;
+    use std::collections::BTreeMap;
+
+    /// Power-of-two shapes (fused E8P applies) with a multi-page ctx.
+    fn spec_model(seed: u64) -> Model {
+        let cfg = ModelConfig {
+            name: "tinyspec".into(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            vocab: 64,
+            ctx: 4 * PAGE_ROWS,
+            arch: Arch::Llama,
+            n_experts: 2,
+        };
+        Model::random(cfg, seed)
+    }
+
+    #[test]
+    fn chunk_decode_matches_sequential_bitwise() {
+        // The verify primitive: feeding a chunk of tokens in one call
+        // must reproduce one-at-a-time decode bit-for-bit, dense and
+        // quantized, contiguous and paged.
+        let m = spec_model(21);
+        let hs = BTreeMap::new();
+        let qm = quantize_model(&m, &hs, &Method::QuipSharp { bits: 4, ft: false }, 1).unwrap();
+        for gen in [Generator::dense(&m), Generator::quantized(&qm.model, &qm)] {
+            let tokens: Vec<u8> = (0..PAGE_ROWS + 5).map(|i| ((i * 7 + 3) % 60) as u8).collect();
+            // Sequential reference.
+            let mut c_ref = KvCache::new(gen.model);
+            let mut seq_logits = Vec::new();
+            for &t in &tokens {
+                seq_logits.push(gen.decode_one(t, &mut c_ref));
+            }
+            // One contiguous chunk.
+            let mut c_chunk = KvCache::new(gen.model);
+            let chunk_logits = gen.decode_chunk(&tokens, &mut c_chunk);
+            assert_eq!(c_chunk.len, tokens.len());
+            // One paged chunk.
+            let mut pool = crate::generation::paged::KvPagePool::for_model(
+                gen.model,
+                pages_per_seq(&gen.model.cfg),
+            );
+            let mut pkv = PagedKv::new();
+            let paged_logits = gen.decode_chunk_paged(&tokens, &mut pool, &mut pkv);
+            for (step, want) in seq_logits.iter().enumerate() {
+                for (i, (x, y)) in chunk_logits[step].iter().zip(want).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "contig chunk step {step} logit {i}: {x} vs {y}"
+                    );
+                }
+                for (i, (x, y)) in paged_logits[step].iter().zip(want).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "paged chunk step {step} logit {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn base_stage_is_coarser_but_valid() {
+        let m = spec_model(22);
+        let hs = BTreeMap::new();
+        let qm = quantize_model(&m, &hs, &Method::QuipSharp { bits: 4, ft: false }, 1).unwrap();
+        assert!(qm.has_multi_stage());
+        let target = qm.generator();
+        let draft = qm.draft_generator();
+        // Same layers packed, fewer active stages, code payload shared.
+        assert_eq!(target.qlayers.len(), draft.qlayers.len());
+        for (name, tq) in &target.qlayers {
+            let dq = &draft.qlayers[name];
+            assert_eq!(tq.active_stages, 2);
+            assert_eq!(dq.active_stages, 1);
+            assert!(std::sync::Arc::ptr_eq(&tq.stage_codes, &dq.stage_codes));
+            assert_eq!(dq.bytes_per_matvec() * 2, tq.bytes_per_matvec());
+        }
+        // The draft decodes *something* (a valid coarse model): tokens
+        // stay in-vocab and generation is deterministic.
+        let out = draft.generate(&[1, 2, 3], 8);
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|&t| (t as usize) < m.cfg.vocab));
+        assert_eq!(out, draft.generate(&[1, 2, 3], 8));
+    }
+
+    /// Speculative generation must emit exactly the target-only greedy
+    /// stream for every k, including k beyond the acceptance horizon.
+    fn spec_parity(target: &Generator, draft: &Generator, prompt: &[u8], max_new: usize) {
+        let want = target.generate(prompt, max_new);
+        for k in [0usize, 1, 2, 4, 8] {
+            let spec = Speculator { target, draft, k };
+            let (got, stats) = spec.generate(prompt, max_new);
+            assert_eq!(got, want, "k={k} diverged from greedy decode");
+            assert_eq!(stats.tokens_emitted as usize, want.len());
+            if k == 0 {
+                assert_eq!(stats.tokens_drafted, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn speculative_matches_greedy_dense() {
+        let m = spec_model(23);
+        let gen = Generator::dense(&m);
+        // Dense self-draft: acceptance is total, output identical.
+        spec_parity(&gen, &gen, &[5, 9, 1, 33], 12);
+        let spec = Speculator { target: &gen, draft: &gen, k: 4 };
+        let (_, stats) = spec.generate(&[5, 9, 1, 33], 12);
+        assert_eq!(
+            stats.tokens_accepted, stats.tokens_drafted,
+            "self-draft must accept everything"
+        );
+    }
+
+    #[test]
+    fn speculative_matches_greedy_quantized_base_stage() {
+        let m = spec_model(24);
+        let hs = BTreeMap::new();
+        let qm = quantize_model(&m, &hs, &Method::QuipSharp { bits: 4, ft: false }, 1).unwrap();
+        let target = qm.generator();
+        let draft = qm.draft_generator();
+        assert!(!target.qlayers.is_empty());
+        spec_parity(&target, &draft, &[1, 2, 3, 4], 12);
+        // A deliberately *bad* draft (dense weights of a different
+        // random model) still yields the exact greedy stream — only
+        // acceptance suffers.
+        let other = spec_model(99);
+        let bad_draft = Generator::dense(&other);
+        spec_parity(&target, &bad_draft, &[1, 2, 3, 4], 10);
+    }
+
+    /// Batched paged speculative decode vs offline greedy decode, with
+    /// unequal prompt lengths and per-lane k caps, over a shared pool.
+    fn paged_spec_parity(target: &Generator, draft: &Generator, bsz: usize, k: usize) {
+        let m = target.model;
+        let max_new = 10usize;
+        let mut pool = crate::generation::paged::KvPagePool::for_model(
+            m,
+            2 * bsz * pages_per_seq(&m.cfg),
+        );
+        let prompts: Vec<Vec<u8>> = (0..bsz)
+            .map(|b| {
+                let plen = 2 + (b % 3);
+                (0..plen).map(|i| ((i * 11 + b * 17 + 3) % 60) as u8).collect()
+            })
+            .collect();
+        let want: Vec<Vec<u8>> = prompts.iter().map(|p| target.generate(p, max_new)).collect();
+        // Prefill both models per lane (chunked, positions diverge).
+        let mut t_kvs: Vec<PagedKv> = (0..bsz).map(|_| PagedKv::new()).collect();
+        let mut d_kvs: Vec<PagedKv> = (0..bsz).map(|_| PagedKv::new()).collect();
+        let mut logits: Vec<Vec<f32>> = Vec::new();
+        for b in 0..bsz {
+            logits.push(
+                target
+                    .decode_chunk_paged(&prompts[b], &mut pool, &mut t_kvs[b])
+                    .pop()
+                    .unwrap(),
+            );
+            draft.decode_chunk_paged(&prompts[b], &mut pool, &mut d_kvs[b]);
+        }
+        let mut pendings: Vec<Vec<u8>> = vec![Vec::new(); bsz];
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); bsz];
+        let mut stats = SpecStats::default();
+        // Advance every lane in joint rounds until all are done.
+        while out.iter().any(|o| o.len() < max_new) {
+            let sel: Vec<usize> = (0..bsz).filter(|&b| out[b].len() < max_new).collect();
+            let ks: Vec<usize> = sel
+                .iter()
+                .map(|&b| {
+                    effective_k(
+                        k,
+                        max_new - out[b].len(),
+                        m.cfg.ctx,
+                        t_kvs[b].len,
+                        d_kvs[b].len,
+                        pendings[b].len(),
+                    )
+                })
+                .collect();
+            let emitted = {
+                let mut lanes: Vec<SpecLane> = Vec::with_capacity(sel.len());
+                let mut t_it = t_kvs.iter_mut();
+                let mut d_it = d_kvs.iter_mut();
+                let mut p_it = pendings.iter_mut();
+                let mut l_it = logits.iter_mut();
+                let mut si = 0usize;
+                let mut idx = 0usize;
+                loop {
+                    let (Some(t), Some(d), Some(p), Some(l)) =
+                        (t_it.next(), d_it.next(), p_it.next(), l_it.next())
+                    else {
+                        break;
+                    };
+                    if si < sel.len() && sel[si] == idx {
+                        lanes.push(SpecLane {
+                            k: ks[si],
+                            target_kv: t,
+                            draft_kv: d,
+                            pending: p,
+                            logits: l,
+                        });
+                        si += 1;
+                    }
+                    idx += 1;
+                }
+                spec_round_paged(target, draft, &mut pool, &mut lanes, &mut stats)
+            };
+            for (em, &b) in emitted.iter().zip(&sel) {
+                out[b].extend_from_slice(em);
+            }
+        }
+        for b in 0..bsz {
+            assert_eq!(out[b], want[b], "lane {b} diverged (B={bsz}, k={k})");
+        }
+        // Rollbacks leaked nothing: releasing everything empties the pool.
+        for kv in t_kvs.iter_mut().chain(d_kvs.iter_mut()) {
+            kv.release(&mut pool);
+        }
+        assert_eq!(pool.pages_free(), pool.pages_total());
+    }
+
+    #[test]
+    fn paged_speculative_matches_greedy_dense() {
+        let m = spec_model(25);
+        let gen = Generator::dense(&m);
+        for &bsz in &[1usize, 4, 8] {
+            paged_spec_parity(&gen, &gen, bsz, 4);
+        }
+    }
+
+    #[test]
+    fn paged_speculative_matches_greedy_quantized() {
+        let m = spec_model(26);
+        let hs = BTreeMap::new();
+        let qm = quantize_model(&m, &hs, &Method::QuipSharp { bits: 4, ft: false }, 1).unwrap();
+        let target = qm.generator();
+        let draft = qm.draft_generator();
+        for &bsz in &[1usize, 4, 8] {
+            for &k in &[2usize, 4] {
+                paged_spec_parity(&target, &draft, bsz, k);
+            }
+        }
+    }
+
+    #[test]
+    fn speculative_respects_max_new_and_stats() {
+        let m = tiny_model(27);
+        let gen = Generator::dense(&m);
+        let spec = Speculator { target: &gen, draft: &gen, k: 8 };
+        for max_new in [0usize, 1, 2, 5] {
+            let (out, stats) = spec.generate(&[3, 1, 4], max_new);
+            assert_eq!(out.len(), max_new);
+            assert_eq!(stats.tokens_emitted as usize, max_new);
+            assert_eq!(out, gen.generate(&[3, 1, 4], max_new));
+        }
+    }
+}

@@ -29,13 +29,23 @@
 //!   baseline and chunked SIMD score/rescale/AV inner loops shared by
 //!   both and by the paged and contiguous (`KvCache`) layouts alike,
 //!   which keeps every decode path bit-exact.
+//!   `generation::speculative` layers self-speculative decoding on top:
+//!   the RVQ base stage embedded in every multi-stage quantization
+//!   drafts k tokens against its own KV, the full model verifies all
+//!   k + 1 positions in one chunked batched step
+//!   (`decode_chunks_paged` — lanes decoupled from sequences), and
+//!   greedy accept/reject truncates both KVs back to the last accepted
+//!   row (`PagedKv::truncate` / `KvCache::truncate`) — bit-identical
+//!   output at every draft length.
 //! * `runtime`, `serve` — the L3 coordinator: PJRT execution of the
 //!   AOT-lowered JAX/Pallas artifacts (behind the `pjrt` feature) and the
 //!   continuous-batching inference server: VecDeque admission queue,
 //!   pool-aware admission with preemption/requeue under KV pressure,
 //!   registered-prefix forking (share a system prompt's KV across
-//!   requests instead of re-prefilling it), chunked prefill, batched
-//!   paged decode steps, amortization + pool + sharing metrics.
+//!   requests instead of re-prefilling it) with LRU eviction of cold
+//!   cached prefixes under pressure, chunked prefill, batched paged
+//!   decode steps, per-request self-speculative rounds (`speculate_k`),
+//!   amortization + pool + sharing + speculation metrics.
 //!
 //! `ARCHITECTURE.md` at the repo root walks this stack top-down with a
 //! diagram; `BENCHMARKS.md` documents the benchmark outputs.

@@ -5,12 +5,18 @@
 //!   eval      --size m --method quip#-2bit [--corpus w2] [--window 256]
 //!   zeroshot  --size m --method quip#-2bit
 //!   serve     --size m [--bits 2 [--ft]] [--addr 127.0.0.1:7140]
-//!             [--max-batch 8] [--pool-pages N]
+//!             [--max-batch 8] [--pool-pages N] [--attn-mode fused|perseq]
+//!             [--speculate K]
 //!     --bits quantizes the served model (omit for fp32); --max-batch
 //!     caps concurrent sequences (default 8); --pool-pages sets the KV
 //!     pool size in 32-token-row pages — omitted, the pool is sized for
 //!     the worst case (max-batch × ctx/32 pages, never preempts), while
 //!     smaller values oversubscribe KV and preempt under pressure.
+//!     --attn-mode A/Bs the fused cross-sequence attention walk against
+//!     the per-sequence baseline (bit-exact logits either way);
+//!     --speculate sets the default self-speculative draft length (the
+//!     RVQ base stage drafts K tokens, the full model verifies — output
+//!     unchanged, per-request override via the "speculate" field).
 //!     Prompt-prefix sharing is driven by the wire protocol
 //!     (register_prefix / prefix_id), not by flags.
 //!   export-codebook --out path.qtz      (E8P tables for cross-lang tests)
@@ -21,8 +27,9 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use quipsharp::experiments::{Runner, WINDOW_NATIVE};
+use quipsharp::generation::AttnMode;
 use quipsharp::quant::pipeline::{Method, SwapCodebook};
-use quipsharp::serve::{serve_blocking, NativeEngine, ServerConfig};
+use quipsharp::serve::{serve_blocking, EngineOptions, NativeEngine, ServerConfig};
 use quipsharp::util::cli::Args;
 use quipsharp::util::tensorio::{TensorData, TensorFile};
 
@@ -69,7 +76,8 @@ fn main() -> Result<()> {
                 "usage: quipsharp <quantize|eval|zeroshot|serve|export-codebook|runtime-info> \
                  [--size s|m|l|moe|nonllama] [--method quip#-2bit|…] [--art artifacts]\n\
                  serve also takes: [--bits 2 [--ft]] [--addr 127.0.0.1:7140] [--max-batch 8] \
-                 [--pool-pages N] (KV pool pages; default = worst case, smaller oversubscribes)"
+                 [--pool-pages N] (KV pool pages; default = worst case, smaller oversubscribes) \
+                 [--attn-mode fused|perseq] [--speculate K] (self-speculative draft length)"
             );
             Ok(())
         }
@@ -154,29 +162,51 @@ fn cmd_serve(args: &Args, art: &str) -> Result<()> {
         .get("pool-pages")
         .map(|s| s.parse().context("--pool-pages"))
         .transpose()?;
-    let start = |m: Arc<quipsharp::model::Model>, q| match pool_pages {
-        Some(pages) => NativeEngine::start_with_pool(m, q, max_batch, pages),
-        None => NativeEngine::start(m, q, max_batch),
+    // --attn-mode: fused cross-sequence block walk (default) or the
+    // per-sequence baseline walk, for A/B debugging — bit-exact logits
+    // either way.
+    let attn_mode = match args.get_or("attn-mode", "fused") {
+        "fused" => AttnMode::Fused,
+        "perseq" => AttnMode::PerSeq,
+        other => bail!("unknown --attn-mode '{other}' (expected fused|perseq)"),
+    };
+    // --speculate: default self-speculative draft length for requests
+    // that don't carry their own "speculate" field (0 = off).
+    let speculate_k = args.get_usize("speculate", 0);
+    let opts = EngineOptions {
+        max_batch,
+        pool_pages,
+        attn_mode,
+        speculate_k,
     };
     let pool_desc = pool_pages
         .map(|p| format!("KV pool {p} pages"))
         .unwrap_or_else(|| "worst-case KV pool".to_string());
+    let mode_desc = format!(
+        "attn {}{}",
+        if attn_mode == AttnMode::Fused { "fused" } else { "perseq" },
+        if speculate_k > 0 {
+            format!(", speculate k={speculate_k}")
+        } else {
+            String::new()
+        }
+    );
     let engine = if let Some(bits) = args.get("bits") {
         let bits: u8 = bits.parse().context("--bits")?;
         let ft = args.has_flag("ft");
         let qm = runner.qmodel(&size, &Method::QuipSharp { bits, ft })?;
         println!(
-            "serving '{size}' quantized to {bits} bits (avg {:.2} b/w, {pool_desc})",
+            "serving '{size}' quantized to {bits} bits (avg {:.2} b/w, {pool_desc}, {mode_desc})",
             qm.avg_bits()
         );
         let model_arc = Arc::new(quipsharp::model::Model::new(
             qm.model.cfg.clone(),
             qm.model.params.clone(),
         ));
-        start(model_arc, Some(qm))
+        NativeEngine::start_with_opts(model_arc, Some(qm), opts)
     } else {
-        println!("serving '{size}' fp32 ({pool_desc})");
-        start(model.clone(), None)
+        println!("serving '{size}' fp32 ({pool_desc}, {mode_desc})");
+        NativeEngine::start_with_opts(model.clone(), None, opts)
     };
     let engine: Arc<dyn quipsharp::serve::Engine> = Arc::new(engine);
     let handle = serve_blocking(engine, ServerConfig { addr })?;

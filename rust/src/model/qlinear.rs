@@ -134,6 +134,12 @@ pub struct QuantMatvec {
     /// layer, not copied.
     pub stage_codes: Arc<Vec<Vec<u16>>>,
     pub stage_scales: Vec<f32>,
+    /// RVQ stages the kernel actually decodes (≤ `stage_codes.len()`).
+    /// The full count by default; a base-stage *draft* view
+    /// ([`QuantMatvec::base_stage`]) truncates to 1, halving the code
+    /// stream of a 4-bit (E8P ∘ E8P) layer while sharing the same
+    /// payload `Arc`.
+    pub active_stages: usize,
     pub su: Vec<f32>,
     pub sv: Vec<f32>,
     pub tables: &'static E8PTables,
@@ -146,17 +152,39 @@ impl QuantMatvec {
             n,
             stage_codes: p.stage_codes.clone(),
             stage_scales: p.stage_scales.clone(),
+            active_stages: p.stage_codes.len(),
             su: p.su.clone(),
             sv: p.sv.clone(),
             tables: E8PTables::shared(),
         }
     }
 
+    /// The RVQ base-stage view of this matrix: decode only stage 0 —
+    /// the coarse model every multi-stage RVQ quantization contains for
+    /// free (paper §4.3: 4-bit = E8P ∘ E8P, so the base stage *is* the
+    /// 2-bit model). Codes stay `Arc`-shared with the full-precision
+    /// view; only the stage count (and therefore the streamed bytes and
+    /// decode work) changes. This is the self-speculative draft model
+    /// ([`crate::generation::speculative`]).
+    pub fn base_stage(&self) -> QuantMatvec {
+        QuantMatvec {
+            m: self.m,
+            n: self.n,
+            stage_codes: self.stage_codes.clone(),
+            stage_scales: self.stage_scales[..1].to_vec(),
+            active_stages: 1,
+            su: self.su.clone(),
+            sv: self.sv.clone(),
+            tables: self.tables,
+        }
+    }
+
     /// Bytes of quantized weights streamed per matvec (the memory-bound
     /// cost Table 5 normalizes against). A batched step streams the same
-    /// bytes once for the whole batch.
+    /// bytes once for the whole batch; a base-stage draft view streams
+    /// only its active stages.
     pub fn bytes_per_matvec(&self) -> u64 {
-        (self.stage_codes.len() * self.m * (self.n / 8) * 2) as u64
+        (self.active_stages * self.m * (self.n / 8) * 2) as u64
     }
 
     /// y = Ŵ_eff · x, with the RHT applied on both sides — the B = 1
@@ -248,6 +276,7 @@ impl QuantMatvec {
         let stages: Vec<(&[u16], f32)> = self
             .stage_codes
             .iter()
+            .take(self.active_stages)
             .map(|c| c.as_slice())
             .zip(self.stage_scales.iter().copied())
             .collect();

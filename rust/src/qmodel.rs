@@ -46,6 +46,26 @@ impl QuantizedModel {
         crate::generation::Generator::quantized(&self.model, self)
     }
 
+    /// The RVQ base-stage draft generator embedded in this model: packed
+    /// layers decode stage 0 only (a 4-bit E8P ∘ E8P model's free 2-bit
+    /// model), sharing code payloads with [`QuantizedModel::generator`].
+    /// The draft side of self-speculative decoding
+    /// ([`crate::generation::speculative`]); for a single-stage (2-bit)
+    /// model it coincides with the full generator.
+    pub fn draft_generator(&self) -> crate::generation::Generator<'_> {
+        crate::generation::Generator::base_stage(&self.model, self)
+    }
+
+    /// Whether any packed layer carries more than one RVQ stage, i.e.
+    /// whether [`QuantizedModel::draft_generator`] is actually cheaper
+    /// than the full model.
+    pub fn has_multi_stage(&self) -> bool {
+        self.layers
+            .values()
+            .filter_map(|ql| ql.packed.as_ref())
+            .any(|p| p.stage_codes.len() > 1)
+    }
+
     /// Shared KV page pool sized at `pages` pages over this model's
     /// geometry — the serving engine's KV subsystem
     /// ([`crate::generation::paged`]). Pass

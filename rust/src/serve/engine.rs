@@ -25,7 +25,15 @@
 //!   4. extra prefill rounds: sequences still consuming their prompt take
 //!      up to [`PREFILL_CHUNK`] tokens per step in batched slices instead
 //!      of one token per step,
-//!   5. retire finished sequences (pages back to the pool) and answer
+//!   5. a speculative phase: sequences with `speculate_k > 0` advance
+//!      through one draft/verify round per step instead of the plain
+//!      round-0 continuation — the RVQ base-stage draft proposes up to k
+//!      tokens against its own KV (pages from the same pool), the target
+//!      verifies all k + 1 positions in one chunked batched step
+//!      ([`crate::generation::speculative::spec_round_paged`]), and both
+//!      KVs truncate back to the last accepted token. Greedy accept
+//!      keeps responses bit-identical to plain decode,
+//!   6. retire finished sequences (pages back to the pool) and answer
 //!      their requests.
 //! Requests join/leave at step boundaries — continuous batching.
 //!
@@ -42,13 +50,17 @@
 //! The prefix cache itself is built lazily by the scheduler (one
 //! sequential prefill, the first time a registered prefix meaningfully
 //! matches) and its pages stay pinned — refcounted like any other
-//! holder — for the engine's lifetime, so a hot system prompt is paid
-//! for once. Two deliberate trade-offs: the build runs inside the
-//! admission step, so in-flight sequences pause for one prefix prefill
-//! (once per registered prefix — amortized across every later hit), and
-//! a build is refused unless the pool keeps at least one free page of
-//! headroom beyond the cache, so pinning can never consume the last
-//! pages the forked sequences themselves need.
+//! holder — while the cache is warm, so a hot system prompt is paid for
+//! once. Under pool pressure the pin is not forever: *cold* caches
+//! (every page at refcount 1, i.e. no live fork reads them) are
+//! unpinned in LRU order — before any cache build that lacks headroom,
+//! and before any live sequence is preempted (`prefix_evictions`
+//! metric); a later hit simply rebuilds. Two deliberate trade-offs: the
+//! build runs inside the admission step, so in-flight sequences pause
+//! for one prefix prefill (once per build — amortized across every
+//! later hit), and a build is refused unless the pool keeps at least
+//! one free page of headroom beyond the cache, so pinning can never
+//! consume the last pages the forked sequences themselves need.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -57,7 +69,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::generation::paged::{pages_per_seq, KvPagePool, PagedKv, PAGE_ROWS};
-use crate::generation::{argmax, streamed_bytes_for_batch, Generator};
+use crate::generation::speculative::{effective_k, spec_round_paged, SpecLane, SpecStats};
+use crate::generation::{argmax, streamed_bytes_for_batch, AttnMode, Generator};
 use crate::model::Model;
 use crate::qmodel::QuantizedModel;
 
@@ -78,6 +91,12 @@ pub struct EngineRequest {
     /// longest matching registered prefix. `None` = auto-detect; an
     /// unknown id is simply a miss, never an error.
     pub prefix_id: Option<u64>,
+    /// Draft tokens per self-speculative round for this request
+    /// (`Some(0)` forces plain decode; `None` uses the engine's default,
+    /// [`EngineOptions::speculate_k`]). Speculation never changes the
+    /// response — greedy accept/reject keeps it bit-identical to plain
+    /// decode — only its latency/throughput (TCP field: `speculate`).
+    pub speculate_k: Option<usize>,
 }
 
 #[derive(Clone, Debug)]
@@ -124,6 +143,39 @@ struct PrefixCache {
     tokens: Arc<Vec<u8>>,
     kv: PagedKv,
     last_logits: Vec<f32>,
+    /// Scheduler clock value of the last fork off this cache (or its
+    /// build) — the LRU key for cold-prefix eviction.
+    last_used: u64,
+}
+
+/// Evict the least-recently-used *cold* prefix cache — one whose pages
+/// no live sequence references any more (every page at refcount 1, so
+/// releasing frees them all) — returning whether anything was evicted.
+/// `exclude` protects a cache mid-(re)build. Hot caches (any page still
+/// shared with an active fork) are never touched: releasing them would
+/// free nothing now and forfeit pages live sequences still read.
+fn evict_cold_prefix(
+    cache: &mut HashMap<u64, PrefixCache>,
+    pool: &mut KvPagePool,
+    metrics: &Metrics,
+    exclude: Option<u64>,
+) -> bool {
+    let victim = cache
+        .iter()
+        .filter(|(pid, c)| {
+            Some(**pid) != exclude && c.kv.pages.iter().all(|&p| pool.refcount(p) == 1)
+        })
+        .min_by_key(|(_, c)| c.last_used)
+        .map(|(pid, _)| *pid);
+    match victim {
+        Some(pid) => {
+            let mut old = cache.remove(&pid).unwrap();
+            old.kv.release(pool);
+            metrics.record_prefix_eviction();
+            true
+        }
+        None => false,
+    }
 }
 
 /// Longest common prefix of two token streams.
@@ -148,6 +200,7 @@ fn try_fork_prefix(
     pool: &mut KvPagePool,
     cache: &mut HashMap<u64, PrefixCache>,
     kv: &mut PagedKv,
+    clock: u64,
 ) -> Option<(usize, Option<Vec<f32>>)> {
     let (pid, common, tokens) = {
         let defs = sh.prefixes.lock().unwrap();
@@ -178,12 +231,31 @@ fn try_fork_prefix(
         // Check capacity before spending any prefill compute: the
         // scheduler is single-threaded, so free pages now means the
         // whole build succeeds. Demand a page of headroom beyond the
-        // cache — its pages stay pinned for the engine's lifetime, so
-        // building into the last free pages would leave nothing for the
-        // sequences the cache exists to serve. Too tight → fall back to
-        // a normal prefill; a later admission retries once pages free.
-        if PagedKv::pages_needed(tokens.len()) + 1 > pool.pages_free() {
-            return None;
+        // cache — its pages stay pinned while warm, so building into
+        // the last free pages would leave nothing for the sequences the
+        // cache exists to serve. Under pressure, unpin cold cached
+        // prefixes (LRU order) — but only after confirming free +
+        // evictable pages actually cover the build, so an infeasible
+        // build never destroys caches for nothing. Too tight → fall
+        // back to a normal prefill; a later admission retries once
+        // pages free.
+        let build_need = PagedKv::pages_needed(tokens.len()) + 1;
+        if build_need > pool.pages_free() {
+            let evictable: usize = cache
+                .iter()
+                .filter(|(other, c)| {
+                    **other != pid && c.kv.pages.iter().all(|&p| pool.refcount(p) == 1)
+                })
+                .map(|(_, c)| c.kv.pages.len())
+                .sum();
+            if build_need > pool.pages_free() + evictable {
+                return None;
+            }
+            while build_need > pool.pages_free() {
+                if !evict_cold_prefix(cache, pool, &sh.metrics, Some(pid)) {
+                    return None;
+                }
+            }
         }
         let mut pkv = PagedKv::new();
         let mut logits = Vec::new();
@@ -202,10 +274,13 @@ fn try_fork_prefix(
             tokens: tokens.clone(),
             kv: pkv,
             last_logits: logits,
+            last_used: clock,
         };
         cache.insert(pid, entry);
     }
-    let entry = cache.get(&pid)?;
+    let entry = cache.get_mut(&pid)?;
+    entry.last_used = clock;
+    let entry = &*entry;
     // The fork must leave at least one prompt token to decode — unless
     // the prompt *is* the whole prefix, whose final logits are cached.
     let whole = common == req.prompt.len() && common == entry.tokens.len();
@@ -222,6 +297,117 @@ fn try_fork_prefix(
     Some((fork_rows, logits))
 }
 
+/// What [`free_pages`] did to relieve pool pressure.
+enum Freed {
+    /// `active[i]` was removed — retired (finished work answered),
+    /// preempted (requeued), or failed (answered with an error). The
+    /// caller must drop the index from any selection and shift larger
+    /// indices down.
+    Removed(usize),
+    /// A cold prefix cache was unpinned; `active` is untouched.
+    PrefixEvicted,
+}
+
+/// Relieve KV pool pressure, preferring the cheapest remedy first:
+/// retire an already-finished sequence (frees its pages *and* answers
+/// its request), unpin the LRU cold prefix cache (frees pages at the
+/// cost of a future rebuild), preempt the youngest admission (release
+/// pages — target and draft alike — and requeue at the queue front), or
+/// — when only one sequence remains and nothing else can free — fail
+/// that request descriptively instead of spinning.
+fn free_pages(
+    active: &mut Vec<Active>,
+    pool: &mut KvPagePool,
+    sh: &Shared,
+    prefix_cache: &mut HashMap<u64, PrefixCache>,
+    ctx: usize,
+) -> Freed {
+    // An already-finished sequence (one that crossed max_new in round 0
+    // and is waiting for the post-rounds retire sweep): retiring it is
+    // strictly better than evicting live work.
+    let finished = active.iter().position(|a| {
+        a.pending_prompt == 0 && (a.generated.len() >= a.req.max_new || a.kv.len >= ctx)
+    });
+    if let Some(fin) = finished {
+        let mut a = active.remove(fin);
+        a.kv.release(pool);
+        a.draft_kv.release(pool);
+        let resp = EngineResponse {
+            id: a.req.id,
+            tokens: std::mem::take(&mut a.generated),
+            latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+            prompt_len: a.req.prompt.len(),
+            error: None,
+        };
+        sh.metrics.record_request(resp.tokens.len(), resp.latency_ms);
+        let _ = a.tx.send(resp);
+        return Freed::Removed(fin);
+    }
+    // Cold prefix caches are passive pinned pages: unpin before
+    // touching live sequences.
+    if evict_cold_prefix(prefix_cache, pool, &sh.metrics, None) {
+        return Freed::PrefixEvicted;
+    }
+    if active.len() == 1 {
+        // Nothing left to evict: the pool itself is smaller than this
+        // one sequence. Fail the request descriptively instead of
+        // spinning.
+        let mut a = active.pop().unwrap();
+        let need = PagedKv::pages_needed(a.kv.len + 1);
+        // A speculating sequence also pins a draft KV; name that demand
+        // so the failure isn't misread as the target alone overflowing
+        // an apparently ample pool.
+        let draft_need = if a.spec_k > 0 {
+            PagedKv::pages_needed(a.draft_kv.len + a.draft_pending.len() + 1)
+        } else {
+            0
+        };
+        a.kv.release(pool);
+        a.draft_kv.release(pool);
+        sh.metrics.record_failed();
+        // Pages pinned by resident prefix caches shrink the effective
+        // pool; say so instead of misdiagnosing the pool as undersized.
+        let pinned: usize = prefix_cache.values().map(|c| c.kv.pages.len()).sum();
+        let mut msg = format!(
+            "KV pool too small: sequence needs {need} pages{} but the pool holds {}",
+            if draft_need > 0 {
+                format!(" (+{draft_need} for its speculative draft KV)")
+            } else {
+                String::new()
+            },
+            pool.pages_total()
+        );
+        if pinned > 0 {
+            msg.push_str(&format!(" ({pinned} pinned by prefix caches)"));
+        }
+        let resp = EngineResponse {
+            id: a.req.id,
+            tokens: Vec::new(),
+            latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+            prompt_len: a.req.prompt.len(),
+            error: Some(msg),
+        };
+        let _ = a.tx.send(resp);
+        return Freed::Removed(0);
+    }
+    // Evict the youngest admission: release its pages (draft included),
+    // requeue its request at the queue front. The oldest sequence is
+    // never evicted on behalf of a younger one, so the batch always
+    // makes progress.
+    let young = active
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, a)| a.admit_seq)
+        .map(|(i, _)| i)
+        .unwrap();
+    let mut a = active.remove(young);
+    a.kv.release(pool);
+    a.draft_kv.release(pool);
+    sh.metrics.record_preemption();
+    sh.queue.lock().unwrap().push_front((a.req, a.tx, a.t0));
+    Freed::Removed(young)
+}
+
 struct Active {
     req: EngineRequest,
     tx: Sender<EngineResponse>,
@@ -230,6 +416,18 @@ struct Active {
     /// Pending prompt tokens not yet prefilled.
     pending_prompt: usize,
     last_logits: Vec<f32>,
+    /// Resolved draft length for this request (request override or the
+    /// engine default; 0 = plain decode).
+    spec_k: usize,
+    /// Draft-model KV, pages drawn from the same pool (empty until the
+    /// first speculative round; only populated when `spec_k > 0`).
+    draft_kv: PagedKv,
+    /// True-stream tokens the draft model has not consumed yet. Seeded
+    /// with the whole prompt at admission (the draft prefills itself in
+    /// one chunk at the first speculative round — so prefix-forked
+    /// prompts need no special casing) and thereafter holds at most the
+    /// final accepted draft of an all-accept round.
+    draft_pending: Vec<u8>,
     /// Submission time — carried through preemption/requeue so reported
     /// latency covers the request's whole life, queue wait included.
     t0: Instant,
@@ -257,14 +455,52 @@ pub struct NativeEngine {
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
+/// Tunables for [`NativeEngine::start_with_opts`]. `Default` matches
+/// [`NativeEngine::start`]'s behavior: worst-case pool, fused
+/// attention, speculation off unless a request asks for it.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// Maximum concurrently active sequences.
+    pub max_batch: usize,
+    /// KV pool size in pages; `None` = worst case
+    /// (`max_batch × pages_per_seq`, never preempts).
+    pub pool_pages: Option<usize>,
+    /// Attention kernel for the scheduler's generators (fused
+    /// cross-sequence walk by default; [`AttnMode::PerSeq`] keeps the
+    /// per-sequence baseline for A/B debugging — logits are bit-exact
+    /// either way).
+    pub attn_mode: AttnMode,
+    /// Default draft length for requests that leave
+    /// [`EngineRequest::speculate_k`] unset (0 = off).
+    pub speculate_k: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            max_batch: 8,
+            pool_pages: None,
+            attn_mode: AttnMode::Fused,
+            speculate_k: 0,
+        }
+    }
+}
+
 impl NativeEngine {
     /// `qm` enables the fused E8P decode path per layer. The KV pool is
     /// sized for the worst case (`max_batch` full-context sequences), so
     /// this constructor never preempts; see
-    /// [`NativeEngine::start_with_pool`] to oversubscribe.
+    /// [`NativeEngine::start_with_pool`] to oversubscribe and
+    /// [`NativeEngine::start_with_opts`] for the full knob set.
     pub fn start(model: Arc<Model>, qm: Option<Arc<QuantizedModel>>, max_batch: usize) -> Self {
-        let pages = max_batch.max(1) * pages_per_seq(&model.cfg);
-        Self::start_with_pool(model, qm, max_batch, pages)
+        Self::start_with_opts(
+            model,
+            qm,
+            EngineOptions {
+                max_batch,
+                ..EngineOptions::default()
+            },
+        )
     }
 
     /// Start with an explicit KV pool size (in pages of
@@ -281,6 +517,33 @@ impl NativeEngine {
         max_batch: usize,
         pool_pages: usize,
     ) -> Self {
+        Self::start_with_opts(
+            model,
+            qm,
+            EngineOptions {
+                max_batch,
+                pool_pages: Some(pool_pages),
+                ..EngineOptions::default()
+            },
+        )
+    }
+
+    /// Start with the full option set ([`EngineOptions`]): pool sizing,
+    /// attention-kernel selection, and the default self-speculative
+    /// draft length. When `qm` is present the scheduler also builds the
+    /// RVQ base-stage draft generator
+    /// ([`crate::qmodel::QuantizedModel::draft_generator`]), whose KV
+    /// pages come from the same pool as the targets'; a dense engine
+    /// self-drafts (useful for exercising the path, not for speed).
+    pub fn start_with_opts(
+        model: Arc<Model>,
+        qm: Option<Arc<QuantizedModel>>,
+        opts: EngineOptions,
+    ) -> Self {
+        let max_batch = opts.max_batch;
+        let pool_pages = opts
+            .pool_pages
+            .unwrap_or_else(|| max_batch.max(1) * pages_per_seq(&model.cfg));
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             stop: AtomicBool::new(false),
@@ -291,11 +554,22 @@ impl NativeEngine {
         });
         let sh = shared.clone();
         let handle = std::thread::spawn(move || {
-            let generator = match &qm {
+            let mut generator = match &qm {
                 Some(q) => Generator::quantized(&model, q),
                 None => Generator::dense(&model),
             };
+            generator.attn_mode = opts.attn_mode;
+            // Draft model for self-speculative rounds: the RVQ base
+            // stage when quantized (codes Arc-shared with the target; a
+            // single-stage model degenerates to self-drafting), the
+            // model itself when dense.
+            let mut draft_gen = match &qm {
+                Some(q) => Generator::base_stage(&model, q),
+                None => Generator::dense(&model),
+            };
+            draft_gen.attn_mode = opts.attn_mode;
             let wb_split = generator.weight_bytes_split();
+            let draft_split = draft_gen.weight_bytes_split();
             let weight_bytes = wb_split.0 + wb_split.1 + wb_split.2;
             let mut pool = KvPagePool::for_model(&model, pool_pages.max(1));
             sh.metrics.set_pool_capacity(pool.pages_total());
@@ -334,6 +608,7 @@ impl NativeEngine {
                         &mut pool,
                         &mut prefix_cache,
                         &mut kv,
+                        admit_counter,
                     );
                     if let Some((fork_rows, logits)) = fork {
                         pending_prompt = req.prompt.len() - fork_rows;
@@ -346,6 +621,11 @@ impl NativeEngine {
                         // so it is not a lasting saving.
                         sh.metrics.record_prefix_hit(fork_rows / PAGE_ROWS);
                     }
+                    let spec_k = req.speculate_k.unwrap_or(opts.speculate_k);
+                    // The draft model consumes the whole prompt itself
+                    // (one chunked step at the first speculative round),
+                    // so forked prompts need no draft-side special case.
+                    let draft_pending = if spec_k > 0 { req.prompt.clone() } else { Vec::new() };
                     active.push(Active {
                         req,
                         tx,
@@ -353,6 +633,9 @@ impl NativeEngine {
                         generated: Vec::new(),
                         pending_prompt,
                         last_logits,
+                        spec_k,
+                        draft_kv: PagedKv::new(),
+                        draft_pending,
                         t0,
                         admit_seq: admit_counter,
                     });
@@ -376,13 +659,17 @@ impl NativeEngine {
                             let idx = a.req.prompt.len() - a.pending_prompt;
                             a.pending_prompt -= 1;
                             sel.push((i, a.req.prompt[idx], true));
-                        } else if round == 0 && a.generated.len() < a.req.max_new {
+                        } else if round == 0 && a.spec_k == 0 && a.generated.len() < a.req.max_new
+                        {
                             // The budget check matters for whole-prompt
                             // prefix hits, which arrive with pending 0
                             // and ready logits: a max_new = 0 request
                             // must retire with 0 tokens, exactly like
                             // the unshared path (where the retire sweep
                             // runs before any round-0 continuation).
+                            // Speculating sequences (spec_k > 0) sit out
+                            // the round-0 continuation: they advance in
+                            // the speculative phase below instead.
                             let t = argmax(&a.last_logits) as u8;
                             a.generated.push(t);
                             sel.push((i, t, false));
@@ -391,13 +678,11 @@ impl NativeEngine {
                     if sel.is_empty() {
                         break;
                     }
-                    // Reserve this round's KV pages, preempting under
-                    // pressure: when a selected sequence cannot get a
-                    // page, the youngest active sequence is evicted (its
-                    // pages freed, its request requeued at the front) and
-                    // reservation retries. The oldest sequence is never
-                    // evicted on behalf of a younger one, so the batch
-                    // always makes progress.
+                    // Reserve this round's KV pages, relieving pressure
+                    // via [`free_pages`] (retire finished → unpin cold
+                    // prefix caches → preempt the youngest) until every
+                    // selected sequence has its page or nothing is left
+                    // to free.
                     loop {
                         let mut exhausted = false;
                         for &(i, _, _) in &sel {
@@ -410,90 +695,19 @@ impl NativeEngine {
                         if !exhausted {
                             break;
                         }
-                        // Prefer retiring an already-finished sequence
-                        // (one that crossed max_new in round 0 and is
-                        // waiting for the post-rounds retire sweep): that
-                        // frees its pages AND answers its request —
-                        // strictly better than evicting live work.
-                        let finished = active.iter().position(|a| {
-                            a.pending_prompt == 0
-                                && (a.generated.len() >= a.req.max_new || a.kv.len >= ctx)
-                        });
-                        let victim = match finished {
-                            Some(fin) => {
-                                let mut a = active.remove(fin);
-                                a.kv.release(&mut pool);
-                                let resp = EngineResponse {
-                                    id: a.req.id,
-                                    tokens: std::mem::take(&mut a.generated),
-                                    latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
-                                    prompt_len: a.req.prompt.len(),
-                                    error: None,
-                                };
-                                sh.metrics.record_request(resp.tokens.len(), resp.latency_ms);
-                                let _ = a.tx.send(resp);
-                                fin
-                            }
-                            None => {
-                                if active.len() == 1 {
-                                    // Nothing left to evict: the pool
-                                    // itself is smaller than this one
-                                    // sequence. Fail the request
-                                    // descriptively instead of spinning.
-                                    let mut a = active.pop().unwrap();
-                                    let need = PagedKv::pages_needed(a.kv.len + 1);
-                                    a.kv.release(&mut pool);
-                                    sh.metrics.record_failed();
-                                    // Pages pinned by resident prefix
-                                    // caches shrink the effective pool;
-                                    // say so instead of misdiagnosing
-                                    // the pool as undersized.
-                                    let pinned: usize =
-                                        prefix_cache.values().map(|c| c.kv.pages.len()).sum();
-                                    let mut msg = format!(
-                                        "KV pool too small: sequence needs {need} pages but the pool holds {}",
-                                        pool.pages_total()
-                                    );
-                                    if pinned > 0 {
-                                        msg.push_str(&format!(
-                                            " ({pinned} pinned by prefix caches)"
-                                        ));
+                        match free_pages(&mut active, &mut pool, &sh, &mut prefix_cache, ctx) {
+                            Freed::PrefixEvicted => continue,
+                            Freed::Removed(victim) => {
+                                sel.retain(|&(j, _, _)| j != victim);
+                                for e in sel.iter_mut() {
+                                    if e.0 > victim {
+                                        e.0 -= 1;
                                     }
-                                    let resp = EngineResponse {
-                                        id: a.req.id,
-                                        tokens: Vec::new(),
-                                        latency_ms: a.t0.elapsed().as_secs_f64() * 1e3,
-                                        prompt_len: a.req.prompt.len(),
-                                        error: Some(msg),
-                                    };
-                                    let _ = a.tx.send(resp);
-                                    sel.clear();
+                                }
+                                if sel.is_empty() {
                                     break;
                                 }
-                                // Evict the youngest admission: release
-                                // its pages, requeue its request at the
-                                // queue front.
-                                let young = active
-                                    .iter()
-                                    .enumerate()
-                                    .max_by_key(|(_, a)| a.admit_seq)
-                                    .map(|(i, _)| i)
-                                    .unwrap();
-                                let mut a = active.remove(young);
-                                a.kv.release(&mut pool);
-                                sh.metrics.record_preemption();
-                                sh.queue.lock().unwrap().push_front((a.req, a.tx, a.t0));
-                                young
                             }
-                        };
-                        sel.retain(|&(j, _, _)| j != victim);
-                        for e in sel.iter_mut() {
-                            if e.0 > victim {
-                                e.0 -= 1;
-                            }
-                        }
-                        if sel.is_empty() {
-                            break;
                         }
                     }
                     if sel.is_empty() {
@@ -543,12 +757,160 @@ impl NativeEngine {
                     sh.metrics.set_pages_in_use(pool.pages_in_use());
                     sh.metrics.set_shared_pages(pool.shared_pages());
                 }
+                // Speculative phase: sequences with spec_k > 0 that have
+                // finished prefilling advance through one draft/verify
+                // round per scheduler step — the base-stage draft
+                // proposes up to k tokens against its own KV (pages from
+                // the same pool), the target scores all k + 1 positions
+                // in one chunked batched step, and both KVs roll back to
+                // the last accepted token. The greedy accept rule keeps
+                // responses bit-identical to plain decode; only
+                // throughput changes.
+                let mut spec_sel: Vec<usize> = active
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, a)| {
+                        a.spec_k > 0
+                            && a.pending_prompt == 0
+                            && a.generated.len() < a.req.max_new
+                            && a.kv.len < ctx
+                    })
+                    .map(|(i, _)| i)
+                    .collect();
+                if !spec_sel.is_empty() {
+                    // Pre-reserve the round's worst case (target: k + 1
+                    // rows; draft: pending + k rows), relieving pool
+                    // pressure exactly like the decode rounds. The
+                    // per-lane draft cap is deterministic in the lane's
+                    // own state, so recomputing it after evictions is
+                    // stable.
+                    let lane_k = |a: &Active| {
+                        effective_k(
+                            a.spec_k,
+                            a.req.max_new - a.generated.len(),
+                            ctx,
+                            a.kv.len,
+                            a.draft_kv.len,
+                            a.draft_pending.len(),
+                        )
+                    };
+                    loop {
+                        let mut exhausted = false;
+                        for &i in &spec_sel {
+                            let k = lane_k(&active[i]);
+                            let t_need = active[i].kv.len + 1 + k;
+                            // The draft phase only runs (and only then
+                            // consumes pending + k rows) when k > 0; a
+                            // lane capped to k = 0 must not pin draft
+                            // pages it will never write.
+                            let d_need = if k == 0 {
+                                0
+                            } else {
+                                active[i].draft_kv.len + active[i].draft_pending.len() + k
+                            };
+                            let a = &mut active[i];
+                            if !a.kv.reserve(&mut pool, t_need)
+                                || !a.draft_kv.reserve(&mut pool, d_need)
+                            {
+                                exhausted = true;
+                                break;
+                            }
+                        }
+                        if !exhausted {
+                            break;
+                        }
+                        match free_pages(&mut active, &mut pool, &sh, &mut prefix_cache, ctx) {
+                            Freed::PrefixEvicted => continue,
+                            Freed::Removed(victim) => {
+                                spec_sel.retain(|&j| j != victim);
+                                for j in spec_sel.iter_mut() {
+                                    if *j > victim {
+                                        *j -= 1;
+                                    }
+                                }
+                                if spec_sel.is_empty() {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    if !spec_sel.is_empty() {
+                        let ks: Vec<usize> =
+                            spec_sel.iter().map(|&i| lane_k(&active[i])).collect();
+                        // Lane counts for byte accounting, captured
+                        // before the round mutates pending.
+                        let draft_chunk_lanes: usize = spec_sel
+                            .iter()
+                            .zip(&ks)
+                            .filter(|&(_, &k)| k > 0)
+                            .map(|(&i, _)| active[i].draft_pending.len() + 1)
+                            .sum();
+                        let verify_lanes: usize = ks.iter().map(|k| k + 1).sum();
+                        let max_k = ks.iter().copied().max().unwrap_or(0);
+                        let mut round_stats = SpecStats::default();
+                        let emitted = {
+                            let mut lanes: Vec<SpecLane> = Vec::with_capacity(spec_sel.len());
+                            let mut si = 0usize;
+                            for (i, a) in active.iter_mut().enumerate() {
+                                if si < spec_sel.len() && spec_sel[si] == i {
+                                    lanes.push(SpecLane {
+                                        k: ks[si],
+                                        target_kv: &mut a.kv,
+                                        draft_kv: &mut a.draft_kv,
+                                        pending: &mut a.draft_pending,
+                                        logits: &mut a.last_logits,
+                                    });
+                                    si += 1;
+                                }
+                            }
+                            spec_round_paged(
+                                &generator,
+                                &draft_gen,
+                                &mut pool,
+                                &mut lanes,
+                                &mut round_stats,
+                            )
+                        };
+                        let mut emitted_total = 0usize;
+                        for (em, &i) in emitted.iter().zip(&spec_sel) {
+                            active[i].generated.extend_from_slice(em);
+                            emitted_total += em.len();
+                        }
+                        sh.metrics.record_spec(
+                            round_stats.tokens_drafted,
+                            round_stats.tokens_accepted,
+                            round_stats.rounds,
+                        );
+                        sh.metrics.record_step(spec_sel.len());
+                        // Byte accounting: what the draft steps (base
+                        // stage, batched across lanes) plus the single
+                        // chunked verify step actually streamed, against
+                        // what sequence-at-a-time target-only decode
+                        // would stream for the tokens emitted.
+                        let mut streamed = streamed_bytes_for_batch(wb_split, verify_lanes);
+                        if max_k > 0 {
+                            streamed += streamed_bytes_for_batch(draft_split, draft_chunk_lanes);
+                            for j in 1..max_k {
+                                let cnt = ks.iter().filter(|&&k| k > j).count();
+                                if cnt == 0 {
+                                    break;
+                                }
+                                streamed += streamed_bytes_for_batch(draft_split, cnt);
+                            }
+                        }
+                        sh.metrics
+                            .record_decode_bytes(streamed, weight_bytes * emitted_total as u64);
+                        sh.metrics.set_pages_in_use(pool.pages_in_use());
+                        sh.metrics.set_shared_pages(pool.shared_pages());
+                    }
+                }
                 // Retire: release pages back to the pool and answer.
                 active.retain_mut(|a| {
                     let done = a.pending_prompt == 0
                         && (a.generated.len() >= a.req.max_new || a.kv.len >= ctx);
                     if done {
                         a.kv.release(&mut pool);
+                        a.draft_kv.release(&mut pool);
                         let resp = EngineResponse {
                             id: a.req.id,
                             tokens: std::mem::take(&mut a.generated),
@@ -661,6 +1023,7 @@ mod tests {
                 prompt: vec![1, 2, 3, (i % 60) as u8],
                 max_new: 5,
                 prefix_id: None,
+                speculate_k: None,
             });
             rxs.push(rx);
         }
@@ -696,6 +1059,7 @@ mod tests {
             prompt: prompt.clone(),
             max_new: 6,
             prefix_id: None,
+            speculate_k: None,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         let offline = Generator::dense(&model).generate(&prompt, 6);
@@ -720,12 +1084,14 @@ mod tests {
             prompt: long_prompt.clone(),
             max_new: 6,
             prefix_id: None,
+            speculate_k: None,
         });
         let rx_short = eng.submit(EngineRequest {
             id: 2,
             prompt: short_prompt.clone(),
             max_new: 6,
             prefix_id: None,
+            speculate_k: None,
         });
         let gen = Generator::dense(&model);
         let resp_long = rx_long
@@ -757,6 +1123,7 @@ mod tests {
                 prompt: vec![1u8; plen],
                 max_new: 4,
                 prefix_id: None,
+                speculate_k: None,
             });
             let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
             assert!(resp.tokens.is_empty());
@@ -771,6 +1138,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new: 2,
             prefix_id: None,
+            speculate_k: None,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -823,6 +1191,7 @@ mod tests {
                 prompt: prompt.clone(),
                 max_new,
                 prefix_id: None,
+                speculate_k: None,
             }));
             prompts.push(prompt);
         }
@@ -863,6 +1232,7 @@ mod tests {
                 prompt: vec![2, (i + 1) as u8],
                 max_new: 20, // 22 rows: one page per sequence
                 prefix_id: None,
+                speculate_k: None,
             }));
         }
         for rx in rxs {
@@ -898,6 +1268,7 @@ mod tests {
                 prompt: prompt.clone(),
                 max_new: 6,
                 prefix_id: None, // auto-detect against the registry
+                speculate_k: None,
             }));
             prompts.push(prompt);
         }
@@ -945,6 +1316,7 @@ mod tests {
             prompt: sys.clone(),
             max_new: 5,
             prefix_id: Some(1),
+            speculate_k: None,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -959,6 +1331,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new: 3,
             prefix_id: Some(99),
+            speculate_k: None,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -972,6 +1345,7 @@ mod tests {
             prompt: sys.clone(),
             max_new: 0,
             prefix_id: Some(1),
+            speculate_k: None,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -1002,6 +1376,7 @@ mod tests {
                 prompt: prompt.clone(),
                 max_new: 24, // 41 + 24 = 65 rows: crosses into a 3rd page
                 prefix_id: Some(3),
+                speculate_k: None,
             }));
             prompts.push(prompt);
         }
@@ -1022,6 +1397,188 @@ mod tests {
     }
 
     #[test]
+    fn speculative_requests_match_offline_generation() {
+        use crate::qmodel::quantize_model;
+        use crate::quant::pipeline::Method;
+        use std::collections::BTreeMap;
+        // 4-bit RVQ model: the engine's draft generator is the embedded
+        // 2-bit base stage. Every speculated response must be
+        // bit-identical to plain greedy decode.
+        let model = two_page_model(11);
+        let qm = quantize_model(
+            &model,
+            &BTreeMap::new(),
+            &Method::QuipSharp { bits: 4, ft: false },
+            1,
+        )
+        .unwrap();
+        assert!(qm.has_multi_stage());
+        let model_arc = Arc::new(Model::new(qm.model.cfg.clone(), qm.model.params.clone()));
+        let offline: Vec<Vec<u8>> = (0..4u64)
+            .map(|i| qm.generator().generate(&[2, (i + 1) as u8, 7], 12))
+            .collect();
+        let eng = NativeEngine::start_with_opts(
+            model_arc,
+            Some(Arc::new(qm)),
+            EngineOptions {
+                max_batch: 4,
+                // Room for target + draft KV per sequence.
+                pool_pages: Some(16),
+                ..EngineOptions::default()
+            },
+        );
+        let mut rxs = Vec::new();
+        for i in 0..4u64 {
+            rxs.push(eng.submit(EngineRequest {
+                id: i,
+                prompt: vec![2, (i + 1) as u8, 7],
+                max_new: 12,
+                prefix_id: None,
+                speculate_k: Some(4),
+            }));
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+            assert_eq!(resp.tokens, offline[i], "request {i} diverged under speculation");
+        }
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        assert!(m.tokens_drafted.load(Ordering::Relaxed) > 0, "nothing was drafted");
+        assert!(m.spec_rounds.load(Ordering::Relaxed) > 0);
+        // Draft and target pages all released at retirement.
+        assert_eq!(m.pages_in_use.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn dense_self_draft_accepts_everything() {
+        // Dense engine: the draft *is* the target, so every draft token
+        // verifies — and the engine-wide default (EngineOptions)
+        // applies when requests leave speculate_k unset.
+        let model = Arc::new(two_page_model(12));
+        let eng = NativeEngine::start_with_opts(
+            model.clone(),
+            None,
+            EngineOptions {
+                max_batch: 2,
+                pool_pages: Some(8),
+                speculate_k: 4,
+                ..EngineOptions::default()
+            },
+        );
+        let gen = Generator::dense(&model);
+        let prompt = vec![4u8, 8, 15];
+        let rx = eng.submit(EngineRequest {
+            id: 1,
+            prompt: prompt.clone(),
+            max_new: 10,
+            prefix_id: None,
+            speculate_k: None, // engine default (4) applies
+        });
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert!(resp.error.is_none());
+        assert_eq!(resp.tokens, gen.generate(&prompt, 10));
+        // An explicit 0 opts out and still matches.
+        let rx = eng.submit(EngineRequest {
+            id: 2,
+            prompt: prompt.clone(),
+            max_new: 10,
+            prefix_id: None,
+            speculate_k: Some(0),
+        });
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.tokens, gen.generate(&prompt, 10));
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        let drafted = m.tokens_drafted.load(Ordering::Relaxed);
+        let accepted = m.tokens_accepted.load(Ordering::Relaxed);
+        assert!(drafted > 0);
+        assert_eq!(drafted, accepted, "self-draft must accept everything");
+        assert!((m.acceptance_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cold_prefix_cache_evicted_under_pressure() {
+        // Pool of 4 pages; two registered 40-token prefixes each pin 2
+        // pages when cached. Serving a request against prefix B while
+        // A's cache is cold (no live forks) must unpin A instead of
+        // failing or preempting.
+        let model = Arc::new(two_page_model(13));
+        let eng = NativeEngine::start_with_pool(model.clone(), None, 2, 4);
+        let gen = Generator::dense(&model);
+        let pfx_a: Vec<u8> = (0..40).map(|i| ((i * 3 + 1) % 60) as u8).collect();
+        let pfx_b: Vec<u8> = (0..40).map(|i| ((i * 5 + 2) % 60) as u8).collect();
+        assert!(eng.register_prefix(1, pfx_a.clone()));
+        assert!(eng.register_prefix(2, pfx_b.clone()));
+        for (pid, pfx) in [(1u64, &pfx_a), (2u64, &pfx_b)] {
+            let mut prompt = pfx.clone();
+            prompt.push(9);
+            let rx = eng.submit(EngineRequest {
+                id: pid,
+                prompt: prompt.clone(),
+                max_new: 4,
+                prefix_id: Some(pid),
+                speculate_k: None,
+            });
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert!(resp.error.is_none(), "prefix {pid}: {:?}", resp.error);
+            assert_eq!(resp.tokens, gen.generate(&prompt, 4), "prefix {pid} diverged");
+        }
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        assert_eq!(m.prefix_hits.load(Ordering::Relaxed), 2);
+        assert!(
+            m.prefix_evictions.load(Ordering::Relaxed) >= 1,
+            "building B's cache should have evicted cold A"
+        );
+        // Only the most recent cache (B) stays resident.
+        assert_eq!(m.pages_in_use.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn perseq_attn_mode_matches_fused() {
+        let model = Arc::new(two_page_model(14));
+        let gen = Generator::dense(&model);
+        let run = |attn_mode: AttnMode| -> Vec<Vec<u8>> {
+            let eng = NativeEngine::start_with_opts(
+                model.clone(),
+                None,
+                EngineOptions {
+                    max_batch: 3,
+                    attn_mode,
+                    ..EngineOptions::default()
+                },
+            );
+            let mut rxs = Vec::new();
+            for i in 0..3u64 {
+                rxs.push(eng.submit(EngineRequest {
+                    id: i,
+                    prompt: vec![(3 + i) as u8, 1, 2],
+                    max_new: 8,
+                    prefix_id: None,
+                    speculate_k: None,
+                }));
+            }
+            let out = rxs
+                .into_iter()
+                .map(|rx| rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap().tokens)
+                .collect();
+            eng.stop();
+            eng.join();
+            out
+        };
+        let fused = run(AttnMode::Fused);
+        let perseq = run(AttnMode::PerSeq);
+        assert_eq!(fused, perseq, "attention mode changed engine output");
+        for (i, toks) in fused.iter().enumerate() {
+            assert_eq!(toks, &gen.generate(&[(3 + i) as u8, 1, 2], 8));
+        }
+    }
+
+    #[test]
     fn oversized_sequence_fails_descriptively() {
         // A pool smaller than a single sequence cannot ever serve it:
         // the engine must answer with an error instead of spinning.
@@ -1032,6 +1589,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new: 60, // needs 2 pages; pool holds 1
             prefix_id: None,
+            speculate_k: None,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         let err = resp.error.expect("expected pool-too-small error");

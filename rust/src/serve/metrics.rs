@@ -55,6 +55,16 @@ pub struct Metrics {
     /// they are shared at fork too, but the first write clones them
     /// back (copy-on-write), so they are not a lasting saving.
     pub pages_saved: AtomicU64,
+    /// Cold prefix caches unpinned under pool pressure (their pages
+    /// were referenced by no live sequence; a later hit rebuilds).
+    pub prefix_evictions: AtomicU64,
+    /// Draft tokens proposed by self-speculative rounds.
+    pub tokens_drafted: AtomicU64,
+    /// Draft tokens the target model accepted (the ratio to
+    /// `tokens_drafted` is the acceptance rate).
+    pub tokens_accepted: AtomicU64,
+    /// Per-sequence speculative rounds executed.
+    pub spec_rounds: AtomicU64,
     /// Weight bytes actually streamed by the decode-once batched kernel.
     weight_bytes_streamed: AtomicU64,
     /// Weight bytes the same steps would stream decoding one sequence at
@@ -88,6 +98,10 @@ impl Metrics {
             shared_pages: AtomicU64::new(0),
             prefix_hits: AtomicU64::new(0),
             pages_saved: AtomicU64::new(0),
+            prefix_evictions: AtomicU64::new(0),
+            tokens_drafted: AtomicU64::new(0),
+            tokens_accepted: AtomicU64::new(0),
+            spec_rounds: AtomicU64::new(0),
             weight_bytes_streamed: AtomicU64::new(0),
             weight_bytes_logical: AtomicU64::new(0),
             latencies_ms: Mutex::new(Vec::new()),
@@ -153,6 +167,30 @@ impl Metrics {
         self.prefix_hits.fetch_add(1, Ordering::Relaxed);
         self.pages_saved
             .fetch_add(pages_shared as u64, Ordering::Relaxed);
+    }
+
+    /// A cold prefix cache was unpinned under pool pressure.
+    pub fn record_prefix_eviction(&self) {
+        self.prefix_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One batch of self-speculative lane-rounds completed: `drafted`
+    /// tokens proposed, `accepted` of them confirmed by the target
+    /// across `rounds` lanes.
+    pub fn record_spec(&self, drafted: u64, accepted: u64, rounds: u64) {
+        self.tokens_drafted.fetch_add(drafted, Ordering::Relaxed);
+        self.tokens_accepted.fetch_add(accepted, Ordering::Relaxed);
+        self.spec_rounds.fetch_add(rounds, Ordering::Relaxed);
+    }
+
+    /// Fraction of drafted tokens the target accepted (0 when nothing
+    /// was drafted yet).
+    pub fn acceptance_rate(&self) -> f64 {
+        let d = self.tokens_drafted.load(Ordering::Relaxed);
+        if d == 0 {
+            return 0.0;
+        }
+        self.tokens_accepted.load(Ordering::Relaxed) as f64 / d as f64
     }
 
     /// Weight-traffic accounting for one batched decode step: `streamed`
@@ -242,6 +280,23 @@ impl Metrics {
                 Json::num(self.pages_saved.load(Ordering::Relaxed) as f64),
             ),
             (
+                "prefix_evictions",
+                Json::num(self.prefix_evictions.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "tokens_drafted",
+                Json::num(self.tokens_drafted.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "tokens_accepted",
+                Json::num(self.tokens_accepted.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "spec_rounds",
+                Json::num(self.spec_rounds.load(Ordering::Relaxed) as f64),
+            ),
+            ("acceptance_rate", Json::num(self.acceptance_rate())),
+            (
                 "preemptions",
                 Json::num(self.preemptions.load(Ordering::Relaxed) as f64),
             ),
@@ -309,6 +364,22 @@ mod tests {
         assert_eq!(s.get("preemptions").as_f64(), Some(2.0));
         assert_eq!(s.get("requests_rejected").as_f64(), Some(1.0));
         assert_eq!(s.get("requests_failed").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn speculative_and_eviction_counters() {
+        let m = Metrics::new();
+        assert_eq!(m.acceptance_rate(), 0.0);
+        // Two batched rounds: 8 drafted / 5 accepted, then 4 / 4.
+        m.record_spec(8, 5, 2);
+        m.record_spec(4, 4, 1);
+        m.record_prefix_eviction();
+        let s = m.snapshot();
+        assert_eq!(s.get("tokens_drafted").as_f64(), Some(12.0));
+        assert_eq!(s.get("tokens_accepted").as_f64(), Some(9.0));
+        assert_eq!(s.get("spec_rounds").as_f64(), Some(3.0));
+        assert_eq!(s.get("prefix_evictions").as_f64(), Some(1.0));
+        assert!((m.acceptance_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -54,12 +54,29 @@
 //! are saved. Metrics: `shared_pages` (gauge), `prefix_hits`,
 //! `pages_saved`; the `bench_generation` shared-prefix sweep measures
 //! the peak-page and throughput effect at N sequences over one prompt.
+//! Under pool pressure, *cold* cached prefixes (pages referenced by no
+//! live sequence) are unpinned LRU-first before any live sequence is
+//! preempted (`prefix_evictions`); a later hit rebuilds the cache.
+//!
+//! # Self-speculative decoding
+//!
+//! A request carrying `speculate: k` (or an engine started with
+//! [`engine::EngineOptions::speculate_k`] > 0) decodes through
+//! draft/verify rounds ([`crate::generation::speculative`]): the RVQ
+//! base-stage model embedded in every multi-stage quantization drafts
+//! k tokens against its own KV (pages from the same pool), the full
+//! model verifies all k + 1 positions in one chunked batched step, and
+//! both KVs roll back to the last accepted token. Greedy accept keeps
+//! the response **bit-identical** to plain decode — only throughput
+//! moves, reported via `tokens_drafted` / `tokens_accepted` /
+//! `acceptance_rate`. `benches/bench_speculative.rs`
+//! (`make bench-spec`) sweeps k × batch on the shared-prefix workload.
 
 pub mod engine;
 pub mod metrics;
 pub mod pjrt_engine;
 pub mod server;
 
-pub use engine::{Engine, EngineRequest, EngineResponse, NativeEngine};
+pub use engine::{Engine, EngineOptions, EngineRequest, EngineResponse, NativeEngine};
 pub use metrics::Metrics;
 pub use server::{serve_blocking, Client, ServerConfig, ServerHandle};

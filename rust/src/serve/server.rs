@@ -2,10 +2,13 @@
 //!
 //! Protocol (one JSON object per line; see `rust/src/serve/README.md`
 //! for the full field-by-field reference):
-//!   {"prompt": [1,2,3], "max_new": 16, "prefix_id": 1}
+//!   {"prompt": [1,2,3], "max_new": 16, "prefix_id": 1, "speculate": 4}
 //!       → {"id":…, "tokens":[…], "ms":…} (plus "error" on failure;
 //!         "prefix_id" is optional — without it the engine auto-detects
-//!         registered prefixes)
+//!         registered prefixes — and "speculate" optionally sets the
+//!         self-speculative draft length for this request: 0 forces
+//!         plain decode, absent uses the engine default, and the
+//!         response tokens are bit-identical either way)
 //!   {"cmd": "register_prefix", "id": 1, "tokens": [5,6,7]}
 //!       → {"ok": true|false}  (share this prompt prefix's KV)
 //!   {"cmd": "stats"}     → metrics snapshot
@@ -131,12 +134,17 @@ fn handle_conn(
                     .unwrap_or_default();
                 let max_new = msg.get("max_new").as_usize().unwrap_or(16);
                 let prefix_id = msg.get("prefix_id").as_usize().map(|v| v as u64);
+                // "speculate": draft tokens per self-speculative round
+                // (0 forces plain decode; absent uses the engine
+                // default). Responses are bit-identical either way.
+                let speculate_k = msg.get("speculate").as_usize();
                 let id = ids.fetch_add(1, Ordering::Relaxed);
                 let rx = engine.submit(EngineRequest {
                     id,
                     prompt,
                     max_new,
                     prefix_id,
+                    speculate_k,
                 });
                 let resp = rx.recv().context("engine dropped request")?;
                 let mut fields = vec![
@@ -184,6 +192,30 @@ impl Client {
         max_new: usize,
         prefix_id: Option<u64>,
     ) -> Result<(Vec<u8>, f64)> {
+        self.request_with_opts(prompt, max_new, prefix_id, None)
+    }
+
+    /// Like [`Client::request`], additionally asking the engine to
+    /// self-speculate with `speculate` draft tokens per round (the
+    /// response is bit-identical to plain decode; only latency
+    /// changes). `None` leaves the engine default in force.
+    pub fn request_speculative(
+        &mut self,
+        prompt: &[u8],
+        max_new: usize,
+        speculate: usize,
+    ) -> Result<(Vec<u8>, f64)> {
+        self.request_with_opts(prompt, max_new, None, Some(speculate))
+    }
+
+    /// Full request form: optional prefix pin and speculation override.
+    pub fn request_with_opts(
+        &mut self,
+        prompt: &[u8],
+        max_new: usize,
+        prefix_id: Option<u64>,
+        speculate: Option<usize>,
+    ) -> Result<(Vec<u8>, f64)> {
         let mut fields = vec![
             (
                 "prompt",
@@ -193,6 +225,9 @@ impl Client {
         ];
         if let Some(pid) = prefix_id {
             fields.push(("prefix_id", Json::num(pid as f64)));
+        }
+        if let Some(k) = speculate {
+            fields.push(("speculate", Json::num(k as f64)));
         }
         let msg = Json::obj(fields);
         writeln!(self.writer, "{}", msg.emit())?;

@@ -113,6 +113,42 @@ fn tcp_prefix_sharing_round_trip() {
 }
 
 #[test]
+fn tcp_speculative_round_trip() {
+    let model = Arc::new(make_model(4));
+    let engine = Arc::new(NativeEngine::start(model.clone(), None, 4));
+    let eng_dyn: Arc<dyn Engine> = engine.clone();
+    let handle = serve_blocking(eng_dyn, ServerConfig::default()).unwrap();
+    let addr = handle.local_addr;
+
+    // The "speculate" wire field turns on self-speculative rounds
+    // (a dense engine self-drafts); the response must be bit-identical
+    // to a plain request for the same prompt.
+    let mut c = Client::connect(addr).unwrap();
+    let prompt = [7u8, 3, 11];
+    let (plain, _) = c.request(&prompt, 8).unwrap();
+    let (spec, _) = c.request_speculative(&prompt, 8, 4).unwrap();
+    assert_eq!(plain.len(), 8);
+    assert_eq!(plain, spec, "speculation changed the served tokens");
+    // An explicit 0 opts out and still matches.
+    let (off, _) = c.request_speculative(&prompt, 8, 0).unwrap();
+    assert_eq!(plain, off);
+
+    // The snapshot reports the draft/accept counters (self-draft:
+    // everything drafted was accepted).
+    let stats = c.stats().unwrap();
+    let drafted = stats.get("tokens_drafted").as_f64().unwrap();
+    let accepted = stats.get("tokens_accepted").as_f64().unwrap();
+    assert!(drafted > 0.0);
+    assert_eq!(drafted, accepted);
+    assert_eq!(stats.get("acceptance_rate").as_f64(), Some(1.0));
+
+    c.shutdown().unwrap();
+    handle.stop();
+    engine.stop();
+    engine.join();
+}
+
+#[test]
 fn direct_engine_api_under_load() {
     let model = Arc::new(make_model(2));
     let engine = NativeEngine::start(model.clone(), None, 3);
@@ -123,6 +159,7 @@ fn direct_engine_api_under_load() {
                 prompt: vec![(i % 60) as u8, 5, 9],
                 max_new: 4,
                 prefix_id: None,
+                speculate_k: None,
             })
         })
         .collect();
