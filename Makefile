@@ -5,7 +5,8 @@
 # by default (see Cargo.toml's `pjrt` feature).
 
 .PHONY: verify build test fmt lint doc bench-batch bench-serve bench-attention \
-        bench-attention-smoke bench-spec bench-spec-smoke artifacts
+        bench-attention-smoke bench-spec bench-spec-smoke bench-parallel \
+        bench-parallel-smoke tsan-threadpool artifacts
 
 verify:
 	cargo build --release
@@ -63,6 +64,31 @@ bench-spec:
 # checks, no perf assertion. Mirrored by the CI `tier1` job.
 bench-spec-smoke:
 	cargo bench --bench bench_speculative -- --smoke
+
+# Core-scaling roofline bench for the persistent decode pool: thread
+# sweep × batch sweep, tokens/s + weight-stream GB/s vs a pooled memcpy
+# roofline; writes BENCH_parallel.json (asserts monotonic 1->4-thread
+# scaling at B=8 on full runs unless bandwidth-bound).
+bench-parallel:
+	cargo bench --bench bench_parallel
+
+# Seconds-scale smoke run: parity preflight + JSON wiring only, no perf
+# assertion. Mirrored by the CI `tier1` job.
+bench-parallel-smoke:
+	cargo bench --bench bench_parallel -- --smoke
+
+# ThreadSanitizer over the worker-pool unit tests (the unsafe dispatch
+# path: raw task pointers, SendPtr row handoff, condvar parking).
+# Needs nightly + rust-src for -Z build-std; degrades to a skip message
+# when no nightly toolchain is installed. Mirrored by the CI `tsan` job.
+tsan-threadpool:
+	@if rustup toolchain list 2>/dev/null | grep -q nightly; then \
+		RUSTFLAGS="-Z sanitizer=thread" cargo +nightly test \
+			-Z build-std --target x86_64-unknown-linux-gnu \
+			--lib util::threadpool; \
+	else \
+		echo "tsan-threadpool: no nightly toolchain installed, skipping"; \
+	fi
 
 # Trained weights + corpus + AOT HLO artifacts (needs the python/JAX
 # toolchain; see python/compile/aot.py). Integration tests skip cleanly

@@ -1,0 +1,233 @@
+//! Core-scaling roofline bench for the persistent decode pool: writes
+//! `BENCH_parallel.json` (field reference in `BENCHMARKS.md`).
+//!
+//! Sweeps the worker-pool thread budget (`QUIPSHARP_THREADS`-equivalent,
+//! set programmatically via `threadpool::set_num_threads`) over
+//! {1, 2, 4, …, ncores} × batch ∈ {1, 8} and measures batched decode
+//! throughput on a synthetic 2-bit QuIP# model. Alongside tokens/s it
+//! reports the model's achieved weight-stream bandwidth — the per-step
+//! packed-code bytes from `Generator::weight_bytes_streamed_per_step`
+//! divided by measured step time — next to a pool-dispatched
+//! multi-threaded memcpy roofline, so the table shows exactly where
+//! scaling stops being core-bound and becomes bandwidth-bound: tokens/s
+//! climbs with threads until model GB/s approaches memcpy GB/s, after
+//! which extra cores only contend for the memory controller.
+//!
+//! Before timing anything the bench runs a parity preflight: a short
+//! greedy decode at 1 thread and at the maximum swept budget must agree
+//! bit for bit (the pool's kernels are bit-exact by construction; see
+//! `rust/tests/parallel.rs` for the full matrix).
+//!
+//! `--smoke` shrinks the model and step counts for CI wiring checks;
+//! scaling acceptance (monotonic 1→4 threads at B = 8, ≥2× at 4 threads
+//! unless bandwidth-bound) is only enforced on full runs with ≥ 4 cores.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use quipsharp::bench::{best_of, memcpy_roofline_mt_gbps, Table};
+use quipsharp::generation::{argmax, Generator, KvCache};
+use quipsharp::model::qlinear::decode8_kernel_name;
+use quipsharp::model::{Model, ModelConfig};
+use quipsharp::qmodel::quantize_model;
+use quipsharp::quant::pipeline::Method;
+use quipsharp::util::json::Json;
+use quipsharp::util::threadpool;
+
+/// Batch-native greedy decode: one `decode_batch` call per step, timed.
+fn time_batched(gen: &Generator, bsz: usize, prompt: &[u8], warmup: usize, steps: usize) -> f64 {
+    let mut caches: Vec<KvCache> = (0..bsz).map(|_| KvCache::new(gen.model)).collect();
+    let mut logits: Vec<Vec<f32>> = vec![vec![0.0f32]; bsz];
+    for &t in prompt {
+        let toks = vec![t; bsz];
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        logits = gen.decode_batch(&toks, &mut refs);
+    }
+    let mut advance = |logits: &mut Vec<Vec<f32>>, caches: &mut Vec<KvCache>| {
+        let toks: Vec<u8> = logits.iter().map(|l| argmax(l) as u8).collect();
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        *logits = gen.decode_batch(&toks, &mut refs);
+    };
+    for _ in 0..warmup {
+        advance(&mut logits, &mut caches);
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        advance(&mut logits, &mut caches);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Short greedy decode returning the final logits as bit patterns — the
+/// parity preflight payload.
+fn decode_bits(gen: &Generator, bsz: usize, prompt: &[u8], steps: usize) -> Vec<u32> {
+    let mut caches: Vec<KvCache> = (0..bsz).map(|_| KvCache::new(gen.model)).collect();
+    let mut logits: Vec<Vec<f32>> = vec![vec![0.0f32]; bsz];
+    for &t in prompt {
+        let toks = vec![t; bsz];
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        logits = gen.decode_batch(&toks, &mut refs);
+    }
+    for _ in 0..steps {
+        let toks: Vec<u8> = logits.iter().map(|l| argmax(l) as u8).collect();
+        let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+        logits = gen.decode_batch(&toks, &mut refs);
+    }
+    logits.concat().iter().map(|x| x.to_bits()).collect()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ncores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    // 1, 2, 4, … up to and always including ncores.
+    let mut threads: Vec<usize> = vec![1];
+    let mut t = 2;
+    while t < ncores {
+        threads.push(t);
+        t *= 2;
+    }
+    if ncores > 1 {
+        threads.push(ncores);
+    }
+    let max_t = *threads.last().unwrap();
+
+    let model_name = if smoke { "s" } else { "m" };
+    let (warmup, steps, reps) = if smoke { (2, 8, 1) } else { (4, 48, 3) };
+    println!("== parallel decode scaling: persistent pool, {ncores} cores ==");
+    println!(
+        "(synthetic '{model_name}' model, 2-bit QuIP#, decode8 kernel: {}{})\n",
+        decode8_kernel_name(),
+        if smoke { ", SMOKE" } else { "" }
+    );
+
+    let model = Model::random(ModelConfig::by_name(model_name).unwrap(), 11);
+    // Identity Hessians: decode throughput does not depend on
+    // quantization quality, and skipping calibration keeps setup fast.
+    let qm = quantize_model(
+        &model,
+        &BTreeMap::new(),
+        &Method::QuipSharp { bits: 2, ft: false },
+        7,
+    )
+    .unwrap();
+    let gen = qm.generator();
+    let prompt: Vec<u8> = vec![10, 4, 7, 1];
+
+    // Parity preflight: serial vs widest budget, bit for bit.
+    let serial = threadpool::with_threads(1, || decode_bits(&gen, 8, &prompt, 4));
+    let widest = threadpool::with_threads(max_t, || decode_bits(&gen, 8, &prompt, 4));
+    assert_eq!(
+        serial, widest,
+        "parallel decode diverged from serial at {max_t} threads"
+    );
+    println!("parity preflight: 1 vs {max_t} threads bit-exact over 4 greedy steps\n");
+
+    let batches = [1usize, 8];
+    let mut table = Table::new(&["threads", "B", "tok/s", "model GB/s", "speedup vs 1T"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    // tok/s at each swept thread count for B = 8 (the scaling criterion).
+    let mut b8_tps: Vec<(usize, f64)> = Vec::new();
+    let mut best_gbps = 0.0f64;
+    for &nt in &threads {
+        threadpool::set_num_threads(nt);
+        for &bsz in &batches {
+            let secs = best_of(reps, || time_batched(&gen, bsz, &prompt, warmup, steps));
+            let tps = (bsz * steps) as f64 / secs;
+            let streamed = gen.weight_bytes_streamed_per_step(bsz) as f64;
+            let gbps = streamed * steps as f64 / secs / 1e9;
+            best_gbps = best_gbps.max(gbps);
+            let speedup = if bsz == 8 {
+                b8_tps.push((nt, tps));
+                b8_tps[0].1
+            } else {
+                rows_json
+                    .iter()
+                    .find_map(|r| {
+                        (r.get("threads").as_usize() == Some(1)
+                            && r.get("batch").as_usize() == Some(bsz))
+                        .then(|| r.get("tok_per_sec").as_f64().unwrap())
+                    })
+                    .unwrap_or(tps)
+            };
+            table.row(&[
+                format!("{nt}"),
+                format!("{bsz}"),
+                format!("{tps:.1}"),
+                format!("{gbps:.2}"),
+                format!("{:.2}x", tps / speedup.max(1e-12)),
+            ]);
+            rows_json.push(Json::obj(vec![
+                ("threads", Json::num(nt as f64)),
+                ("batch", Json::num(bsz as f64)),
+                ("tok_per_sec", Json::num(tps)),
+                ("model_gbps", Json::num(gbps)),
+                ("streamed_bytes_per_step", Json::num(streamed)),
+            ]));
+        }
+    }
+    table.print();
+    table.write_csv("bench_parallel").ok();
+
+    // Memory-bus ceiling, measured through the same pool dispatch the
+    // decode kernels use, at the widest thread budget.
+    threadpool::set_num_threads(max_t);
+    let roof_size = if smoke { 8 << 20 } else { 64 << 20 };
+    let roof_gbps = memcpy_roofline_mt_gbps(roof_size);
+    println!("\nmemcpy roofline ({max_t} threads): {roof_gbps:.2} GB/s");
+    println!("best model weight-stream bandwidth: {best_gbps:.2} GB/s");
+
+    // Scaling acceptance at B = 8: tokens/s monotonic from 1 to 4
+    // threads and ≥ 2x at 4 threads — unless the sweep is already
+    // bandwidth-bound (model GB/s a large fraction of memcpy GB/s),
+    // in which case flat scaling is the expected roofline behavior.
+    let bandwidth_bound = best_gbps >= 0.6 * roof_gbps;
+    let upto4: Vec<&(usize, f64)> = b8_tps.iter().filter(|(nt, _)| *nt <= 4).collect();
+    let monotonic = upto4.windows(2).all(|w| w[1].1 >= w[0].1 * 0.98);
+    let speedup_at_4 = upto4
+        .iter()
+        .find(|(nt, _)| *nt == 4)
+        .map(|(_, tps)| tps / b8_tps[0].1);
+    let verdict = if ncores < 4 || smoke {
+        "not-measurable (smoke run or < 4 cores)".to_string()
+    } else if bandwidth_bound {
+        format!(
+            "bandwidth-bound: model streams {best_gbps:.1} GB/s of a {roof_gbps:.1} GB/s \
+             memcpy roofline, so thread scaling is limited by the memory bus"
+        )
+    } else if monotonic && speedup_at_4.is_some_and(|s| s >= 2.0) {
+        "core-bound scaling ok: monotonic 1->4 threads, >=2x at 4 threads".to_string()
+    } else {
+        format!(
+            "scaling below target (monotonic={monotonic}, speedup@4={:?})",
+            speedup_at_4
+        )
+    };
+    println!("scaling verdict (B=8): {verdict}");
+    if !smoke && ncores >= 4 && !bandwidth_bound {
+        assert!(
+            monotonic && speedup_at_4.is_some_and(|s| s >= 2.0),
+            "B=8 decode failed the core-scaling target and is not bandwidth-bound: {verdict}"
+        );
+    }
+
+    let stats = threadpool::stats();
+    let out = Json::obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("ncores", Json::num(ncores as f64)),
+        ("model", Json::str(model_name)),
+        ("decode8_kernel", Json::str(decode8_kernel_name())),
+        ("threads_swept", Json::arr_usize(&threads)),
+        ("rows", Json::Arr(rows_json)),
+        ("memcpy_roofline_gbps", Json::num(roof_gbps)),
+        ("best_model_gbps", Json::num(best_gbps)),
+        ("bandwidth_bound", Json::Bool(bandwidth_bound)),
+        ("scaling_verdict", Json::str(verdict)),
+        ("pool_jobs_dispatched", Json::num(stats.pool_jobs as f64)),
+        ("pool_workers_spawned", Json::num(stats.workers_spawned as f64)),
+    ]);
+    if std::fs::write("BENCH_parallel.json", out.emit()).is_ok() {
+        println!("\nwrote BENCH_parallel.json");
+    }
+}

@@ -182,21 +182,27 @@ pub fn memcpy_roofline_gbps(size: usize) -> f64 {
 }
 
 /// Multi-threaded memcpy roofline (saturates the memory controller the way
-/// the parallel matvec hot path does).
+/// the parallel matvec hot path does). Runs on the persistent worker pool,
+/// so it measures the same dispatch machinery — and honors the same
+/// `QUIPSHARP_THREADS` budget — as the decode kernels it is a ceiling for.
 pub fn memcpy_roofline_mt_gbps(size: usize) -> f64 {
     use crate::util::threadpool;
-    let nt = threadpool::num_threads();
     let src = vec![1u8; size];
     let mut dst = vec![0u8; size];
-    let chunk = size.div_ceil(nt);
     let res = Bench::new("memcpy-mt")
         .bytes(2 * size as u64)
         .budget(Duration::from_millis(300))
         .run(|| {
-            std::thread::scope(|s| {
-                for (d, sl) in dst.chunks_mut(chunk).zip(src.chunks(chunk)) {
-                    s.spawn(move || d.copy_from_slice(black_box(sl)));
-                }
+            let dst_addr = dst.as_mut_ptr() as usize;
+            threadpool::par_chunks(size, |start, end| {
+                // SAFETY: par_chunks hands out disjoint [start, end)
+                // ranges and blocks until every chunk completes, so each
+                // byte of `dst` has exactly one writer and the borrow
+                // outlives the dispatch barrier.
+                let d = unsafe {
+                    std::slice::from_raw_parts_mut((dst_addr as *mut u8).add(start), end - start)
+                };
+                d.copy_from_slice(black_box(&src[start..end]));
             });
             black_box(dst[size / 2])
         });

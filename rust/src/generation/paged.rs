@@ -33,11 +33,15 @@
 //!   whose page tables alias the same pool pages load each K/V block
 //!   once per step instead of once per sequence.
 //!
-//! Per-sequence state is independent and every sequence still meets
-//! its blocks in ascending order, so the fused walk executes the
+//! The fused walk additionally shards across the persistent worker
+//! pool by **whole lane groups** (lanes sorted by first physical block
+//! so forked siblings stay in one group; see the sharding notes on
+//! [`fused_batch_attention`] for why per-lane block ranges are never
+//! split). Per-sequence state is independent and every sequence still
+//! meets its blocks in ascending order, so the fused walk executes the
 //! identical per-sequence floating-point ops as [`blocked_attention`]
-//! — the two kernels are bit-exact (see the bit-exactness notes on
-//! [`fused_batch_attention`]). The contiguous
+//! — the two kernels are bit-exact at any thread count (see the
+//! bit-exactness notes on [`fused_batch_attention`]). The contiguous
 //! [`crate::generation::KvCache`] path drives the same kernels over
 //! [`PAGE_ROWS`]-sized slices of its slab, which keeps paged and
 //! contiguous decode bit-exact (same floating-point operation order).
@@ -76,6 +80,7 @@
 //!   failed grow leaves the sequence exactly as it was.
 
 use crate::model::{Model, ModelConfig};
+use crate::util::threadpool;
 
 /// Token rows per KV page. Equal to the contiguous cache's growth slab
 /// so the blocked attention traversal covers identical row ranges in
@@ -620,6 +625,22 @@ pub struct AttnLane<'a> {
 /// `(lane, blk)`, which degrades the walk to a plain per-block batch
 /// loop.
 ///
+/// # Parallel sharding
+///
+/// The walk shards **whole lanes** across the persistent worker pool
+/// ([`crate::util::threadpool`]): lanes are sorted by their first
+/// physical block key (so forked siblings whose tables alias the same
+/// pages stay in one group and keep their shared blocks cache-hot),
+/// cut into contiguous near-equal-work groups, and each group runs the
+/// full serial walk with group-local state. Splitting one lane's block
+/// range across workers was rejected deliberately: merging flash
+/// partials (`out₁·exp(m₁−m) + out₂·exp(m₂−m)`) performs different
+/// rescale sequences than the serial walk and is therefore *not*
+/// bit-exact — whole-lane sharding keeps every lane's op sequence
+/// untouched, so results are bitwise identical at any thread count.
+/// Below [`crate::util::threadpool::PAR_MIN_WORK`] (and always at
+/// B = 1) the walk stays on the calling thread.
+///
 /// # Bit-exactness
 ///
 /// Per-lane state (running max `m`, normalizer `l`, unnormalized
@@ -638,37 +659,110 @@ pub struct AttnLane<'a> {
 /// shared-prefix decode bit-identical in turn.
 pub fn fused_batch_attention<'a, F>(lanes: &mut [AttnLane<'_>], heads: usize, hd: usize, blocks: F)
 where
-    F: Fn(usize, usize) -> (u64, &'a [f32], &'a [f32]),
+    F: Fn(usize, usize) -> (u64, &'a [f32], &'a [f32]) + Sync,
 {
     let d = heads * hd;
-    let scale = 1.0 / (hd as f32).sqrt();
     let bsz = lanes.len();
-    let mut run_max = vec![f32::NEG_INFINITY; bsz * heads];
-    let mut run_sum = vec![0.0f32; bsz * heads];
-    let mut max_blocks = 0usize;
+    if bsz == 0 {
+        return;
+    }
+    let mut total_rows = 0usize;
     for lane in lanes.iter_mut() {
         debug_assert_eq!(lane.q.len(), d);
         debug_assert_eq!(lane.out.len(), d);
         lane.out.fill(0.0);
+        total_rows += lane.pos + 1;
+    }
+    // Group lanes by their first physical block so aliased tables
+    // (forked siblings) share one worker's cache.
+    let mut ids: Vec<usize> = (0..bsz).collect();
+    let first_key: Vec<u64> = (0..bsz).map(|b| blocks(b, 0).0).collect();
+    ids.sort_unstable_by_key(|&b| (first_key[b], b));
+    // ~2·d flops per KV row (scores + weighted sum); stay serial below
+    // the dispatch threshold. Group boundaries never affect values
+    // (per-lane state is independent), only which thread runs a lane.
+    let nt = if 2 * total_rows * d < threadpool::PAR_MIN_WORK {
+        1
+    } else {
+        threadpool::num_threads()
+    };
+    let n_groups = nt.min(bsz).max(1);
+    // Cut the sorted lane list into contiguous groups of near-equal row
+    // count (lane cost is proportional to its rows).
+    let mut bounds = Vec::with_capacity(n_groups + 1);
+    bounds.push(0usize);
+    let mut acc = 0usize;
+    let mut cut = 1usize;
+    for (i, &b) in ids.iter().enumerate() {
+        acc += lanes[b].pos + 1;
+        while cut < n_groups && acc * n_groups >= cut * total_rows {
+            bounds.push(i + 1);
+            cut += 1;
+        }
+    }
+    while bounds.len() < n_groups + 1 {
+        bounds.push(bsz);
+    }
+    let shared = LanesPtr(lanes.as_mut_ptr());
+    threadpool::par_tasks(n_groups, |g| {
+        let group = &ids[bounds[g]..bounds[g + 1]];
+        fused_walk(&shared, group, heads, hd, &blocks);
+    });
+}
+
+/// Raw-pointer courier handing disjoint lane subsets of one
+/// [`fused_batch_attention`] dispatch to pool workers.
+struct LanesPtr<'l>(*mut AttnLane<'l>);
+// SAFETY: each worker dereferences only the lanes of the group it
+// claimed, and groups partition the lane indices — no `&mut` aliases.
+unsafe impl Send for LanesPtr<'_> {}
+unsafe impl Sync for LanesPtr<'_> {}
+
+/// The fused block walk restricted to one lane group — exactly the
+/// serial kernel over `group`'s lanes, with group-local running state,
+/// so disjoint groups can run concurrently without sharing anything.
+/// `group` holds indices into the dispatch's lane array; within the
+/// group, lanes are visited in ascending `(key, lane)` order per block
+/// index, exactly as the single-group (serial) walk would visit them.
+fn fused_walk<'l, 'a, F>(lanes: &LanesPtr<'l>, group: &[usize], heads: usize, hd: usize, blocks: &F)
+where
+    F: Fn(usize, usize) -> (u64, &'a [f32], &'a [f32]) + Sync,
+{
+    if group.is_empty() {
+        return;
+    }
+    let d = heads * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let glen = group.len();
+    let mut run_max = vec![f32::NEG_INFINITY; glen * heads];
+    let mut run_sum = vec![0.0f32; glen * heads];
+    let mut max_blocks = 0usize;
+    for &b in group {
+        // SAFETY: lane `b` belongs to this group alone (groups partition
+        // the indices) and the dispatch barrier keeps the array alive.
+        let lane = unsafe { &*lanes.0.add(b) };
         max_blocks = max_blocks.max((lane.pos + 1).div_ceil(PAGE_ROWS));
     }
     // Scores scratch for one (lane, block) visit: head-major so each
     // head's row slice is contiguous for the rescale/AV passes.
     let mut scores = vec![0.0f32; heads * PAGE_ROWS];
-    let mut order: Vec<(u64, usize, &'a [f32], &'a [f32])> = Vec::with_capacity(bsz);
+    let mut order: Vec<(u64, usize, usize, &'a [f32], &'a [f32])> = Vec::with_capacity(glen);
     for blk in 0..max_blocks {
         // Lanes still attending at this block index, grouped by
         // physical block so aliased pages are walked while cache-hot.
         order.clear();
-        for (b, lane) in lanes.iter().enumerate() {
+        for (li, &b) in group.iter().enumerate() {
+            // SAFETY: as above — exclusive access to this group's lanes.
+            let lane = unsafe { &*lanes.0.add(b) };
             if blk * PAGE_ROWS <= lane.pos {
                 let (key, kb, vb) = blocks(b, blk);
-                order.push((key, b, kb, vb));
+                order.push((key, b, li, kb, vb));
             }
         }
-        order.sort_unstable_by_key(|&(key, b, _, _)| (key, b));
-        for &(_, b, kb, vb) in order.iter() {
-            let lane = &mut lanes[b];
+        order.sort_unstable_by_key(|&(key, b, ..)| (key, b));
+        for &(_, b, li, kb, vb) in order.iter() {
+            // SAFETY: as above — exclusive access to this group's lanes.
+            let lane = unsafe { &mut *lanes.0.add(b) };
             let rows = (lane.pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
             debug_assert!(kb.len() >= rows * d && vb.len() >= rows * d);
             // Scores row-outer: each K row (contiguous d floats) is
@@ -689,13 +783,13 @@ where
                 for &s in &scores[h * PAGE_ROWS..h * PAGE_ROWS + rows] {
                     blk_max = blk_max.max(s);
                 }
-                if blk_max > run_max[b * heads + h] {
+                if blk_max > run_max[li * heads + h] {
                     // First block: exp(-inf - finite) = 0 zeroes the
                     // (already zero) state, as in the per-seq kernel.
-                    let c = (run_max[b * heads + h] - blk_max).exp();
-                    run_sum[b * heads + h] *= c;
+                    let c = (run_max[li * heads + h] - blk_max).exp();
+                    run_sum[li * heads + h] *= c;
                     rescale_chunked(c, &mut lane.out[h * hd..(h + 1) * hd]);
-                    run_max[b * heads + h] = blk_max;
+                    run_max[li * heads + h] = blk_max;
                 }
             }
             // Weighted sum row-outer: each V row is streamed once; for
@@ -704,17 +798,19 @@ where
             for r in 0..rows {
                 let vr = &vb[r * d..(r + 1) * d];
                 for h in 0..heads {
-                    let p = (scores[h * PAGE_ROWS + r] - run_max[b * heads + h]).exp();
-                    run_sum[b * heads + h] += p;
+                    let p = (scores[h * PAGE_ROWS + r] - run_max[li * heads + h]).exp();
+                    run_sum[li * heads + h] += p;
                     let oh = &mut lane.out[h * hd..(h + 1) * hd];
                     axpy_chunked(p, &vr[h * hd..(h + 1) * hd], oh);
                 }
             }
         }
     }
-    for (b, lane) in lanes.iter_mut().enumerate() {
+    for (li, &b) in group.iter().enumerate() {
+        // SAFETY: as above — exclusive access to this group's lanes.
+        let lane = unsafe { &mut *lanes.0.add(b) };
         for h in 0..heads {
-            let inv = 1.0 / run_sum[b * heads + h];
+            let inv = 1.0 / run_sum[li * heads + h];
             rescale_chunked(inv, &mut lane.out[h * hd..(h + 1) * hd]);
         }
     }
@@ -1279,6 +1375,66 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The parallel lane-group sharding must be bitwise invariant across
+    /// thread counts — including an oversubscribed non-power-of-two count
+    /// that exercises uneven group cuts.
+    #[test]
+    fn fused_attention_bitwise_invariant_across_thread_counts() {
+        // Large enough that 2·total_rows·d clears PAR_MIN_WORK, so the
+        // nt > 1 runs really take the parallel sharding path.
+        let (heads, hd) = (4usize, 16usize);
+        let d = heads * hd;
+        let bsz = 8usize;
+        let mut rng = crate::util::rng::Pcg64::new(11);
+        // Unequal lengths; buffers padded to whole blocks.
+        let lens: Vec<usize> = (0..bsz).map(|b| 1 + (b * 37) % (3 * PAGE_ROWS)).collect();
+        let kbuf: Vec<Vec<f32>> = lens
+            .iter()
+            .map(|&l| rng.gaussian_vec(l.div_ceil(PAGE_ROWS) * PAGE_ROWS * d, 1.0))
+            .collect();
+        let vbuf: Vec<Vec<f32>> = lens
+            .iter()
+            .map(|&l| rng.gaussian_vec(l.div_ceil(PAGE_ROWS) * PAGE_ROWS * d, 1.0))
+            .collect();
+        let q = rng.gaussian_vec(bsz * d, 1.0);
+        let run = |nt: usize| {
+            crate::util::threadpool::with_threads(nt, || {
+                let mut out = vec![0.0f32; bsz * d];
+                let mut lanes: Vec<AttnLane> = out
+                    .chunks_exact_mut(d)
+                    .enumerate()
+                    .map(|(b, ob)| AttnLane {
+                        q: &q[b * d..(b + 1) * d],
+                        out: ob,
+                        pos: lens[b] - 1,
+                    })
+                    .collect();
+                fused_batch_attention(&mut lanes, heads, hd, |b, blk| {
+                    let lo = blk * PAGE_ROWS * d;
+                    (
+                        ((b as u64) << 32) | blk as u64,
+                        &kbuf[b][lo..lo + PAGE_ROWS * d],
+                        &vbuf[b][lo..lo + PAGE_ROWS * d],
+                    )
+                });
+                drop(lanes);
+                out
+            })
+        };
+        let want = run(1);
+        for nt in [2usize, 7] {
+            let got = run(nt);
+            for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "thread count {nt} lane {} coord {}: {x} vs {y}",
+                    i / d,
+                    i % d
+                );
+            }
+        }
     }
 
     #[test]

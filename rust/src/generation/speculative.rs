@@ -46,6 +46,13 @@
 //! `speculate_k`); [`Speculator::generate`] is the offline
 //! contiguous-KV form, and `benches/bench_speculative.rs` sweeps
 //! k × batch into `BENCH_speculative.json`.
+//!
+//! Draft and verify steps are plain batched decode calls, so both ride
+//! the persistent worker pool ([`crate::util::threadpool`]) — the
+//! chunked verify in particular parallelizes well, since all `k + 1`
+//! positions of every lane form one wide batch. Thread count never
+//! changes any emitted token or logit (`rust/tests/parallel.rs` pins a
+//! full round at {1, 2, 7} threads).
 
 use super::paged::{KvPagePool, PagedKv};
 use super::{argmax, Generator, KvCache};

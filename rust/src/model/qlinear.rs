@@ -33,6 +33,13 @@
 //! * **Sign application is chunked, not branched.** `decode8`'s sign
 //!   loop runs over fixed-width slices for autovectorization, with
 //!   `decode8_scalar` kept as the bit-parity oracle over all 2¹⁶ codes.
+//!   [`decode8_fast`] upgrades it to an AVX2 sign-LUT kernel when the CPU
+//!   supports it (runtime-detected, scalar fallback, still bit-exact).
+//! * **Parallel sharding is by whole output rows.** The kernels shard
+//!   L2-sized row tiles across the persistent worker pool
+//!   ([`crate::util::threadpool`]); each row has exactly one writer and
+//!   its accumulation order is fixed, so results are bit-identical at any
+//!   `QUIPSHARP_THREADS`, including 1.
 
 use std::sync::{Arc, OnceLock};
 
@@ -46,6 +53,11 @@ pub struct E8PTables {
     pub abs: Vec<f32>,
     /// `parity[i]` = 1 when an odd number of sign flips is required.
     pub parity: [u8; 256],
+    /// 256 × 8 precomputed sign masks indexed by the resolved 8-bit sign
+    /// pattern (`full_bits`): entry `[bits·8 + j] = ((bits >> j) & 1) << 31`.
+    /// The SIMD decode path XORs one row of this table against the abs row
+    /// in a single vector op instead of materializing masks per codeword.
+    pub sign_masks: Vec<u32>,
 }
 
 static SHARED_TABLES: OnceLock<E8PTables> = OnceLock::new();
@@ -58,7 +70,17 @@ impl E8PTables {
         for (i, &p) in cb.parity_table().iter().enumerate() {
             parity[i] = p;
         }
-        E8PTables { abs, parity }
+        let mut sign_masks = vec![0u32; 256 * 8];
+        for bits in 0..256usize {
+            for j in 0..8 {
+                sign_masks[bits * 8 + j] = (((bits >> j) & 1) as u32) << 31;
+            }
+        }
+        E8PTables {
+            abs,
+            parity,
+            sign_masks,
+        }
     }
 
     /// Process-wide shared tables: the 8 KiB LUT is identical for every
@@ -122,9 +144,97 @@ pub fn decode8_scalar(tables: &E8PTables, code: u16, out: &mut [f32]) {
     }
 }
 
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    //! AVX2 `decode8` specialization: the abs row and the precomputed
+    //! sign-mask row ([`E8PTables::sign_masks`]) are loaded as one 8-lane
+    //! vector each, signs applied with a single XOR and the grid shift with
+    //! a single broadcast add — the CPU analogue of the paper kernel's
+    //! shuffle-based sign application. Every FP operation (bitwise XOR,
+    //! one round-to-nearest add per lane) is identical to the scalar loop,
+    //! so the result is bit-exact with [`super::decode8`].
+
+    use super::E8PTables;
+
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 support at runtime and `out.len() ≥ 8`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decode8_avx2(tables: &E8PTables, code: u16, out: &mut [f32]) {
+        use std::arch::x86_64::*;
+        let s_idx = (code & 0xff) as usize;
+        let sign_bits = ((code >> 8) & 0x7f) as u32;
+        let shift = if code & 0x8000 != 0 { 0.25f32 } else { -0.25f32 };
+        let parity = tables.parity[s_idx] as u32;
+        let flip7 = (sign_bits.count_ones() & 1) ^ parity;
+        let full_bits = (sign_bits | (flip7 << 7)) as usize;
+        let abs = _mm256_loadu_ps(tables.abs.as_ptr().add(s_idx * 8));
+        let masks =
+            _mm256_loadu_si256(tables.sign_masks.as_ptr().add(full_bits * 8) as *const __m256i);
+        let signed = _mm256_xor_ps(abs, _mm256_castsi256_ps(masks));
+        let dec = _mm256_add_ps(signed, _mm256_set1_ps(shift));
+        _mm256_storeu_ps(out.as_mut_ptr(), dec);
+    }
+}
+
+/// One-shot runtime feature check for the SIMD decode path. Set
+/// `QUIPSHARP_NO_SIMD=1` (before first decode) to force the chunked scalar
+/// loop, e.g. for kernel A/B benchmarking.
+#[cfg(target_arch = "x86_64")]
+fn decode8_use_avx2() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static STATE: AtomicU8 = AtomicU8::new(0); // 0 = unknown, 1 = no, 2 = yes
+    match STATE.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let yes = std::env::var_os("QUIPSHARP_NO_SIMD").is_none()
+                && is_x86_feature_detected!("avx2");
+            STATE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// Name of the decode kernel [`decode8_fast`] dispatches to on this
+/// machine, for bench metadata.
+pub fn decode8_kernel_name() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if decode8_use_avx2() {
+            return "avx2-sign-lut";
+        }
+    }
+    "scalar-chunked"
+}
+
+/// Decode one codeword with the best kernel available: the AVX2 sign-LUT
+/// specialization when the CPU supports it (detected once at runtime),
+/// falling back to the chunked autovectorized loop ([`decode8`]). Both
+/// paths are bit-exact with [`decode8_scalar`]. `out` must have length ≥ 8.
+#[inline(always)]
+pub fn decode8_fast(tables: &E8PTables, code: u16, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if decode8_use_avx2() {
+            assert!(out.len() >= 8);
+            // SAFETY: AVX2 verified by `decode8_use_avx2`; length checked.
+            unsafe { simd::decode8_avx2(tables, code, out) };
+            return;
+        }
+    }
+    decode8(tables, code, out);
+}
+
 /// Batch lanes processed per decode: codewords are decoded once per tile,
 /// so any batch up to this width pays exactly one decode per codeword.
 pub const BATCH_TILE: usize = 16;
+
+/// Row-tile payload budget for the parallel decode kernels: each stolen
+/// tile's packed codes span at most this many bytes, so one tile's code
+/// stream stays L2-resident while its rows are decoded and re-walked per
+/// RVQ stage.
+const TILE_CODE_BYTES: usize = 256 << 10;
 
 /// A packed E8P weight matrix ready for the serving hot path.
 pub struct QuantMatvec {
@@ -281,20 +391,27 @@ impl QuantMatvec {
             .zip(self.stage_scales.iter().copied())
             .collect();
         // ~n·B flops per output row (decode + B dots); serial below the
-        // spawn-amortization threshold.
+        // dispatch-amortization threshold. Parallel dispatch claims
+        // multi-row tiles sized so each tile's packed codes fit in L2
+        // (capped so every pool participant still gets several tiles to
+        // steal). Tile geometry never affects values: one writer per row.
         let work = self.n * stages.len() * batch;
+        let row_code_bytes = stages.len() * nb * 2;
+        let tile_rows = (TILE_CODE_BYTES / row_code_bytes.max(1))
+            .min(self.m.div_ceil(4 * threadpool::num_threads()))
+            .max(1);
         if batch == 1 {
             // Single-lane kernel (decode_one hot path). Accumulation
             // order matches the tiled path at bw = 1, keeping batched
             // and sequential decode bit-identical.
-            threadpool::par_rows_work(z, 1, work, |i, zi| {
+            threadpool::par_row_tiles_work(z, 1, tile_rows, work, |i, zi| {
                 zi[0] = 0.0;
                 for (codes, scale) in &stages {
                     let row = &codes[i * nb..(i + 1) * nb];
                     let mut acc = 0.0f32;
                     let mut dec = [0.0f32; 8];
                     for (kb, &code) in row.iter().enumerate() {
-                        decode8(tables, code, &mut dec);
+                        decode8_fast(tables, code, &mut dec);
                         let ub = &ut[kb * 8..kb * 8 + 8];
                         for j in 0..8 {
                             acc += dec[j] * ub[j];
@@ -305,7 +422,7 @@ impl QuantMatvec {
             });
             return;
         }
-        threadpool::par_rows_work(z, batch, work, |i, zrow| {
+        threadpool::par_row_tiles_work(z, batch, tile_rows, work, |i, zrow| {
             for zv in zrow.iter_mut() {
                 *zv = 0.0;
             }
@@ -317,7 +434,7 @@ impl QuantMatvec {
                     let mut acc = [0.0f32; BATCH_TILE];
                     let mut dec = [0.0f32; 8];
                     for (kb, &code) in row.iter().enumerate() {
-                        decode8(tables, code, &mut dec);
+                        decode8_fast(tables, code, &mut dec);
                         let base = kb * 8 * batch + b0;
                         for (j, &w) in dec.iter().enumerate() {
                             let urow = &ut[base + j * batch..base + j * batch + bw];
@@ -504,6 +621,60 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn decode8_fast_bit_exact_with_chunked() {
+        // The runtime-dispatched kernel (AVX2 sign-LUT where available,
+        // chunked loop otherwise) must match `decode8` bit-for-bit over
+        // the entire 16-bit code space.
+        let tables = E8PTables::new();
+        let mut fast = [0.0f32; 8];
+        let mut base = [0.0f32; 8];
+        for code in 0..=u16::MAX {
+            decode8_fast(&tables, code, &mut fast);
+            decode8(&tables, code, &mut base);
+            for j in 0..8 {
+                assert!(
+                    fast[j].to_bits() == base[j].to_bits(),
+                    "kernel {} code {code:#06x} coord {j}: {} vs {}",
+                    decode8_kernel_name(),
+                    fast[j],
+                    base[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn b1_matvec_dispatches_to_pool_at_realistic_shape() {
+        // Regression for the PAR_MIN_WORK tuning: a B = 1 quantized matvec
+        // at a realistic layer shape (d = 256) must go parallel — the old
+        // 1<<19 threshold kept it serial on any machine.
+        let (m, n) = (256usize, 256);
+        let nb = n / 8;
+        let mut rng = Pcg64::new(9);
+        let codes: Vec<u16> = (0..m * nb).map(|_| (rng.next_u64() & 0xffff) as u16).collect();
+        let qm = QuantMatvec {
+            m,
+            n,
+            stage_codes: Arc::new(vec![codes]),
+            stage_scales: vec![1.0],
+            active_stages: 1,
+            su: vec![1.0; m],
+            sv: vec![1.0; n],
+            tables: E8PTables::shared(),
+        };
+        let x: Vec<f32> = rng.gaussian_vec(n, 1.0);
+        threadpool::with_threads(2, || {
+            let before = threadpool::stats().pool_jobs;
+            let mut y = vec![0.0f32; m];
+            qm.matvec(&x, &mut y);
+            assert!(
+                threadpool::stats().pool_jobs > before,
+                "B=1 decode matvec stayed serial at a realistic layer shape"
+            );
+        });
     }
 
     #[test]

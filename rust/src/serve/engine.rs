@@ -37,6 +37,13 @@
 //!      their requests.
 //! Requests join/leave at step boundaries — continuous batching.
 //!
+//! Every decode, prefill, and verify step above is a batched
+//! `Generator::decode_*` call, so the scheduler inherits the persistent
+//! worker pool ([`crate::util::threadpool`]) transparently: the matmul
+//! row tiles and the fused attention lane groups of each step fan out
+//! across `QUIPSHARP_THREADS` cores below this layer, bit-exactly, with
+//! no engine-level threading logic.
+//!
 //! Preemption ordering invariants: the youngest admission is always the
 //! victim (the oldest sequence keeps making progress, so the batch never
 //! livelocks), an already-finished sequence is retired in preference to

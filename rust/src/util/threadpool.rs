@@ -1,18 +1,150 @@
-//! Data-parallel helpers over `std::thread::scope` (rayon is not in the
-//! offline crate set). Quantization parallelizes over weight-matrix rows /
-//! layers; the serving hot path parallelizes matvec rows.
+//! Persistent data-parallel worker pool (rayon is not in the offline crate
+//! set, so this is hand-rolled on `std::sync`).
+//!
+//! # Why a persistent pool
+//!
+//! Earlier revisions spawned fresh OS threads via `std::thread::scope` on
+//! every parallel call. A decode step issues dozens of matvecs per layer per
+//! token, so spawn cost (~10–50 µs each) dominated the small kernels and
+//! forced a high [`PAR_MIN_WORK`] threshold that kept B=1 decode serial.
+//! This module instead keeps N long-lived workers parked on a condvar and
+//! hands them jobs by bumping an epoch counter: dispatch costs one mutex
+//! round-trip plus a condvar wakeup (~1 µs), so even small decode matvecs
+//! are worth sharding.
+//!
+//! # Execution model
+//!
+//! A *job* is a closure over chunk indices `0..n_chunks` plus an atomic
+//! cursor. Every participant — the parked workers *and the calling thread* —
+//! claims chunks with `fetch_add` (work stealing) until the cursor runs off
+//! the end, then the caller blocks on a per-job condvar until the completed
+//! count reaches `n_chunks` (caller-participates barrier). Workers never
+//! exit; after a job they re-park on the pool condvar.
+//!
+//! Jobs may nest: a chunk body may itself dispatch a job. The inner caller
+//! participates in and fully drains its own job, so progress never depends
+//! on workers that are busy with the outer job.
+//!
+//! # Determinism / bit-exactness
+//!
+//! Chunk *claiming* is racy, but every chunk index is claimed by exactly one
+//! participant and the helpers below map chunks to disjoint output regions
+//! (one writer per row). Each row's value depends only on its row index,
+//! never on which thread ran it or on the thread count — so results are
+//! bitwise identical at any `QUIPSHARP_THREADS`, including 1.
+//!
+//! # Thread-count semantics
+//!
+//! `QUIPSHARP_THREADS` is read **once**, when the pool is first touched;
+//! later changes to the environment variable are ignored (the old
+//! implementation silently memoized it in an `AtomicUsize`, which made
+//! tests that set the variable after startup no-ops — that one-shot
+//! behaviour is now explicit and documented here). To change the thread
+//! budget at runtime use [`set_num_threads`]; tests should prefer
+//! [`with_threads`], which serializes on a global lock and restores the
+//! previous value.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Number of worker threads to use: `QUIPSHARP_THREADS` env override, else
-/// available parallelism, clamped to at least 1.
-pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let c = CACHED.load(Ordering::Relaxed);
-    if c != 0 {
-        return c;
+// ---------------------------------------------------------------------------
+// Job: one data-parallel dispatch.
+// ---------------------------------------------------------------------------
+
+/// One dispatched job. `task` is a lifetime-erased pointer into the calling
+/// frame; it is only dereferenced for *claimed* chunk indices, and the caller
+/// blocks inside [`run_job`] until `completed == n_chunks`, so the pointee
+/// outlives every dereference. Late-waking workers that find the cursor
+/// exhausted touch only the atomics, never `task`.
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    n_chunks: usize,
+    /// Work-stealing cursor: next unclaimed chunk index.
+    next: AtomicUsize,
+    /// Chunks fully executed. The last finisher flips `done`.
+    completed: AtomicUsize,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+    /// First panic payload from any chunk, rethrown by the caller.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// SAFETY: `task` is `Sync` (shared-call safe) and the barrier in `run_job`
+// guarantees it is not dereferenced after the caller's frame unwinds.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and execute chunks until the cursor is exhausted. Panics in the
+    /// task are caught so the completion count always reaches `n_chunks`
+    /// (otherwise the caller would block forever); the first payload is
+    /// stashed and rethrown by the dispatching thread.
+    fn run(&self) {
+        loop {
+            let c = self.next.fetch_add(1, Ordering::Relaxed);
+            if c >= self.n_chunks {
+                return;
+            }
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // SAFETY: chunk `c` was claimed exactly once and the caller
+                // keeps the pointee alive until the completion barrier.
+                unsafe { (*self.task)(c) }
+            }));
+            if let Err(p) = r {
+                let mut slot = self.panic.lock().unwrap_or_else(|e| e.into_inner());
+                slot.get_or_insert(p);
+            }
+            // AcqRel: chains every participant's row writes into a release
+            // sequence, so the final count (and the mutex handoff below)
+            // publishes all output writes to the caller.
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.n_chunks {
+                let mut g = self.done.lock().unwrap_or_else(|e| e.into_inner());
+                *g = true;
+                self.done_cv.notify_all();
+            }
+        }
     }
-    let n = std::env::var("QUIPSHARP_THREADS")
+
+    fn wait(&self) {
+        let mut g = self.done.lock().unwrap_or_else(|e| e.into_inner());
+        while !*g {
+            g = self.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pool: long-lived workers parked on a condvar.
+// ---------------------------------------------------------------------------
+
+struct PoolState {
+    /// Current (or most recent) job; cleared by its caller after the barrier.
+    job: Option<Arc<Job>>,
+    /// Bumped on every dispatch; workers compare against their last-seen
+    /// value, so notify-while-busy can never lose a wakeup.
+    epoch: u64,
+    /// Workers with `id < participants` join the current epoch's job.
+    participants: usize,
+    /// Worker threads spawned so far (grown lazily, never shrunk).
+    spawned: usize,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    wake: Condvar,
+    /// Current thread budget (callers + workers); see [`set_num_threads`].
+    active: AtomicUsize,
+    /// Stats: parallel jobs dispatched to the pool (serial fallbacks do not
+    /// count). Used by regression tests to prove a path went parallel.
+    jobs: AtomicUsize,
+    /// Stats: mirrors `PoolState::spawned` for lock-free reads. The stress
+    /// test pins this flat across thousands of jobs — the property the old
+    /// spawn-per-call helpers lacked.
+    spawned: AtomicUsize,
+}
+
+fn env_threads() -> usize {
+    std::env::var("QUIPSHARP_THREADS")
         .ok()
         .and_then(|s| s.parse::<usize>().ok())
         .filter(|&n| n >= 1)
@@ -20,14 +152,194 @@ pub fn num_threads() -> usize {
             std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1)
-        });
-    CACHED.store(n, Ordering::Relaxed);
-    n
+        })
 }
 
-/// Run `f(start, end)` over disjoint contiguous chunks of `0..len` on up to
-/// `num_threads()` scoped threads. Blocks until all chunks finish. `f` must
-/// be `Sync` because it is shared by reference across threads.
+fn pool() -> &'static Arc<PoolInner> {
+    static POOL: OnceLock<Arc<PoolInner>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        Arc::new(PoolInner {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                participants: 0,
+                spawned: 0,
+            }),
+            wake: Condvar::new(),
+            active: AtomicUsize::new(env_threads()),
+            jobs: AtomicUsize::new(0),
+            spawned: AtomicUsize::new(0),
+        })
+    })
+}
+
+fn worker_loop(inner: Arc<PoolInner>, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if id < st.participants {
+                        break st.job.clone();
+                    }
+                    break None;
+                }
+                st = inner.wake.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        if let Some(job) = job {
+            job.run();
+        }
+    }
+}
+
+/// Spawn workers up to `want` (callers hold the state lock). Workers park
+/// immediately and live for the rest of the process.
+fn ensure_spawned(st: &mut PoolState, inner: &Arc<PoolInner>, want: usize) {
+    while st.spawned < want {
+        let id = st.spawned;
+        let inner2 = Arc::clone(inner);
+        std::thread::Builder::new()
+            .name(format!("quipsharp-pool-{id}"))
+            .spawn(move || worker_loop(inner2, id))
+            .expect("failed to spawn pool worker");
+        st.spawned += 1;
+    }
+    inner.spawned.store(st.spawned, Ordering::Relaxed);
+}
+
+/// Dispatch `f` over chunk indices `0..n_chunks` across the pool, with the
+/// calling thread participating, and block until every chunk has executed.
+/// Runs serially inline when the thread budget or chunk count is 1.
+fn run_job(n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n_chunks == 0 {
+        return;
+    }
+    let budget = num_threads();
+    let workers = budget.saturating_sub(1).min(n_chunks - 1);
+    if workers == 0 {
+        for c in 0..n_chunks {
+            f(c);
+        }
+        return;
+    }
+    let inner = pool();
+    let job = Arc::new(Job {
+        task: f as *const (dyn Fn(usize) + Sync),
+        n_chunks,
+        next: AtomicUsize::new(0),
+        completed: AtomicUsize::new(0),
+        done: Mutex::new(false),
+        done_cv: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    {
+        let mut st = inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        ensure_spawned(&mut st, inner, workers);
+        st.job = Some(Arc::clone(&job));
+        st.participants = workers;
+        st.epoch = st.epoch.wrapping_add(1);
+        inner.jobs.fetch_add(1, Ordering::Relaxed);
+    }
+    inner.wake.notify_all();
+    job.run(); // caller participates in its own job
+    job.wait();
+    {
+        // Detach so parked workers drop their reference promptly. A nested
+        // or subsequent dispatch may already have replaced it — only clear
+        // our own job.
+        let mut st = inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(cur) = &st.job {
+            if Arc::ptr_eq(cur, &job) {
+                st.job = None;
+            }
+        }
+    }
+    let payload = job.panic.lock().unwrap_or_else(|e| e.into_inner()).take();
+    if let Some(p) = payload {
+        std::panic::resume_unwind(p);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-budget control.
+// ---------------------------------------------------------------------------
+
+/// Current thread budget (calling thread + pool workers). Initialized from
+/// `QUIPSHARP_THREADS` (else available parallelism) the first time the pool
+/// is touched; the environment variable is **not** re-read after that — use
+/// [`set_num_threads`] / [`with_threads`] to change it at runtime.
+pub fn num_threads() -> usize {
+    pool().active.load(Ordering::Relaxed).max(1)
+}
+
+/// Set the thread budget for subsequent parallel calls. Values are clamped
+/// to at least 1; values above the hardware core count are allowed (workers
+/// are spawned on demand), which tests use to exercise oversubscribed
+/// chunking. Existing workers are never torn down — a smaller budget just
+/// leaves the extras parked.
+pub fn set_num_threads(n: usize) {
+    pool().active.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Run `f` with the thread budget temporarily set to `n`, restoring the
+/// previous value afterwards (even on panic). Serialized on a global lock so
+/// concurrent tests cannot interleave budget changes.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_num_threads(self.0);
+        }
+    }
+    let _restore = Restore(num_threads());
+    set_num_threads(n);
+    f()
+}
+
+/// Pool observability counters, for benches and regression tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Parallel jobs dispatched to the pool since process start (serial
+    /// fallbacks excluded).
+    pub pool_jobs: usize,
+    /// Worker threads spawned since process start. Flat across steady-state
+    /// load — the whole point of the persistent pool.
+    pub workers_spawned: usize,
+}
+
+/// Snapshot the pool counters.
+pub fn stats() -> PoolStats {
+    let inner = pool();
+    PoolStats {
+        pool_jobs: inner.jobs.load(Ordering::Relaxed),
+        workers_spawned: inner.spawned.load(Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data-parallel helpers (public API unchanged from the scoped-thread era).
+// ---------------------------------------------------------------------------
+
+/// Raw-pointer courier for handing disjoint output regions to workers.
+struct SendPtr<T>(*mut T);
+// SAFETY: every helper below hands each index/row/tile to exactly one chunk,
+// and chunks are claimed exactly once — no aliased &mut ever exists.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Oversubscription factor: chunks per participant, so work stealing can
+/// rebalance when chunk costs are uneven.
+const CHUNKS_PER_THREAD: usize = 4;
+
+/// Run `f(start, end)` over disjoint contiguous chunks of `0..len`. Blocks
+/// until all chunks finish. `f` must be `Sync` because it is shared by
+/// reference across threads. Chunk boundaries depend on the thread budget —
+/// callers must not encode semantics in them.
 pub fn par_chunks<F>(len: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -37,22 +349,38 @@ where
         f(0, len);
         return;
     }
-    let chunk = len.div_ceil(nt);
-    std::thread::scope(|s| {
-        for t in 0..nt {
-            let start = t * chunk;
-            let end = ((t + 1) * chunk).min(len);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(start, end));
+    let n_chunks = (nt * CHUNKS_PER_THREAD).min(len);
+    let chunk = len.div_ceil(n_chunks);
+    let body = |c: usize| {
+        let start = c * chunk;
+        let end = ((c + 1) * chunk).min(len);
+        if start < end {
+            f(start, end);
         }
-    });
+    };
+    run_job(len.div_ceil(chunk), &body);
 }
 
-/// Parallel map over indices `0..len`, preserving order. Each worker owns a
-/// disjoint slice of the output vector.
+/// Run `f(i)` exactly once for every `i` in `0..n`, one task per stolen
+/// chunk. For few, coarse, pre-balanced tasks (e.g. attention lane groups)
+/// where the caller owns the partitioning.
+pub fn par_tasks<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let body = |c: usize| f(c);
+    run_job(n, &body);
+}
+
+/// Parallel map over indices `0..len`, preserving order. Each output slot
+/// has exactly one writer, so results are identical at any thread count.
 pub fn par_map<T, F>(len: usize, f: F) -> Vec<T>
 where
     T: Send + Default + Clone,
@@ -66,27 +394,33 @@ where
         }
         return out;
     }
-    let chunk = len.div_ceil(nt);
-    std::thread::scope(|s| {
-        for (t, block) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                for (off, slot) in block.iter_mut().enumerate() {
-                    *slot = f(t * chunk + off);
-                }
-            });
+    let n_chunks = (nt * CHUNKS_PER_THREAD).min(len);
+    let chunk = len.div_ceil(n_chunks);
+    let ptr = SendPtr(out.as_mut_ptr());
+    let body = |c: usize| {
+        let start = c * chunk;
+        let end = ((c + 1) * chunk).min(len);
+        for i in start..end {
+            // SAFETY: slot `i` belongs to chunk `c` alone; `out` outlives
+            // the dispatch barrier.
+            unsafe { *ptr.0.add(i) = f(i) };
         }
-    });
+    };
+    run_job(len.div_ceil(chunk), &body);
     out
 }
 
-/// Minimum useful work (in rough flop units) before spawning threads is
-/// worth it: scoped-thread spawn costs ~10–50 µs, i.e. ~10⁵ flops.
-pub const PAR_MIN_WORK: usize = 1 << 19;
+/// Minimum useful work (in rough flop units) before going parallel is worth
+/// it. Dispatch on the persistent pool costs ~1 µs of wakeup latency
+/// (vs ~10–50 µs per spawned thread before), i.e. a few thousand flops —
+/// `1 << 15` keeps a healthy margin while letting realistic B=1 decode
+/// matvecs (d·d ≥ 64²·8 work units) shard across cores.
+pub const PAR_MIN_WORK: usize = 1 << 15;
 
 /// [`par_rows`] with an explicit per-row work hint: runs serially when
-/// rows·work_per_row is below [`PAR_MIN_WORK`] — the generation hot path
-/// calls matvecs small enough that thread spawn would dominate.
+/// rows·work_per_row is below [`PAR_MIN_WORK`]. The threshold decision
+/// depends only on the shape, never on the thread count, so serial/parallel
+/// selection cannot introduce thread-count-dependent results.
 pub fn par_rows_work<T, F>(data: &mut [T], cols: usize, work_per_row: usize, f: F)
 where
     T: Send,
@@ -104,8 +438,8 @@ where
 }
 
 /// Parallel-for over rows of a mutable row-major matrix:
-/// `f(row_index, row_slice)`. This is the hot-path shape (matvec rows,
-/// per-row quantization).
+/// `f(row_index, row_slice)`. One writer per row — bit-exact by
+/// construction at any thread count.
 pub fn par_rows<T, F>(data: &mut [T], cols: usize, f: F)
 where
     T: Send,
@@ -114,23 +448,59 @@ where
     assert!(cols > 0 && data.len() % cols == 0);
     let rows = data.len() / cols;
     let nt = num_threads().min(rows.max(1));
-    if nt <= 1 {
+    let tile = rows.div_ceil((nt * CHUNKS_PER_THREAD).max(1)).max(1);
+    par_row_tiles(data, cols, tile, f);
+}
+
+/// [`par_row_tiles`] with a per-row work hint: serial below
+/// [`PAR_MIN_WORK`], like [`par_rows_work`].
+pub fn par_row_tiles_work<T, F>(data: &mut [T], cols: usize, tile_rows: usize, work: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(cols > 0 && data.len() % cols == 0);
+    let rows = data.len() / cols;
+    if rows.saturating_mul(work) < PAR_MIN_WORK {
         for (r, row) in data.chunks_mut(cols).enumerate() {
             f(r, row);
         }
         return;
     }
-    let rows_per = rows.div_ceil(nt);
-    std::thread::scope(|s| {
-        for (t, block) in data.chunks_mut(rows_per * cols).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                for (i, row) in block.chunks_mut(cols).enumerate() {
-                    f(t * rows_per + i, row);
-                }
-            });
+    par_row_tiles(data, cols, tile_rows, f);
+}
+
+/// [`par_rows`] with an explicit tile height: workers claim `tile_rows`-row
+/// tiles off the stealing cursor. Kernels with per-row payloads (e.g. packed
+/// code rows) pick a tile so one tile's payload fits in L2.
+pub fn par_row_tiles<T, F>(data: &mut [T], cols: usize, tile_rows: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(cols > 0 && data.len() % cols == 0);
+    assert!(tile_rows > 0);
+    let rows = data.len() / cols;
+    let nt = num_threads().min(rows.max(1));
+    if nt <= 1 || rows <= 1 {
+        for (r, row) in data.chunks_mut(cols).enumerate() {
+            f(r, row);
         }
-    });
+        return;
+    }
+    let n_tiles = rows.div_ceil(tile_rows);
+    let ptr = SendPtr(data.as_mut_ptr());
+    let body = |t: usize| {
+        let start = t * tile_rows;
+        let end = ((t + 1) * tile_rows).min(rows);
+        for r in start..end {
+            // SAFETY: row `r` lies in tile `t` alone; disjoint from every
+            // other chunk's rows, and `data` outlives the barrier.
+            let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r * cols), cols) };
+            f(r, row);
+        }
+    };
+    run_job(n_tiles, &body);
 }
 
 #[cfg(test)]
@@ -140,13 +510,15 @@ mod tests {
 
     #[test]
     fn par_chunks_covers_every_index_once() {
-        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
-        par_chunks(1000, |a, b| {
-            for i in a..b {
-                hits[i].fetch_add(1, Ordering::SeqCst);
-            }
+        with_threads(4, || {
+            let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+            par_chunks(1000, |a, b| {
+                for i in a..b {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
         });
-        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
     }
 
     #[test]
@@ -172,5 +544,104 @@ mod tests {
         for (r, row) in m.chunks(13).enumerate() {
             assert!(row.iter().all(|&v| v == r as f32));
         }
+    }
+
+    /// Results must be bitwise identical at every thread count, including
+    /// oversubscribed non-power-of-two counts that stress tile edges.
+    #[test]
+    fn helpers_invariant_across_thread_counts() {
+        let reference: Vec<u64> = (0..311).map(|i| (i as u64).wrapping_mul(0x9e37)).collect();
+        for nt in [1usize, 2, 3, 7] {
+            with_threads(nt, || {
+                let got = par_map(311, |i| (i as u64).wrapping_mul(0x9e37));
+                assert_eq!(got, reference, "par_map diverged at {nt} threads");
+
+                let mut m = vec![0u64; 311];
+                par_rows(&mut m, 1, |r, row| row[0] = (r as u64).wrapping_mul(0x9e37));
+                assert_eq!(m, reference, "par_rows diverged at {nt} threads");
+
+                let mut t = vec![0u64; 311];
+                par_row_tiles(&mut t, 1, 5, |r, row| {
+                    row[0] = (r as u64).wrapping_mul(0x9e37);
+                });
+                assert_eq!(t, reference, "par_row_tiles diverged at {nt} threads");
+            });
+        }
+    }
+
+    #[test]
+    fn set_num_threads_takes_effect() {
+        with_threads(3, || {
+            assert_eq!(num_threads(), 3);
+            set_num_threads(5);
+            assert_eq!(num_threads(), 5);
+        });
+    }
+
+    /// Many tiny jobs back-to-back must not spawn any new threads once the
+    /// pool is warm — this is the regression test that would have caught the
+    /// old spawn-per-call helpers (which spawned nt threads per job).
+    #[test]
+    fn stress_many_tiny_jobs_no_respawn() {
+        with_threads(4, || {
+            // Warm: first parallel job grows the pool to the budget.
+            let mut warm = vec![0.0f32; 64];
+            par_rows(&mut warm, 1, |r, row| row[0] = r as f32);
+            let before = stats();
+            assert!(before.workers_spawned >= 3);
+            let jobs = 5000usize;
+            let mut m = vec![0.0f32; 64 * 4];
+            for it in 0..jobs {
+                par_rows(&mut m, 4, |r, row| {
+                    for v in row.iter_mut() {
+                        *v = (r + it) as f32;
+                    }
+                });
+            }
+            let after = stats();
+            assert_eq!(
+                after.workers_spawned, before.workers_spawned,
+                "persistent pool must not respawn workers per job"
+            );
+            assert!(
+                after.pool_jobs >= before.pool_jobs + jobs,
+                "tiny jobs should still dispatch to the pool"
+            );
+        });
+    }
+
+    /// A panicking chunk must propagate to the caller without wedging the
+    /// pool for subsequent jobs.
+    #[test]
+    fn panic_in_chunk_propagates_and_pool_survives() {
+        with_threads(4, || {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut m = vec![0u32; 64];
+                par_rows(&mut m, 1, |r, row| {
+                    if r == 33 {
+                        panic!("boom");
+                    }
+                    row[0] = r as u32;
+                });
+            }));
+            assert!(r.is_err(), "worker panic must reach the caller");
+            // Pool still serviceable afterwards.
+            let got = par_map(100, |i| i + 1);
+            assert_eq!(got, (1..=100).collect::<Vec<_>>());
+        });
+    }
+
+    /// Nested dispatch (a chunk body issuing its own parallel job) must not
+    /// deadlock: the inner caller drains its own cursor.
+    #[test]
+    fn nested_jobs_complete() {
+        with_threads(4, || {
+            let outer = par_map(8, |i| {
+                let inner = par_map(16, move |j| i * 16 + j);
+                inner.iter().sum::<usize>()
+            });
+            let want: Vec<usize> = (0..8).map(|i| (0..16).map(|j| i * 16 + j).sum()).collect();
+            assert_eq!(outer, want);
+        });
     }
 }

@@ -1,0 +1,210 @@
+//! Cross-layer bitwise parity of pooled parallel execution against
+//! single-threaded execution.
+//!
+//! Every parallel kernel in the crate shards work so the floating-point
+//! op order behind each output element is independent of the thread
+//! count: the quantized/dense matmuls give each output row exactly one
+//! writer, and the fused attention walk shards whole lanes (a lane's
+//! block sequence is never split across workers). These tests pin that
+//! contract end to end — the same computation must produce bit-identical
+//! results at thread counts {1, 2, 7}; 7 is a deliberately awkward
+//! non-power-of-two that exercises uneven chunk splits and the
+//! lazy-spawn path past `available_parallelism`.
+//!
+//! Kernel-level parity lives next to the kernels
+//! (`qlinear::tests::decode8_fast_bit_exact_with_chunked`,
+//! `paged::tests::fused_attention_bitwise_invariant_across_thread_counts`,
+//! `threadpool::tests::helpers_invariant_across_thread_counts`); this
+//! file covers the composed paths: a raw quantized matmul, a full
+//! `decode_batch_paged` step over forked paged sequences, and a complete
+//! speculative draft/verify/rollback round.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use quipsharp::generation::paged::{pages_per_seq, PagedKv};
+use quipsharp::generation::speculative::{spec_round_paged, SpecLane, SpecStats};
+use quipsharp::model::qlinear::{E8PTables, QuantMatvec};
+use quipsharp::model::{Model, ModelConfig};
+use quipsharp::qmodel::{quantize_model, QuantizedModel};
+use quipsharp::quant::pipeline::Method;
+use quipsharp::util::rng::Pcg64;
+use quipsharp::util::threadpool;
+
+/// The swept thread counts. The first entry is the serial reference;
+/// each later count must reproduce it bit for bit.
+const THREADS: [usize; 3] = [1, 2, 7];
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Synthetic 4-bit (two-stage E8P) model on the small serving config.
+/// Identity Hessians: quantization quality is irrelevant to execution
+/// parity, and skipping calibration keeps the tests fast.
+fn build_qmodel(seed: u64) -> QuantizedModel {
+    let model = Model::random(ModelConfig::by_name("s").unwrap(), seed);
+    quantize_model(
+        &model,
+        &BTreeMap::new(),
+        &Method::QuipSharp { bits: 4, ft: false },
+        7,
+    )
+    .unwrap()
+}
+
+/// A standalone quantized layer with random codes and sign vectors,
+/// large enough that the row-tile path dispatches to the pool even at
+/// B = 1 (rows × per-row work clears `PAR_MIN_WORK`).
+fn random_layer(m: usize, n: usize, seed: u64) -> QuantMatvec {
+    let mut rng = Pcg64::new(seed);
+    let codes: Vec<u16> = (0..m * n / 8)
+        .map(|_| (rng.next_u64() & 0xffff) as u16)
+        .collect();
+    QuantMatvec {
+        m,
+        n,
+        stage_codes: Arc::new(vec![codes]),
+        stage_scales: vec![0.125],
+        active_stages: 1,
+        su: rng.sign_vec(m),
+        sv: rng.sign_vec(n),
+        tables: E8PTables::shared(),
+    }
+}
+
+#[test]
+fn quant_matmul_parity_across_thread_counts() {
+    let qm = random_layer(512, 256, 3);
+    let mut rng = Pcg64::new(5);
+    for batch in [1usize, 8] {
+        let xs: Vec<f32> = (0..batch * qm.n).map(|_| rng.f32() - 0.5).collect();
+        let mut reference: Option<Vec<u32>> = None;
+        for &nt in &THREADS {
+            let ys = threadpool::with_threads(nt, || {
+                let mut ys = vec![0.0f32; batch * qm.m];
+                qm.matmul(&xs, batch, &mut ys);
+                ys
+            });
+            match &reference {
+                None => reference = Some(bits(&ys)),
+                Some(r) => assert_eq!(
+                    r,
+                    &bits(&ys),
+                    "quantized matmul diverged at {nt} threads (B = {batch})"
+                ),
+            }
+        }
+    }
+}
+
+/// One full serving-layout decode step — batched quantized matmuls plus
+/// the fused cross-sequence attention walk over forked paged KVs — must
+/// be bit-identical at every thread count.
+#[test]
+fn decode_batch_paged_parity_across_thread_counts() {
+    let qmodel = build_qmodel(11);
+    let gen = qmodel.generator();
+    let cfg = &gen.model.cfg;
+    let bsz = 4usize;
+    // Long enough that the attention walk's total rows clear the
+    // parallel threshold (2 · rows · d ≥ PAR_MIN_WORK at d = 128).
+    let prefix: Vec<u8> = (0..40).map(|i| ((i * 13 + 2) % cfg.vocab) as u8).collect();
+
+    let mut reference: Option<Vec<u32>> = None;
+    for &nt in &THREADS {
+        let step_logits = threadpool::with_threads(nt, || {
+            let mut pool = qmodel.kv_pool((bsz + 1) * pages_per_seq(cfg));
+            // A shared prefill forked across lanes, so the step also
+            // exercises aliased (copy-on-write) pages.
+            let mut parent = PagedKv::new();
+            gen.decode_chunk_paged(&prefix, &mut pool, &mut parent);
+            let mut kvs: Vec<PagedKv> = (0..bsz)
+                .map(|_| {
+                    let mut kv = PagedKv::new();
+                    kv.fork_prefix(&mut pool, &parent, prefix.len());
+                    kv
+                })
+                .collect();
+            let toks: Vec<u8> = (0..bsz).map(|b| ((7 * b + 5) % cfg.vocab) as u8).collect();
+            let mut refs: Vec<&mut PagedKv> = kvs.iter_mut().collect();
+            let rows = gen.decode_batch_paged(&toks, &mut pool, &mut refs);
+            rows.concat()
+        });
+        match &reference {
+            None => reference = Some(bits(&step_logits)),
+            Some(r) => assert_eq!(
+                r,
+                &bits(&step_logits),
+                "decode_batch_paged diverged at {nt} threads"
+            ),
+        }
+    }
+}
+
+/// A complete speculative round (base-stage draft chunked decode, target
+/// chunked verify, paged rollback) over two lanes: the emitted tokens
+/// and the carried post-round logits must match bit for bit at every
+/// thread count.
+#[test]
+fn speculative_round_parity_across_thread_counts() {
+    let qmodel = build_qmodel(17);
+    let target = qmodel.generator();
+    let draft = qmodel.draft_generator();
+    let cfg = &target.model.cfg;
+    let bsz = 2usize;
+    let prompt: Vec<u8> = (0..24).map(|i| ((i * 5 + 3) % cfg.vocab) as u8).collect();
+
+    let mut reference: Option<(Vec<Vec<u8>>, Vec<u32>)> = None;
+    for &nt in &THREADS {
+        let (emitted, logits_bits) = threadpool::with_threads(nt, || {
+            let mut pool = qmodel.kv_pool(4 * (bsz + 1) * pages_per_seq(cfg));
+            let mut t_kvs = Vec::with_capacity(bsz);
+            let mut d_kvs = Vec::with_capacity(bsz);
+            let mut logits = Vec::with_capacity(bsz);
+            for b in 0..bsz {
+                let mut t_kv = PagedKv::new();
+                let l = target
+                    .decode_chunk_paged(&prompt, &mut pool, &mut t_kv)
+                    .pop()
+                    .unwrap();
+                let mut d_kv = PagedKv::new();
+                draft.decode_chunk_paged(&prompt[..prompt.len() - b], &mut pool, &mut d_kv);
+                t_kvs.push(t_kv);
+                d_kvs.push(d_kv);
+                logits.push(l);
+            }
+            let mut pendings: Vec<Vec<u8>> = (0..bsz)
+                .map(|b| prompt[prompt.len() - b..].to_vec())
+                .collect();
+            let mut stats = SpecStats::default();
+            let emitted = {
+                let mut lanes: Vec<SpecLane> = t_kvs
+                    .iter_mut()
+                    .zip(d_kvs.iter_mut())
+                    .zip(pendings.iter_mut())
+                    .zip(logits.iter_mut())
+                    .map(|(((t_kv, d_kv), pending), logits)| SpecLane {
+                        k: 3,
+                        target_kv: t_kv,
+                        draft_kv: d_kv,
+                        pending,
+                        logits,
+                    })
+                    .collect();
+                spec_round_paged(&target, &draft, &mut pool, &mut lanes, &mut stats)
+            };
+            (emitted, bits(&logits.concat()))
+        });
+        match &reference {
+            None => reference = Some((emitted, logits_bits)),
+            Some((re, rl)) => {
+                assert_eq!(re, &emitted, "speculative round tokens diverged at {nt} threads");
+                assert_eq!(
+                    rl, &logits_bits,
+                    "speculative round logits diverged at {nt} threads"
+                );
+            }
+        }
+    }
+}
