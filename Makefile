@@ -6,7 +6,8 @@
 
 .PHONY: verify build test fmt lint doc bench-batch bench-serve bench-attention \
         bench-attention-smoke bench-spec bench-spec-smoke bench-parallel \
-        bench-parallel-smoke tsan-threadpool artifacts
+        bench-parallel-smoke bench-kvquant bench-kvquant-smoke \
+        tsan-threadpool tsan-paged artifacts
 
 verify:
 	cargo build --release
@@ -77,6 +78,18 @@ bench-parallel:
 bench-parallel-smoke:
 	cargo bench --bench bench_parallel -- --smoke
 
+# KV-compression A/B: the engine under pool pressure with an fp32 KV
+# pool vs the 2-bit E8P cold tier at equal pool bytes. Asserts strictly
+# higher sustained concurrency (mean_batch) and prefill_tokens at the
+# ideal (spill/restore, no re-prefills); writes BENCH_kvquant.json.
+bench-kvquant:
+	cargo bench --bench bench_kvquant
+
+# Seconds-scale run of the same A/B with the same assertions (fewer
+# requests, shorter decodes). Mirrored by the CI `tier1` job.
+bench-kvquant-smoke:
+	cargo bench --bench bench_kvquant -- --smoke
+
 # ThreadSanitizer over the worker-pool unit tests (the unsafe dispatch
 # path: raw task pointers, SendPtr row handoff, condvar parking).
 # Needs nightly + rust-src for -Z build-std; degrades to a skip message
@@ -88,6 +101,19 @@ tsan-threadpool:
 			--lib util::threadpool; \
 	else \
 		echo "tsan-threadpool: no nightly toolchain installed, skipping"; \
+	fi
+
+# ThreadSanitizer over the paged-KV/generation tests: the parallel page
+# decode inside the fused attention walk (cold-page scratch, shard
+# handoff) plus batched decode on the worker pool. Same nightly gating
+# as tsan-threadpool. Mirrored by the CI `tsan` job.
+tsan-paged:
+	@if rustup toolchain list 2>/dev/null | grep -q nightly; then \
+		RUSTFLAGS="-Z sanitizer=thread" cargo +nightly test \
+			-Z build-std --target x86_64-unknown-linux-gnu \
+			--lib generation; \
+	else \
+		echo "tsan-paged: no nightly toolchain installed, skipping"; \
 	fi
 
 # Trained weights + corpus + AOT HLO artifacts (needs the python/JAX

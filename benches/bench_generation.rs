@@ -16,7 +16,11 @@
 //! with a pool sized for ~half the worst-case batch, driven by more
 //! requests than worst-case-ctx reservation could ever admit at once.
 //! Reports peak concurrently admitted sequences, preemptions, and
-//! tokens/s into the same `BENCH_generation.json`.
+//! tokens/s into the same `BENCH_generation.json`, for the fp32 pool
+//! and for the 2-bit compressed KV tier (`kv_bits: 2`, which also
+//! swaps preempt-restart for spill/restore — `prefill_tokens` must
+//! stay at the ideal). The dedicated fp32-vs-quantized A/B with the
+//! concurrency assertions is `bench_kvquant.rs`.
 //!
 //! Part 3 (always runs): the shared-prefix sweep — N sequences over one
 //! long registered system prompt, with and without copy-on-write prefix
@@ -40,7 +44,7 @@ use quipsharp::generation::{argmax, AttnMode, Generator, KvCache};
 use quipsharp::model::{Model, ModelConfig};
 use quipsharp::qmodel::quantize_model;
 use quipsharp::quant::pipeline::Method;
-use quipsharp::serve::{Engine, EngineRequest, NativeEngine};
+use quipsharp::serve::{Engine, EngineOptions, EngineRequest, NativeEngine};
 use quipsharp::util::json::Json;
 
 /// Sequence-at-a-time baseline: B independent decode_one loops.
@@ -182,6 +186,14 @@ fn batch_sweep() -> Vec<(&'static str, Json)> {
 /// admit only `pool_pages / pages_per_seq` sequences; the paged engine
 /// admits by actual usage and preempts under pressure, so it runs
 /// strictly more concurrently while every request still completes.
+///
+/// The same workload then runs with the 2-bit KV compression tier
+/// (`kv_bits: 2`): cold pages are charged at their compressed size, so
+/// the pool sustains more concurrent sequences at equal pool bytes
+/// (`mean_batch`), and preemptions spill to the host arena and restore
+/// instead of restarting prefill (`prefill_tokens` stays at the ideal).
+/// `bench_kvquant.rs` is the dedicated A/B with the tight assertions;
+/// this sweep records the headline numbers alongside the fp32 run.
 fn pool_pressure() -> Json {
     println!("\n== pool pressure: paged admission vs worst-case-ctx reservation ==");
     let model = Model::random(ModelConfig::by_name("s").unwrap(), 12);
@@ -200,53 +212,111 @@ fn pool_pressure() -> Json {
     // Half the worst-case batch footprint.
     let pool_pages = max_batch * pages_per_seq / 2;
     let worst_case_admissible = pool_pages / pages_per_seq;
-    let eng = NativeEngine::start_with_pool(model_arc, Some(qm), max_batch, pool_pages);
     // Sequences grow to 4 + 140 = 144 rows = 5 pages, so a full batch
     // outgrows the pool mid-flight and preemption must kick in.
     let (n_requests, max_new) = (16usize, 140usize);
-    let t0 = Instant::now();
-    let mut rxs = Vec::new();
-    for i in 0..n_requests {
-        rxs.push(eng.submit(EngineRequest {
-            id: i as u64,
-            prompt: vec![(i % 50) as u8, 3, 9, 27],
-            max_new,
-            prefix_id: None,
-            speculate_k: None,
-        }));
-    }
-    let mut tokens = 0usize;
-    for rx in rxs {
-        let resp = rx.recv().unwrap();
-        assert!(resp.error.is_none(), "{:?}", resp.error);
-        tokens += resp.tokens.len();
-    }
-    let dt = t0.elapsed().as_secs_f64();
-    let m = eng.metrics();
-    eng.stop();
-    eng.join();
-    let peak_admitted = m.peak_batch.load(Ordering::Relaxed) as usize;
-    let preemptions = m.preemptions.load(Ordering::Relaxed);
-    let tps = tokens as f64 / dt;
+    let ideal_prefill = (n_requests * 4) as u64;
+
+    let run = |kv_bits: usize| -> Json {
+        let eng = NativeEngine::start_with_opts(
+            model_arc.clone(),
+            Some(qm.clone()),
+            EngineOptions {
+                max_batch,
+                pool_pages: Some(pool_pages),
+                kv_bits,
+                kv_hot_pages: 0,
+                ..EngineOptions::default()
+            },
+        );
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..n_requests {
+            rxs.push(eng.submit(EngineRequest {
+                id: i as u64,
+                prompt: vec![(i % 50) as u8, 3, 9, 27],
+                max_new,
+                prefix_id: None,
+                speculate_k: None,
+            }));
+        }
+        let mut tokens = 0usize;
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            tokens += resp.tokens.len();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        Json::obj(vec![
+            ("kv_bits", Json::num(kv_bits as f64)),
+            (
+                "peak_admitted",
+                Json::num(m.peak_batch.load(Ordering::Relaxed) as f64),
+            ),
+            ("mean_batch", Json::num(m.mean_batch())),
+            (
+                "preemptions",
+                Json::num(m.preemptions.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "prefill_tokens",
+                Json::num(m.prefill_tokens.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_pages_quantized",
+                Json::num(m.kv_pages_quantized.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_spills",
+                Json::num(m.kv_spills.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_restores",
+                Json::num(m.kv_restores.load(Ordering::Relaxed) as f64),
+            ),
+            ("tok_per_sec", Json::num(tokens as f64 / dt)),
+        ])
+    };
+
+    let fp32 = run(0);
+    let quant = run(2);
+    let peak_admitted = fp32.get("peak_admitted").as_f64().unwrap() as usize;
+    let preemptions = fp32.get("preemptions").as_f64().unwrap();
     let mut t = Table::new(&[
+        "kv",
         "pool pages",
         "worst-case admits",
         "peak admitted",
+        "mean batch",
         "preemptions",
+        "prefill toks",
         "tok/s",
     ]);
-    t.row(&[
-        format!("{pool_pages}"),
-        format!("{worst_case_admissible}"),
-        format!("{peak_admitted}"),
-        format!("{preemptions}"),
-        format!("{tps:.1}"),
-    ]);
+    for (label, r) in [("fp32", &fp32), ("2-bit", &quant)] {
+        t.row(&[
+            label.to_string(),
+            format!("{pool_pages}"),
+            format!("{worst_case_admissible}"),
+            format!("{}", r.get("peak_admitted").as_f64().unwrap_or(0.0)),
+            format!("{:.2}", r.get("mean_batch").as_f64().unwrap_or(0.0)),
+            format!("{}", r.get("preemptions").as_f64().unwrap_or(0.0)),
+            format!("{}", r.get("prefill_tokens").as_f64().unwrap_or(0.0)),
+            format!("{:.1}", r.get("tok_per_sec").as_f64().unwrap_or(0.0)),
+        ]);
+    }
     t.print();
     t.write_csv("bench_generation_pool").ok();
     assert!(
         peak_admitted > worst_case_admissible,
         "paged admission ({peak_admitted}) must beat worst-case reservation ({worst_case_admissible})"
+    );
+    let q_prefill = quant.get("prefill_tokens").as_f64().unwrap() as u64;
+    assert_eq!(
+        q_prefill, ideal_prefill,
+        "spill/restore must eliminate re-prefills (got {q_prefill}, ideal {ideal_prefill})"
     );
     Json::obj(vec![
         ("pool_pages", Json::num(pool_pages as f64)),
@@ -256,10 +326,13 @@ fn pool_pressure() -> Json {
             Json::num(worst_case_admissible as f64),
         ),
         ("peak_admitted", Json::num(peak_admitted as f64)),
-        ("preemptions", Json::num(preemptions as f64)),
+        ("preemptions", Json::num(preemptions)),
         ("requests", Json::num(n_requests as f64)),
         ("max_new", Json::num(max_new as f64)),
-        ("tok_per_sec", Json::num(tps)),
+        ("ideal_prefill_tokens", Json::num(ideal_prefill as f64)),
+        ("tok_per_sec", fp32.get("tok_per_sec").clone()),
+        ("fp32", fp32),
+        ("kv_quant_2bit", quant),
     ])
 }
 

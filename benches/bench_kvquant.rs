@@ -1,0 +1,257 @@
+//! KV-cache compression A/B: the serving engine under KV pool pressure
+//! with an fp32 pool vs the 2-bit E8P cold tier (`kv_bits: 2`), at
+//! *equal pool bytes*.
+//!
+//! The workload is built to make the tier's two effects measurable:
+//! multi-page prompts (so sequences outgrow the pool and pressure is
+//! certain) and more requests than the fp32 pool can hold concurrently.
+//! With compression on, full pages behind the hot tail re-encode to
+//! ~1/16 of their fp32 size (2-bit codes + per-slab scales), so the
+//! same pool sustains strictly more concurrent sequences — reported as
+//! `mean_batch`, the time-averaged admitted concurrency. (`peak_batch`
+//! is the wrong lens here: every sequence starts one page small, so
+//! both modes briefly admit `min(pool, max_batch)` lanes at t = 0.)
+//! Preemptions also stop costing work: the fp32 engine requeues and
+//! *re-prefills* its victims, while the quantized engine spills their
+//! (mostly compressed) pages to the host arena and restores them, so
+//! `prefill_tokens` stays exactly at the ideal (each prompt token
+//! decoded once).
+//!
+//! Assertions (both modes, structural rather than timing-based):
+//!   * quantized `mean_batch` strictly above fp32 at equal pool pages;
+//!   * quantized `prefill_tokens` == ideal, fp32 above it (re-prefills);
+//!   * the quantized run actually quantized/spilled/restored pages, and
+//!     the fp32 run touched none of the machinery (the off path stays
+//!     bit-exact with the pre-tier engine);
+//!   * every request completes with exactly `max_new` tokens.
+//!
+//! `--smoke` (wired as `make bench-kvquant-smoke`, run in CI) shrinks
+//! request count and decode length; the assertions are identical.
+//! Results land in `BENCH_kvquant.json`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use quipsharp::bench::Table;
+use quipsharp::generation::paged::PAGE_ROWS;
+use quipsharp::model::{Model, ModelConfig};
+use quipsharp::qmodel::quantize_model;
+use quipsharp::quant::pipeline::Method;
+use quipsharp::serve::{Engine, EngineOptions, EngineRequest, NativeEngine};
+use quipsharp::util::json::Json;
+
+struct Shape {
+    n_requests: usize,
+    max_new: usize,
+}
+
+/// Long decode: sequences reach 68 + 120 = 188 rows = 6 pages, the
+/// whole pool — the fp32 engine ends up running requests nearly
+/// single-file while the compressed tier keeps a batch going.
+const FULL: Shape = Shape {
+    n_requests: 12,
+    max_new: 120,
+};
+/// CI shape: same structure, seconds-scale.
+const SMOKE: Shape = Shape {
+    n_requests: 6,
+    max_new: 40,
+};
+
+struct RunStats {
+    peak_admitted: u64,
+    mean_batch: f64,
+    preemptions: u64,
+    prefill_tokens: u64,
+    kv_pages_quantized: u64,
+    kv_spills: u64,
+    kv_restores: u64,
+    codewords_decoded: u64,
+    tok_per_sec: f64,
+}
+
+fn run(
+    model: &Arc<Model>,
+    qm: &Arc<quipsharp::qmodel::QuantizedModel>,
+    pool_pages: usize,
+    max_batch: usize,
+    prompt_len: usize,
+    shape: &Shape,
+    kv_bits: usize,
+) -> RunStats {
+    let eng = NativeEngine::start_with_opts(
+        model.clone(),
+        Some(qm.clone()),
+        EngineOptions {
+            max_batch,
+            pool_pages: Some(pool_pages),
+            kv_bits,
+            kv_hot_pages: 0,
+            ..EngineOptions::default()
+        },
+    );
+    let cw0 = quipsharp::model::qlinear::codewords_decoded();
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..shape.n_requests {
+        let prompt: Vec<u8> = (0..prompt_len).map(|j| ((i * 11 + j * 7 + 3) % 50) as u8).collect();
+        rxs.push(eng.submit(EngineRequest {
+            id: i as u64,
+            prompt,
+            max_new: shape.max_new,
+            prefix_id: None,
+            speculate_k: None,
+        }));
+    }
+    let mut tokens = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), shape.max_new, "request truncated");
+        tokens += resp.tokens.len();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = eng.metrics();
+    eng.stop();
+    eng.join();
+    RunStats {
+        peak_admitted: m.peak_batch.load(Ordering::Relaxed),
+        mean_batch: m.mean_batch(),
+        preemptions: m.preemptions.load(Ordering::Relaxed),
+        prefill_tokens: m.prefill_tokens.load(Ordering::Relaxed),
+        kv_pages_quantized: m.kv_pages_quantized.load(Ordering::Relaxed),
+        kv_spills: m.kv_spills.load(Ordering::Relaxed),
+        kv_restores: m.kv_restores.load(Ordering::Relaxed),
+        // The metrics gauge mirrors a process-wide counter; diff against
+        // the run's start so back-to-back runs don't bleed into each
+        // other.
+        codewords_decoded: quipsharp::model::qlinear::codewords_decoded() - cw0,
+        tok_per_sec: tokens as f64 / dt,
+    }
+}
+
+fn stats_json(pool_pages: usize, kv_bits: usize, s: &RunStats) -> Json {
+    Json::obj(vec![
+        ("pool_pages", Json::num(pool_pages as f64)),
+        ("kv_bits", Json::num(kv_bits as f64)),
+        ("peak_admitted", Json::num(s.peak_admitted as f64)),
+        ("mean_batch", Json::num(s.mean_batch)),
+        ("preemptions", Json::num(s.preemptions as f64)),
+        ("prefill_tokens", Json::num(s.prefill_tokens as f64)),
+        (
+            "kv_pages_quantized",
+            Json::num(s.kv_pages_quantized as f64),
+        ),
+        ("kv_spills", Json::num(s.kv_spills as f64)),
+        ("kv_restores", Json::num(s.kv_restores as f64)),
+        ("codewords_decoded", Json::num(s.codewords_decoded as f64)),
+        ("tok_per_sec", Json::num(s.tok_per_sec)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let shape = if smoke { SMOKE } else { FULL };
+    let model = Model::random(ModelConfig::by_name("s").unwrap(), 14);
+    // Identity Hessians: quantization quality is irrelevant here and
+    // skipping calibration keeps the bench fast.
+    let qm = Arc::new(
+        quantize_model(
+            &model,
+            &BTreeMap::new(),
+            &Method::QuipSharp { bits: 2, ft: false },
+            7,
+        )
+        .unwrap(),
+    );
+    let model_arc = Arc::new(Model::new(qm.model.cfg.clone(), qm.model.params.clone()));
+    // Multi-page prompts against a pool that holds two fp32 sequences
+    // of that shape: pressure is certain, and the fp32 engine cannot
+    // sustain more than two lanes once everyone is past page 1.
+    let prompt_len = 2 * PAGE_ROWS + 4;
+    let (pool_pages, max_batch) = (6usize, 8usize);
+    let ideal_prefill = (shape.n_requests * prompt_len) as u64;
+    println!(
+        "== kv-quant A/B: fp32 vs 2-bit cold tier at {pool_pages} pool pages{} ==",
+        if smoke { ", SMOKE" } else { "" }
+    );
+    println!(
+        "({} requests, {}-token prompts, {} new tokens each)\n",
+        shape.n_requests, prompt_len, shape.max_new
+    );
+
+    let fp32 = run(&model_arc, &qm, pool_pages, max_batch, prompt_len, &shape, 0);
+    let quant = run(&model_arc, &qm, pool_pages, max_batch, prompt_len, &shape, 2);
+
+    let mut t = Table::new(&[
+        "kv",
+        "mean batch",
+        "peak",
+        "preempt",
+        "prefill toks",
+        "pages quantized",
+        "spills",
+        "restores",
+        "tok/s",
+    ]);
+    for (label, s) in [("fp32", &fp32), ("2-bit", &quant)] {
+        t.row(&[
+            label.to_string(),
+            format!("{:.2}", s.mean_batch),
+            format!("{}", s.peak_admitted),
+            format!("{}", s.preemptions),
+            format!("{}", s.prefill_tokens),
+            format!("{}", s.kv_pages_quantized),
+            format!("{}", s.kv_spills),
+            format!("{}", s.kv_restores),
+            format!("{:.1}", s.tok_per_sec),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_kvquant").ok();
+
+    // The off path must not touch the machinery…
+    assert_eq!(fp32.kv_pages_quantized, 0, "fp32 run quantized pages");
+    assert_eq!(fp32.kv_spills, 0, "fp32 run spilled");
+    assert_eq!(fp32.kv_restores, 0, "fp32 run restored");
+    // …and preempt-restart re-prefills while spill/restore never does.
+    assert!(
+        fp32.prefill_tokens > ideal_prefill,
+        "fp32 pressure run should re-prefill (got {}, ideal {ideal_prefill})",
+        fp32.prefill_tokens
+    );
+    assert_eq!(
+        quant.prefill_tokens, ideal_prefill,
+        "spill/restore must decode each prompt token exactly once"
+    );
+    // The tier engaged, and compression bought sustained concurrency at
+    // equal pool bytes.
+    assert!(quant.kv_pages_quantized > 0, "compression never engaged");
+    assert!(quant.kv_spills > 0 && quant.kv_restores > 0, "no spill/restore under pressure");
+    assert!(
+        quant.mean_batch > fp32.mean_batch,
+        "2-bit KV must sustain more concurrency than fp32 at equal pool bytes \
+         ({:.2} vs {:.2})",
+        quant.mean_batch,
+        fp32.mean_batch
+    );
+
+    let out = Json::obj(vec![
+        ("model", Json::str("s-synthetic")),
+        ("method", Json::str("quip#-2bit-weights")),
+        ("smoke", Json::Bool(smoke)),
+        ("pool_pages", Json::num(pool_pages as f64)),
+        ("max_batch", Json::num(max_batch as f64)),
+        ("n_requests", Json::num(shape.n_requests as f64)),
+        ("prompt_tokens", Json::num(prompt_len as f64)),
+        ("max_new", Json::num(shape.max_new as f64)),
+        ("ideal_prefill_tokens", Json::num(ideal_prefill as f64)),
+        ("fp32", stats_json(pool_pages, 0, &fp32)),
+        ("kv_quant_2bit", stats_json(pool_pages, 2, &quant)),
+    ]);
+    if std::fs::write("BENCH_kvquant.json", out.emit()).is_ok() {
+        println!("\nwrote BENCH_kvquant.json");
+    }
+}

@@ -78,8 +78,38 @@
 //! * On exhaustion, `reserve` rolls back everything *it* did (fresh
 //!   pages freed, clones undone by re-retaining the original), so a
 //!   failed grow leaves the sequence exactly as it was.
+//!
+//! # KV compression tier (cold pages)
+//!
+//! With a [`KvQuantSpec`], each sequence keeps a *hot* fp32 tail (the
+//! page currently being written plus `hot_pages` recent full pages)
+//! and E8P/RVQ-quantizes every older full page in place
+//! ([`PagedKv::compress_cold`] → [`KvPagePool::quantize_page`]): the
+//! page's arena slot returns to the free list and the page is charged
+//! at its compressed size against the same byte budget, so effective
+//! pool capacity multiplies (~16× at 2 bits, ~8× at 4 — the
+//! pool-pressure lever `benches/bench_kvquant.rs` measures). The
+//! attention kernels consume blocks as [`KvBlock`] values and decode
+//! cold pages inline through [`RowCodec::decode_slab`] — the same
+//! `decode8` AVX2 sign-LUT tables as the weight matmuls, sharded
+//! across the worker pool with the lane groups that already shard the
+//! fused walk. Store/truncate/CoW semantics are untouched because
+//! writes only ever target hot pages: [`PagedKv::reserve`] *reheats*
+//! (decodes back to a fresh slot) any cold page a row in
+//! `[len, new_len)` would land in, which only arises on the
+//! truncate-then-regrow (speculative rollback) path. Quantizing a
+//! shared page is safe — the representation change is deterministic,
+//! so every fork decodes bit-identical values. With quantization off,
+//! every page stays hot and the pool behaves bit-for-bit like the
+//! slot-per-page design it replaces (page ids, free-list order, and
+//! accounting included). [`KvPagePool::export_page`] /
+//! [`KvPagePool::import_page`] lift page content out of the pool and
+//! back for the engine's host-side spill arena; hot exports carry raw
+//! f32 rows and cold exports carry the codes unchanged, so a
+//! spill→restore round trip is exact in both representations.
 
 use crate::model::{Model, ModelConfig};
+use crate::quant::codebook::rowq::RowCodec;
 use crate::util::threadpool;
 
 /// Token rows per KV page. Equal to the contiguous cache's growth slab
@@ -114,30 +144,148 @@ pub fn pages_per_seq(cfg: &ModelConfig) -> usize {
 pub struct KvPagePool {
     n_layers: usize,
     d: usize,
+    /// Hot-slot arena: `budget_pages × page_stride()` f32s. Page ids
+    /// are decoupled from arena slots ([`PageState::slot`]) so cold
+    /// pages occupy no slot at all.
     data: Vec<f32>,
-    free: Vec<u32>,
-    /// Per-page reference count: 0 = free, 1 = uniquely owned,
-    /// >1 = shared read-only across forked sequences.
-    refs: Vec<u32>,
+    /// Free arena slots (LIFO).
+    free_slots: Vec<u32>,
+    /// Recycled page ids (LIFO). With quantization off this mirrors
+    /// `free_slots` exactly — ids behave as in the slot-per-page design
+    /// this replaces; with it on, `states` grows past `budget_pages`
+    /// when cold pages multiply effective capacity.
+    free_ids: Vec<u32>,
+    /// Per-page state, indexed by page id.
+    states: Vec<PageState>,
     /// Pages with refcount > 1, maintained incrementally on the 1 ↔ 2
     /// crossings so the scheduler's per-step gauge read is O(1).
     shared: usize,
-    capacity: usize,
+    /// fp32-page budget: the arena size, and the byte budget cold
+    /// pages are charged against (in f32 units).
+    budget_pages: usize,
+    /// f32-equivalent units in use: `page_stride()` per hot page,
+    /// [`Self::cold_units`] per cold page. Never exceeds
+    /// `budget_pages × page_stride()`, which also guarantees a free
+    /// slot whenever a hot page's worth of units is available.
+    used_units: usize,
+    quant: Option<KvQuant>,
+    /// Cold pages currently allocated (gauge).
+    cold_count: usize,
+    /// Pages ever quantized (monotone counter for metrics).
+    pages_quantized: u64,
+    /// Cold pages ever decoded back to hot (monotone counter).
+    reheats: u64,
+}
+
+/// KV-cache compression configuration for [`KvPagePool::with_quant`].
+#[derive(Clone, Copy, Debug)]
+pub struct KvQuantSpec {
+    /// E8P bits per KV element: 2 (one stage) or 4 (RVQ, two stages).
+    pub bits: usize,
+    /// Recent *full* pages per sequence kept fp32 in addition to the
+    /// page currently being written (the hot tail window).
+    pub hot_pages: usize,
+}
+
+struct KvQuant {
+    codec: RowCodec,
+    hot_pages: usize,
+}
+
+struct PageState {
+    /// Reference count: 0 = free, 1 = uniquely owned, >1 = shared
+    /// read-only across forked sequences.
+    refs: u32,
+    /// Arena slot holding this page's fp32 rows; meaningless while
+    /// `cold` is `Some`.
+    slot: u32,
+    cold: Option<Box<QuantPage>>,
+}
+
+/// A cold page's payload: E8P/RVQ codes plus one RMS scale per
+/// `(layer, K|V)` slab, produced by [`RowCodec::encode_slab`]. Slabs
+/// are ordered `[(layer 0, K), (layer 0, V), (layer 1, K), …]` — the
+/// arena's layer layout — with each slab's codes stage-major.
+#[derive(Clone)]
+pub struct QuantPage {
+    codes: Vec<u16>,
+    scales: Vec<f32>,
+}
+
+/// A page's content lifted out of the pool — the engine's spill-arena
+/// payload. `Hot` carries the raw f32 rows (spill→restore of hot pages
+/// is bit-exact); `Cold` carries the compressed codes unchanged (the
+/// restored page decodes bit-identically).
+pub enum PageExport {
+    Hot(Vec<f32>),
+    Cold(Box<QuantPage>),
+}
+
+impl PageExport {
+    /// Heap bytes this export holds while parked in a spill arena.
+    pub fn bytes(&self) -> usize {
+        match self {
+            PageExport::Hot(rows) => rows.len() * 4,
+            PageExport::Cold(qp) => qp.codes.len() * 2 + qp.scales.len() * 4,
+        }
+    }
+}
+
+/// Decode every slab of a cold page into `out` (one whole page
+/// stride). Free function so callers can borrow the codec and the
+/// arena from disjoint pool fields.
+fn decode_cold(codec: &RowCodec, qp: &QuantPage, slab: usize, out: &mut [f32]) {
+    let cps = codec.codes_per_slab(slab);
+    for (si, &sc) in qp.scales.iter().enumerate() {
+        codec.decode_slab(
+            &qp.codes[si * cps..(si + 1) * cps],
+            sc,
+            &mut out[si * slab..(si + 1) * slab],
+        );
+    }
 }
 
 impl KvPagePool {
     pub fn new(n_layers: usize, d_model: usize, pages: usize) -> Self {
+        Self::with_quant(n_layers, d_model, pages, None)
+    }
+
+    /// Pool with an optional KV compression tier. `None` is the plain
+    /// fp32 pool ([`Self::new`]), bit-for-bit.
+    pub fn with_quant(
+        n_layers: usize,
+        d_model: usize,
+        pages: usize,
+        quant: Option<KvQuantSpec>,
+    ) -> Self {
         assert!(n_layers > 0 && d_model > 0 && pages > 0, "empty KV pool");
         let stride = n_layers * 2 * PAGE_ROWS * d_model;
+        let quant = quant.map(|spec| KvQuant {
+            codec: RowCodec::new(spec.bits),
+            hot_pages: spec.hot_pages,
+        });
         KvPagePool {
             n_layers,
             d: d_model,
             data: vec![0.0; pages * stride],
-            // Pop order is LIFO; ids are handed out low-first initially.
-            free: (0..pages as u32).rev().collect(),
-            refs: vec![0; pages],
+            // Pop order is LIFO; slots and ids are handed out low-first
+            // initially.
+            free_slots: (0..pages as u32).rev().collect(),
+            free_ids: (0..pages as u32).rev().collect(),
+            states: (0..pages)
+                .map(|_| PageState {
+                    refs: 0,
+                    slot: 0,
+                    cold: None,
+                })
+                .collect(),
             shared: 0,
-            capacity: pages,
+            budget_pages: pages,
+            used_units: 0,
+            quant,
+            cold_count: 0,
+            pages_quantized: 0,
+            reheats: 0,
         }
     }
 
@@ -146,16 +294,68 @@ impl KvPagePool {
         Self::new(model.cfg.n_layers, model.cfg.d_model, pages)
     }
 
+    /// [`Self::for_model`] with an optional KV compression tier.
+    pub fn for_model_quant(model: &Model, pages: usize, quant: Option<KvQuantSpec>) -> Self {
+        Self::with_quant(model.cfg.n_layers, model.cfg.d_model, pages, quant)
+    }
+
     pub fn pages_total(&self) -> usize {
-        self.capacity
+        self.budget_pages
     }
 
+    /// Whole fp32 pages' worth of unused budget — the admission gate.
+    /// With quantization on, cold pages consume a fraction of a page
+    /// each, so this recovers capacity as pages go cold.
     pub fn pages_free(&self) -> usize {
-        self.free.len()
+        (self.budget_units() - self.used_units) / self.page_stride()
     }
 
+    /// Allocated page ids. With quantization on this can *exceed*
+    /// [`Self::pages_total`] — that surplus is the admitted-concurrency
+    /// multiplier the compression tier exists for.
     pub fn pages_in_use(&self) -> usize {
-        self.capacity - self.free.len()
+        self.states.len() - self.free_ids.len()
+    }
+
+    fn budget_units(&self) -> usize {
+        self.budget_pages * self.page_stride()
+    }
+
+    /// f32-equivalent units a cold page is charged: its u16 codes at 2
+    /// bytes each plus one f32 scale per slab.
+    fn cold_units(&self) -> usize {
+        let stages = self.quant.as_ref().map_or(0, |q| q.codec.stages());
+        self.page_stride() * stages / 16 + self.n_layers * 2
+    }
+
+    /// Configured KV bits (0 = compression off).
+    pub fn quant_bits(&self) -> usize {
+        self.quant.as_ref().map_or(0, |q| q.codec.bits())
+    }
+
+    /// Hot-tail window in full pages, `None` when compression is off.
+    pub fn hot_window(&self) -> Option<usize> {
+        self.quant.as_ref().map(|q| q.hot_pages)
+    }
+
+    /// Cold (quantized) pages currently allocated.
+    pub fn cold_pages(&self) -> usize {
+        self.cold_count
+    }
+
+    /// Pages ever quantized (monotone; metrics counter).
+    pub fn pages_quantized_total(&self) -> u64 {
+        self.pages_quantized
+    }
+
+    /// Cold pages ever decoded back to a hot slot (monotone).
+    pub fn reheats_total(&self) -> u64 {
+        self.reheats
+    }
+
+    /// Whether `page` currently holds codes rather than fp32 rows.
+    pub fn is_cold(&self, page: u32) -> bool {
+        self.states[page as usize].cold.is_some()
     }
 
     /// Pages currently shared by more than one sequence (refcount > 1).
@@ -165,7 +365,7 @@ impl KvPagePool {
 
     /// Reference count of `page` (0 = free).
     pub fn refcount(&self, page: u32) -> u32 {
-        self.refs[page as usize]
+        self.states[page as usize].refs
     }
 
     /// f32 slots per page (all layers, K and V).
@@ -174,20 +374,41 @@ impl KvPagePool {
     }
 
     fn try_alloc(&mut self) -> Option<u32> {
-        let page = self.free.pop()?;
-        debug_assert_eq!(self.refs[page as usize], 0, "free page {page} had refs");
-        self.refs[page as usize] = 1;
+        let stride = self.page_stride();
+        if self.budget_units() - self.used_units < stride {
+            return None;
+        }
+        // used_units ≤ budget − stride bounds hot pages below
+        // budget_pages, so a slot is always free here.
+        let slot = self.free_slots.pop().expect("unit budget guarantees a free slot");
+        let page = match self.free_ids.pop() {
+            Some(id) => id,
+            None => {
+                self.states.push(PageState {
+                    refs: 0,
+                    slot: 0,
+                    cold: None,
+                });
+                (self.states.len() - 1) as u32
+            }
+        };
+        let st = &mut self.states[page as usize];
+        debug_assert_eq!(st.refs, 0, "free page {page} had refs");
+        debug_assert!(st.cold.is_none(), "free page {page} held codes");
+        st.refs = 1;
+        st.slot = slot;
+        self.used_units += stride;
         Some(page)
     }
 
     /// Add one reference to an already-allocated page (prefix sharing).
     fn retain_page(&mut self, page: u32) {
-        let r = self.refs[page as usize];
+        let r = self.states[page as usize].refs;
         debug_assert!(r > 0, "retain of free page {page}");
         if r == 1 {
             self.shared += 1;
         }
-        self.refs[page as usize] = r + 1;
+        self.states[page as usize].refs = r + 1;
     }
 
     /// Drop one reference; the page returns to the free list only when
@@ -195,33 +416,64 @@ impl KvPagePool {
     /// freed, so releasing a forked sequence can never free pages its
     /// parent (or a sibling fork) still reads.
     fn release_page(&mut self, page: u32) {
-        debug_assert!((page as usize) < self.capacity);
-        let r = self.refs[page as usize];
+        debug_assert!((page as usize) < self.states.len());
+        let r = self.states[page as usize].refs;
         debug_assert!(r > 0, "release of free page {page}");
         if r == 2 {
             self.shared -= 1;
         }
-        self.refs[page as usize] = r - 1;
+        self.states[page as usize].refs = r - 1;
         if r == 1 {
-            debug_assert!(!self.free.contains(&page), "double free of page {page}");
-            self.free.push(page);
+            debug_assert!(!self.free_ids.contains(&page), "double free of page {page}");
+            self.free_page_storage(page);
+            self.free_ids.push(page);
+        }
+    }
+
+    /// Return a dead page's storage: its slot (hot) or its codes
+    /// (cold), with matching unit accounting.
+    fn free_page_storage(&mut self, page: u32) {
+        let stride = self.page_stride();
+        let cu = self.cold_units();
+        let st = &mut self.states[page as usize];
+        if st.cold.take().is_some() {
+            self.used_units -= cu;
+            self.cold_count -= 1;
+        } else {
+            let slot = st.slot;
+            self.free_slots.push(slot);
+            self.used_units -= stride;
         }
     }
 
     /// Copy-on-write clone: allocate a fresh page and copy `src`'s whole
-    /// payload into it. Refcounts are the caller's business (the caller
-    /// swaps its table entry to the clone and releases its ref on `src`).
+    /// payload into it. A cold `src` is *decoded* into the clone — the
+    /// caller is about to write rows into it, and writes only target
+    /// hot pages. Refcounts are the caller's business (the caller swaps
+    /// its table entry to the clone and releases its ref on `src`).
     fn clone_page(&mut self, src: u32) -> Option<u32> {
         let dst = self.try_alloc()?;
         let stride = self.page_stride();
-        let lo = src as usize * stride;
-        self.data.copy_within(lo..lo + stride, dst as usize * stride);
+        let slab = PAGE_ROWS * self.d;
+        let dst_lo = self.states[dst as usize].slot as usize * stride;
+        match &self.states[src as usize].cold {
+            None => {
+                let src_lo = self.states[src as usize].slot as usize * stride;
+                self.data.copy_within(src_lo..src_lo + stride, dst_lo);
+            }
+            Some(qp) => {
+                let codec = &self.quant.as_ref().expect("cold page without quant").codec;
+                decode_cold(codec, qp, slab, &mut self.data[dst_lo..dst_lo + stride]);
+            }
+        }
         Some(dst)
     }
 
     fn layer_base(&self, page: u32, layer: usize) -> usize {
         debug_assert!(layer < self.n_layers);
-        page as usize * self.page_stride() + layer * 2 * PAGE_ROWS * self.d
+        let st = &self.states[page as usize];
+        debug_assert!(st.cold.is_none(), "fp32 access to cold page {page}");
+        st.slot as usize * self.page_stride() + layer * 2 * PAGE_ROWS * self.d
     }
 
     /// K rows of `page` for `layer`: `PAGE_ROWS × d_model` row-major.
@@ -242,7 +494,7 @@ impl KvPagePool {
     pub fn store_row(&mut self, page: u32, layer: usize, row: usize, k: &[f32], v: &[f32]) {
         debug_assert!(row < PAGE_ROWS);
         debug_assert_eq!(
-            self.refs[page as usize], 1,
+            self.states[page as usize].refs, 1,
             "store into shared or free page {page}"
         );
         assert_eq!(k.len(), self.d);
@@ -253,6 +505,165 @@ impl KvPagePool {
         let vo = base + PAGE_ROWS * self.d + row * self.d;
         self.data[vo..vo + self.d].copy_from_slice(v);
     }
+
+    /// Quantize a *filled* page in place: encode every `(layer, K|V)`
+    /// slab with the pool's [`RowCodec`], free the arena slot, and
+    /// charge the page at its compressed size. No-op when the page is
+    /// already cold (forked siblings race benignly through their own
+    /// [`PagedKv::compress_cold`] frontiers) or when compression is
+    /// off. The page's logical content changes from exact fp32 rows to
+    /// their E8P reconstruction; callers only quantize full pages
+    /// outside every sequence's hot tail. Quantizing a shared page is
+    /// safe: decode is deterministic, so every fork reads identical
+    /// values.
+    pub fn quantize_page(&mut self, page: u32) {
+        if self.states[page as usize].cold.is_some() {
+            return;
+        }
+        let Some(q) = self.quant.as_ref() else { return };
+        let stride = self.page_stride();
+        let slab = PAGE_ROWS * self.d;
+        let cps = q.codec.codes_per_slab(slab);
+        let n_slabs = self.n_layers * 2;
+        let mut codes = vec![0u16; n_slabs * cps];
+        let mut scales = vec![0.0f32; n_slabs];
+        let lo = self.states[page as usize].slot as usize * stride;
+        for si in 0..n_slabs {
+            scales[si] = q.codec.encode_slab(
+                &self.data[lo + si * slab..lo + (si + 1) * slab],
+                &mut codes[si * cps..(si + 1) * cps],
+            );
+        }
+        let cu = self.cold_units();
+        let slot = self.states[page as usize].slot;
+        self.free_slots.push(slot);
+        self.states[page as usize].cold = Some(Box::new(QuantPage { codes, scales }));
+        self.used_units = self.used_units - stride + cu;
+        self.cold_count += 1;
+        self.pages_quantized += 1;
+    }
+
+    /// Decode a cold page back into a fresh arena slot so it is
+    /// writable again — the truncate-then-regrow (speculative
+    /// rollback) path. Returns `false` when the unit budget cannot
+    /// absorb the hot−cold size difference; no-op `true` on hot pages.
+    /// The decoded rows are the cold page's exact represented values;
+    /// if the page is later re-quantized, the un-overwritten rows
+    /// compound a second generation of quantization error (bounded,
+    /// and never arises in fp32 mode).
+    fn reheat_page(&mut self, page: u32) -> bool {
+        if self.states[page as usize].cold.is_none() {
+            return true;
+        }
+        let stride = self.page_stride();
+        let cu = self.cold_units();
+        if self.budget_units() - self.used_units < stride - cu {
+            return false;
+        }
+        let slot = self.free_slots.pop().expect("unit budget guarantees a free slot");
+        let slab = PAGE_ROWS * self.d;
+        let qp = self.states[page as usize].cold.take().expect("checked cold above");
+        let lo = slot as usize * stride;
+        {
+            let codec = &self.quant.as_ref().expect("cold page without quant").codec;
+            decode_cold(codec, &qp, slab, &mut self.data[lo..lo + stride]);
+        }
+        self.states[page as usize].slot = slot;
+        self.used_units = self.used_units - cu + stride;
+        self.cold_count -= 1;
+        self.reheats += 1;
+        true
+    }
+
+    /// Copy `page`'s content out of the pool and drop this holder's
+    /// reference — the host-side spill path. The export carries the
+    /// page's representation unchanged (raw f32 rows or codes), so
+    /// [`Self::import_page`] restores it exactly. A shared page's
+    /// content is copied and the other holders keep the original.
+    pub fn export_page(&mut self, page: u32) -> PageExport {
+        let exp = match &self.states[page as usize].cold {
+            Some(qp) => PageExport::Cold(qp.clone()),
+            None => {
+                let stride = self.page_stride();
+                let lo = self.states[page as usize].slot as usize * stride;
+                PageExport::Hot(self.data[lo..lo + stride].to_vec())
+            }
+        };
+        self.release_page(page);
+        exp
+    }
+
+    /// Re-admit a spilled page under a fresh id. Hot exports need a
+    /// full fp32 page of budget plus an arena slot; cold exports only
+    /// their compressed size (no slot, no decode — the codes move back
+    /// verbatim). When the pool cannot take the page right now, the
+    /// export comes back unchanged in `Err` so the caller can retry.
+    pub fn import_page(&mut self, exp: PageExport) -> Result<u32, PageExport> {
+        match exp {
+            PageExport::Hot(rows) => {
+                let stride = self.page_stride();
+                assert_eq!(rows.len(), stride, "hot import of a foreign page size");
+                let Some(page) = self.try_alloc() else {
+                    return Err(PageExport::Hot(rows));
+                };
+                let lo = self.states[page as usize].slot as usize * stride;
+                self.data[lo..lo + stride].copy_from_slice(&rows);
+                Ok(page)
+            }
+            PageExport::Cold(qp) => {
+                let q = self.quant.as_ref().expect("cold import into an fp32 pool");
+                let slab = PAGE_ROWS * self.d;
+                assert_eq!(
+                    qp.codes.len(),
+                    self.n_layers * 2 * q.codec.codes_per_slab(slab),
+                    "cold import of a foreign page shape"
+                );
+                let cu = self.cold_units();
+                if self.budget_units() - self.used_units < cu {
+                    return Err(PageExport::Cold(qp));
+                }
+                let page = match self.free_ids.pop() {
+                    Some(id) => id,
+                    None => {
+                        self.states.push(PageState {
+                            refs: 0,
+                            slot: 0,
+                            cold: None,
+                        });
+                        (self.states.len() - 1) as u32
+                    }
+                };
+                let st = &mut self.states[page as usize];
+                debug_assert_eq!(st.refs, 0, "free page {page} had refs");
+                st.refs = 1;
+                st.cold = Some(qp);
+                self.used_units += cu;
+                self.cold_count += 1;
+                Ok(page)
+            }
+        }
+    }
+
+    /// The K/V rows of `page` at `layer` as the attention kernels
+    /// consume them: fp32 slices for hot pages, borrowed codes +
+    /// scales for cold ones (decoded inline by the kernel).
+    pub fn kv_block(&self, page: u32, layer: usize) -> KvBlock<'_> {
+        match &self.states[page as usize].cold {
+            None => KvBlock::F32(self.k_block(page, layer), self.v_block(page, layer)),
+            Some(qp) => {
+                let codec = &self.quant.as_ref().expect("cold page without quant").codec;
+                let cps = codec.codes_per_slab(PAGE_ROWS * self.d);
+                let (k_si, v_si) = (layer * 2, layer * 2 + 1);
+                KvBlock::Quant {
+                    codec,
+                    k_codes: &qp.codes[k_si * cps..(k_si + 1) * cps],
+                    v_codes: &qp.codes[v_si * cps..(v_si + 1) * cps],
+                    k_scale: qp.scales[k_si],
+                    v_scale: qp.scales[v_si],
+                }
+            }
+        }
+    }
 }
 
 /// Per-sequence view into a [`KvPagePool`]: a page table plus the
@@ -262,6 +673,11 @@ impl KvPagePool {
 pub struct PagedKv {
     pub pages: Vec<u32>,
     pub len: usize,
+    /// Compression frontier: pages `[0, cold_upto)` have been offered
+    /// to [`KvPagePool::quantize_page`] by this sequence. Monotone
+    /// between truncates; [`Self::truncate`] and [`Self::reserve`]
+    /// lower it so reheated tail pages re-qualify.
+    cold_upto: usize,
 }
 
 impl PagedKv {
@@ -340,8 +756,21 @@ impl PagedKv {
                         return false;
                     }
                 }
+            } else if !pool.reheat_page(page) {
+                // A uniquely owned *cold* page in the write range (a
+                // truncated tail) must be decoded back to fp32 before
+                // any row in it is rewritten. Successful reheats are
+                // deliberately not rolled back on a later failure —
+                // a hot page with the same represented values is
+                // semantically identical and will re-quantize when it
+                // next leaves the hot window.
+                rollback_cow(&mut self.pages, pool, &cloned);
+                return false;
             }
         }
+        // Reheated (or about-to-be-rewritten) pages re-qualify for
+        // compression once they refill and age out of the hot window.
+        self.cold_upto = self.cold_upto.min(first_write);
         let start = self.pages.len();
         while self.pages.len() < need {
             match pool.try_alloc() {
@@ -387,6 +816,23 @@ impl PagedKv {
             pool.release_page(p);
         }
         self.len = new_len;
+        self.cold_upto = self.cold_upto.min(keep);
+    }
+
+    /// Quantize this sequence's *cold* pages: every full page strictly
+    /// below the hot tail (the page currently being written plus the
+    /// pool's `hot_pages` recent full pages). The decode loop calls
+    /// this after each length bump; it is a no-op on fp32 pools, and
+    /// [`KvPagePool::quantize_page`] is idempotent, so forked siblings
+    /// advancing their own frontiers over shared pages quantize each
+    /// page once.
+    pub fn compress_cold(&mut self, pool: &mut KvPagePool) {
+        let Some(hot) = pool.hot_window() else { return };
+        let limit = (self.len / PAGE_ROWS).saturating_sub(hot);
+        while self.cold_upto < limit {
+            pool.quantize_page(self.pages[self.cold_upto]);
+            self.cold_upto += 1;
+        }
     }
 
     /// Drop this sequence's reference on every page and reset it — the
@@ -398,6 +844,63 @@ impl PagedKv {
             pool.release_page(p);
         }
         self.len = 0;
+        self.cold_upto = 0;
+    }
+
+    /// Spill every page to the caller's arena and reset the sequence —
+    /// the preempt-with-spill path. Returns the exports in table
+    /// order; [`Self::restore`] rebuilds the identical sequence. Pages
+    /// reserved beyond the stored rows (a reservation the preempted
+    /// round never wrote into) are simply released: restore only needs
+    /// — and [`Self::restore`] only accepts — `pages_needed(len)`
+    /// exports.
+    pub fn spill(&mut self, pool: &mut KvPagePool) -> Vec<PageExport> {
+        let keep = Self::pages_needed(self.len);
+        while self.pages.len() > keep {
+            pool.release_page(self.pages.pop().unwrap());
+        }
+        self.cold_upto = 0;
+        self.len = 0;
+        self.pages.drain(..).map(|p| pool.export_page(p)).collect()
+    }
+
+    /// Rebuild a sequence from [`Self::spill`]'s exports. All-or-
+    /// nothing: on mid-way exhaustion the already-imported pages are
+    /// re-exported back into `exports` (contents unchanged — the
+    /// export/import round trip is exact) and `false` comes back, so
+    /// the caller can retry later.
+    pub fn restore(
+        &mut self,
+        pool: &mut KvPagePool,
+        exports: &mut Vec<PageExport>,
+        len: usize,
+    ) -> bool {
+        assert!(self.pages.is_empty() && self.len == 0, "restore into a live sequence");
+        assert_eq!(Self::pages_needed(len), exports.len(), "export count mismatch");
+        let mut imported: Vec<u32> = Vec::with_capacity(exports.len());
+        let mut failed: Option<PageExport> = None;
+        while !exports.is_empty() {
+            match pool.import_page(exports.remove(0)) {
+                Ok(page) => imported.push(page),
+                Err(exp) => {
+                    failed = Some(exp);
+                    break;
+                }
+            }
+        }
+        if let Some(exp) = failed {
+            // Roll back: lift the imported prefix out again (contents
+            // unchanged) and hand everything back in original order.
+            let mut restored: Vec<PageExport> =
+                imported.drain(..).map(|p| pool.export_page(p)).collect();
+            restored.push(exp);
+            restored.append(exports);
+            *exports = restored;
+            return false;
+        }
+        self.pages = imported;
+        self.len = len;
+        true
     }
 
     /// f32 slots currently pinned in the pool by this sequence.
@@ -519,6 +1022,29 @@ pub fn rescale_chunked_scalar(c: f32, out: &mut [f32]) {
     }
 }
 
+/// One [`PAGE_ROWS`]-row K/V block as the attention kernels consume
+/// it: plain fp32 row slices (hot pages, contiguous caches), or a cold
+/// page's codes that the kernel decodes inline into local scratch
+/// through [`RowCodec::decode_slab`] — the same `decode8` sign-LUT
+/// path as the weight matmuls. Decode is deterministic, so a block
+/// shared by CoW forks yields bit-identical rows in every lane, and
+/// the fused and per-sequence kernels (each decoding into its own
+/// scratch) stay bit-exact with each other.
+#[derive(Clone, Copy)]
+pub enum KvBlock<'a> {
+    /// `(k_rows, v_rows)`, each at least `rows × d_model` f32s.
+    F32(&'a [f32], &'a [f32]),
+    /// A cold page's K and V slabs (always a full page's worth —
+    /// pages are only quantized once filled).
+    Quant {
+        codec: &'a RowCodec,
+        k_codes: &'a [u16],
+        v_codes: &'a [u16],
+        k_scale: f32,
+        v_scale: f32,
+    },
+}
+
 /// Flash-style blocked attention for one sequence, all heads: walk KV
 /// rows `0..=pos` in [`PAGE_ROWS`]-sized blocks, keeping a per-head
 /// running max `m`, running normalizer `l`, and unnormalized output
@@ -549,6 +1075,26 @@ pub fn blocked_attention<'a, F>(
 ) where
     F: Fn(usize) -> (&'a [f32], &'a [f32]),
 {
+    blocked_attention_kv(q, out, pos, heads, hd, |blk| {
+        let (kb, vb) = blocks(blk);
+        KvBlock::F32(kb, vb)
+    });
+}
+
+/// [`blocked_attention`] over [`KvBlock`] blocks: identical walk and
+/// identical floating-point ops on fp32 blocks (the plain entry point
+/// is a thin adapter onto this one), plus inline decode of cold
+/// blocks into local scratch before the unchanged score/AV loops.
+pub fn blocked_attention_kv<'a, F>(
+    q: &[f32],
+    out: &mut [f32],
+    pos: usize,
+    heads: usize,
+    hd: usize,
+    blocks: F,
+) where
+    F: Fn(usize) -> KvBlock<'a>,
+{
     let d = heads * hd;
     debug_assert_eq!(q.len(), d);
     debug_assert_eq!(out.len(), d);
@@ -561,8 +1107,29 @@ pub fn blocked_attention<'a, F>(
         *o = 0.0;
     }
     let mut scores = [0.0f32; PAGE_ROWS];
+    // Decode scratch for cold blocks, allocated on first use so the
+    // all-fp32 walk stays allocation-free.
+    let mut kd: Vec<f32> = Vec::new();
+    let mut vd: Vec<f32> = Vec::new();
     for blk in 0..n_blocks {
-        let (kb, vb) = blocks(blk);
+        let (kb, vb): (&[f32], &[f32]) = match blocks(blk) {
+            KvBlock::F32(kb, vb) => (kb, vb),
+            KvBlock::Quant {
+                codec,
+                k_codes,
+                v_codes,
+                k_scale,
+                v_scale,
+            } => {
+                if kd.is_empty() {
+                    kd.resize(PAGE_ROWS * d, 0.0);
+                    vd.resize(PAGE_ROWS * d, 0.0);
+                }
+                codec.decode_slab(k_codes, k_scale, &mut kd);
+                codec.decode_slab(v_codes, v_scale, &mut vd);
+                (kd.as_slice(), vd.as_slice())
+            }
+        };
         let rows = (n_rows - blk * PAGE_ROWS).min(PAGE_ROWS);
         debug_assert!(kb.len() >= rows * d && vb.len() >= rows * d);
         for h in 0..heads {
@@ -661,6 +1228,30 @@ pub fn fused_batch_attention<'a, F>(lanes: &mut [AttnLane<'_>], heads: usize, hd
 where
     F: Fn(usize, usize) -> (u64, &'a [f32], &'a [f32]) + Sync,
 {
+    fused_batch_attention_kv(lanes, heads, hd, |b, blk| {
+        let (key, kb, vb) = blocks(b, blk);
+        (key, KvBlock::F32(kb, vb))
+    });
+}
+
+/// [`fused_batch_attention`] over [`KvBlock`] blocks: identical walk,
+/// sharding, and floating-point ops on fp32 blocks (the plain entry
+/// point is a thin adapter onto this one). Cold blocks are decoded
+/// inline by each worker into group-local scratch; because lanes at a
+/// block index are visited in ascending `(key, lane)` order, forked
+/// siblings aliasing one cold page decode it **once per group per
+/// step** (the decode cache keys on the physical block key), and the
+/// decode work shards across the pool with the same lane groups as
+/// the rest of the walk. Decode is deterministic, so caching changes
+/// no value and every fork reads bit-identical rows.
+pub fn fused_batch_attention_kv<'a, F>(
+    lanes: &mut [AttnLane<'_>],
+    heads: usize,
+    hd: usize,
+    blocks: F,
+) where
+    F: Fn(usize, usize) -> (u64, KvBlock<'a>) + Sync,
+{
     let d = heads * hd;
     let bsz = lanes.len();
     if bsz == 0 {
@@ -726,7 +1317,7 @@ unsafe impl Sync for LanesPtr<'_> {}
 /// index, exactly as the single-group (serial) walk would visit them.
 fn fused_walk<'l, 'a, F>(lanes: &LanesPtr<'l>, group: &[usize], heads: usize, hd: usize, blocks: &F)
 where
-    F: Fn(usize, usize) -> (u64, &'a [f32], &'a [f32]) + Sync,
+    F: Fn(usize, usize) -> (u64, KvBlock<'a>) + Sync,
 {
     if group.is_empty() {
         return;
@@ -746,24 +1337,52 @@ where
     // Scores scratch for one (lane, block) visit: head-major so each
     // head's row slice is contiguous for the rescale/AV passes.
     let mut scores = vec![0.0f32; heads * PAGE_ROWS];
-    let mut order: Vec<(u64, usize, usize, &'a [f32], &'a [f32])> = Vec::with_capacity(glen);
+    // Group-local decode scratch for cold blocks (allocated on first
+    // use), with a one-entry cache keyed on the physical block key:
+    // the `(key, lane)` visit order puts forked siblings sharing a
+    // cold page back to back, so the page decodes once per group.
+    let mut kd: Vec<f32> = Vec::new();
+    let mut vd: Vec<f32> = Vec::new();
+    let mut order: Vec<(u64, usize, usize, KvBlock<'a>)> = Vec::with_capacity(glen);
     for blk in 0..max_blocks {
         // Lanes still attending at this block index, grouped by
         // physical block so aliased pages are walked while cache-hot.
         order.clear();
+        let mut decoded_key: Option<u64> = None;
         for (li, &b) in group.iter().enumerate() {
             // SAFETY: as above — exclusive access to this group's lanes.
             let lane = unsafe { &*lanes.0.add(b) };
             if blk * PAGE_ROWS <= lane.pos {
-                let (key, kb, vb) = blocks(b, blk);
-                order.push((key, b, li, kb, vb));
+                let (key, block) = blocks(b, blk);
+                order.push((key, b, li, block));
             }
         }
         order.sort_unstable_by_key(|&(key, b, ..)| (key, b));
-        for &(_, b, li, kb, vb) in order.iter() {
+        for &(key, b, li, block) in order.iter() {
             // SAFETY: as above — exclusive access to this group's lanes.
             let lane = unsafe { &mut *lanes.0.add(b) };
             let rows = (lane.pos + 1 - blk * PAGE_ROWS).min(PAGE_ROWS);
+            let (kb, vb): (&[f32], &[f32]) = match block {
+                KvBlock::F32(kb, vb) => (kb, vb),
+                KvBlock::Quant {
+                    codec,
+                    k_codes,
+                    v_codes,
+                    k_scale,
+                    v_scale,
+                } => {
+                    if decoded_key != Some(key) {
+                        if kd.is_empty() {
+                            kd.resize(PAGE_ROWS * d, 0.0);
+                            vd.resize(PAGE_ROWS * d, 0.0);
+                        }
+                        codec.decode_slab(k_codes, k_scale, &mut kd);
+                        codec.decode_slab(v_codes, v_scale, &mut vd);
+                        decoded_key = Some(key);
+                    }
+                    (kd.as_slice(), vd.as_slice())
+                }
+            };
             debug_assert!(kb.len() >= rows * d && vb.len() >= rows * d);
             // Scores row-outer: each K row (contiguous d floats) is
             // streamed exactly once while every head dots against it.
@@ -1476,5 +2095,259 @@ mod tests {
                 );
             }
         }
+    }
+
+    fn quant_pool(pages: usize, bits: usize, hot_pages: usize) -> KvPagePool {
+        KvPagePool::with_quant(2, 8, pages, Some(KvQuantSpec { bits, hot_pages }))
+    }
+
+    /// Gather a sequence's rows for `layer` exactly as the attention
+    /// kernels consume them: raw f32 rows from hot pages, the codec's
+    /// deterministic reconstruction from cold ones.
+    fn effective_rows(kv: &PagedKv, pool: &KvPagePool, layer: usize) -> (Vec<f32>, Vec<f32>) {
+        let d = pool.d;
+        let mut kc = Vec::new();
+        let mut vc = Vec::new();
+        for (blk, &page) in kv.pages.iter().enumerate() {
+            let rows = (kv.len - blk * PAGE_ROWS).min(PAGE_ROWS);
+            match pool.kv_block(page, layer) {
+                KvBlock::F32(kb, vb) => {
+                    kc.extend_from_slice(&kb[..rows * d]);
+                    vc.extend_from_slice(&vb[..rows * d]);
+                }
+                KvBlock::Quant {
+                    codec,
+                    k_codes,
+                    v_codes,
+                    k_scale,
+                    v_scale,
+                } => {
+                    let mut buf = vec![0.0f32; PAGE_ROWS * d];
+                    codec.decode_slab(k_codes, k_scale, &mut buf);
+                    kc.extend_from_slice(&buf[..rows * d]);
+                    codec.decode_slab(v_codes, v_scale, &mut buf);
+                    vc.extend_from_slice(&buf[..rows * d]);
+                }
+            }
+        }
+        (kc, vc)
+    }
+
+    /// Quantizing a page returns most of its budget: a two-page pool
+    /// holding two cold pages has room for a third hot page, so
+    /// allocated page ids exceed the fp32 page count — the admitted-
+    /// concurrency multiplier the compression tier exists for.
+    #[test]
+    fn quantize_frees_budget_and_multiplies_capacity() {
+        let mut pool = quant_pool(2, 2, 0);
+        assert_eq!(pool.quant_bits(), 2);
+        assert_eq!(pool.hot_window(), Some(0));
+        let mut a = PagedKv::new();
+        assert!(a.reserve(&mut pool, 2 * PAGE_ROWS));
+        a.len = 2 * PAGE_ROWS;
+        fill(&a, &mut pool, 8, 2 * PAGE_ROWS, 0.0);
+        assert_eq!(pool.pages_free(), 0);
+        a.compress_cold(&mut pool);
+        assert_eq!(pool.cold_pages(), 2);
+        assert_eq!(pool.pages_quantized_total(), 2);
+        for &p in &a.pages {
+            assert!(pool.is_cold(p));
+        }
+        // Cold pages are charged at their compressed size, so a whole
+        // fp32 page of budget is free again...
+        assert_eq!(pool.pages_free(), 1);
+        // ...and a third page fits in a two-page pool.
+        let mut b = PagedKv::new();
+        assert!(b.reserve(&mut pool, 1));
+        assert_eq!(pool.pages_in_use(), 3);
+        assert!(pool.pages_in_use() > pool.pages_total());
+        b.release(&mut pool);
+        a.release(&mut pool);
+        assert_eq!(pool.pages_free(), 2);
+        assert_eq!(pool.pages_in_use(), 0);
+        assert_eq!(pool.used_units, 0);
+    }
+
+    /// `compress_cold` stops short of the hot tail: the page being
+    /// written plus `hot_pages` recent full pages stay fp32, and a
+    /// second sweep quantizes nothing new (idempotence — forked
+    /// siblings advance their own frontiers over shared pages).
+    #[test]
+    fn compress_cold_respects_hot_window() {
+        let mut pool = quant_pool(4, 2, 1);
+        let mut a = PagedKv::new();
+        let len = 3 * PAGE_ROWS + 4;
+        assert!(a.reserve(&mut pool, len));
+        a.len = len;
+        fill(&a, &mut pool, 8, len, 0.0);
+        a.compress_cold(&mut pool);
+        assert_eq!(pool.cold_pages(), 2);
+        assert!(pool.is_cold(a.pages[0]) && pool.is_cold(a.pages[1]));
+        assert!(!pool.is_cold(a.pages[2]), "full page inside the hot window");
+        assert!(!pool.is_cold(a.pages[3]), "page being written stays hot");
+        a.compress_cold(&mut pool);
+        assert_eq!(pool.pages_quantized_total(), 2);
+        a.release(&mut pool);
+        assert_eq!(pool.pages_free(), 4);
+    }
+
+    /// The kernels' inline decode must equal offline decode + the
+    /// exact-fp32 oracle: `blocked_attention_kv` over a mixed
+    /// cold/hot walk matches `two_pass_reference` on the effective
+    /// (reconstructed) rows, the fused walk is bit-exact with the
+    /// per-lane walk, and CoW forks sharing a cold page read
+    /// bit-identical values in every lane.
+    #[test]
+    fn cold_attention_matches_offline_decode_and_forks_agree() {
+        let mut rng = crate::util::rng::Pcg64::new(41);
+        let (heads, hd) = (2usize, 4usize); // d = 8, the pool geometry
+        let d = heads * hd;
+        let mut pool = quant_pool(4, 2, 0);
+        let mut a = PagedKv::new();
+        let len = 2 * PAGE_ROWS + 11; // two full (→ cold) pages + hot tail
+        assert!(a.reserve(&mut pool, len));
+        a.len = len;
+        fill_rows(&a, &mut pool, d, 0, len, &mut rng);
+        a.compress_cold(&mut pool);
+        assert_eq!(pool.cold_pages(), 2);
+        // Oracle on the reconstruction the kernels must see.
+        let (kc, vc) = effective_rows(&a, &pool, 0);
+        let q = rng.gaussian_vec(3 * d, 1.0);
+        let want = two_pass_reference(&q[..d], &kc, &vc, heads, hd);
+        let mut out_a = vec![0.0f32; d];
+        blocked_attention_kv(&q[..d], &mut out_a, len - 1, heads, hd, |blk| {
+            pool.kv_block(a.pages[blk], 0)
+        });
+        crate::util::proptest_lite::assert_close(&out_a, &want, 1e-4, 1e-4).unwrap();
+        // Two forks aliasing the parent's cold pages, attending over
+        // the shared prefix only, with the *same* query: decode is
+        // deterministic, so their outputs must be bitwise identical.
+        let mut f1 = PagedKv::new();
+        f1.fork_prefix(&mut pool, &a, 2 * PAGE_ROWS);
+        let mut f2 = PagedKv::new();
+        f2.fork_prefix(&mut pool, &a, 2 * PAGE_ROWS);
+        let seqs = [&a, &f1, &f2];
+        let lens = [len, 2 * PAGE_ROWS, 2 * PAGE_ROWS];
+        let qs = [&q[..d], &q[d..2 * d], &q[d..2 * d]];
+        // Per-lane walk — the oracle for the fused kernel.
+        let mut out_seq = vec![0.0f32; 3 * d];
+        for b in 0..3 {
+            blocked_attention_kv(
+                qs[b],
+                &mut out_seq[b * d..(b + 1) * d],
+                lens[b] - 1,
+                heads,
+                hd,
+                |blk| pool.kv_block(seqs[b].pages[blk], 0),
+            );
+        }
+        let mut out_fused = vec![0.0f32; 3 * d];
+        {
+            let mut lanes: Vec<AttnLane> = out_fused
+                .chunks_exact_mut(d)
+                .enumerate()
+                .map(|(b, ob)| AttnLane {
+                    q: qs[b],
+                    out: ob,
+                    pos: lens[b] - 1,
+                })
+                .collect();
+            fused_batch_attention_kv(&mut lanes, heads, hd, |b, blk| {
+                let page = seqs[b].pages[blk];
+                (page as u64, pool.kv_block(page, 0))
+            });
+        }
+        for (i, (x, y)) in out_fused.iter().zip(&out_seq).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "fused vs per-seq lane {} coord {}: {x} vs {y}",
+                i / d,
+                i % d
+            );
+        }
+        for j in 0..d {
+            assert!(
+                out_fused[d + j].to_bits() == out_fused[2 * d + j].to_bits(),
+                "forked lanes diverged at coord {j}"
+            );
+        }
+        f2.release(&mut pool);
+        f1.release(&mut pool);
+        a.release(&mut pool);
+        assert_eq!(pool.pages_free(), pool.pages_total());
+    }
+
+    /// Spill → restore is exact: the cold page's codes move verbatim,
+    /// the hot page's rows move bitwise, and a restore that cannot fit
+    /// rolls back all-or-nothing with the exports intact.
+    #[test]
+    fn spill_restore_round_trip_is_exact() {
+        let mut pool = quant_pool(3, 2, 0);
+        let mut a = PagedKv::new();
+        let len = PAGE_ROWS + 7;
+        assert!(a.reserve(&mut pool, len));
+        a.len = len;
+        fill(&a, &mut pool, 8, len, 3.0);
+        a.compress_cold(&mut pool);
+        assert!(pool.is_cold(a.pages[0]) && !pool.is_cold(a.pages[1]));
+        let before: Vec<_> = (0..2).map(|l| effective_rows(&a, &pool, l)).collect();
+        let used = pool.used_units;
+        let mut exports = a.spill(&mut pool);
+        assert_eq!(exports.len(), 2);
+        assert!(matches!(exports[0], PageExport::Cold(_)));
+        assert!(matches!(exports[1], PageExport::Hot(_)));
+        assert!(a.pages.is_empty() && a.len == 0);
+        assert_eq!(pool.pages_in_use(), 0);
+        assert_eq!(pool.used_units, 0);
+        // Pressure the pool so the cold page imports but the hot page
+        // cannot: restore must undo the partial import and hand every
+        // export back unchanged, in order.
+        let mut blocker = PagedKv::new();
+        assert!(blocker.reserve(&mut pool, 2 * PAGE_ROWS));
+        let mut b = PagedKv::new();
+        assert!(!b.restore(&mut pool, &mut exports, len));
+        assert_eq!(exports.len(), 2);
+        assert!(matches!(exports[0], PageExport::Cold(_)));
+        assert!(matches!(exports[1], PageExport::Hot(_)));
+        assert!(b.pages.is_empty() && b.len == 0);
+        blocker.release(&mut pool);
+        assert!(b.restore(&mut pool, &mut exports, len));
+        assert!(exports.is_empty());
+        assert_eq!(b.len, len);
+        assert_eq!(pool.used_units, used);
+        assert!(pool.is_cold(b.pages[0]) && !pool.is_cold(b.pages[1]));
+        for (l, want) in before.iter().enumerate() {
+            assert_eq!(&effective_rows(&b, &pool, l), want, "layer {l} changed");
+        }
+        b.release(&mut pool);
+        assert_eq!(pool.pages_free(), 3);
+    }
+
+    /// A speculative rollback into the cold region followed by regrowth
+    /// must reheat the written-into tail page — decoded back to the
+    /// exact values its codes represented — while pages before the
+    /// write range stay cold.
+    #[test]
+    fn reserve_reheats_cold_tail_after_truncate() {
+        let mut pool = quant_pool(3, 2, 0);
+        let mut a = PagedKv::new();
+        assert!(a.reserve(&mut pool, 2 * PAGE_ROWS));
+        a.len = 2 * PAGE_ROWS;
+        fill(&a, &mut pool, 8, a.len, 1.0);
+        a.compress_cold(&mut pool);
+        assert_eq!(pool.cold_pages(), 2);
+        let (kc, _) = effective_rows(&a, &pool, 0);
+        a.truncate(&mut pool, PAGE_ROWS + 9);
+        assert!(a.reserve(&mut pool, PAGE_ROWS + 10));
+        assert!(!pool.is_cold(a.pages[1]), "write-range page must be reheated");
+        assert!(pool.is_cold(a.pages[0]), "page before the write range stays cold");
+        assert_eq!(pool.reheats_total(), 1);
+        assert_eq!(pool.cold_pages(), 1);
+        // The reheated rows below the truncation point are the decode
+        // of the codes the page held — not garbage, not stale fp32.
+        let kb = pool.k_block(a.pages[1], 0);
+        assert_eq!(&kb[..9 * 8], &kc[PAGE_ROWS * 8..(PAGE_ROWS + 9) * 8]);
+        a.release(&mut pool);
+        assert_eq!(pool.pages_free(), 3);
     }
 }

@@ -28,7 +28,14 @@
 //!   fork), with per-sequence `blocked_attention` as the bit-exact
 //!   baseline and chunked SIMD score/rescale/AV inner loops shared by
 //!   both and by the paged and contiguous (`KvCache`) layouts alike,
-//!   which keeps every decode path bit-exact.
+//!   which keeps every decode path bit-exact. The pool optionally
+//!   carries a KV compression tier (`KvQuantSpec`): full pages outside
+//!   a configurable hot tail are re-encoded in place with the same
+//!   E8P/RVQ codebooks as the weights (`quant::codebook::rowq`),
+//!   charged at their compressed size against the pool's unit budget
+//!   (so admitted concurrency rises at equal pool bytes), and decoded
+//!   inline by the attention walk (`KvBlock::Quant`) through the same
+//!   sign-LUT decode path as the weight matmuls.
 //!   `generation::speculative` layers self-speculative decoding on top:
 //!   the RVQ base stage embedded in every multi-stage quantization
 //!   drafts k tokens against its own KV, the full model verifies all
@@ -45,7 +52,11 @@
 //!   requests instead of re-prefilling it) with LRU eviction of cold
 //!   cached prefixes under pressure, chunked prefill, batched paged
 //!   decode steps, per-request self-speculative rounds (`speculate_k`),
-//!   amortization + pool + sharing + speculation metrics.
+//!   amortization + pool + sharing + speculation metrics. With
+//!   `--kv-bits` set, preempted sequences *spill* their (mostly
+//!   compressed) pages to a host-side arena and restore on
+//!   re-admission instead of re-prefilling from scratch, and evicted
+//!   registered prefixes park in the same arena.
 //!
 //! `ARCHITECTURE.md` at the repo root walks this stack top-down with a
 //! diagram; `BENCHMARKS.md` documents the benchmark outputs.

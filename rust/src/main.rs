@@ -6,7 +6,7 @@
 //!   zeroshot  --size m --method quip#-2bit
 //!   serve     --size m [--bits 2 [--ft]] [--addr 127.0.0.1:7140]
 //!             [--max-batch 8] [--pool-pages N] [--attn-mode fused|perseq]
-//!             [--speculate K]
+//!             [--speculate K] [--kv-bits 2|4] [--kv-hot-pages W]
 //!     --bits quantizes the served model (omit for fp32); --max-batch
 //!     caps concurrent sequences (default 8); --pool-pages sets the KV
 //!     pool size in 32-token-row pages — omitted, the pool is sized for
@@ -17,6 +17,12 @@
 //!     --speculate sets the default self-speculative draft length (the
 //!     RVQ base stage drafts K tokens, the full model verifies — output
 //!     unchanged, per-request override via the "speculate" field).
+//!     --kv-bits quantizes *cold* KV-cache pages to E8P/RVQ codes (2 or
+//!     4 bits/value; omit for fp32 KV, which stays bit-exact with
+//!     previous releases) and routes preemptions through the host-side
+//!     spill arena instead of restarting prefill; --kv-hot-pages sets
+//!     how many recent full pages per sequence stay fp32 behind the
+//!     write head (default 1).
 //!     Prompt-prefix sharing is driven by the wire protocol
 //!     (register_prefix / prefix_id), not by flags.
 //!   export-codebook --out path.qtz      (E8P tables for cross-lang tests)
@@ -77,7 +83,9 @@ fn main() -> Result<()> {
                  [--size s|m|l|moe|nonllama] [--method quip#-2bit|…] [--art artifacts]\n\
                  serve also takes: [--bits 2 [--ft]] [--addr 127.0.0.1:7140] [--max-batch 8] \
                  [--pool-pages N] (KV pool pages; default = worst case, smaller oversubscribes) \
-                 [--attn-mode fused|perseq] [--speculate K] (self-speculative draft length)"
+                 [--attn-mode fused|perseq] [--speculate K] (self-speculative draft length) \
+                 [--kv-bits 2|4] (E8P/RVQ-quantize cold KV pages; off = fp32 KV) \
+                 [--kv-hot-pages W] (recent fp32 pages per sequence, default 1)"
             );
             Ok(())
         }
@@ -173,15 +181,33 @@ fn cmd_serve(args: &Args, art: &str) -> Result<()> {
     // --speculate: default self-speculative draft length for requests
     // that don't carry their own "speculate" field (0 = off).
     let speculate_k = args.get_usize("speculate", 0);
+    // --kv-bits / --kv-hot-pages: E8P/RVQ compression of cold KV pages
+    // (0 = fp32 KV, bit-exact with previous releases) and the per-seq
+    // fp32 hot-tail width.
+    let kv_bits = args.get_usize("kv-bits", 0);
+    if !matches!(kv_bits, 0 | 2 | 4) {
+        bail!("unknown --kv-bits '{kv_bits}' (expected 2 or 4; omit for fp32 KV)");
+    }
+    let kv_hot_pages = args.get_usize("kv-hot-pages", 1);
     let opts = EngineOptions {
         max_batch,
         pool_pages,
         attn_mode,
         speculate_k,
+        kv_bits,
+        kv_hot_pages,
     };
-    let pool_desc = pool_pages
-        .map(|p| format!("KV pool {p} pages"))
-        .unwrap_or_else(|| "worst-case KV pool".to_string());
+    let pool_desc = format!(
+        "{}{}",
+        pool_pages
+            .map(|p| format!("KV pool {p} pages"))
+            .unwrap_or_else(|| "worst-case KV pool".to_string()),
+        if kv_bits > 0 {
+            format!(", kv {kv_bits}-bit (hot tail {kv_hot_pages})")
+        } else {
+            String::new()
+        }
+    );
     let mode_desc = format!(
         "attn {}{}",
         if attn_mode == AttnMode::Fused { "fused" } else { "perseq" },

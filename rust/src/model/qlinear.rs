@@ -41,11 +41,26 @@
 //!   its accumulation order is fixed, so results are bit-identical at any
 //!   `QUIPSHARP_THREADS`, including 1.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 
 use crate::linalg::hadamard::fwht_f32;
 use crate::quant::codebook::e8p::E8P;
 use crate::util::threadpool;
+
+/// Process-wide count of codeword decodes issued by the matmul kernels
+/// ([`decode8_fast`] invocations), including the `⌈B / BATCH_TILE⌉`
+/// re-decodes a wide batch pays per codeword. Serving metrics snapshot
+/// this per step so the BATCH_TILE re-decode cost is observable before
+/// anyone tunes the tile width.
+static CODEWORDS_DECODED: AtomicU64 = AtomicU64::new(0);
+
+/// Total codewords decoded by [`QuantMatvec::matmul`]/[`QuantMatvec::matvec`]
+/// (and their `_tilde` cores) since process start. Monotonic; read with
+/// relaxed ordering — callers diff successive snapshots.
+pub fn codewords_decoded() -> u64 {
+    CODEWORDS_DECODED.load(Ordering::Relaxed)
+}
 
 /// Decode tables in hot-path layout.
 pub struct E8PTables {
@@ -396,6 +411,14 @@ impl QuantMatvec {
         // (capped so every pool participant still gets several tiles to
         // steal). Tile geometry never affects values: one writer per row.
         let work = self.n * stages.len() * batch;
+        // Every row decodes `stages·nb` codewords once per BATCH_TILE-wide
+        // lane tile (batch == 1 ⇒ one tile). Counted up front — tile
+        // geometry is deterministic, so this equals the number of
+        // decode8_fast calls the closures below will actually make.
+        CODEWORDS_DECODED.fetch_add(
+            (self.m * stages.len() * nb * batch.div_ceil(BATCH_TILE)) as u64,
+            Ordering::Relaxed,
+        );
         let row_code_bytes = stages.len() * nb * 2;
         let tile_rows = (TILE_CODE_BYTES / row_code_bytes.max(1))
             .min(self.m.div_ceil(4 * threadpool::num_threads()))

@@ -14,6 +14,7 @@ pub mod d4;
 pub mod e8;
 pub mod e8p;
 pub mod kmeans;
+pub mod rowq;
 pub mod scalar;
 
 use crate::util::rng::Pcg64;

@@ -1,0 +1,248 @@
+//! Fixed-rate E8P/RVQ codec for f32 slabs (KV-cache pages).
+//!
+//! Weight quantization in this repo goes through an offline pipeline
+//! (Hadamard incoherence, per-matrix scale search). KV rows are produced at
+//! decode time and must be compressed in nanoseconds-per-element, so this
+//! codec is deliberately minimal: one RMS scale per slab, then each
+//! 8-element group is quantized with the same E8P (+ residual E8P stage at
+//! 4 bits) machinery the weights use.
+//!
+//! The contract that matters for correctness elsewhere:
+//!
+//! * **Decode is pure f32 and deterministic.** `decode_slab` uses the
+//!   process-wide [`E8PTables`] through [`decode8_fast`] (the same AVX2
+//!   sign-LUT path as the weight matmuls, bit-exact with its scalar
+//!   oracle), so two lanes decoding the same codes — e.g. CoW forks
+//!   sharing a cold page — see bit-identical f32 values, on any thread.
+//! * **Encode minimizes *f32 reconstruction* error.** Residuals for the
+//!   second stage are computed against the f32 decode of the first stage
+//!   (not the f64 lattice point), so what `decode_slab` reproduces is
+//!   exactly what encode optimized.
+//!
+//! Rates: `bits = 2` is a single E8P stage (16 bits / 8 coords);
+//! `bits = 4` adds a residual E8P stage at scale 0.3, matching the RVQ
+//! stage scales used for 4-bit weights (`quant/rvq.rs`).
+
+use crate::model::qlinear::{decode8_fast, E8PTables};
+use crate::quant::codebook::e8p::E8P;
+
+/// Smallest slab RMS treated as a real signal; all-zero (or denormal)
+/// slabs fall back to scale 1.0 so decode stays finite.
+const MIN_SCALE: f32 = 1e-20;
+
+/// Fixed-rate f32 slab encoder/decoder built on E8P residual stages.
+pub struct RowCodec {
+    e8p: E8P,
+    tables: &'static E8PTables,
+    /// Per-stage scales (f32 so encode's residual arithmetic mirrors the
+    /// f32 decode exactly).
+    stage_scales: Vec<f32>,
+    bits: usize,
+}
+
+impl RowCodec {
+    /// `bits` must be 2 (one E8P stage) or 4 (E8P + 0.3-scaled residual
+    /// E8P stage, the `rvq_4bit` recipe).
+    pub fn new(bits: usize) -> Self {
+        let stage_scales = match bits {
+            2 => vec![1.0f32],
+            4 => vec![1.0f32, 0.3f32],
+            _ => panic!("RowCodec supports 2 or 4 bits per weight, got {bits}"),
+        };
+        RowCodec {
+            e8p: E8P::new(),
+            tables: E8PTables::shared(),
+            stage_scales,
+            bits,
+        }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    pub fn stages(&self) -> usize {
+        self.stage_scales.len()
+    }
+
+    /// Number of u16 codes `encode_slab` emits for a slab of `len` f32s.
+    pub fn codes_per_slab(&self, len: usize) -> usize {
+        assert_eq!(len % 8, 0, "slab length must be a multiple of 8");
+        self.stage_scales.len() * (len / 8)
+    }
+
+    /// Quantize `x` into `codes` (stage-major: all stage-0 group codes,
+    /// then all stage-1), returning the slab scale used. `codes.len()`
+    /// must equal `codes_per_slab(x.len())`.
+    pub fn encode_slab(&self, x: &[f32], codes: &mut [u16]) -> f32 {
+        let ng = x.len() / 8;
+        assert_eq!(x.len(), ng * 8, "slab length must be a multiple of 8");
+        assert_eq!(codes.len(), self.stage_scales.len() * ng);
+        let scale = slab_scale(x);
+        let inv = 1.0f32 / scale;
+        let mut dec = [0.0f32; 8];
+        for g in 0..ng {
+            // Residual chain in f32, mirroring decode_slab's arithmetic.
+            let mut resid = [0.0f32; 8];
+            for i in 0..8 {
+                resid[i] = x[g * 8 + i] * inv;
+            }
+            for (si, &ss) in self.stage_scales.iter().enumerate() {
+                let mut target = [0.0f64; 8];
+                for i in 0..8 {
+                    target[i] = (resid[i] / ss) as f64;
+                }
+                let code = self.e8p.encode_u16(&target);
+                codes[si * ng + g] = code;
+                decode8_fast(self.tables, code, &mut dec);
+                for i in 0..8 {
+                    resid[i] -= dec[i] * ss;
+                }
+            }
+        }
+        scale
+    }
+
+    /// Reconstruct a slab previously produced by [`encode_slab`]. Pure
+    /// f32; bit-deterministic for fixed codes + scale.
+    pub fn decode_slab(&self, codes: &[u16], scale: f32, out: &mut [f32]) {
+        let ng = out.len() / 8;
+        assert_eq!(out.len(), ng * 8, "slab length must be a multiple of 8");
+        assert_eq!(codes.len(), self.stage_scales.len() * ng);
+        let mut dec = [0.0f32; 8];
+        for (si, &ss) in self.stage_scales.iter().enumerate() {
+            let stage = &codes[si * ng..(si + 1) * ng];
+            if si == 0 {
+                for g in 0..ng {
+                    decode8_fast(self.tables, stage[g], &mut dec);
+                    for i in 0..8 {
+                        out[g * 8 + i] = dec[i] * ss;
+                    }
+                }
+            } else {
+                for g in 0..ng {
+                    decode8_fast(self.tables, stage[g], &mut dec);
+                    for i in 0..8 {
+                        out[g * 8 + i] += dec[i] * ss;
+                    }
+                }
+            }
+        }
+        for v in out.iter_mut() {
+            *v *= scale;
+        }
+    }
+}
+
+/// RMS of the slab, clamped away from zero so `x / scale` is always
+/// finite. RMS (rather than abs-max) keeps the scaled distribution close
+/// to the unit Gaussian ball E8P is shaped for.
+fn slab_scale(x: &[f32]) -> f32 {
+    let mut sumsq = 0.0f64;
+    for &v in x {
+        sumsq += (v as f64) * (v as f64);
+    }
+    let rms = (sumsq / x.len().max(1) as f64).sqrt() as f32;
+    if rms > MIN_SCALE {
+        rms
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+
+    fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (x, y) in a.iter().zip(b) {
+            num += ((x - y) as f64).powi(2);
+            den += (*x as f64).powi(2);
+        }
+        (num / den.max(1e-30)).sqrt()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        // Generous bounds: E8P on unit-Gaussian data has per-coord MSE well
+        // under 0.1 (see quant::codebook tests), so relative L2 lands near
+        // 0.28 at 2 bits and well under that with the residual stage. The
+        // thresholds below only catch gross breakage, not regressions.
+        for (bits, bound) in [(2usize, 0.7f64), (4usize, 0.35f64)] {
+            let codec = RowCodec::new(bits);
+            check(&format!("rowq_roundtrip_{bits}b"), 20, |rng| {
+                let x = rng.gaussian_vec(256, 1.7);
+                let mut codes = vec![0u16; codec.codes_per_slab(x.len())];
+                let scale = codec.encode_slab(&x, &mut codes);
+                let mut out = vec![0.0f32; x.len()];
+                codec.decode_slab(&codes, scale, &mut out);
+                let err = rel_l2(&x, &out);
+                if err > bound {
+                    return Err(format!("{bits}-bit rel L2 {err} > {bound}"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn decode_is_bit_deterministic() {
+        let codec = RowCodec::new(4);
+        check("rowq_deterministic", 10, |rng| {
+            let x = rng.gaussian_vec(64, 1.0);
+            let mut codes = vec![0u16; codec.codes_per_slab(x.len())];
+            let scale = codec.encode_slab(&x, &mut codes);
+            let mut a = vec![0.0f32; x.len()];
+            let mut b = vec![7.0f32; x.len()];
+            codec.decode_slab(&codes, scale, &mut a);
+            codec.decode_slab(&codes, scale, &mut b);
+            for (u, v) in a.iter().zip(&b) {
+                if u.to_bits() != v.to_bits() {
+                    return Err(format!("decode not deterministic: {u} vs {v}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_slab_stays_finite() {
+        let codec = RowCodec::new(2);
+        let x = vec![0.0f32; 32];
+        let mut codes = vec![0u16; codec.codes_per_slab(32)];
+        let scale = codec.encode_slab(&x, &mut codes);
+        assert_eq!(scale, 1.0);
+        let mut out = vec![f32::NAN; 32];
+        codec.decode_slab(&codes, scale, &mut out);
+        for v in &out {
+            assert!(v.is_finite());
+            // Nearest lattice point to 0 is within the shifted codebook's
+            // minimum radius; just sanity-bound it.
+            assert!(v.abs() < 2.0, "zero slab decoded to {v}");
+        }
+    }
+
+    #[test]
+    fn four_bit_beats_two_bit() {
+        let c2 = RowCodec::new(2);
+        let c4 = RowCodec::new(4);
+        check("rowq_4_beats_2", 10, |rng| {
+            let x = rng.gaussian_vec(512, 1.0);
+            let mut e = [0.0f64; 2];
+            for (slot, codec) in [&c2, &c4].iter().enumerate() {
+                let mut codes = vec![0u16; codec.codes_per_slab(x.len())];
+                let scale = codec.encode_slab(&x, &mut codes);
+                let mut out = vec![0.0f32; x.len()];
+                codec.decode_slab(&codes, scale, &mut out);
+                e[slot] = rel_l2(&x, &out);
+            }
+            if e[1] >= e[0] {
+                return Err(format!("4-bit err {} not below 2-bit err {}", e[1], e[0]));
+            }
+            Ok(())
+        });
+    }
+}

@@ -75,9 +75,12 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::generation::paged::{pages_per_seq, KvPagePool, PagedKv, PAGE_ROWS};
+use crate::generation::paged::{
+    pages_per_seq, KvPagePool, KvQuantSpec, PageExport, PagedKv, PAGE_ROWS,
+};
 use crate::generation::speculative::{effective_k, spec_round_paged, SpecLane, SpecStats};
 use crate::generation::{argmax, streamed_bytes_for_batch, AttnMode, Generator};
+use crate::model::qlinear::codewords_decoded;
 use crate::model::Model;
 use crate::qmodel::QuantizedModel;
 
@@ -155,15 +158,73 @@ struct PrefixCache {
     last_used: u64,
 }
 
+/// A preempted sequence parked outside the pool: its pages exported
+/// verbatim (cold pages keep their codes, hot tail pages keep raw f32
+/// rows), so restoring reproduces the exact KV state and skips the
+/// re-prefill a plain requeue would pay. The draft KV is *not* spilled —
+/// it is cheap to rebuild from the true stream, so it is released and
+/// `draft_pending` re-seeded on restore.
+struct SpilledSeq {
+    req: EngineRequest,
+    tx: Sender<EngineResponse>,
+    generated: Vec<u8>,
+    pending_prompt: usize,
+    last_logits: Vec<f32>,
+    spec_k: usize,
+    exports: Vec<PageExport>,
+    kv_len: usize,
+    t0: Instant,
+}
+
+/// An unpinned prefix cache parked in the arena: re-imported on the next
+/// hit instead of re-prefilled.
+struct SpilledPrefix {
+    tokens: Arc<Vec<u8>>,
+    exports: Vec<PageExport>,
+    kv_len: usize,
+    last_logits: Vec<f32>,
+}
+
+/// Host-side arena for KV pages exported from the pool. Only populated
+/// when KV quantization is on (`enabled`): with fp32 KV, preemption
+/// keeps the historical requeue-and-restart path byte-for-byte, so the
+/// quant-off engine behaves exactly as before this tier existed.
+struct SpillArena {
+    enabled: bool,
+    seqs: Vec<SpilledSeq>,
+    prefixes: HashMap<u64, SpilledPrefix>,
+}
+
+impl SpillArena {
+    fn new(enabled: bool) -> Self {
+        SpillArena {
+            enabled,
+            seqs: Vec::new(),
+            prefixes: HashMap::new(),
+        }
+    }
+
+    /// Pages currently parked here (sequences + prefixes) — the
+    /// `kv_spilled_pages` gauge.
+    fn pages(&self) -> usize {
+        self.seqs.iter().map(|s| s.exports.len()).sum::<usize>()
+            + self.prefixes.values().map(|p| p.exports.len()).sum::<usize>()
+    }
+}
+
 /// Evict the least-recently-used *cold* prefix cache — one whose pages
 /// no live sequence references any more (every page at refcount 1, so
 /// releasing frees them all) — returning whether anything was evicted.
 /// `exclude` protects a cache mid-(re)build. Hot caches (any page still
 /// shared with an active fork) are never touched: releasing them would
-/// free nothing now and forfeit pages live sequences still read.
+/// free nothing now and forfeit pages live sequences still read. With
+/// the spill arena enabled the victim's pages are exported there (the
+/// next hit restores by import); otherwise they are simply released and
+/// a later hit rebuilds by prefill.
 fn evict_cold_prefix(
     cache: &mut HashMap<u64, PrefixCache>,
     pool: &mut KvPagePool,
+    arena: &mut SpillArena,
     metrics: &Metrics,
     exclude: Option<u64>,
 ) -> bool {
@@ -177,7 +238,21 @@ fn evict_cold_prefix(
     match victim {
         Some(pid) => {
             let mut old = cache.remove(&pid).unwrap();
-            old.kv.release(pool);
+            if arena.enabled {
+                let kv_len = old.kv.len;
+                let exports = old.kv.spill(pool);
+                arena.prefixes.insert(
+                    pid,
+                    SpilledPrefix {
+                        tokens: old.tokens,
+                        exports,
+                        kv_len,
+                        last_logits: old.last_logits,
+                    },
+                );
+            } else {
+                old.kv.release(pool);
+            }
             metrics.record_prefix_eviction();
             true
         }
@@ -206,6 +281,7 @@ fn try_fork_prefix(
     generator: &Generator,
     pool: &mut KvPagePool,
     cache: &mut HashMap<u64, PrefixCache>,
+    arena: &mut SpillArena,
     kv: &mut PagedKv,
     clock: u64,
 ) -> Option<(usize, Option<Vec<f32>>)> {
@@ -235,6 +311,31 @@ fn try_fork_prefix(
         if let Some(mut old) = cache.remove(&pid) {
             old.kv.release(pool);
         }
+        // A spilled copy of this cache restores by import — no prefill
+        // compute at all — provided its tokens are still current and the
+        // pool has room. A capacity-miss keeps it parked for a later
+        // hit; a re-registered prefix invalidates the spilled copy.
+        if let Some(sp) = arena.prefixes.remove(&pid) {
+            if Arc::ptr_eq(&sp.tokens, &tokens) {
+                let mut sp = sp;
+                let mut pkv = PagedKv::new();
+                if pkv.restore(pool, &mut sp.exports, sp.kv_len) {
+                    cache.insert(
+                        pid,
+                        PrefixCache {
+                            tokens: sp.tokens,
+                            kv: pkv,
+                            last_logits: sp.last_logits,
+                            last_used: clock,
+                        },
+                    );
+                } else {
+                    arena.prefixes.insert(pid, sp);
+                }
+            }
+        }
+    }
+    if !cache.contains_key(&pid) {
         // Check capacity before spending any prefill compute: the
         // scheduler is single-threaded, so free pages now means the
         // whole build succeeds. Demand a page of headroom beyond the
@@ -259,7 +360,7 @@ fn try_fork_prefix(
                 return None;
             }
             while build_need > pool.pages_free() {
-                if !evict_cold_prefix(cache, pool, &sh.metrics, Some(pid)) {
+                if !evict_cold_prefix(cache, pool, arena, &sh.metrics, Some(pid)) {
                     return None;
                 }
             }
@@ -311,6 +412,13 @@ enum Freed {
     /// caller must drop the index from any selection and shift larger
     /// indices down.
     Removed(usize),
+    /// `active[i]` was preempted into the spill arena (it is now
+    /// `arena.seqs.last()`). Index handling as for [`Freed::Removed`];
+    /// additionally, a caller that advanced the victim's cursor for a
+    /// decode that now never runs must undo that advance on the parked
+    /// copy — the spilled sequence resumes *exactly* where its last
+    /// completed decode left it.
+    Spilled(usize),
     /// A cold prefix cache was unpinned; `active` is untouched.
     PrefixEvicted,
 }
@@ -318,15 +426,18 @@ enum Freed {
 /// Relieve KV pool pressure, preferring the cheapest remedy first:
 /// retire an already-finished sequence (frees its pages *and* answers
 /// its request), unpin the LRU cold prefix cache (frees pages at the
-/// cost of a future rebuild), preempt the youngest admission (release
-/// pages — target and draft alike — and requeue at the queue front), or
-/// — when only one sequence remains and nothing else can free — fail
-/// that request descriptively instead of spinning.
+/// cost of a future rebuild), preempt the youngest admission — with the
+/// spill arena enabled its pages are exported host-side and re-imported
+/// on re-admission (no re-prefill); otherwise they are released and the
+/// request requeued at the queue front — or, when only one sequence
+/// remains and nothing else can free, fail that request descriptively
+/// instead of spinning.
 fn free_pages(
     active: &mut Vec<Active>,
     pool: &mut KvPagePool,
     sh: &Shared,
     prefix_cache: &mut HashMap<u64, PrefixCache>,
+    arena: &mut SpillArena,
     ctx: usize,
 ) -> Freed {
     // An already-finished sequence (one that crossed max_new in round 0
@@ -352,7 +463,7 @@ fn free_pages(
     }
     // Cold prefix caches are passive pinned pages: unpin before
     // touching live sequences.
-    if evict_cold_prefix(prefix_cache, pool, &sh.metrics, None) {
+    if evict_cold_prefix(prefix_cache, pool, arena, &sh.metrics, None) {
         return Freed::PrefixEvicted;
     }
     if active.len() == 1 {
@@ -397,10 +508,13 @@ fn free_pages(
         let _ = a.tx.send(resp);
         return Freed::Removed(0);
     }
-    // Evict the youngest admission: release its pages (draft included),
-    // requeue its request at the queue front. The oldest sequence is
-    // never evicted on behalf of a younger one, so the batch always
-    // makes progress.
+    // Evict the youngest admission: release its pages (draft included).
+    // The oldest sequence is never evicted on behalf of a younger one,
+    // so the batch always makes progress. With the spill arena enabled
+    // the victim's KV pages move host-side (generated tokens and logits
+    // ride along, so re-admission resumes exactly where it stopped);
+    // otherwise its request is requeued at the queue front and restarts
+    // from prefill.
     let young = active
         .iter()
         .enumerate()
@@ -408,9 +522,26 @@ fn free_pages(
         .map(|(i, _)| i)
         .unwrap();
     let mut a = active.remove(young);
-    a.kv.release(pool);
     a.draft_kv.release(pool);
     sh.metrics.record_preemption();
+    if arena.enabled {
+        let kv_len = a.kv.len;
+        let exports = a.kv.spill(pool);
+        sh.metrics.record_kv_spill();
+        arena.seqs.push(SpilledSeq {
+            req: a.req,
+            tx: a.tx,
+            generated: a.generated,
+            pending_prompt: a.pending_prompt,
+            last_logits: a.last_logits,
+            spec_k: a.spec_k,
+            exports,
+            kv_len,
+            t0: a.t0,
+        });
+        return Freed::Spilled(young);
+    }
+    a.kv.release(pool);
     sh.queue.lock().unwrap().push_front((a.req, a.tx, a.t0));
     Freed::Removed(young)
 }
@@ -480,6 +611,16 @@ pub struct EngineOptions {
     /// Default draft length for requests that leave
     /// [`EngineRequest::speculate_k`] unset (0 = off).
     pub speculate_k: usize,
+    /// KV-cache quantization rate for cold pages: 0 (default) keeps the
+    /// whole pool fp32 and bit-exact with the pre-quantization engine;
+    /// 2 or 4 enable the E8P/RVQ cold tier
+    /// ([`crate::generation::paged::KvQuantSpec`]) and the spill arena
+    /// for preempted sequences.
+    pub kv_bits: usize,
+    /// Recent full pages per sequence kept fp32 behind the write head
+    /// when `kv_bits > 0` (the hot tail; the partially written page is
+    /// always fp32 on top of this).
+    pub kv_hot_pages: usize,
 }
 
 impl Default for EngineOptions {
@@ -489,6 +630,8 @@ impl Default for EngineOptions {
             pool_pages: None,
             attn_mode: AttnMode::Fused,
             speculate_k: 0,
+            kv_bits: 0,
+            kv_hot_pages: 1,
         }
     }
 }
@@ -578,10 +721,15 @@ impl NativeEngine {
             let wb_split = generator.weight_bytes_split();
             let draft_split = draft_gen.weight_bytes_split();
             let weight_bytes = wb_split.0 + wb_split.1 + wb_split.2;
-            let mut pool = KvPagePool::for_model(&model, pool_pages.max(1));
+            let kv_quant = (opts.kv_bits > 0).then(|| KvQuantSpec {
+                bits: opts.kv_bits,
+                hot_pages: opts.kv_hot_pages,
+            });
+            let mut pool = KvPagePool::for_model_quant(&model, pool_pages.max(1), kv_quant);
             sh.metrics.set_pool_capacity(pool.pages_total());
             let mut active: Vec<Active> = Vec::new();
             let mut prefix_cache: HashMap<u64, PrefixCache> = HashMap::new();
+            let mut arena = SpillArena::new(kv_quant.is_some());
             let mut admit_counter: u64 = 0;
             let ctx = model.cfg.ctx;
             loop {
@@ -598,6 +746,80 @@ impl NativeEngine {
                 // one-time prefix-cache prefill) never blocks submitters.
                 let mut newly = 0usize;
                 while active.len() < max_batch && (active.is_empty() || pool.pages_free() > newly) {
+                    // Spilled sequences re-admit first (FIFO): their KV
+                    // restores by import, so they resume mid-stream with
+                    // no re-prefill. A capacity miss holds all further
+                    // admissions (nothing younger may jump the arena)
+                    // until retirements free units — unless the pool is
+                    // as empty as it can get, in which case the sequence
+                    // can never fit and fails descriptively.
+                    if !arena.seqs.is_empty() {
+                        let mut s = arena.seqs.remove(0);
+                        let mut kv = PagedKv::new();
+                        if kv.restore(&mut pool, &mut s.exports, s.kv_len) {
+                            newly += 1;
+                            admit_counter += 1;
+                            sh.metrics.record_kv_restore();
+                            // The draft KV was released at spill; it
+                            // re-consumes the whole true stream (prompt +
+                            // generated) at its next speculative round,
+                            // exactly like a fresh admission whose prompt
+                            // were that long.
+                            let draft_pending = if s.spec_k > 0 {
+                                let mut p = s.req.prompt.clone();
+                                p.extend_from_slice(&s.generated);
+                                p
+                            } else {
+                                Vec::new()
+                            };
+                            active.push(Active {
+                                req: s.req,
+                                tx: s.tx,
+                                kv,
+                                generated: s.generated,
+                                pending_prompt: s.pending_prompt,
+                                last_logits: s.last_logits,
+                                spec_k: s.spec_k,
+                                draft_kv: PagedKv::new(),
+                                draft_pending,
+                                t0: s.t0,
+                                admit_seq: admit_counter,
+                            });
+                            continue;
+                        }
+                        if active.is_empty() {
+                            // With no live sequences every cache is cold;
+                            // unpin one and retry. Once nothing is left
+                            // to unpin the pool is as free as it gets.
+                            if evict_cold_prefix(
+                                &mut prefix_cache,
+                                &mut pool,
+                                &mut arena,
+                                &sh.metrics,
+                                None,
+                            ) {
+                                arena.seqs.insert(0, s);
+                                continue;
+                            }
+                            sh.metrics.record_failed();
+                            let resp = EngineResponse {
+                                id: s.req.id,
+                                tokens: s.generated,
+                                latency_ms: s.t0.elapsed().as_secs_f64() * 1e3,
+                                prompt_len: s.req.prompt.len(),
+                                error: Some(format!(
+                                    "KV pool too small to restore spilled sequence: \
+                                     {} pages of exported KV against a pool of {}",
+                                    s.exports.len(),
+                                    pool.pages_total()
+                                )),
+                            };
+                            let _ = s.tx.send(resp);
+                            continue;
+                        }
+                        arena.seqs.insert(0, s);
+                        break;
+                    }
                     let popped = sh.queue.lock().unwrap().pop_front();
                     let Some((req, tx, t0)) = popped else { break };
                     newly += 1;
@@ -614,6 +836,7 @@ impl NativeEngine {
                         &generator,
                         &mut pool,
                         &mut prefix_cache,
+                        &mut arena,
                         &mut kv,
                         admit_counter,
                     );
@@ -702,9 +925,38 @@ impl NativeEngine {
                         if !exhausted {
                             break;
                         }
-                        match free_pages(&mut active, &mut pool, &sh, &mut prefix_cache, ctx) {
+                        let freed = free_pages(
+                            &mut active,
+                            &mut pool,
+                            &sh,
+                            &mut prefix_cache,
+                            &mut arena,
+                            ctx,
+                        );
+                        match freed {
                             Freed::PrefixEvicted => continue,
-                            Freed::Removed(victim) => {
+                            Freed::Removed(victim) | Freed::Spilled(victim) => {
+                                // A spilled victim resumes exactly where
+                                // its last completed decode stopped, but
+                                // the selection pass above already
+                                // advanced its cursor (prompt token
+                                // consumed, or continuation token pushed)
+                                // for a decode that now never runs. Undo
+                                // that advance on the parked copy; greedy
+                                // determinism re-derives the same token
+                                // from the same logits after restore.
+                                if matches!(freed, Freed::Spilled(_)) {
+                                    if let Some(&(_, _, was_prefill)) =
+                                        sel.iter().find(|&&(j, _, _)| j == victim)
+                                    {
+                                        let s = arena.seqs.last_mut().unwrap();
+                                        if was_prefill {
+                                            s.pending_prompt += 1;
+                                        } else {
+                                            s.generated.pop();
+                                        }
+                                    }
+                                }
                                 sel.retain(|&(j, _, _)| j != victim);
                                 for e in sel.iter_mut() {
                                     if e.0 > victim {
@@ -826,9 +1078,19 @@ impl NativeEngine {
                         if !exhausted {
                             break;
                         }
-                        match free_pages(&mut active, &mut pool, &sh, &mut prefix_cache, ctx) {
+                        match free_pages(
+                            &mut active,
+                            &mut pool,
+                            &sh,
+                            &mut prefix_cache,
+                            &mut arena,
+                            ctx,
+                        ) {
                             Freed::PrefixEvicted => continue,
-                            Freed::Removed(victim) => {
+                            // Spec selection mutates no lane state before
+                            // reservation, so a spilled victim needs no
+                            // cursor repair here.
+                            Freed::Removed(victim) | Freed::Spilled(victim) => {
                                 spec_sel.retain(|&j| j != victim);
                                 for j in spec_sel.iter_mut() {
                                     if *j > victim {
@@ -934,6 +1196,12 @@ impl NativeEngine {
                 });
                 sh.metrics.set_pages_in_use(pool.pages_in_use());
                 sh.metrics.set_shared_pages(pool.shared_pages());
+                sh.metrics.set_kv_quant_state(
+                    pool.pages_quantized_total(),
+                    pool.cold_pages(),
+                    arena.pages(),
+                );
+                sh.metrics.set_codewords_decoded(codewords_decoded());
             }
         });
         NativeEngine {
@@ -1583,6 +1851,159 @@ mod tests {
         for (i, toks) in fused.iter().enumerate() {
             assert_eq!(toks, &gen.generate(&[(3 + i) as u8, 1, 2], 8));
         }
+    }
+
+    #[test]
+    fn kv_quant_hot_tail_only_is_exact() {
+        // 43 total rows stay inside the hot tail (quantization starts at
+        // len ≥ 2 pages with kv_hot_pages = 1), so a --kv-bits engine
+        // with a short sequence never builds a cold page and must be
+        // bit-exact with fp32 greedy decode.
+        let model = Arc::new(two_page_model(15));
+        let gen = Generator::dense(&model);
+        let eng = NativeEngine::start_with_opts(
+            model.clone(),
+            None,
+            EngineOptions {
+                max_batch: 2,
+                kv_bits: 2,
+                ..EngineOptions::default()
+            },
+        );
+        let prompt = vec![4u8, 8, 15];
+        let rx = eng.submit(EngineRequest {
+            id: 1,
+            prompt: prompt.clone(),
+            max_new: 40,
+            prefix_id: None,
+            speculate_k: None,
+        });
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert!(resp.error.is_none());
+        assert_eq!(resp.tokens, gen.generate(&prompt, 40));
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        assert_eq!(m.kv_pages_quantized.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn spilled_sequences_restore_without_reprefill() {
+        // The preemption pressure cooker with the quant tier on:
+        // preemption now exports pages to the spill arena and
+        // re-admission imports them back mid-stream. Two checkable
+        // consequences: (1) no prompt token is ever prefilled twice,
+        // (2) every response still equals offline fp32 greedy decode —
+        // each sequence here spans 64 rows, and its first page only
+        // leaves the hot tail on the very last advance, so no cold page
+        // is ever *attended* and the spill/restore round trip is the
+        // only thing under test.
+        let model = Arc::new(two_page_model(16));
+        let gen = Generator::dense(&model);
+        let eng = NativeEngine::start_with_opts(
+            model.clone(),
+            None,
+            EngineOptions {
+                max_batch: 2,
+                pool_pages: Some(2),
+                kv_bits: 2,
+                ..EngineOptions::default()
+            },
+        );
+        let mut rxs = Vec::new();
+        let mut prompts = Vec::new();
+        for i in 0..3u64 {
+            let prompt: Vec<u8> = (0..40)
+                .map(|j| ((j * 3 + i as usize * 7 + 1) % 60) as u8)
+                .collect();
+            rxs.push(eng.submit(EngineRequest {
+                id: i,
+                prompt: prompt.clone(),
+                max_new: 24,
+                prefix_id: None,
+                speculate_k: None,
+            }));
+            prompts.push(prompt);
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+            assert_eq!(
+                resp.tokens,
+                gen.generate(&prompts[i], 24),
+                "request {i} diverged across spill/restore"
+            );
+        }
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        let spills = m.kv_spills.load(Ordering::Relaxed);
+        assert!(spills > 0, "pool pressure never spilled");
+        assert!(m.kv_restores.load(Ordering::Relaxed) > 0);
+        // Every quant-mode preemption goes through the arena.
+        assert_eq!(m.preemptions.load(Ordering::Relaxed), spills);
+        // The whole point of the arena: restores resume mid-stream, so
+        // the requeue path's re-prefill never happens.
+        let total_prompt: usize = prompts.iter().map(|p| p.len()).sum();
+        assert_eq!(m.prefill_tokens.load(Ordering::Relaxed) as usize, total_prompt);
+        assert_eq!(m.pages_in_use.load(Ordering::Relaxed), 0);
+        assert_eq!(m.kv_spilled_pages.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn kv_quant_pressure_run_matches_unconstrained() {
+        // Spill→restore is exact and page quantization depends only on
+        // each sequence's own length, so a pressure-cooked quantized
+        // engine must emit byte-identical streams to an unconstrained
+        // one — here with genuinely cold pages in the attended range
+        // (128-row sequences quantize pages 0–2 while still decoding).
+        let model = Arc::new(multi_page_model(17, 128));
+        let run = |pool: Option<usize>| -> (Vec<Vec<u8>>, u64, u64) {
+            let eng = NativeEngine::start_with_opts(
+                model.clone(),
+                None,
+                EngineOptions {
+                    max_batch: 3,
+                    pool_pages: pool,
+                    kv_bits: 2,
+                    ..EngineOptions::default()
+                },
+            );
+            let mut rxs = Vec::new();
+            for i in 0..3u64 {
+                rxs.push(eng.submit(EngineRequest {
+                    id: i,
+                    prompt: vec![(3 + 5 * i) as u8, (7 + i) as u8],
+                    max_new: 126,
+                    prefix_id: None,
+                    speculate_k: None,
+                }));
+            }
+            let outs: Vec<Vec<u8>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let resp = rx
+                        .recv_timeout(std::time::Duration::from_secs(120))
+                        .unwrap();
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    resp.tokens
+                })
+                .collect();
+            let m = eng.metrics();
+            eng.stop();
+            eng.join();
+            (
+                outs,
+                m.kv_spills.load(Ordering::Relaxed),
+                m.kv_pages_quantized.load(Ordering::Relaxed),
+            )
+        };
+        let (constrained, spills, quantized) = run(Some(5));
+        let (unconstrained, free_spills, _) = run(None);
+        assert!(quantized > 0, "cold tier never engaged");
+        assert!(spills > 0, "a 5-page pool should have forced spills");
+        assert_eq!(free_spills, 0, "worst-case pool must never spill");
+        assert_eq!(constrained, unconstrained, "spill/restore changed generated tokens");
     }
 
     #[test]

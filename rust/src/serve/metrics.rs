@@ -65,6 +65,22 @@ pub struct Metrics {
     pub tokens_accepted: AtomicU64,
     /// Per-sequence speculative rounds executed.
     pub spec_rounds: AtomicU64,
+    /// KV pages quantized to their cold (E8P/RVQ) representation.
+    pub kv_pages_quantized: AtomicU64,
+    /// Sequences whose quantized pages were exported to the host-side
+    /// spill arena instead of being discarded on preemption.
+    pub kv_spills: AtomicU64,
+    /// Spilled sequences re-admitted by importing their pages back into
+    /// the pool (each one is a full re-prefill avoided).
+    pub kv_restores: AtomicU64,
+    /// Pages currently resident in cold (quantized) form (gauge).
+    pub kv_cold_pages: AtomicU64,
+    /// Pages currently parked in the spill arena (gauge).
+    pub kv_spilled_pages: AtomicU64,
+    /// Codewords decoded by the weight matmul kernels — includes the
+    /// `⌈B / BATCH_TILE⌉` re-decodes per codeword a wide batch pays
+    /// (gauge mirroring [`crate::model::qlinear::codewords_decoded`]).
+    pub codewords_decoded: AtomicU64,
     /// Weight bytes actually streamed by the decode-once batched kernel.
     weight_bytes_streamed: AtomicU64,
     /// Weight bytes the same steps would stream decoding one sequence at
@@ -102,6 +118,12 @@ impl Metrics {
             tokens_drafted: AtomicU64::new(0),
             tokens_accepted: AtomicU64::new(0),
             spec_rounds: AtomicU64::new(0),
+            kv_pages_quantized: AtomicU64::new(0),
+            kv_spills: AtomicU64::new(0),
+            kv_restores: AtomicU64::new(0),
+            kv_cold_pages: AtomicU64::new(0),
+            kv_spilled_pages: AtomicU64::new(0),
+            codewords_decoded: AtomicU64::new(0),
             weight_bytes_streamed: AtomicU64::new(0),
             weight_bytes_logical: AtomicU64::new(0),
             latencies_ms: Mutex::new(Vec::new()),
@@ -191,6 +213,36 @@ impl Metrics {
             return 0.0;
         }
         self.tokens_accepted.load(Ordering::Relaxed) as f64 / d as f64
+    }
+
+    /// A sequence's pages were exported to the spill arena instead of
+    /// discarded on preemption.
+    pub fn record_kv_spill(&self) {
+        self.kv_spills.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A spilled sequence was restored by importing its pages back,
+    /// skipping a full re-prefill.
+    pub fn record_kv_restore(&self) {
+        self.kv_restores.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Pool/arena KV quantization gauges, refreshed at step boundaries:
+    /// cumulative pages quantized, current cold-resident pages, and pages
+    /// currently parked in the spill arena.
+    pub fn set_kv_quant_state(&self, pages_quantized: u64, cold_pages: usize, spilled_pages: usize) {
+        self.kv_pages_quantized
+            .store(pages_quantized, Ordering::Relaxed);
+        self.kv_cold_pages
+            .store(cold_pages as u64, Ordering::Relaxed);
+        self.kv_spilled_pages
+            .store(spilled_pages as u64, Ordering::Relaxed);
+    }
+
+    /// Refresh the codeword-decode gauge from the process-wide kernel
+    /// counter ([`crate::model::qlinear::codewords_decoded`]).
+    pub fn set_codewords_decoded(&self, total: u64) {
+        self.codewords_decoded.store(total, Ordering::Relaxed);
     }
 
     /// Weight-traffic accounting for one batched decode step: `streamed`
@@ -297,6 +349,30 @@ impl Metrics {
             ),
             ("acceptance_rate", Json::num(self.acceptance_rate())),
             (
+                "kv_pages_quantized",
+                Json::num(self.kv_pages_quantized.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_cold_pages",
+                Json::num(self.kv_cold_pages.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_spills",
+                Json::num(self.kv_spills.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_restores",
+                Json::num(self.kv_restores.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "kv_spilled_pages",
+                Json::num(self.kv_spilled_pages.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "codewords_decoded",
+                Json::num(self.codewords_decoded.load(Ordering::Relaxed) as f64),
+            ),
+            (
                 "preemptions",
                 Json::num(self.preemptions.load(Ordering::Relaxed) as f64),
             ),
@@ -380,6 +456,25 @@ mod tests {
         assert_eq!(s.get("spec_rounds").as_f64(), Some(3.0));
         assert_eq!(s.get("prefix_evictions").as_f64(), Some(1.0));
         assert!((m.acceptance_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kv_quant_counters() {
+        let m = Metrics::new();
+        m.record_kv_spill();
+        m.record_kv_spill();
+        m.record_kv_restore();
+        // Gauges overwrite: second refresh wins.
+        m.set_kv_quant_state(5, 3, 8);
+        m.set_kv_quant_state(7, 2, 4);
+        m.set_codewords_decoded(1234);
+        let s = m.snapshot();
+        assert_eq!(s.get("kv_spills").as_f64(), Some(2.0));
+        assert_eq!(s.get("kv_restores").as_f64(), Some(1.0));
+        assert_eq!(s.get("kv_pages_quantized").as_f64(), Some(7.0));
+        assert_eq!(s.get("kv_cold_pages").as_f64(), Some(2.0));
+        assert_eq!(s.get("kv_spilled_pages").as_f64(), Some(4.0));
+        assert_eq!(s.get("codewords_decoded").as_f64(), Some(1234.0));
     }
 
     #[test]
