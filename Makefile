@@ -7,7 +7,7 @@
 .PHONY: verify build test fmt lint doc bench-batch bench-serve bench-attention \
         bench-attention-smoke bench-spec bench-spec-smoke bench-parallel \
         bench-parallel-smoke bench-kvquant bench-kvquant-smoke \
-        tsan-threadpool tsan-paged artifacts
+        bench-router bench-router-smoke tsan-threadpool tsan-paged artifacts
 
 verify:
 	cargo build --release
@@ -89,6 +89,19 @@ bench-kvquant:
 # requests, shorter decodes). Mirrored by the CI `tier1` job.
 bench-kvquant-smoke:
 	cargo bench --bench bench_kvquant -- --smoke
+
+# Fleet routing A/B: prefix-affinity vs round-robin (and least-loaded)
+# over 2 engine replicas on a shared-prefix workload at equal total pool
+# bytes. Asserts bitwise token parity with a single reference engine and
+# strictly higher aggregate admitted concurrency for affinity; writes
+# BENCH_router.json.
+bench-router:
+	cargo bench --bench bench_router
+
+# Seconds-scale run of the same A/B with the same assertions (fewer
+# requests, shorter decodes). Mirrored by the CI `tier1` job.
+bench-router-smoke:
+	cargo bench --bench bench_router -- --smoke
 
 # ThreadSanitizer over the worker-pool unit tests (the unsafe dispatch
 # path: raw task pointers, SendPtr row handoff, condvar parking).

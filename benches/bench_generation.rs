@@ -238,6 +238,7 @@ fn pool_pressure() -> Json {
                 max_new,
                 prefix_id: None,
                 speculate_k: None,
+                priority: 0,
             }));
         }
         let mut tokens = 0usize;
@@ -385,6 +386,7 @@ fn shared_prefix() -> Json {
                 max_new,
                 prefix_id: None,
                 speculate_k: None,
+                priority: 0,
             }));
         }
         let mut tokens = 0usize;

@@ -103,6 +103,7 @@ fn run(
             max_new: shape.max_new,
             prefix_id: None,
             speculate_k: None,
+            priority: 0,
         }));
     }
     let mut tokens = 0usize;

@@ -1,0 +1,326 @@
+//! Fleet routing A/B: prefix-affinity vs round-robin (and least-loaded)
+//! over 2 engine replicas on a shared-prefix workload, at *equal total
+//! pool bytes*.
+//!
+//! The workload has two registered system prefixes (A and B, two full
+//! KV pages each) and a stream of requests extending them in equal
+//! measure. Prefix-affinity routing sends every A-request to one
+//! replica and every B-request to the other, so each replica builds
+//! *one* prefix cache and its children fork it; round-robin mixes both
+//! prefixes onto both replicas, so each replica builds *both* caches —
+//! twice the pool spent on cache pages, and under pressure the cold one
+//! thrashes (evicted, then rebuilt on the next hit). The headline
+//! number is **aggregate admitted concurrency**: the sum over replicas
+//! of `mean_batch`, the time-averaged number of sequences each decode
+//! step carried.
+//!
+//! Assertions (structural, not timing-based):
+//!   * every arm's tokens are bitwise-identical to a single reference
+//!     engine's (routing never changes tokens);
+//!   * prefix-affinity aggregate admitted concurrency strictly above
+//!     round-robin at equal per-replica pool pages;
+//!   * prefix-affinity prefills strictly fewer prompt tokens (one cache
+//!     build per replica instead of two, no rebuild thrash).
+//!
+//! `--smoke` (wired as `make bench-router-smoke`, run in CI) shrinks
+//! request count and decode length; the assertions are identical.
+//! Results land in `BENCH_router.json`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use quipsharp::bench::Table;
+use quipsharp::generation::paged::PAGE_ROWS;
+use quipsharp::model::{Model, ModelConfig};
+use quipsharp::qmodel::quantize_model;
+use quipsharp::quant::pipeline::Method;
+use quipsharp::serve::{
+    Engine, EngineOptions, EngineRequest, NativeEngine, RoutePolicy, Router, RouterOptions,
+};
+use quipsharp::util::json::Json;
+
+struct Shape {
+    n_requests: usize,
+    max_new: usize,
+}
+
+const FULL: Shape = Shape {
+    n_requests: 16,
+    max_new: 40,
+};
+/// CI shape: same structure, seconds-scale.
+const SMOKE: Shape = Shape {
+    n_requests: 8,
+    max_new: 16,
+};
+
+const REPLICAS: usize = 2;
+/// Per-replica KV pool. Each prefix cache is 2 full pages and each
+/// child costs 2 pages of its own (4-token suffix + decode), so with
+/// one resident cache a replica batches 3 children, with both resident
+/// only 2 — the gap the affinity policy exists to open.
+const POOL_PAGES: usize = 8;
+const MAX_BATCH: usize = 6;
+/// Two full pages exactly: forks alias both, no copy-on-write tail.
+const PREFIX_LEN: usize = 2 * PAGE_ROWS;
+
+fn prefix_tokens(which: usize) -> Vec<u8> {
+    (0..PREFIX_LEN)
+        .map(|j| ((j * 7 + which * 23 + 3) % 50) as u8)
+        .collect()
+}
+
+/// Requests in A A B B A A B B … order: round-robin then lands both
+/// prefixes on both replicas, while affinity partitions them no matter
+/// the order.
+fn requests(shape: &Shape) -> Vec<EngineRequest> {
+    (0..shape.n_requests)
+        .map(|i| {
+            let which = (i / 2) % 2;
+            let mut prompt = prefix_tokens(which);
+            prompt.extend_from_slice(&[(60 + i) as u8, 9, (i % 7) as u8, 1]);
+            EngineRequest {
+                id: i as u64,
+                prompt,
+                max_new: shape.max_new,
+                prefix_id: Some(which as u64 + 1),
+                speculate_k: None,
+                priority: 0,
+            }
+        })
+        .collect()
+}
+
+struct RunStats {
+    aggregate_mean_batch: f64,
+    prefix_hits: u64,
+    prefix_evictions: u64,
+    prefill_tokens: u64,
+    preemptions: u64,
+    rerouted: u64,
+    tok_per_sec: f64,
+    outputs: BTreeMap<u64, Vec<u8>>,
+}
+
+fn run(
+    model: &Arc<Model>,
+    qm: &Arc<quipsharp::qmodel::QuantizedModel>,
+    policy: RoutePolicy,
+    shape: &Shape,
+) -> RunStats {
+    let replicas: Vec<Arc<NativeEngine>> = NativeEngine::start_replicas(
+        model.clone(),
+        Some(qm.clone()),
+        REPLICAS,
+        EngineOptions {
+            max_batch: MAX_BATCH,
+            pool_pages: Some(POOL_PAGES),
+            ..EngineOptions::default()
+        },
+    )
+    .into_iter()
+    .map(Arc::new)
+    .collect();
+    let dyns: Vec<Arc<dyn Engine>> = replicas
+        .iter()
+        .map(|e| e.clone() as Arc<dyn Engine>)
+        .collect();
+    let router = Router::new(
+        dyns,
+        RouterOptions {
+            policy,
+            // Keep the arms clean: affinity never spills here, so the
+            // A/B measures pure policy effect.
+            spill_margin: 1000,
+            ..RouterOptions::default()
+        },
+    );
+    for which in 0..2 {
+        assert!(router.register_prefix(which as u64 + 1, prefix_tokens(which)));
+    }
+
+    let reqs = requests(shape);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = reqs.iter().map(|r| router.submit(r.clone())).collect();
+    let mut outputs = BTreeMap::new();
+    let mut tokens = 0usize;
+    for (req, rx) in reqs.iter().zip(rxs) {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), shape.max_new, "request truncated");
+        tokens += resp.tokens.len();
+        outputs.insert(resp.id, resp.tokens);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+
+    let mut s = RunStats {
+        aggregate_mean_batch: 0.0,
+        prefix_hits: 0,
+        prefix_evictions: 0,
+        prefill_tokens: 0,
+        preemptions: 0,
+        rerouted: router.metrics().requests_rerouted.load(Ordering::Relaxed),
+        tok_per_sec: tokens as f64 / dt,
+        outputs,
+    };
+    for e in &replicas {
+        let m = e.metrics();
+        s.aggregate_mean_batch += m.mean_batch();
+        s.prefix_hits += m.prefix_hits.load(Ordering::Relaxed);
+        s.prefix_evictions += m.prefix_evictions.load(Ordering::Relaxed);
+        s.prefill_tokens += m.prefill_tokens.load(Ordering::Relaxed);
+        s.preemptions += m.preemptions.load(Ordering::Relaxed);
+    }
+    router.stop();
+    drop(router);
+    for e in replicas {
+        e.join();
+    }
+    s
+}
+
+fn stats_json(s: &RunStats) -> Json {
+    Json::obj(vec![
+        ("aggregate_mean_batch", Json::num(s.aggregate_mean_batch)),
+        ("prefix_hits", Json::num(s.prefix_hits as f64)),
+        ("prefix_evictions", Json::num(s.prefix_evictions as f64)),
+        ("prefill_tokens", Json::num(s.prefill_tokens as f64)),
+        ("preemptions", Json::num(s.preemptions as f64)),
+        ("requests_rerouted", Json::num(s.rerouted as f64)),
+        ("tok_per_sec", Json::num(s.tok_per_sec)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let shape = if smoke { SMOKE } else { FULL };
+    let model = Model::random(ModelConfig::by_name("s").unwrap(), 21);
+    // Identity Hessians: quantization quality is irrelevant here and
+    // skipping calibration keeps the bench fast.
+    let qm = Arc::new(
+        quantize_model(
+            &model,
+            &BTreeMap::new(),
+            &Method::QuipSharp { bits: 2, ft: false },
+            7,
+        )
+        .unwrap(),
+    );
+    // The one dense-weight copy every replica shares.
+    let model_arc = qm.serving_model();
+    println!(
+        "== router A/B: prefix-affinity vs round-robin, {REPLICAS} replicas x \
+         {POOL_PAGES} pool pages{} ==",
+        if smoke { ", SMOKE" } else { "" }
+    );
+    println!(
+        "({} requests over 2 shared prefixes of {} tokens, {} new tokens each)\n",
+        shape.n_requests, PREFIX_LEN, shape.max_new
+    );
+
+    // Single-engine reference for the exactness assertion: worst-case
+    // pool, no routing.
+    let reqs = requests(&shape);
+    let reference = NativeEngine::start(model_arc.clone(), Some(qm.clone()), MAX_BATCH);
+    for which in 0..2 {
+        assert!(reference.register_prefix(which as u64 + 1, prefix_tokens(which)));
+    }
+    let mut want = BTreeMap::new();
+    let rxs: Vec<_> = reqs.iter().map(|r| reference.submit(r.clone())).collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        want.insert(resp.id, resp.tokens);
+    }
+    reference.stop();
+    reference.join();
+
+    let arms = [
+        ("prefix", RoutePolicy::Prefix),
+        ("rr", RoutePolicy::RoundRobin),
+        ("least-loaded", RoutePolicy::LeastLoaded),
+    ];
+    let mut results: Vec<(&str, RunStats)> = Vec::new();
+    for (label, policy) in arms {
+        let s = run(&model_arc, &qm, policy, &shape);
+        assert_eq!(
+            s.outputs, want,
+            "{label} routing changed tokens vs the single engine"
+        );
+        results.push((label, s));
+    }
+
+    let mut t = Table::new(&[
+        "route",
+        "agg mean batch",
+        "prefix hits",
+        "evictions",
+        "prefill toks",
+        "preempt",
+        "tok/s",
+    ]);
+    for (label, s) in &results {
+        t.row(&[
+            label.to_string(),
+            format!("{:.2}", s.aggregate_mean_batch),
+            format!("{}", s.prefix_hits),
+            format!("{}", s.prefix_evictions),
+            format!("{}", s.prefill_tokens),
+            format!("{}", s.preemptions),
+            format!("{:.1}", s.tok_per_sec),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_router").ok();
+
+    let affinity = &results[0].1;
+    let rr = &results[1].1;
+    // The acceptance criterion: affinity buys strictly more sustained
+    // concurrency than round-robin at equal total pool bytes.
+    assert!(
+        affinity.aggregate_mean_batch > rr.aggregate_mean_batch,
+        "prefix-affinity must sustain more aggregate concurrency than \
+         round-robin at equal pool bytes ({:.2} vs {:.2})",
+        affinity.aggregate_mean_batch,
+        rr.aggregate_mean_batch
+    );
+    // One cache build per replica instead of two (plus rebuild thrash):
+    // strictly less prefill work.
+    assert!(
+        affinity.prefill_tokens < rr.prefill_tokens,
+        "prefix-affinity should prefill less than round-robin ({} vs {})",
+        affinity.prefill_tokens,
+        rr.prefill_tokens
+    );
+    // Every request forked a registered prefix in every arm.
+    for (label, s) in &results {
+        assert_eq!(
+            s.prefix_hits, shape.n_requests as u64,
+            "{label}: every request should hit a registered prefix"
+        );
+        assert_eq!(s.rerouted, 0, "{label}: healthy fleet re-routed");
+    }
+
+    let out = Json::obj(vec![
+        ("model", Json::str("s-synthetic")),
+        ("method", Json::str("quip#-2bit-weights")),
+        ("smoke", Json::Bool(smoke)),
+        ("replicas", Json::num(REPLICAS as f64)),
+        ("pool_pages_per_replica", Json::num(POOL_PAGES as f64)),
+        ("max_batch_per_replica", Json::num(MAX_BATCH as f64)),
+        ("n_requests", Json::num(shape.n_requests as f64)),
+        ("prefix_tokens", Json::num(PREFIX_LEN as f64)),
+        ("max_new", Json::num(shape.max_new as f64)),
+        (
+            "prefix_affinity",
+            stats_json(&results[0].1),
+        ),
+        ("round_robin", stats_json(&results[1].1)),
+        ("least_loaded", stats_json(&results[2].1)),
+    ]);
+    if std::fs::write("BENCH_router.json", out.emit()).is_ok() {
+        println!("\nwrote BENCH_router.json");
+    }
+}

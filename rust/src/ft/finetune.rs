@@ -310,6 +310,7 @@ pub fn quantize_model_ft(
         model: tuned_model,
         method: Method::QuipSharp { bits, ft: true },
         layers: result_layers,
+        serving: std::sync::OnceLock::new(),
     };
 
     // ---- stage 2: end-to-end --------------------------------------------------

@@ -7,6 +7,7 @@
 //!   serve     --size m [--bits 2 [--ft]] [--addr 127.0.0.1:7140]
 //!             [--max-batch 8] [--pool-pages N] [--attn-mode fused|perseq]
 //!             [--speculate K] [--kv-bits 2|4] [--kv-hot-pages W]
+//!             [--replicas N] [--route prefix|rr|least-loaded]
 //!     --bits quantizes the served model (omit for fp32); --max-batch
 //!     caps concurrent sequences (default 8); --pool-pages sets the KV
 //!     pool size in 32-token-row pages — omitted, the pool is sized for
@@ -23,6 +24,17 @@
 //!     spill arena instead of restarting prefill; --kv-hot-pages sets
 //!     how many recent full pages per sequence stay fp32 behind the
 //!     write head (default 1).
+//!     --replicas spins up N engine replicas behind an in-process
+//!     router (one shared Arc'd model — packed codes are never
+//!     duplicated — with a KV pool and scheduler per replica;
+//!     --max-batch/--pool-pages apply per replica); --route picks the
+//!     policy: "prefix" (default) sends requests to the replica whose
+//!     prefix cache is hot, spilling to the least-loaded under load
+//!     imbalance, "rr" round-robins, "least-loaded" follows in-flight
+//!     counts. Routing never changes tokens — greedy decode is
+//!     deterministic per request. Requests may carry a "priority" SLO
+//!     class (higher = more urgent), honored by every replica's queue
+//!     and preemption order.
 //!     Prompt-prefix sharing is driven by the wire protocol
 //!     (register_prefix / prefix_id), not by flags.
 //!   export-codebook --out path.qtz      (E8P tables for cross-lang tests)
@@ -35,7 +47,9 @@ use anyhow::{bail, Context, Result};
 use quipsharp::experiments::{Runner, WINDOW_NATIVE};
 use quipsharp::generation::AttnMode;
 use quipsharp::quant::pipeline::{Method, SwapCodebook};
-use quipsharp::serve::{serve_blocking, EngineOptions, NativeEngine, ServerConfig};
+use quipsharp::serve::{
+    serve_blocking, EngineOptions, NativeEngine, RoutePolicy, Router, RouterOptions, ServerConfig,
+};
 use quipsharp::util::cli::Args;
 use quipsharp::util::tensorio::{TensorData, TensorFile};
 
@@ -85,7 +99,9 @@ fn main() -> Result<()> {
                  [--pool-pages N] (KV pool pages; default = worst case, smaller oversubscribes) \
                  [--attn-mode fused|perseq] [--speculate K] (self-speculative draft length) \
                  [--kv-bits 2|4] (E8P/RVQ-quantize cold KV pages; off = fp32 KV) \
-                 [--kv-hot-pages W] (recent fp32 pages per sequence, default 1)"
+                 [--kv-hot-pages W] (recent fp32 pages per sequence, default 1) \
+                 [--replicas N] (engine replicas behind an in-process router) \
+                 [--route prefix|rr|least-loaded] (fleet routing policy, default prefix)"
             );
             Ok(())
         }
@@ -189,6 +205,11 @@ fn cmd_serve(args: &Args, art: &str) -> Result<()> {
         bail!("unknown --kv-bits '{kv_bits}' (expected 2 or 4; omit for fp32 KV)");
     }
     let kv_hot_pages = args.get_usize("kv-hot-pages", 1);
+    // --replicas / --route: N engines behind the in-process fleet
+    // router. --max-batch and --pool-pages apply per replica.
+    let replicas = args.get_usize("replicas", 1).max(1);
+    let route = RoutePolicy::parse(args.get_or("route", "prefix"))
+        .with_context(|| "unknown --route (expected prefix|rr|least-loaded)")?;
     let opts = EngineOptions {
         max_batch,
         pool_pages,
@@ -217,24 +238,42 @@ fn cmd_serve(args: &Args, art: &str) -> Result<()> {
             String::new()
         }
     );
-    let engine = if let Some(bits) = args.get("bits") {
+    let fleet_desc = if replicas > 1 {
+        format!(", {replicas} replicas, route {}", route.label())
+    } else {
+        String::new()
+    };
+    let engines = if let Some(bits) = args.get("bits") {
         let bits: u8 = bits.parse().context("--bits")?;
         let ft = args.has_flag("ft");
         let qm = runner.qmodel(&size, &Method::QuipSharp { bits, ft })?;
         println!(
-            "serving '{size}' quantized to {bits} bits (avg {:.2} b/w, {pool_desc}, {mode_desc})",
+            "serving '{size}' quantized to {bits} bits \
+             (avg {:.2} b/w, {pool_desc}, {mode_desc}{fleet_desc})",
             qm.avg_bits()
         );
-        let model_arc = Arc::new(quipsharp::model::Model::new(
-            qm.model.cfg.clone(),
-            qm.model.params.clone(),
-        ));
-        NativeEngine::start_with_opts(model_arc, Some(qm), opts)
+        // One Arc'd model + one Arc'd set of packed codes, shared by
+        // every replica — a replica's marginal cost is its KV pool.
+        NativeEngine::start_replicas(qm.serving_model(), Some(qm), replicas, opts)
     } else {
-        println!("serving '{size}' fp32 ({pool_desc}, {mode_desc})");
-        NativeEngine::start_with_opts(model.clone(), None, opts)
+        println!("serving '{size}' fp32 ({pool_desc}, {mode_desc}{fleet_desc})");
+        NativeEngine::start_replicas(model.clone(), None, replicas, opts)
     };
-    let engine: Arc<dyn quipsharp::serve::Engine> = Arc::new(engine);
+    let engine: Arc<dyn quipsharp::serve::Engine> = if replicas > 1 {
+        let fleet = engines
+            .into_iter()
+            .map(|e| Arc::new(e) as Arc<dyn quipsharp::serve::Engine>)
+            .collect();
+        Arc::new(Router::new(
+            fleet,
+            RouterOptions {
+                policy: route,
+                ..RouterOptions::default()
+            },
+        ))
+    } else {
+        Arc::new(engines.into_iter().next().expect("one replica"))
+    };
     let handle = serve_blocking(engine, ServerConfig { addr })?;
     println!(
         "listening on {} (line-JSON; {{\"cmd\":\"shutdown\"}} to stop)",

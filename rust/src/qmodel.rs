@@ -3,6 +3,7 @@
 //! serving.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::Result;
 
@@ -17,6 +18,10 @@ pub struct QuantizedModel {
     pub model: Model,
     pub method: Method,
     pub layers: BTreeMap<String, QuantizedLinear>,
+    /// Lazily built `Arc` view of `model` for serving
+    /// ([`QuantizedModel::serving_model`]); invalidated by
+    /// [`QuantizedModel::refresh`].
+    pub(crate) serving: OnceLock<Arc<Model>>,
 }
 
 impl QuantizedModel {
@@ -86,6 +91,20 @@ impl QuantizedModel {
             .sum()
     }
 
+    /// The `Arc<Model>` every serving construction wants
+    /// ([`crate::serve::NativeEngine::start_with_opts`],
+    /// [`crate::serve::NativeEngine::start_replicas`]): built once,
+    /// lazily, and shared by `Arc` clone thereafter. Cloning `Params`
+    /// deep-copies every dense tensor, so the fleet path must pay that
+    /// copy exactly once — N replicas share this one `Arc<Model>` (and
+    /// the packed codes via `Arc<QuantizedModel>`), putting a replica's
+    /// marginal footprint at its KV pool plus scheduler state.
+    pub fn serving_model(&self) -> Arc<Model> {
+        self.serving
+            .get_or_init(|| Arc::new(Model::new(self.model.cfg.clone(), self.model.params.clone())))
+            .clone()
+    }
+
     /// Re-materialize every layer's dense effective weight into the model
     /// (after fine-tuning mutates sign vectors).
     pub fn refresh(&mut self) {
@@ -93,6 +112,8 @@ impl QuantizedModel {
             ql.refresh_w_eff();
             self.model.set_linear(name, ql.w_eff.clone());
         }
+        // The cached serving view predates the refresh; rebuild lazily.
+        self.serving = OnceLock::new();
     }
 }
 
@@ -124,6 +145,7 @@ pub fn quantize_model(
         model: qmodel,
         method: method.clone(),
         layers,
+        serving: OnceLock::new(),
     })
 }
 

@@ -83,9 +83,12 @@ impl RowCodec {
         let mut dec = [0.0f32; 8];
         for g in 0..ng {
             // Residual chain in f32, mirroring decode_slab's arithmetic.
+            // Non-finite inputs are encoded as 0 (see [`finite_or_zero`]):
+            // a poisoned element must not poison its whole group with NaN
+            // residuals, and the scale already ignored it.
             let mut resid = [0.0f32; 8];
             for i in 0..8 {
-                resid[i] = x[g * 8 + i] * inv;
+                resid[i] = finite_or_zero(x[g * 8 + i]) * inv;
             }
             for (si, &ss) in self.stage_scales.iter().enumerate() {
                 let mut target = [0.0f64; 8];
@@ -134,16 +137,35 @@ impl RowCodec {
     }
 }
 
+/// A value the codec can actually represent: NaN and ±inf map to 0.
+/// A non-finite element carries no information a fixed-rate lattice
+/// code could recover, and letting it through would turn the whole
+/// slab's decode into NaN (`inf × 1/inf`, NaN residuals feeding
+/// `encode_u16`). KV rows should never contain such values; if one
+/// sneaks in, it must not poison the page.
+#[inline]
+fn finite_or_zero(v: f32) -> f32 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
 /// RMS of the slab, clamped away from zero so `x / scale` is always
 /// finite. RMS (rather than abs-max) keeps the scaled distribution close
-/// to the unit Gaussian ball E8P is shaped for.
+/// to the unit Gaussian ball E8P is shaped for. Non-finite elements are
+/// excluded (as zeros) so one poisoned value cannot drive the scale to
+/// inf/NaN; the guard also rejects a non-finite RMS outright, so the
+/// returned scale is always finite and positive.
 fn slab_scale(x: &[f32]) -> f32 {
     let mut sumsq = 0.0f64;
     for &v in x {
+        let v = finite_or_zero(v);
         sumsq += (v as f64) * (v as f64);
     }
     let rms = (sumsq / x.len().max(1) as f64).sqrt() as f32;
-    if rms > MIN_SCALE {
+    if rms.is_finite() && rms > MIN_SCALE {
         rms
     } else {
         1.0
@@ -225,6 +247,94 @@ mod tests {
         }
     }
 
+    /// Adversarial rows must never panic and must round-trip to finite
+    /// values: a poisoned KV element (NaN/±inf from an upstream overflow)
+    /// or a degenerate-scale row (denormals, one huge spike in zeros) is
+    /// exactly the input a serving engine cannot afford to crash on.
+    #[test]
+    fn adversarial_rows_never_panic_and_decode_finite() {
+        let spike = {
+            let mut v = vec![0.0f32; 32];
+            v[13] = f32::MAX;
+            v
+        };
+        let mixed = {
+            let mut v = vec![1.0f32; 32];
+            v[0] = f32::NAN;
+            v[7] = f32::INFINITY;
+            v[8] = f32::NEG_INFINITY;
+            v[20] = -3.5;
+            v
+        };
+        let cases: Vec<(&str, Vec<f32>)> = vec![
+            ("all_zero", vec![0.0f32; 32]),
+            ("all_nan", vec![f32::NAN; 32]),
+            ("all_pos_inf", vec![f32::INFINITY; 32]),
+            ("all_neg_inf", vec![f32::NEG_INFINITY; 32]),
+            ("denormal", vec![1e-40f32; 32]),
+            ("single_spike", spike),
+            ("mixed_poison", mixed),
+            ("neg_zero", vec![-0.0f32; 32]),
+            ("f32_min_positive", vec![f32::MIN_POSITIVE; 32]),
+        ];
+        for bits in [2usize, 4] {
+            let codec = RowCodec::new(bits);
+            for (name, x) in &cases {
+                let mut codes = vec![0u16; codec.codes_per_slab(x.len())];
+                let scale = codec.encode_slab(x, &mut codes);
+                assert!(
+                    scale.is_finite() && scale > 0.0,
+                    "{bits}-bit {name}: scale {scale} not finite-positive"
+                );
+                let mut out = vec![f32::NAN; x.len()];
+                codec.decode_slab(&codes, scale, &mut out);
+                for (i, v) in out.iter().enumerate() {
+                    assert!(
+                        v.is_finite(),
+                        "{bits}-bit {name}: decoded[{i}] = {v} not finite"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Non-finite elements decode as (near) zero and do not disturb the
+    /// finite elements around them: the mixed-poison slab reconstructs
+    /// its finite values about as well as the same slab without poison.
+    #[test]
+    fn poisoned_elements_do_not_poison_neighbors() {
+        let codec = RowCodec::new(4);
+        let clean: Vec<f32> = (0..64).map(|i| ((i * 37 % 23) as f32 - 11.0) * 0.1).collect();
+        let mut poisoned = clean.clone();
+        poisoned[5] = f32::NAN;
+        poisoned[17] = f32::INFINITY;
+        poisoned[40] = f32::NEG_INFINITY;
+
+        let decode = |x: &[f32]| {
+            let mut codes = vec![0u16; codec.codes_per_slab(x.len())];
+            let scale = codec.encode_slab(x, &mut codes);
+            let mut out = vec![0.0f32; x.len()];
+            codec.decode_slab(&codes, scale, &mut out);
+            out
+        };
+        let out_clean = decode(&clean);
+        let out_poison = decode(&poisoned);
+        for (i, (&c, &p)) in out_clean.iter().zip(&out_poison).enumerate() {
+            if matches!(i, 5 | 17 | 40) {
+                // Poisoned slots behave as zeros.
+                assert!(p.is_finite() && p.abs() < 1.0, "slot {i} decoded to {p}");
+            } else {
+                // The neighbors' reconstruction stays in the same ballpark
+                // (scales differ slightly since poison drops three terms
+                // from the RMS; bound loosely).
+                assert!(
+                    (c - p).abs() < 0.5,
+                    "slot {i}: clean {c} vs poisoned {p} diverged"
+                );
+            }
+        }
+    }
+
     #[test]
     fn four_bit_beats_two_bit() {
         let c2 = RowCodec::new(2);
@@ -244,5 +354,35 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The 4-bit < 2-bit error ordering must hold across input scales,
+    /// not just unit-variance data: the slab RMS normalization is what
+    /// makes the codebook scale-free, so a regression here usually means
+    /// `slab_scale` broke.
+    #[test]
+    fn rate_monotone_across_scales() {
+        let c2 = RowCodec::new(2);
+        let c4 = RowCodec::new(4);
+        for std in [0.01f32, 0.3, 1.0, 4.0, 50.0] {
+            check(&format!("rowq_monotone_std_{std}"), 8, |rng| {
+                let x = rng.gaussian_vec(256, std);
+                let mut e = [0.0f64; 2];
+                for (slot, codec) in [&c2, &c4].iter().enumerate() {
+                    let mut codes = vec![0u16; codec.codes_per_slab(x.len())];
+                    let scale = codec.encode_slab(&x, &mut codes);
+                    let mut out = vec![0.0f32; x.len()];
+                    codec.decode_slab(&codes, scale, &mut out);
+                    e[slot] = rel_l2(&x, &out);
+                }
+                if e[1] >= e[0] {
+                    return Err(format!(
+                        "std {std}: 4-bit err {} not below 2-bit err {}",
+                        e[1], e[0]
+                    ));
+                }
+                Ok(())
+            });
+        }
     }
 }

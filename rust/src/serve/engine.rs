@@ -44,15 +44,23 @@
 //! across `QUIPSHARP_THREADS` cores below this layer, bit-exactly, with
 //! no engine-level threading logic.
 //!
-//! Preemption ordering invariants: the youngest admission is always the
-//! victim (the oldest sequence keeps making progress, so the batch never
-//! livelocks), an already-finished sequence is retired in preference to
-//! evicting live work, and eviction releases only the victim's *own*
-//! page references — pages shared with the prefix cache or sibling forks
-//! survive until their last holder lets go, so preempting a forked
-//! sequence can never corrupt another sequence's KV. A preempted forked
-//! request re-forks on re-admission, making its restart cheap (only the
-//! unshared rows are re-prefilled).
+//! Preemption ordering invariants: the victim is the youngest admission
+//! of the *lowest priority class* present ([`EngineRequest::priority`],
+//! higher = more urgent) — within a class the oldest sequence keeps
+//! making progress, and the highest-priority oldest sequence is never
+//! evicted at all, so the batch never livelocks. An already-finished
+//! sequence is retired in preference to evicting live work, and
+//! eviction releases only the victim's *own* page references — pages
+//! shared with the prefix cache or sibling forks survive until their
+//! last holder lets go, so preempting a forked sequence can never
+//! corrupt another sequence's KV. A preempted forked request re-forks
+//! on re-admission, making its restart cheap (only the unshared rows
+//! are re-prefilled). The submit queue is priority-ordered the same
+//! way: a request enters behind every queued request of its class or
+//! higher (FIFO within a class), and a preempted request re-enters at
+//! the *front* of its class. Priorities never change tokens — greedy
+//! decode is deterministic per request regardless of schedule — they
+//! only reorder who waits.
 //!
 //! The prefix cache itself is built lazily by the scheduler (one
 //! sequential prefill, the first time a registered prefix meaningfully
@@ -107,6 +115,12 @@ pub struct EngineRequest {
     /// response — greedy accept/reject keeps it bit-identical to plain
     /// decode — only its latency/throughput (TCP field: `speculate`).
     pub speculate_k: Option<usize>,
+    /// SLO class, higher = more urgent (default 0). Orders the submit
+    /// queue (FIFO within a class) and inverts into preemption: under
+    /// pool pressure the victim is the youngest admission of the lowest
+    /// class present. Never changes a request's tokens, only who waits
+    /// (TCP field: `priority`).
+    pub priority: u8,
 }
 
 #[derive(Clone, Debug)]
@@ -136,6 +150,13 @@ pub trait Engine: Send + Sync {
     fn register_prefix(&self, id: u64, tokens: Vec<u8>) -> bool {
         let _ = (id, tokens);
         false
+    }
+    /// The stats-API JSON for this backend. A single engine snapshots
+    /// its own [`Metrics`]; a fleet front ([`crate::serve::router`])
+    /// overrides this with the merged view plus per-replica breakdown,
+    /// so the TCP `stats` command serves either shape through one call.
+    fn stats_json(&self) -> crate::util::json::Json {
+        self.metrics().snapshot()
     }
 }
 
@@ -508,17 +529,19 @@ fn free_pages(
         let _ = a.tx.send(resp);
         return Freed::Removed(0);
     }
-    // Evict the youngest admission: release its pages (draft included).
-    // The oldest sequence is never evicted on behalf of a younger one,
-    // so the batch always makes progress. With the spill arena enabled
-    // the victim's KV pages move host-side (generated tokens and logits
+    // Evict the youngest admission of the lowest priority class
+    // present: release its pages (draft included). Within a class the
+    // oldest sequence is never evicted on behalf of a younger one, and
+    // the highest-priority oldest sequence is never evicted at all, so
+    // the batch always makes progress. With the spill arena enabled the
+    // victim's KV pages move host-side (generated tokens and logits
     // ride along, so re-admission resumes exactly where it stopped);
-    // otherwise its request is requeued at the queue front and restarts
-    // from prefill.
+    // otherwise its request is requeued at the front of its priority
+    // class and restarts from prefill.
     let young = active
         .iter()
         .enumerate()
-        .max_by_key(|(_, a)| a.admit_seq)
+        .max_by_key(|(_, a)| (std::cmp::Reverse(a.req.priority), a.admit_seq))
         .map(|(i, _)| i)
         .unwrap();
     let mut a = active.remove(young);
@@ -542,7 +565,10 @@ fn free_pages(
         return Freed::Spilled(young);
     }
     a.kv.release(pool);
-    sh.queue.lock().unwrap().push_front((a.req, a.tx, a.t0));
+    sh.queue
+        .lock()
+        .unwrap()
+        .push_front_classed((a.req, a.tx, a.t0));
     Freed::Removed(young)
 }
 
@@ -574,9 +600,65 @@ struct Active {
     admit_seq: u64,
 }
 
+/// One queued submission: the request, its answer channel, and its
+/// submit time (latency covers queue wait).
+type Queued = (EngineRequest, Sender<EngineResponse>, Instant);
+
+/// The submit queue, priority-ordered: descending
+/// [`EngineRequest::priority`], FIFO within a class. `killed` flips
+/// (under the same lock, so no submission can race past it) when the
+/// engine is torn down by [`NativeEngine::kill`] — subsequent submits
+/// are refused by dropping their answer channel, which a fleet router
+/// observes as a disconnect and re-routes.
+struct SubmitQueue {
+    q: VecDeque<Queued>,
+    killed: bool,
+}
+
+impl SubmitQueue {
+    fn new() -> Self {
+        SubmitQueue {
+            q: VecDeque::new(),
+            killed: false,
+        }
+    }
+
+    /// Enqueue a fresh submission: behind every queued request of its
+    /// class or higher — FIFO within a class, ahead of lower classes.
+    fn push_back_classed(&mut self, item: Queued) {
+        let pri = item.0.priority;
+        let at = self
+            .q
+            .iter()
+            .position(|(r, _, _)| r.priority < pri)
+            .unwrap_or(self.q.len());
+        self.q.insert(at, item);
+    }
+
+    /// Re-enqueue a preempted request: at the *front* of its class
+    /// (ahead of equal-priority peers — it already held pages and must
+    /// not starve behind an endless stream of its own class), still
+    /// behind every strictly-higher class.
+    fn push_front_classed(&mut self, item: Queued) {
+        let pri = item.0.priority;
+        let at = self
+            .q
+            .iter()
+            .position(|(r, _, _)| r.priority <= pri)
+            .unwrap_or(self.q.len());
+        self.q.insert(at, item);
+    }
+}
+
 struct Shared {
-    queue: Mutex<VecDeque<(EngineRequest, Sender<EngineResponse>, Instant)>>,
+    queue: Mutex<SubmitQueue>,
     stop: AtomicBool,
+    /// Hard-kill switch ([`NativeEngine::kill`]): unlike `stop` (drain
+    /// and exit), the scheduler abandons active sequences immediately —
+    /// dropping their answer channels — to simulate/handle a dead
+    /// replica. The fleet router's watchers observe the disconnects and
+    /// re-route.
+    die: AtomicBool,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     /// Model context length, for submit-time validation.
@@ -695,8 +777,9 @@ impl NativeEngine {
             .pool_pages
             .unwrap_or_else(|| max_batch.max(1) * pages_per_seq(&model.cfg));
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(SubmitQueue::new()),
             stop: AtomicBool::new(false),
+            die: AtomicBool::new(false),
             metrics: Arc::new(Metrics::new()),
             next_id: AtomicU64::new(1),
             ctx: model.cfg.ctx,
@@ -733,6 +816,9 @@ impl NativeEngine {
             let mut admit_counter: u64 = 0;
             let ctx = model.cfg.ctx;
             loop {
+                if sh.die.load(Ordering::Relaxed) {
+                    break;
+                }
                 if sh.stop.load(Ordering::Relaxed) && active.is_empty() {
                     break;
                 }
@@ -820,7 +906,7 @@ impl NativeEngine {
                         arena.seqs.insert(0, s);
                         break;
                     }
-                    let popped = sh.queue.lock().unwrap().pop_front();
+                    let popped = sh.queue.lock().unwrap().q.pop_front();
                     let Some((req, tx, t0)) = popped else { break };
                     newly += 1;
                     admit_counter += 1;
@@ -1203,6 +1289,20 @@ impl NativeEngine {
                 );
                 sh.metrics.set_codewords_decoded(codewords_decoded());
             }
+            if sh.die.load(Ordering::Relaxed) {
+                // Hard kill: abandon everything in flight. Dropping the
+                // `Active`s, the spill arena, and the queued entries
+                // drops their answer `Sender`s, so every waiting caller
+                // sees a channel disconnect — the signal a fleet router
+                // re-routes on. Mark the queue killed under its lock so
+                // a submit racing this drain is refused rather than
+                // parked forever.
+                drop(active);
+                arena.seqs.clear();
+                let mut q = sh.queue.lock().unwrap();
+                q.killed = true;
+                q.q.clear();
+            }
         });
         NativeEngine {
             shared,
@@ -1218,6 +1318,35 @@ impl NativeEngine {
         if let Some(h) = self.handle.lock().unwrap().take() {
             let _ = h.join();
         }
+    }
+
+    /// Hard-kill this engine: the scheduler abandons every in-flight and
+    /// queued request at its next loop turn, dropping their answer
+    /// channels, and later submits are refused the same way (immediate
+    /// disconnect). This is the replica-death model the fleet router
+    /// ([`crate::serve::router`]) recovers from — its watchers see the
+    /// disconnects and re-route — and what the fault-injection e2e test
+    /// uses to kill a replica mid-stream. Contrast [`Engine::stop`],
+    /// which drains active work before exiting.
+    pub fn kill(&self) {
+        self.shared.die.store(true, Ordering::Relaxed);
+    }
+
+    /// Spin up `n` replicas of one model, each with its own KV page
+    /// pool, scheduler thread, and metrics, all sharing `model` and
+    /// `qm` by `Arc` — the packed codes and codebook tables are never
+    /// duplicated, so a replica's marginal footprint is its KV pool
+    /// plus scheduler state. This is the construction path for the
+    /// fleet router ([`crate::serve::router::Router`]).
+    pub fn start_replicas(
+        model: Arc<Model>,
+        qm: Option<Arc<QuantizedModel>>,
+        n: usize,
+        opts: EngineOptions,
+    ) -> Vec<NativeEngine> {
+        (0..n.max(1))
+            .map(|_| Self::start_with_opts(model.clone(), qm.clone(), opts.clone()))
+            .collect()
     }
 }
 
@@ -1242,11 +1371,15 @@ impl Engine for NativeEngine {
             });
             return rx;
         }
-        self.shared
-            .queue
-            .lock()
-            .unwrap()
-            .push_back((req, tx, Instant::now()));
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.killed || self.shared.die.load(Ordering::Relaxed) {
+            // A killed engine answers nothing: dropping `tx` here
+            // disconnects the receiver immediately, so the caller (or
+            // the fleet router) learns at once instead of waiting on a
+            // scheduler that will never run.
+            return rx;
+        }
+        q.push_back_classed((req, tx, Instant::now()));
         rx
     }
 
@@ -1299,6 +1432,7 @@ mod tests {
                 max_new: 5,
                 prefix_id: None,
                 speculate_k: None,
+                priority: 0,
             });
             rxs.push(rx);
         }
@@ -1335,6 +1469,7 @@ mod tests {
             max_new: 6,
             prefix_id: None,
             speculate_k: None,
+            priority: 0,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         let offline = Generator::dense(&model).generate(&prompt, 6);
@@ -1360,6 +1495,7 @@ mod tests {
             max_new: 6,
             prefix_id: None,
             speculate_k: None,
+            priority: 0,
         });
         let rx_short = eng.submit(EngineRequest {
             id: 2,
@@ -1367,6 +1503,7 @@ mod tests {
             max_new: 6,
             prefix_id: None,
             speculate_k: None,
+            priority: 0,
         });
         let gen = Generator::dense(&model);
         let resp_long = rx_long
@@ -1399,6 +1536,7 @@ mod tests {
                 max_new: 4,
                 prefix_id: None,
                 speculate_k: None,
+                priority: 0,
             });
             let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
             assert!(resp.tokens.is_empty());
@@ -1414,6 +1552,7 @@ mod tests {
             max_new: 2,
             prefix_id: None,
             speculate_k: None,
+            priority: 0,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -1467,6 +1606,7 @@ mod tests {
                 max_new,
                 prefix_id: None,
                 speculate_k: None,
+                priority: 0,
             }));
             prompts.push(prompt);
         }
@@ -1508,6 +1648,7 @@ mod tests {
                 max_new: 20, // 22 rows: one page per sequence
                 prefix_id: None,
                 speculate_k: None,
+                priority: 0,
             }));
         }
         for rx in rxs {
@@ -1544,6 +1685,7 @@ mod tests {
                 max_new: 6,
                 prefix_id: None, // auto-detect against the registry
                 speculate_k: None,
+                priority: 0,
             }));
             prompts.push(prompt);
         }
@@ -1592,6 +1734,7 @@ mod tests {
             max_new: 5,
             prefix_id: Some(1),
             speculate_k: None,
+            priority: 0,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -1607,6 +1750,7 @@ mod tests {
             max_new: 3,
             prefix_id: Some(99),
             speculate_k: None,
+            priority: 0,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -1621,6 +1765,7 @@ mod tests {
             max_new: 0,
             prefix_id: Some(1),
             speculate_k: None,
+            priority: 0,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -1652,6 +1797,7 @@ mod tests {
                 max_new: 24, // 41 + 24 = 65 rows: crosses into a 3rd page
                 prefix_id: Some(3),
                 speculate_k: None,
+                priority: 0,
             }));
             prompts.push(prompt);
         }
@@ -1688,7 +1834,7 @@ mod tests {
         )
         .unwrap();
         assert!(qm.has_multi_stage());
-        let model_arc = Arc::new(Model::new(qm.model.cfg.clone(), qm.model.params.clone()));
+        let model_arc = qm.serving_model();
         let offline: Vec<Vec<u8>> = (0..4u64)
             .map(|i| qm.generator().generate(&[2, (i + 1) as u8, 7], 12))
             .collect();
@@ -1710,6 +1856,7 @@ mod tests {
                 max_new: 12,
                 prefix_id: None,
                 speculate_k: Some(4),
+                priority: 0,
             }));
         }
         for (i, rx) in rxs.into_iter().enumerate() {
@@ -1750,6 +1897,7 @@ mod tests {
             max_new: 10,
             prefix_id: None,
             speculate_k: None, // engine default (4) applies
+            priority: 0,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert!(resp.error.is_none());
@@ -1761,6 +1909,7 @@ mod tests {
             max_new: 10,
             prefix_id: None,
             speculate_k: Some(0),
+            priority: 0,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.tokens, gen.generate(&prompt, 10));
@@ -1796,6 +1945,7 @@ mod tests {
                 max_new: 4,
                 prefix_id: Some(pid),
                 speculate_k: None,
+                priority: 0,
             });
             let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
             assert!(resp.error.is_none(), "prefix {pid}: {:?}", resp.error);
@@ -1835,6 +1985,7 @@ mod tests {
                     max_new: 8,
                     prefix_id: None,
                     speculate_k: None,
+                    priority: 0,
                 }));
             }
             let out = rxs
@@ -1877,6 +2028,7 @@ mod tests {
             max_new: 40,
             prefix_id: None,
             speculate_k: None,
+            priority: 0,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert!(resp.error.is_none());
@@ -1922,6 +2074,7 @@ mod tests {
                 max_new: 24,
                 prefix_id: None,
                 speculate_k: None,
+                priority: 0,
             }));
             prompts.push(prompt);
         }
@@ -1977,6 +2130,7 @@ mod tests {
                     max_new: 126,
                     prefix_id: None,
                     speculate_k: None,
+                    priority: 0,
                 }));
             }
             let outs: Vec<Vec<u8>> = rxs
@@ -2018,6 +2172,7 @@ mod tests {
             max_new: 60, // needs 2 pages; pool holds 1
             prefix_id: None,
             speculate_k: None,
+            priority: 0,
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         let err = resp.error.expect("expected pool-too-small error");
@@ -2028,5 +2183,165 @@ mod tests {
         // Mid-flight failure, not a submit-time rejection.
         assert_eq!(m.requests_failed.load(Ordering::Relaxed), 1);
         assert_eq!(m.requests_rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn submit_queue_orders_by_class() {
+        let req = |id: u64, priority: u8| EngineRequest {
+            id,
+            prompt: vec![1],
+            max_new: 1,
+            prefix_id: None,
+            speculate_k: None,
+            priority,
+        };
+        let mut q = SubmitQueue::new();
+        let tx = || channel().0;
+        // Fresh submits: FIFO within a class, higher classes first.
+        q.push_back_classed((req(1, 0), tx(), Instant::now()));
+        q.push_back_classed((req(2, 5), tx(), Instant::now()));
+        q.push_back_classed((req(3, 0), tx(), Instant::now()));
+        q.push_back_classed((req(4, 5), tx(), Instant::now()));
+        // A preempted request re-enters at the front of its class but
+        // never ahead of a strictly-higher class.
+        q.push_front_classed((req(5, 0), tx(), Instant::now()));
+        q.push_front_classed((req(6, 9), tx(), Instant::now()));
+        let order: Vec<u64> = q.q.iter().map(|(r, _, _)| r.id).collect();
+        assert_eq!(order, vec![6, 2, 4, 5, 1, 3]);
+    }
+
+    #[test]
+    fn high_priority_jumps_the_queue() {
+        // max_batch 1: A occupies the engine while B (class 0) and C
+        // (class 9) wait. C was submitted last but belongs to a higher
+        // class, so it is admitted — and completes — before B.
+        let model = Arc::new(two_page_model(13));
+        let eng = NativeEngine::start(model.clone(), None, 1);
+        let gen = Generator::dense(&model);
+        let rx_a = eng.submit(EngineRequest {
+            id: 1,
+            prompt: vec![3, 9],
+            max_new: 40,
+            prefix_id: None,
+            speculate_k: None,
+            priority: 0,
+        });
+        let rx_b = eng.submit(EngineRequest {
+            id: 2,
+            prompt: vec![5, 11],
+            max_new: 5,
+            prefix_id: None,
+            speculate_k: None,
+            priority: 0,
+        });
+        let rx_c = eng.submit(EngineRequest {
+            id: 3,
+            prompt: vec![7, 13],
+            max_new: 5,
+            prefix_id: None,
+            speculate_k: None,
+            priority: 9,
+        });
+        let t = std::time::Duration::from_secs(60);
+        let a = rx_a.recv_timeout(t).unwrap();
+        let b = rx_b.recv_timeout(t).unwrap();
+        let c = rx_c.recv_timeout(t).unwrap();
+        eng.stop();
+        eng.join();
+        // Priorities reorder waiting, never tokens.
+        assert_eq!(a.tokens, gen.generate(&[3, 9], 40));
+        assert_eq!(b.tokens, gen.generate(&[5, 11], 5));
+        assert_eq!(c.tokens, gen.generate(&[7, 13], 5));
+        assert!(
+            c.latency_ms < b.latency_ms,
+            "class 9 ({:.1} ms) should finish before class 0 ({:.1} ms)",
+            c.latency_ms,
+            b.latency_ms
+        );
+    }
+
+    #[test]
+    fn preemption_victimizes_the_lowest_class() {
+        // Pool of 2 pages, two 2-page sequences: pressure must preempt
+        // exactly one of them. A (class 0) is *older* than B (class 9) —
+        // the age-only rule would evict B; the class-aware rule evicts A,
+        // so the later, urgent submission finishes first. Both outputs
+        // stay exact.
+        let model = Arc::new(two_page_model(14));
+        assert_eq!(pages_per_seq(&model.cfg), 2);
+        let eng = NativeEngine::start_with_pool(model.clone(), None, 2, 2);
+        let gen = Generator::dense(&model);
+        let max_new = 40; // 2 + 40 rows = 2 pages per sequence
+        let rx_a = eng.submit(EngineRequest {
+            id: 1,
+            prompt: vec![4, 6],
+            max_new,
+            prefix_id: None,
+            speculate_k: None,
+            priority: 0,
+        });
+        let rx_b = eng.submit(EngineRequest {
+            id: 2,
+            prompt: vec![8, 10],
+            max_new,
+            prefix_id: None,
+            speculate_k: None,
+            priority: 9,
+        });
+        let t = std::time::Duration::from_secs(60);
+        let a = rx_a.recv_timeout(t).unwrap();
+        let b = rx_b.recv_timeout(t).unwrap();
+        let m = eng.metrics();
+        eng.stop();
+        eng.join();
+        assert!(a.error.is_none());
+        assert!(b.error.is_none());
+        assert_eq!(a.tokens, gen.generate(&[4, 6], max_new));
+        assert_eq!(b.tokens, gen.generate(&[8, 10], max_new));
+        assert!(
+            m.preemptions.load(Ordering::Relaxed) > 0,
+            "pool pressure never triggered a preemption"
+        );
+        assert!(
+            b.latency_ms < a.latency_ms,
+            "class 9 ({:.1} ms) should have preempted class 0 ({:.1} ms), not the reverse",
+            b.latency_ms,
+            a.latency_ms
+        );
+    }
+
+    #[test]
+    fn kill_disconnects_instead_of_answering() {
+        // A killed engine abandons in-flight work (channel disconnect,
+        // never a response) and refuses later submits the same way —
+        // the failure model the fleet router re-routes on.
+        let model = Arc::new(two_page_model(15));
+        let eng = NativeEngine::start(model.clone(), None, 2);
+        let rx = eng.submit(EngineRequest {
+            id: 1,
+            prompt: vec![1, 2],
+            max_new: 200, // long enough to still be in flight when killed
+            prefix_id: None,
+            speculate_k: None,
+            priority: 0,
+        });
+        eng.kill();
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_secs(60)).is_err(),
+            "killed engine must disconnect, not answer"
+        );
+        let rx2 = eng.submit(EngineRequest {
+            id: 2,
+            prompt: vec![3, 4],
+            max_new: 1,
+            prefix_id: None,
+            speculate_k: None,
+            priority: 0,
+        });
+        assert!(
+            rx2.recv_timeout(std::time::Duration::from_secs(5)).is_err(),
+            "post-kill submit must be refused by disconnect"
+        );
+        eng.join();
     }
 }

@@ -10,9 +10,15 @@
 //! behind a mutex), so the engine's scheduler thread records without
 //! coordination and any number of API threads snapshot concurrently;
 //! a snapshot is *per-field* consistent, not a cross-field transaction.
+//!
+//! A multi-replica fleet ([`crate::serve::router`]) aggregates one
+//! `Metrics` per replica (plus the router's own, which carries only
+//! router-level counters such as `requests_rerouted`) through
+//! [`Metrics::merged`] — same field set as [`Metrics::snapshot`], with
+//! per-field merge rules documented there.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::json::Json;
@@ -38,6 +44,12 @@ pub struct Metrics {
     /// rejections so operators can tell client error from pool
     /// misconfiguration.
     pub requests_failed: AtomicU64,
+    /// Requests re-dispatched to a different replica after their
+    /// original replica died or stalled. Counted by the fleet router
+    /// ([`crate::serve::router`]) on its own `Metrics`; always 0 on a
+    /// single engine's metrics — the field exists everywhere so the
+    /// stats JSON keeps one shape with or without a fleet.
+    pub requests_rerouted: AtomicU64,
     /// Total pages in the shared KV pool (set once at engine start).
     pub pool_pages: AtomicU64,
     /// Pages currently allocated to live sequences (gauge).
@@ -108,6 +120,7 @@ impl Metrics {
             preemptions: AtomicU64::new(0),
             requests_rejected: AtomicU64::new(0),
             requests_failed: AtomicU64::new(0),
+            requests_rerouted: AtomicU64::new(0),
             pool_pages: AtomicU64::new(0),
             pages_in_use: AtomicU64::new(0),
             peak_pages_in_use: AtomicU64::new(0),
@@ -163,6 +176,12 @@ impl Metrics {
     /// An admitted request failed mid-flight.
     pub fn record_failed(&self) {
         self.requests_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was re-dispatched to another replica after its original
+    /// replica died or stalled (router-level).
+    pub fn record_rerouted(&self) {
+        self.requests_rerouted.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Capacity of the shared KV page pool (once, at engine start).
@@ -384,9 +403,150 @@ impl Metrics {
                 "requests_failed",
                 Json::num(self.requests_failed.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "requests_rerouted",
+                Json::num(self.requests_rerouted.load(Ordering::Relaxed) as f64),
+            ),
             ("p50_ms", Json::num(pct(0.5))),
             ("p99_ms", Json::num(pct(0.99))),
             ("uptime_sec", Json::num(self.start.elapsed().as_secs_f64())),
+        ])
+    }
+
+    /// Fleet-merged snapshot over several `Metrics` — the same field set
+    /// as [`Metrics::snapshot`], so one parser serves both shapes (the
+    /// docs-drift test pins this).
+    ///
+    /// Per-field merge rules:
+    /// * counters and occupancy/capacity gauges **sum** across parts
+    ///   (`requests`, `tokens`, `prefill_tokens`, `pool_pages`,
+    ///   `pages_in_use`, preemption/prefix/spec/kv counters, …);
+    /// * `peak_batch` / `peak_pages_in_use` also sum — an upper bound on
+    ///   the simultaneous fleet peak, since per-replica peaks need not
+    ///   co-occur;
+    /// * `codewords_decoded` takes the **max**: every replica mirrors
+    ///   the same process-wide kernel counter
+    ///   ([`crate::model::qlinear::codewords_decoded`]), so summing
+    ///   would multiply-count it;
+    /// * `uptime_sec` takes the max (fleet age);
+    /// * derived rates (`tok_per_sec`, `mean_batch`,
+    ///   `bytes_amortization`, `acceptance_rate`) are recomputed from
+    ///   the summed numerators/denominators, never averaged;
+    /// * latency percentiles come from the concatenated per-request
+    ///   samples of every part.
+    pub fn merged(parts: &[Arc<Metrics>]) -> Json {
+        macro_rules! summed {
+            ($field:ident) => {
+                parts
+                    .iter()
+                    .map(|m| m.$field.load(Ordering::Relaxed))
+                    .sum::<u64>()
+            };
+        }
+        macro_rules! maxed {
+            ($field:ident) => {
+                parts
+                    .iter()
+                    .map(|m| m.$field.load(Ordering::Relaxed))
+                    .max()
+                    .unwrap_or(0)
+            };
+        }
+        let uptime = parts
+            .iter()
+            .map(|m| m.start.elapsed().as_secs_f64())
+            .fold(0.0f64, f64::max);
+        let tokens = summed!(tokens_generated);
+        let steps = summed!(decode_steps);
+        let batched = summed!(batched_sequences);
+        let streamed = summed!(weight_bytes_streamed);
+        let logical = summed!(weight_bytes_logical);
+        let drafted = summed!(tokens_drafted);
+        let accepted = summed!(tokens_accepted);
+        let mut lats: Vec<f64> = Vec::new();
+        for m in parts {
+            lats.extend_from_slice(&m.latencies_ms.lock().unwrap());
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| -> f64 {
+            if lats.is_empty() {
+                return 0.0;
+            }
+            lats[((lats.len() - 1) as f64 * q).round() as usize]
+        };
+        Json::obj(vec![
+            ("requests", Json::num(summed!(requests_completed) as f64)),
+            ("tokens", Json::num(tokens as f64)),
+            ("tok_per_sec", Json::num(tokens as f64 / uptime.max(1e-9))),
+            (
+                "mean_batch",
+                Json::num(batched as f64 / steps.max(1) as f64),
+            ),
+            ("peak_batch", Json::num(summed!(peak_batch) as f64)),
+            ("prefill_tokens", Json::num(summed!(prefill_tokens) as f64)),
+            (
+                "bytes_amortization",
+                Json::num(if streamed == 0 {
+                    1.0
+                } else {
+                    logical as f64 / streamed as f64
+                }),
+            ),
+            ("pool_pages", Json::num(summed!(pool_pages) as f64)),
+            ("pages_in_use", Json::num(summed!(pages_in_use) as f64)),
+            (
+                "peak_pages_in_use",
+                Json::num(summed!(peak_pages_in_use) as f64),
+            ),
+            ("shared_pages", Json::num(summed!(shared_pages) as f64)),
+            ("prefix_hits", Json::num(summed!(prefix_hits) as f64)),
+            ("pages_saved", Json::num(summed!(pages_saved) as f64)),
+            (
+                "prefix_evictions",
+                Json::num(summed!(prefix_evictions) as f64),
+            ),
+            ("tokens_drafted", Json::num(drafted as f64)),
+            ("tokens_accepted", Json::num(accepted as f64)),
+            ("spec_rounds", Json::num(summed!(spec_rounds) as f64)),
+            (
+                "acceptance_rate",
+                Json::num(if drafted == 0 {
+                    0.0
+                } else {
+                    accepted as f64 / drafted as f64
+                }),
+            ),
+            (
+                "kv_pages_quantized",
+                Json::num(summed!(kv_pages_quantized) as f64),
+            ),
+            ("kv_cold_pages", Json::num(summed!(kv_cold_pages) as f64)),
+            ("kv_spills", Json::num(summed!(kv_spills) as f64)),
+            ("kv_restores", Json::num(summed!(kv_restores) as f64)),
+            (
+                "kv_spilled_pages",
+                Json::num(summed!(kv_spilled_pages) as f64),
+            ),
+            (
+                "codewords_decoded",
+                Json::num(maxed!(codewords_decoded) as f64),
+            ),
+            ("preemptions", Json::num(summed!(preemptions) as f64)),
+            (
+                "requests_rejected",
+                Json::num(summed!(requests_rejected) as f64),
+            ),
+            (
+                "requests_failed",
+                Json::num(summed!(requests_failed) as f64),
+            ),
+            (
+                "requests_rerouted",
+                Json::num(summed!(requests_rerouted) as f64),
+            ),
+            ("p50_ms", Json::num(pct(0.5))),
+            ("p99_ms", Json::num(pct(0.99))),
+            ("uptime_sec", Json::num(uptime)),
         ])
     }
 }
@@ -491,5 +651,60 @@ mod tests {
         assert_eq!(s.get("prefix_hits").as_f64(), Some(3.0));
         assert_eq!(s.get("pages_saved").as_f64(), Some(7.0));
         assert_eq!(s.get("shared_pages").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn merged_sums_counters_and_recomputes_rates() {
+        let a = Arc::new(Metrics::new());
+        let b = Arc::new(Metrics::new());
+        a.record_request(10, 5.0);
+        a.record_step(2);
+        a.record_step(2);
+        a.set_pool_capacity(8);
+        a.set_pages_in_use(6);
+        a.record_spec(8, 4, 1);
+        a.set_codewords_decoded(100);
+        b.record_request(20, 50.0);
+        b.record_request(30, 100.0);
+        b.record_step(4);
+        b.set_pool_capacity(8);
+        b.set_pages_in_use(3);
+        b.record_spec(4, 4, 1);
+        // Both replicas mirror the same process-wide kernel counter,
+        // b's refresh ran later:
+        b.set_codewords_decoded(120);
+        b.record_rerouted();
+        let s = Metrics::merged(&[a, b]);
+        assert_eq!(s.get("requests").as_f64(), Some(3.0));
+        assert_eq!(s.get("tokens").as_f64(), Some(60.0));
+        // mean_batch = (2 + 2 + 4) / 3 steps, recomputed — not the
+        // average of per-part means (2.0 and 4.0 → 3.0 would be wrong).
+        assert!((s.get("mean_batch").as_f64().unwrap() - 8.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.get("pool_pages").as_f64(), Some(16.0));
+        assert_eq!(s.get("pages_in_use").as_f64(), Some(9.0));
+        // Mirrored process-wide counter takes the max, not the sum.
+        assert_eq!(s.get("codewords_decoded").as_f64(), Some(120.0));
+        // acceptance_rate = (4 + 4) / (8 + 4).
+        assert!((s.get("acceptance_rate").as_f64().unwrap() - 8.0 / 12.0).abs() < 1e-12);
+        assert_eq!(s.get("requests_rerouted").as_f64(), Some(1.0));
+        // Percentiles come from the concatenated samples.
+        assert!(s.get("p99_ms").as_f64().unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn merged_field_set_matches_snapshot() {
+        // One parser must serve both shapes: the fleet-merged view
+        // exposes exactly the per-engine snapshot's fields.
+        let m = Arc::new(Metrics::new());
+        let single = m.snapshot();
+        let fleet = Metrics::merged(&[m]);
+        let keys = |j: &Json| -> Vec<String> {
+            j.as_obj()
+                .expect("snapshot is an object")
+                .keys()
+                .cloned()
+                .collect()
+        };
+        assert_eq!(keys(&single), keys(&fleet));
     }
 }

@@ -71,12 +71,32 @@
 //! moves, reported via `tokens_drafted` / `tokens_accepted` /
 //! `acceptance_rate`. `benches/bench_speculative.rs`
 //! (`make bench-spec`) sweeps k × batch on the shared-prefix workload.
+//!
+//! # Serving fleet
+//!
+//! `serve --replicas N` puts a [`router::Router`] in front of N
+//! in-process engine replicas ([`engine::NativeEngine::start_replicas`])
+//! that share one `Arc<QuantizedModel>` — packed codes and codebook
+//! tables are never duplicated, so each extra replica costs only its KV
+//! pool and scheduler thread. Routing (`--route prefix|rr|least-loaded`)
+//! defaults to prefix-cache affinity with a load-based spill valve;
+//! requests carry an SLO class (`priority`) that orders every replica's
+//! queue and preemption; a dead or stalled replica is drained and its
+//! requests re-routed (`requests_rerouted`), bitwise-identically —
+//! greedy decode is deterministic per request, so no routing, spill,
+//! preemption, or re-route decision can ever change tokens
+//! (`rust/tests/router_e2e.rs` pins fleet output against a single
+//! engine). `{"cmd":"stats"}` returns the fleet-merged
+//! [`Metrics::merged`] view plus per-replica rows; see [`router`] and
+//! `rust/src/serve/README.md`.
 
 pub mod engine;
 pub mod metrics;
 pub mod pjrt_engine;
+pub mod router;
 pub mod server;
 
 pub use engine::{Engine, EngineOptions, EngineRequest, EngineResponse, NativeEngine};
 pub use metrics::Metrics;
-pub use server::{serve_blocking, Client, ServerConfig, ServerHandle};
+pub use router::{RoutePolicy, Router, RouterOptions};
+pub use server::{serve_blocking, Client, ClientOptions, ServerConfig, ServerHandle};

@@ -1,0 +1,806 @@
+//! The fleet front tier: one [`Router`] load-balances requests across N
+//! in-process engine replicas.
+//!
+//! One engine cannot serve heavy traffic; a fleet behind a
+//! prefix-cache-aware router can. The replicas share one
+//! `Arc<QuantizedModel>` — the packed E8P codes and codebook tables are
+//! never duplicated, which is what makes 2-bit weights cheap to
+//! replicate ([`crate::serve::NativeEngine::start_replicas`]) — while
+//! each replica owns its KV page pool, scheduler thread, and
+//! [`Metrics`]. The router implements [`Engine`] itself, so the TCP
+//! front-end ([`crate::serve::server`]) serves a fleet through the same
+//! code path as a single engine.
+//!
+//! Routing ([`RoutePolicy`]):
+//!
+//! * **Prefix affinity** (default): a request carrying an explicit
+//!   `prefix_id` — or whose prompt matches a registered prefix by the
+//!   same longest-common-token-prefix rule the engine itself uses — is
+//!   routed to the replica where that prefix's KV cache is hot, so the
+//!   fleet builds each cache once instead of once per replica. Affinity
+//!   never starves balance: when the hot replica's in-flight load
+//!   exceeds the least-loaded replica's by
+//!   [`RouterOptions::spill_margin`] (or hits
+//!   [`RouterOptions::max_inflight`]), the request spills to the
+//!   least-loaded replica instead. Requests with no usable prefix fall
+//!   back to least-loaded.
+//! * **Round-robin**: rotate over healthy, non-saturated replicas.
+//! * **Least-loaded**: fewest in-flight requests wins (lowest index on
+//!   ties).
+//!
+//! Per-request priority ([`EngineRequest::priority`]) passes through
+//! untouched: each replica's submit queue and preemption ordering are
+//! already class-aware, so SLO classes work fleet-wide with no router
+//! logic beyond delivery.
+//!
+//! Health: every replica has a watcher thread relaying its responses.
+//! A replica that drops a request's answer channel without answering
+//! (died — [`crate::serve::NativeEngine::kill`] models this — or
+//! panicked), or that exceeds [`RouterOptions::stall_timeout`], is
+//! marked unhealthy; its in-flight requests are re-dispatched to
+//! healthy replicas (`requests_rerouted`), and it receives no further
+//! traffic. A re-routed request restarts from scratch on its new
+//! replica — greedy decode is deterministic per request, so the caller
+//! still receives exactly the tokens a healthy fleet would have
+//! produced, just later.
+//!
+//! Bounded in-flight: each replica accepts at most
+//! [`RouterOptions::max_inflight`] dispatched-but-unanswered requests;
+//! beyond that, submissions wait in the router's backlog
+//! (priority-ordered like the engines' own queues) and drain as
+//! replicas answer.
+//!
+//! Stats: [`Router::stats_json`] returns the fleet-merged
+//! [`Metrics::merged`] view — same field set as a single engine's
+//! snapshot — plus `policy`, `replicas_healthy`, and a `replicas`
+//! array with each replica's own snapshot (annotated with `replica`,
+//! `healthy`, `inflight`).
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
+
+use crate::generation::paged::PAGE_ROWS;
+use crate::util::json::Json;
+
+use super::engine::{Engine, EngineRequest, EngineResponse};
+use super::metrics::Metrics;
+
+/// How the router picks a replica for each request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Prefix-cache affinity with load-based spill; least-loaded for
+    /// requests without a usable prefix. The default.
+    Prefix,
+    /// Rotate over healthy, non-saturated replicas.
+    RoundRobin,
+    /// Fewest in-flight requests wins (lowest index on ties).
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI flag value (`serve --route prefix|rr|least-loaded`).
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "prefix" => Some(RoutePolicy::Prefix),
+            "rr" | "round-robin" => Some(RoutePolicy::RoundRobin),
+            "least-loaded" => Some(RoutePolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    /// The flag spelling, as reported in the stats JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::Prefix => "prefix",
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Tunables for [`Router::new`].
+#[derive(Clone, Debug)]
+pub struct RouterOptions {
+    pub policy: RoutePolicy,
+    /// Per-replica cap on dispatched-but-unanswered requests; beyond
+    /// it, submissions wait in the router's backlog.
+    pub max_inflight: usize,
+    /// Prefix affinity spills to the least-loaded replica once the hot
+    /// replica's in-flight load exceeds the minimum by this many
+    /// requests — the affinity-never-starves-balance valve. The
+    /// affinity assignment itself is kept: later requests return to the
+    /// hot replica once its load subsides.
+    pub spill_margin: usize,
+    /// When set, a dispatched request not answered within this window
+    /// marks its replica stalled (drained and re-routed like a dead
+    /// one). `None` (the default) trusts replicas to answer eventually —
+    /// a busy replica under deep queueing is not a stalled one, so only
+    /// deployments with a latency ceiling should set this.
+    pub stall_timeout: Option<Duration>,
+}
+
+impl Default for RouterOptions {
+    fn default() -> Self {
+        RouterOptions {
+            policy: RoutePolicy::Prefix,
+            max_inflight: 64,
+            spill_margin: 4,
+            stall_timeout: None,
+        }
+    }
+}
+
+/// One replica as the router sees it: the engine, its dispatch gauge,
+/// its health flag, and the channel feeding its watcher thread.
+struct Replica {
+    engine: Arc<dyn Engine>,
+    /// Dispatched-but-unanswered requests (the load signal for
+    /// least-loaded routing and the bounded-in-flight cap).
+    inflight: AtomicUsize,
+    healthy: AtomicBool,
+    /// Feeds this replica's watcher thread one [`Pending`] per
+    /// dispatched request. `Sender` is not `Sync`, so it sits behind a
+    /// mutex; sends never block (the channel is unbounded).
+    watch_tx: Mutex<Sender<Pending>>,
+}
+
+/// A dispatched request in flight on some replica: what the watcher
+/// needs to relay its answer — or to re-route it if the replica dies.
+struct Pending {
+    req: EngineRequest,
+    /// The caller's side of [`Router::submit`].
+    outer_tx: Sender<EngineResponse>,
+    /// The replica's answer channel for this request.
+    inner_rx: Receiver<EngineResponse>,
+    /// Re-dispatch count: capped at the replica count, after which the
+    /// request fails descriptively instead of bouncing forever.
+    hops: usize,
+}
+
+struct RouterInner {
+    replicas: Vec<Replica>,
+    opts: RouterOptions,
+    /// Router-level counters only (`requests_rerouted`, plus failures
+    /// the router itself synthesizes). Completions are counted by the
+    /// replicas, so including this in [`Metrics::merged`] never
+    /// double-counts.
+    metrics: Arc<Metrics>,
+    /// Registered prefixes, mirrored from [`Engine::register_prefix`]
+    /// broadcasts, for longest-common-prefix detection at routing time.
+    prefixes: Mutex<Vec<(u64, Arc<Vec<u8>>)>>,
+    /// prefix id → replica index whose cache is (or will be) hot.
+    affinity: Mutex<HashMap<u64, usize>>,
+    /// Submissions waiting for a replica to drop below `max_inflight`,
+    /// priority-ordered (descending class, FIFO within a class).
+    backlog: Mutex<VecDeque<(EngineRequest, Sender<EngineResponse>)>>,
+    /// Round-robin cursor.
+    rr: AtomicUsize,
+    next_id: AtomicU64,
+}
+
+/// The fleet front tier; see the module docs. Construct with
+/// [`Router::new`], submit through the [`Engine`] impl.
+pub struct Router {
+    inner: Arc<RouterInner>,
+}
+
+impl RouterInner {
+    /// Pick a dispatch target for `req` under the configured policy:
+    /// only healthy replicas below `max_inflight` are candidates.
+    /// `None` means no candidate exists right now — the caller backlogs
+    /// the request (watchers drain it as answers free slots).
+    fn pick(&self, req: &EngineRequest) -> Option<usize> {
+        let ok = |i: usize| {
+            let r = &self.replicas[i];
+            r.healthy.load(Ordering::Relaxed)
+                && r.inflight.load(Ordering::Relaxed) < self.opts.max_inflight
+        };
+        let least_loaded = || {
+            (0..self.replicas.len())
+                .filter(|&i| ok(i))
+                .min_by_key(|&i| self.replicas[i].inflight.load(Ordering::Relaxed))
+        };
+        match self.opts.policy {
+            RoutePolicy::LeastLoaded => least_loaded(),
+            RoutePolicy::RoundRobin => {
+                let n = self.replicas.len();
+                let start = self.rr.fetch_add(1, Ordering::Relaxed);
+                (0..n).map(|k| (start + k) % n).find(|&i| ok(i))
+            }
+            RoutePolicy::Prefix => {
+                let Some(pid) = self.route_prefix_id(req) else {
+                    return least_loaded();
+                };
+                let mut aff = self.affinity.lock().unwrap();
+                if let Some(&hot) = aff.get(&pid) {
+                    if ok(hot) {
+                        // Spill valve: affinity yields to balance when
+                        // the hot replica is overloaded relative to the
+                        // least-loaded one. The assignment is kept —
+                        // the cache is still over there.
+                        let hot_load = self.replicas[hot].inflight.load(Ordering::Relaxed);
+                        let min_load = least_loaded()
+                            .map(|i| self.replicas[i].inflight.load(Ordering::Relaxed))
+                            .unwrap_or(hot_load);
+                        if hot_load >= min_load + self.opts.spill_margin {
+                            return least_loaded();
+                        }
+                        return Some(hot);
+                    }
+                    // Hot replica unhealthy or saturated: fall through
+                    // and (re)assign if it is truly gone, spill if it is
+                    // merely full.
+                    if self.replicas[hot].healthy.load(Ordering::Relaxed) {
+                        return least_loaded();
+                    }
+                }
+                // First sighting of this prefix (or its replica died):
+                // pin it to the least-loaded candidate, whose cache the
+                // first request will build.
+                let target = least_loaded()?;
+                aff.insert(pid, target);
+                Some(target)
+            }
+        }
+    }
+
+    /// The prefix id driving affinity for `req`: its explicit
+    /// `prefix_id`, or the registered prefix with the longest common
+    /// token prefix — accepted under the same meaningful-match
+    /// threshold the engine's own admission uses
+    /// ([`crate::serve::engine`]), so the router never pins affinity on
+    /// a match the replica would decline to fork.
+    fn route_prefix_id(&self, req: &EngineRequest) -> Option<u64> {
+        let defs = self.prefixes.lock().unwrap();
+        let common = |tokens: &[u8]| {
+            req.prompt
+                .iter()
+                .zip(tokens)
+                .take_while(|(a, b)| a == b)
+                .count()
+        };
+        let (pid, common, len) = match req.prefix_id {
+            Some(want) => defs
+                .iter()
+                .find(|(id, _)| *id == want)
+                .map(|(id, t)| (*id, common(t), t.len()))?,
+            None => defs
+                .iter()
+                .map(|(id, t)| (*id, common(t), t.len()))
+                .max_by_key(|&(_, c, _)| c)?,
+        };
+        (common >= len.min(PAGE_ROWS)).then_some(pid)
+    }
+
+    /// Dispatch `req` to replica `to`: submit, bump its in-flight
+    /// gauge, and hand the watcher the relay state.
+    fn dispatch(
+        &self,
+        to: usize,
+        req: EngineRequest,
+        outer_tx: Sender<EngineResponse>,
+        hops: usize,
+    ) {
+        let r = &self.replicas[to];
+        r.inflight.fetch_add(1, Ordering::Relaxed);
+        let inner_rx = r.engine.submit(req.clone());
+        // The watcher only exits once every sender is gone, so this
+        // send cannot fail while `self` (holding `watch_tx`) is alive.
+        let _ = r.watch_tx.lock().unwrap().send(Pending {
+            req,
+            outer_tx,
+            inner_rx,
+            hops,
+        });
+    }
+
+    /// Queue a submission that no replica can take right now,
+    /// priority-ordered like the engines' own queues.
+    fn backlog_push(&self, req: EngineRequest, outer_tx: Sender<EngineResponse>) {
+        let mut bl = self.backlog.lock().unwrap();
+        let at = bl
+            .iter()
+            .position(|(r, _)| r.priority < req.priority)
+            .unwrap_or(bl.len());
+        bl.insert(at, (req, outer_tx));
+    }
+
+    /// Drain backlogged submissions while a replica will take them
+    /// (called by watchers whenever an answer frees a slot).
+    fn pump_backlog(&self) {
+        loop {
+            let item = {
+                let mut bl = self.backlog.lock().unwrap();
+                match bl.pop_front() {
+                    Some(it) => it,
+                    None => return,
+                }
+            };
+            match self.pick(&item.0) {
+                Some(to) => self.dispatch(to, item.0, item.1, 0),
+                None => {
+                    // Still no slot: put it back (front — it was the
+                    // head of its class) and stop.
+                    self.backlog.lock().unwrap().push_front(item);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// A replica failed a request (died or stalled): mark it unhealthy
+    /// and re-dispatch elsewhere. The restarted request reproduces the
+    /// exact same tokens — greedy decode is deterministic — so the
+    /// caller only sees added latency.
+    fn reroute(&self, from: usize, p: Pending) {
+        self.replicas[from].healthy.store(false, Ordering::Relaxed);
+        self.metrics.record_rerouted();
+        if p.hops + 1 >= self.replicas.len().max(2) {
+            // Every replica has now failed this request once; answer
+            // descriptively instead of bouncing forever.
+            self.metrics.record_failed();
+            let _ = p.outer_tx.send(EngineResponse {
+                id: p.req.id,
+                tokens: Vec::new(),
+                latency_ms: 0.0,
+                prompt_len: p.req.prompt.len(),
+                error: Some(format!(
+                    "request {} could not be served: every replica failed it \
+                     ({} re-routes)",
+                    p.req.id,
+                    p.hops + 1
+                )),
+            });
+            return;
+        }
+        match self.pick(&p.req) {
+            Some(to) => self.dispatch(to, p.req, p.outer_tx, p.hops + 1),
+            None => {
+                if self
+                    .replicas
+                    .iter()
+                    .any(|r| r.healthy.load(Ordering::Relaxed))
+                {
+                    // Healthy replicas exist but are saturated: wait in
+                    // the backlog like any other submission.
+                    self.backlog_push(p.req, p.outer_tx);
+                } else {
+                    self.metrics.record_failed();
+                    let _ = p.outer_tx.send(EngineResponse {
+                        id: p.req.id,
+                        tokens: Vec::new(),
+                        latency_ms: 0.0,
+                        prompt_len: p.req.prompt.len(),
+                        error: Some("no healthy replica available".into()),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// One replica's watcher loop: relay each dispatched request's answer
+/// to its caller, or re-route it when the replica drops the channel
+/// (died) or exceeds the stall timeout. Holds only a [`Weak`] to the
+/// router, so dropping the [`Router`] closes `rx` and ends the thread.
+fn watch_replica(inner: Weak<RouterInner>, idx: usize, rx: Receiver<Pending>) {
+    while let Ok(p) = rx.recv() {
+        let Some(router) = inner.upgrade() else { return };
+        let stall = router.opts.stall_timeout;
+        let answer = match stall {
+            Some(t) => p.inner_rx.recv_timeout(t).map_err(|_| ()),
+            None => p.inner_rx.recv().map_err(|_| ()),
+        };
+        router.replicas[idx].inflight.fetch_sub(1, Ordering::Relaxed);
+        match answer {
+            Ok(resp) => {
+                // Relay verbatim; the caller may have hung up (that is
+                // its business, not an error here).
+                let _ = p.outer_tx.send(resp);
+            }
+            Err(()) => router.reroute(idx, p),
+        }
+        router.pump_backlog();
+        // Drop the strong handle before blocking on the next recv, or
+        // the router could never be dropped while a watcher waits.
+        drop(router);
+    }
+}
+
+impl Router {
+    /// Build a router over `engines` (typically
+    /// [`crate::serve::NativeEngine::start_replicas`]'s output, which
+    /// shares one `Arc<QuantizedModel>` across all of them) and spawn
+    /// one watcher thread per replica. The watchers exit when the
+    /// router is dropped.
+    pub fn new(engines: Vec<Arc<dyn Engine>>, opts: RouterOptions) -> Router {
+        assert!(!engines.is_empty(), "a router needs at least one replica");
+        let mut rxs = Vec::with_capacity(engines.len());
+        let replicas: Vec<Replica> = engines
+            .into_iter()
+            .map(|engine| {
+                let (tx, rx) = channel();
+                rxs.push(rx);
+                Replica {
+                    engine,
+                    inflight: AtomicUsize::new(0),
+                    healthy: AtomicBool::new(true),
+                    watch_tx: Mutex::new(tx),
+                }
+            })
+            .collect();
+        let inner = Arc::new(RouterInner {
+            replicas,
+            opts,
+            metrics: Arc::new(Metrics::new()),
+            prefixes: Mutex::new(Vec::new()),
+            affinity: Mutex::new(HashMap::new()),
+            backlog: Mutex::new(VecDeque::new()),
+            rr: AtomicUsize::new(0),
+            next_id: AtomicU64::new(1),
+        });
+        for (idx, rx) in rxs.into_iter().enumerate() {
+            let weak = Arc::downgrade(&inner);
+            std::thread::spawn(move || watch_replica(weak, idx, rx));
+        }
+        Router { inner }
+    }
+
+    pub fn fresh_id(&self) -> u64 {
+        self.inner.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Replicas currently marked healthy.
+    pub fn replicas_healthy(&self) -> usize {
+        self.inner
+            .replicas
+            .iter()
+            .filter(|r| r.healthy.load(Ordering::Relaxed))
+            .count()
+    }
+
+    pub fn replicas_total(&self) -> usize {
+        self.inner.replicas.len()
+    }
+}
+
+impl Engine for Router {
+    fn submit(&self, req: EngineRequest) -> Receiver<EngineResponse> {
+        let (outer_tx, outer_rx) = channel();
+        match self.inner.pick(&req) {
+            Some(to) => self.inner.dispatch(to, req, outer_tx, 0),
+            None => {
+                if self
+                    .inner
+                    .replicas
+                    .iter()
+                    .any(|r| r.healthy.load(Ordering::Relaxed))
+                {
+                    self.inner.backlog_push(req, outer_tx);
+                } else {
+                    self.inner.metrics.record_failed();
+                    let _ = outer_tx.send(EngineResponse {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        latency_ms: 0.0,
+                        prompt_len: req.prompt.len(),
+                        error: Some("no healthy replica available".into()),
+                    });
+                }
+            }
+        }
+        outer_rx
+    }
+
+    /// The router's *own* metrics (re-routes and synthesized failures);
+    /// the fleet view is [`Engine::stats_json`].
+    fn metrics(&self) -> Arc<Metrics> {
+        self.inner.metrics.clone()
+    }
+
+    fn stop(&self) {
+        for r in &self.inner.replicas {
+            r.engine.stop();
+        }
+    }
+
+    /// Broadcast to every replica (each builds its cache lazily on
+    /// first hit — under prefix routing, only the affine replica ever
+    /// does) and mirror the tokens for routing-time detection.
+    fn register_prefix(&self, id: u64, tokens: Vec<u8>) -> bool {
+        let ok = self
+            .inner
+            .replicas
+            .iter()
+            .all(|r| r.engine.register_prefix(id, tokens.clone()));
+        if ok {
+            let tokens = Arc::new(tokens);
+            let mut defs = self.inner.prefixes.lock().unwrap();
+            match defs.iter_mut().find(|(pid, _)| *pid == id) {
+                Some(d) => d.1 = tokens,
+                None => defs.push((id, tokens)),
+            }
+        }
+        ok
+    }
+
+    /// Fleet-merged metrics ([`Metrics::merged`] over the router's own
+    /// and every replica's) plus `policy`, `replicas_healthy`, and a
+    /// per-replica `replicas` breakdown.
+    fn stats_json(&self) -> Json {
+        let mut parts = vec![self.inner.metrics.clone()];
+        parts.extend(self.inner.replicas.iter().map(|r| r.engine.metrics()));
+        let mut merged = Metrics::merged(&parts);
+        let rows: Vec<Json> = self
+            .inner
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut row = r.engine.metrics().snapshot();
+                if let Json::Obj(map) = &mut row {
+                    map.insert("replica".into(), Json::num(i as f64));
+                    map.insert(
+                        "healthy".into(),
+                        Json::Bool(r.healthy.load(Ordering::Relaxed)),
+                    );
+                    map.insert(
+                        "inflight".into(),
+                        Json::num(r.inflight.load(Ordering::Relaxed) as f64),
+                    );
+                }
+                row
+            })
+            .collect();
+        if let Json::Obj(map) = &mut merged {
+            map.insert(
+                "policy".into(),
+                Json::Str(self.inner.opts.policy.label().into()),
+            );
+            map.insert(
+                "replicas_healthy".into(),
+                Json::num(self.replicas_healthy() as f64),
+            );
+            map.insert("replicas".into(), Json::Arr(rows));
+        }
+        merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fake replica for routing-logic tests: answers every request
+    /// instantly by echoing its prompt — unless `dead`, in which case
+    /// it drops the answer channel (the replica-death signal).
+    struct EchoEngine {
+        metrics: Arc<Metrics>,
+        dead: AtomicBool,
+    }
+
+    impl EchoEngine {
+        fn new() -> Arc<EchoEngine> {
+            Arc::new(EchoEngine {
+                metrics: Arc::new(Metrics::new()),
+                dead: AtomicBool::new(false),
+            })
+        }
+    }
+
+    impl Engine for EchoEngine {
+        fn submit(&self, req: EngineRequest) -> Receiver<EngineResponse> {
+            let (tx, rx) = channel();
+            if self.dead.load(Ordering::Relaxed) {
+                return rx; // dropped sender = disconnect
+            }
+            self.metrics.record_request(req.prompt.len(), 0.1);
+            let _ = tx.send(EngineResponse {
+                id: req.id,
+                tokens: req.prompt,
+                latency_ms: 0.1,
+                prompt_len: 0,
+                error: None,
+            });
+            rx
+        }
+        fn metrics(&self) -> Arc<Metrics> {
+            self.metrics.clone()
+        }
+        fn stop(&self) {}
+        fn register_prefix(&self, _id: u64, _tokens: Vec<u8>) -> bool {
+            true
+        }
+    }
+
+    fn req(id: u64, prompt: Vec<u8>, prefix_id: Option<u64>) -> EngineRequest {
+        EngineRequest {
+            id,
+            prompt,
+            max_new: 4,
+            prefix_id,
+            speculate_k: None,
+            priority: 0,
+        }
+    }
+
+    fn fleet(n: usize) -> (Vec<Arc<EchoEngine>>, Vec<Arc<dyn Engine>>) {
+        let engines: Vec<Arc<EchoEngine>> = (0..n).map(|_| EchoEngine::new()).collect();
+        let dyns = engines
+            .iter()
+            .map(|e| e.clone() as Arc<dyn Engine>)
+            .collect();
+        (engines, dyns)
+    }
+
+    #[test]
+    fn policy_parses_flag_values() {
+        assert_eq!(RoutePolicy::parse("prefix"), Some(RoutePolicy::Prefix));
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(
+            RoutePolicy::parse("least-loaded"),
+            Some(RoutePolicy::LeastLoaded)
+        );
+        assert_eq!(RoutePolicy::parse("nope"), None);
+        assert_eq!(RoutePolicy::parse("prefix").unwrap().label(), "prefix");
+    }
+
+    #[test]
+    fn round_robin_spreads_requests() {
+        let (engines, dyns) = fleet(3);
+        let router = Router::new(
+            dyns,
+            RouterOptions {
+                policy: RoutePolicy::RoundRobin,
+                ..RouterOptions::default()
+            },
+        );
+        let mut rxs = Vec::new();
+        for i in 0..9u64 {
+            rxs.push(router.submit(req(i, vec![i as u8], None)));
+        }
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(r.error.is_none());
+        }
+        for e in &engines {
+            assert_eq!(e.metrics.requests_completed.load(Ordering::Relaxed), 3);
+        }
+    }
+
+    #[test]
+    fn prefix_affinity_concentrates_then_spills() {
+        let (engines, dyns) = fleet(2);
+        let router = Router::new(
+            dyns,
+            RouterOptions {
+                policy: RoutePolicy::Prefix,
+                spill_margin: 100, // effectively never spill
+                ..RouterOptions::default()
+            },
+        );
+        let prefix: Vec<u8> = (0..PAGE_ROWS as u8).collect();
+        assert!(router.register_prefix(1, prefix.clone()));
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            let mut prompt = prefix.clone();
+            prompt.push(100 + i as u8);
+            // Mix explicit pins and auto-detection: same affinity.
+            let pin = (i % 2 == 0).then_some(1);
+            rxs.push(router.submit(req(i, prompt, pin)));
+        }
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(10)).unwrap().error.is_none());
+        }
+        let counts: Vec<u64> = engines
+            .iter()
+            .map(|e| e.metrics.requests_completed.load(Ordering::Relaxed))
+            .collect();
+        assert!(
+            counts.contains(&6) && counts.contains(&0),
+            "affinity should concentrate all 6 on one replica, got {counts:?}"
+        );
+    }
+
+    #[test]
+    fn routing_threshold_mirrors_the_engine() {
+        // The router pins affinity only on matches the replica would
+        // actually fork: whole-prefix (or ≥ one full page) coverage,
+        // never a short coincidental overlap.
+        let (_engines, dyns) = fleet(2);
+        let router = Router::new(dyns, RouterOptions::default());
+        let prefix: Vec<u8> = (0..PAGE_ROWS as u8).collect();
+        assert!(router.register_prefix(1, prefix.clone()));
+        let mut full = prefix.clone();
+        full.push(99);
+        assert_eq!(router.inner.route_prefix_id(&req(1, full, None)), Some(1));
+        // Shares only tokens [0, 1]: below the meaningful-match
+        // threshold, so no affinity — balance decides.
+        assert_eq!(
+            router.inner.route_prefix_id(&req(2, vec![0, 1, 200, 201], None)),
+            None
+        );
+        // An explicit pin on an unknown id is a miss, not an error.
+        assert_eq!(
+            router.inner.route_prefix_id(&req(3, vec![0, 1], Some(42))),
+            None
+        );
+    }
+
+    #[test]
+    fn dead_replica_is_drained_and_requests_rerouted() {
+        let (engines, dyns) = fleet(2);
+        let router = Router::new(
+            dyns,
+            RouterOptions {
+                policy: RoutePolicy::RoundRobin,
+                ..RouterOptions::default()
+            },
+        );
+        engines[0].dead.store(true, Ordering::Relaxed);
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            rxs.push(router.submit(req(i, vec![i as u8, 7], None)));
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(r.error.is_none(), "request {i}: {:?}", r.error);
+            assert_eq!(r.tokens, vec![i as u8, 7]);
+        }
+        assert!(
+            router
+                .metrics()
+                .requests_rerouted
+                .load(Ordering::Relaxed)
+                >= 1
+        );
+        assert_eq!(router.replicas_healthy(), 1);
+        assert_eq!(
+            engines[0].metrics.requests_completed.load(Ordering::Relaxed),
+            0
+        );
+        // The fleet stats carry the router extras.
+        let stats = router.stats_json();
+        assert_eq!(stats.get("replicas_healthy").as_f64(), Some(1.0));
+        assert_eq!(
+            stats.get("requests_rerouted").as_f64().unwrap() as u64,
+            router.metrics().requests_rerouted.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn all_dead_fails_descriptively() {
+        let (engines, dyns) = fleet(2);
+        let router = Router::new(
+            dyns,
+            RouterOptions {
+                policy: RoutePolicy::LeastLoaded,
+                ..RouterOptions::default()
+            },
+        );
+        for e in &engines {
+            e.dead.store(true, Ordering::Relaxed);
+        }
+        let rx = router.submit(req(1, vec![1], None));
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let err = r.error.expect("expected a descriptive failure");
+        assert!(
+            err.contains("replica"),
+            "error should name the fleet condition: {err}"
+        );
+        // Once both replicas are marked unhealthy, later submits fail
+        // immediately without dispatch.
+        while router.replicas_healthy() > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let r2 = router
+            .submit(req(2, vec![2], None))
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap();
+        assert!(r2.error.is_some());
+    }
+}

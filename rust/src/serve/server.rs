@@ -2,17 +2,26 @@
 //!
 //! Protocol (one JSON object per line; see `rust/src/serve/README.md`
 //! for the full field-by-field reference):
-//!   {"prompt": [1,2,3], "max_new": 16, "prefix_id": 1, "speculate": 4}
+//!   {"prompt": [1,2,3], "max_new": 16, "prefix_id": 1, "speculate": 4,
+//!    "priority": 0}
 //!       → {"id":…, "tokens":[…], "ms":…} (plus "error" on failure;
 //!         "prefix_id" is optional — without it the engine auto-detects
-//!         registered prefixes — and "speculate" optionally sets the
+//!         registered prefixes — "speculate" optionally sets the
 //!         self-speculative draft length for this request: 0 forces
 //!         plain decode, absent uses the engine default, and the
-//!         response tokens are bit-identical either way)
+//!         response tokens are bit-identical either way — and
+//!         "priority" is the SLO class, 0–255, higher = more urgent:
+//!         it orders queues and inverts into preemption, never changing
+//!         the response tokens)
 //!   {"cmd": "register_prefix", "id": 1, "tokens": [5,6,7]}
 //!       → {"ok": true|false}  (share this prompt prefix's KV)
-//!   {"cmd": "stats"}     → metrics snapshot
+//!   {"cmd": "stats"}     → metrics snapshot (fleet-merged + per-replica
+//!                          rows when serving through a router)
 //!   {"cmd": "shutdown"}  → stops the server
+//!
+//! The server is backend-agnostic over [`Engine`]: a single
+//! [`super::engine::NativeEngine`] and a fleet [`super::router::Router`]
+//! serve through the same connection handler.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -106,7 +115,7 @@ fn handle_conn(
         };
         match msg.get("cmd").as_str() {
             Some("stats") => {
-                writeln!(writer, "{}", engine.metrics().snapshot().emit())?;
+                writeln!(writer, "{}", engine.stats_json().emit())?;
             }
             Some("register_prefix") => {
                 let tokens: Vec<u8> = msg
@@ -138,6 +147,9 @@ fn handle_conn(
                 // (0 forces plain decode; absent uses the engine
                 // default). Responses are bit-identical either way.
                 let speculate_k = msg.get("speculate").as_usize();
+                // "priority": SLO class, clamped to u8 (higher = more
+                // urgent). Orders queues and preemption, never tokens.
+                let priority = msg.get("priority").as_usize().unwrap_or(0).min(255) as u8;
                 let id = ids.fetch_add(1, Ordering::Relaxed);
                 let rx = engine.submit(EngineRequest {
                     id,
@@ -145,6 +157,7 @@ fn handle_conn(
                     max_new,
                     prefix_id,
                     speculate_k,
+                    priority,
                 });
                 let resp = rx.recv().context("engine dropped request")?;
                 let mut fields = vec![
@@ -164,6 +177,22 @@ fn handle_conn(
     }
 }
 
+/// Connection-robustness knobs for [`Client::connect_with`]. The plain
+/// [`Client::connect`] uses no timeouts at all — right for tests that
+/// legitimately wait on slow decodes, wrong for production callers,
+/// where a dead server would hang them forever.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientOptions {
+    /// Give up connecting after this long (`None` = OS default).
+    pub connect_timeout: Option<std::time::Duration>,
+    /// Fail a read (i.e. a response wait) after this long (`None` =
+    /// block indefinitely).
+    pub read_timeout: Option<std::time::Duration>,
+    /// On connection refused, sleep this long and retry **once** —
+    /// rides out a server still binding its socket (`None` = no retry).
+    pub retry_backoff: Option<std::time::Duration>,
+}
+
 /// Minimal blocking client for tests / examples.
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -173,6 +202,34 @@ pub struct Client {
 impl Client {
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    /// Connect with explicit robustness options ([`ClientOptions`]):
+    /// bounded connect, one retry-with-backoff on connection refused,
+    /// and a read timeout on every later response wait.
+    pub fn connect_with(addr: std::net::SocketAddr, opts: ClientOptions) -> Result<Client> {
+        let dial = || -> std::io::Result<TcpStream> {
+            match opts.connect_timeout {
+                Some(t) => TcpStream::connect_timeout(&addr, t),
+                None => TcpStream::connect(addr),
+            }
+        };
+        let stream = match dial() {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionRefused => {
+                let Some(backoff) = opts.retry_backoff else {
+                    return Err(e).context("connecting");
+                };
+                std::thread::sleep(backoff);
+                dial().context("connecting (after one retry)")?
+            }
+            Err(e) => return Err(e).context("connecting"),
+        };
+        stream.set_read_timeout(opts.read_timeout)?;
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
@@ -208,6 +265,18 @@ impl Client {
         self.request_with_opts(prompt, max_new, None, Some(speculate))
     }
 
+    /// Like [`Client::request`] at an explicit SLO class (`priority`,
+    /// higher = more urgent): the request jumps queues and resists
+    /// preemption ahead of lower classes, with identical tokens.
+    pub fn request_priority(
+        &mut self,
+        prompt: &[u8],
+        max_new: usize,
+        priority: u8,
+    ) -> Result<(Vec<u8>, f64)> {
+        self.request_full(prompt, max_new, None, None, priority)
+    }
+
     /// Full request form: optional prefix pin and speculation override.
     pub fn request_with_opts(
         &mut self,
@@ -215,6 +284,19 @@ impl Client {
         max_new: usize,
         prefix_id: Option<u64>,
         speculate: Option<usize>,
+    ) -> Result<(Vec<u8>, f64)> {
+        self.request_full(prompt, max_new, prefix_id, speculate, 0)
+    }
+
+    /// Every generation-request field: prefix pin, speculation
+    /// override, and SLO class.
+    pub fn request_full(
+        &mut self,
+        prompt: &[u8],
+        max_new: usize,
+        prefix_id: Option<u64>,
+        speculate: Option<usize>,
+        priority: u8,
     ) -> Result<(Vec<u8>, f64)> {
         let mut fields = vec![
             (
@@ -228,6 +310,9 @@ impl Client {
         }
         if let Some(k) = speculate {
             fields.push(("speculate", Json::num(k as f64)));
+        }
+        if priority > 0 {
+            fields.push(("priority", Json::num(priority as f64)));
         }
         let msg = Json::obj(fields);
         writeln!(self.writer, "{}", msg.emit())?;
@@ -276,5 +361,76 @@ impl Client {
     pub fn shutdown(&mut self) -> Result<()> {
         writeln!(self.writer, "{}", r#"{"cmd":"shutdown"}"#)?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn read_timeout_bounds_an_unresponsive_server() {
+        // A listener that accepts and then never answers: without a
+        // read timeout the client would hang forever on the response.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            // Keep the connection open, silently, until the test ends.
+            std::thread::sleep(Duration::from_secs(10));
+            drop(conn);
+        });
+        let mut client = Client::connect_with(
+            addr,
+            ClientOptions {
+                connect_timeout: Some(Duration::from_secs(5)),
+                read_timeout: Some(Duration::from_millis(100)),
+                retry_backoff: None,
+            },
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let res = client.request(&[1, 2, 3], 4);
+        assert!(res.is_err(), "a silent server must not yield a response");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "read timeout did not bound the wait ({:?})",
+            t0.elapsed()
+        );
+        drop(client); // let the holder thread outlive us harmlessly
+        drop(hold);
+    }
+
+    #[test]
+    fn connection_refused_retries_once_then_errors() {
+        // Bind to learn a free port, then close it: connects are
+        // refused. The client must retry exactly once (the backoff is
+        // observable as elapsed time) and then surface the error
+        // quickly instead of hanging.
+        let addr = {
+            let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+            probe.local_addr().unwrap()
+        };
+        let backoff = Duration::from_millis(50);
+        let t0 = Instant::now();
+        let res = Client::connect_with(
+            addr,
+            ClientOptions {
+                connect_timeout: Some(Duration::from_secs(2)),
+                read_timeout: Some(Duration::from_secs(2)),
+                retry_backoff: Some(backoff),
+            },
+        );
+        let elapsed = t0.elapsed();
+        assert!(res.is_err(), "nothing listens there; connect must fail");
+        assert!(
+            elapsed >= backoff,
+            "the retry backoff should have been observed ({elapsed:?})"
+        );
+        assert!(
+            elapsed < Duration::from_secs(10),
+            "refused connection should fail fast, not hang ({elapsed:?})"
+        );
     }
 }

@@ -1,0 +1,141 @@
+//! Metrics ↔ docs drift guard: the stats field tables in
+//! `rust/src/serve/README.md` must match the fields the code actually
+//! emits — bidirectionally. A field added to [`Metrics::snapshot`]
+//! without a README row fails here, and so does a documented field the
+//! snapshot no longer carries. The fleet section is held to the same
+//! standard against a real [`Router`]'s merged stats.
+
+use std::collections::BTreeSet;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+
+use quipsharp::serve::{
+    Engine, EngineRequest, EngineResponse, Metrics, Router, RouterOptions,
+};
+use quipsharp::util::json::Json;
+
+fn readme() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src/serve/README.md");
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+/// Backticked identifiers in the *first* cell of every table row of
+/// the section starting at `heading` (rows stop at the next heading).
+/// This is the documented field list: one row may name several fields
+/// (`` `p50_ms`, `p99_ms` `` share a row).
+fn documented_fields(text: &str, heading: &str) -> BTreeSet<String> {
+    let start = text
+        .lines()
+        .position(|l| l.trim() == heading)
+        .unwrap_or_else(|| panic!("README section {heading:?} not found"));
+    let mut fields = BTreeSet::new();
+    for line in text.lines().skip(start + 1) {
+        let line = line.trim();
+        if line.starts_with('#') {
+            break;
+        }
+        let Some(rest) = line.strip_prefix('|') else {
+            continue;
+        };
+        let Some(first_cell) = rest.split('|').next() else {
+            continue;
+        };
+        // Pull every `identifier` out of the cell; skip the header and
+        // separator rows (no backticks there).
+        let mut parts = first_cell.split('`');
+        while let (Some(_), Some(ident)) = (parts.next(), parts.next()) {
+            if !ident.is_empty()
+                && ident
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+            {
+                fields.insert(ident.to_string());
+            }
+        }
+    }
+    assert!(!fields.is_empty(), "README section {heading:?} lists no fields");
+    fields
+}
+
+fn json_keys(j: &Json) -> BTreeSet<String> {
+    j.as_obj()
+        .expect("stats JSON is an object")
+        .keys()
+        .cloned()
+        .collect()
+}
+
+fn assert_same(docs: &BTreeSet<String>, code: &BTreeSet<String>, what: &str) {
+    let undocumented: Vec<_> = code.difference(docs).collect();
+    let stale: Vec<_> = docs.difference(code).collect();
+    assert!(
+        undocumented.is_empty() && stale.is_empty(),
+        "{what} drifted: emitted but undocumented {undocumented:?}, \
+         documented but not emitted {stale:?}"
+    );
+}
+
+#[test]
+fn stats_table_matches_snapshot_fields() {
+    let docs = documented_fields(&readme(), "### `stats`");
+    let code = json_keys(&Metrics::new().snapshot());
+    assert_same(&docs, &code, "serve/README.md `stats` table");
+}
+
+/// A do-nothing replica so the fleet check runs against the real
+/// [`Router::stats_json`] composition, not a hand-maintained list.
+struct NullEngine {
+    metrics: Arc<Metrics>,
+}
+
+impl Engine for NullEngine {
+    fn submit(&self, req: EngineRequest) -> Receiver<EngineResponse> {
+        let (tx, rx) = channel();
+        let _ = tx.send(EngineResponse {
+            id: req.id,
+            tokens: Vec::new(),
+            latency_ms: 0.0,
+            prompt_len: req.prompt.len(),
+            error: None,
+        });
+        rx
+    }
+    fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+    fn stop(&self) {}
+    fn register_prefix(&self, _id: u64, _tokens: Vec<u8>) -> bool {
+        true
+    }
+}
+
+#[test]
+fn fleet_stats_table_matches_router_fields() {
+    let text = readme();
+    let base = documented_fields(&text, "### `stats`");
+    let extras = documented_fields(&text, "#### Fleet stats (`--replicas` > 1)");
+    let engines: Vec<Arc<dyn Engine>> = (0..2)
+        .map(|_| {
+            Arc::new(NullEngine {
+                metrics: Arc::new(Metrics::new()),
+            }) as Arc<dyn Engine>
+        })
+        .collect();
+    let router = Router::new(engines, RouterOptions::default());
+    let stats = router.stats_json();
+
+    let documented: BTreeSet<String> = base.union(&extras).cloned().collect();
+    assert_same(&documented, &json_keys(&stats), "fleet stats field set");
+
+    // Each per-replica row is a full snapshot plus exactly the three
+    // documented annotations.
+    let rows = stats.get("replicas").as_arr().expect("replicas array");
+    assert_eq!(rows.len(), 2);
+    let mut want_row = json_keys(&Metrics::new().snapshot());
+    for extra in ["replica", "healthy", "inflight"] {
+        want_row.insert(extra.to_string());
+    }
+    for row in rows {
+        assert_same(&want_row, &json_keys(row), "per-replica stats row");
+    }
+}

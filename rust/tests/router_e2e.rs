@@ -1,0 +1,307 @@
+//! Fleet end-to-end: N router-fronted engine replicas must serve the
+//! exact token streams a single engine serves — under every routing
+//! policy, through replica death and re-routing, and with prefix
+//! affinity concentrating cache hits.
+//!
+//! This is the determinism contract of the whole serving fleet: greedy
+//! decode is deterministic per request, so no routing, spill,
+//! preemption, or re-route decision may ever change tokens. Everything
+//! here asserts *bitwise* equality against a single-engine reference,
+//! not statistical closeness.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use quipsharp::model::{Arch, Model, ModelConfig, Params, Tensor};
+use quipsharp::serve::{
+    Engine, EngineOptions, EngineRequest, NativeEngine, RoutePolicy, Router, RouterOptions,
+};
+use quipsharp::util::rng::Pcg64;
+
+fn make_model(seed: u64) -> Model {
+    let cfg = ModelConfig {
+        name: "fleet-e2e".into(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        vocab: 64,
+        ctx: 64,
+        arch: Arch::Llama,
+        n_experts: 2,
+    };
+    let mut rng = Pcg64::new(seed);
+    let mut params = Params::new();
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let mut dense =
+        |m: usize, n: usize, rng: &mut Pcg64| Tensor::new(vec![m, n], rng.gaussian_vec(m * n, 0.1));
+    params.insert("embed".into(), dense(cfg.vocab, d, &mut rng));
+    params.insert("lm_head".into(), dense(cfg.vocab, d, &mut rng));
+    params.insert("final_norm".into(), Tensor::new(vec![d], vec![1.0; d]));
+    for i in 0..cfg.n_layers {
+        let p = format!("layers.{i}.");
+        params.insert(format!("{p}attn_norm"), Tensor::new(vec![d], vec![1.0; d]));
+        params.insert(format!("{p}mlp_norm"), Tensor::new(vec![d], vec![1.0; d]));
+        for nm in ["wq", "wk", "wv", "wo"] {
+            params.insert(format!("{p}{nm}"), dense(d, d, &mut rng));
+        }
+        params.insert(format!("{p}w_gate"), dense(ff, d, &mut rng));
+        params.insert(format!("{p}w_up"), dense(ff, d, &mut rng));
+        params.insert(format!("{p}w_down"), dense(d, ff, &mut rng));
+    }
+    Model::new(cfg, params)
+}
+
+/// The registered system prefix used across these tests: long enough
+/// (40 tokens, more than one 32-row KV page) that both the engine's
+/// admission and the router's affinity treat a full match as
+/// meaningful.
+fn sys_prefix() -> Vec<u8> {
+    (0..40).map(|i| ((i * 3 + 2) % 60) as u8).collect()
+}
+
+/// A varied request mix: shared-prefix prompts, unique prompts, and a
+/// spread of SLO classes. Priorities shift who waits, never tokens —
+/// the parity assertion downstream covers exactly that.
+fn request_mix() -> Vec<EngineRequest> {
+    let sys = sys_prefix();
+    (0..10u64)
+        .map(|i| {
+            let prompt = if i < 4 {
+                let mut p = sys.clone();
+                p.push(100 + i as u8 % 20);
+                p
+            } else {
+                vec![(i % 60) as u8, 5, (3 + i % 7) as u8]
+            };
+            EngineRequest {
+                id: i,
+                prompt,
+                max_new: 6,
+                // Requests 0 and 2 pin the registered prefix explicitly;
+                // 1 and 3 rely on auto-detection.
+                prefix_id: (i < 4 && i % 2 == 0).then_some(1),
+                speculate_k: None,
+                priority: ((i % 3) * 3) as u8,
+            }
+        })
+        .collect()
+}
+
+/// Run `reqs` through `engine` and collect id → tokens, asserting every
+/// request succeeds.
+fn run_all(engine: &dyn Engine, reqs: &[EngineRequest]) -> BTreeMap<u64, Vec<u8>> {
+    let rxs: Vec<_> = reqs.iter().map(|r| engine.submit(r.clone())).collect();
+    let mut out = BTreeMap::new();
+    for (req, rx) in reqs.iter().zip(rxs) {
+        let r = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|e| panic!("request {} never answered: {e:?}", req.id));
+        assert!(r.error.is_none(), "request {}: {:?}", req.id, r.error);
+        assert_eq!(r.tokens.len(), req.max_new, "request {}", req.id);
+        out.insert(r.id, r.tokens);
+    }
+    out
+}
+
+fn fleet(
+    model: &Arc<Model>,
+    n: usize,
+    opts: RouterOptions,
+) -> (Vec<Arc<NativeEngine>>, Router) {
+    let replicas: Vec<Arc<NativeEngine>> =
+        NativeEngine::start_replicas(model.clone(), None, n, EngineOptions::default())
+            .into_iter()
+            .map(Arc::new)
+            .collect();
+    let dyns: Vec<Arc<dyn Engine>> = replicas
+        .iter()
+        .map(|e| e.clone() as Arc<dyn Engine>)
+        .collect();
+    let router = Router::new(dyns, opts);
+    (replicas, router)
+}
+
+fn shutdown(replicas: Vec<Arc<NativeEngine>>, router: Router) {
+    router.stop();
+    drop(router);
+    for e in replicas {
+        e.join();
+    }
+}
+
+/// The tentpole pin: the same request mix through 1 reference engine
+/// and through N ∈ {2, 4} replicas under every routing policy yields
+/// bitwise-identical token streams, and the fleet-merged stats account
+/// for every request exactly once.
+#[test]
+fn fleet_outputs_match_single_engine_under_every_policy() {
+    let model = Arc::new(make_model(10));
+    let reqs = request_mix();
+
+    let reference = NativeEngine::start(model.clone(), None, 8);
+    assert!(reference.register_prefix(1, sys_prefix()));
+    let want = run_all(&reference, &reqs);
+    reference.stop();
+    reference.join();
+
+    for n in [2usize, 4] {
+        for policy in [
+            RoutePolicy::Prefix,
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastLoaded,
+        ] {
+            let (replicas, router) = fleet(
+                &model,
+                n,
+                RouterOptions {
+                    policy,
+                    ..RouterOptions::default()
+                },
+            );
+            assert!(router.register_prefix(1, sys_prefix()));
+            let got = run_all(&router, &reqs);
+            assert_eq!(
+                got,
+                want,
+                "{n} replicas under {} diverged from the single engine",
+                policy.label()
+            );
+            // Every request completed exactly once fleet-wide: re-routes
+            // and spills may move work, never duplicate or drop it.
+            let stats = router.stats_json();
+            assert_eq!(
+                stats.get("requests").as_f64(),
+                Some(reqs.len() as f64),
+                "{n} replicas under {}",
+                policy.label()
+            );
+            assert_eq!(
+                stats.get("replicas_healthy").as_f64(),
+                Some(n as f64),
+                "healthy fleet reported unhealthy replicas"
+            );
+            shutdown(replicas, router);
+        }
+    }
+}
+
+/// Fault injection: a replica hard-killed with half the fleet's work in
+/// flight is drained, its requests re-route to the survivor, and every
+/// caller still receives the exact reference tokens.
+#[test]
+fn killed_replica_requests_are_rerouted_and_exact() {
+    let model = Arc::new(make_model(11));
+    // Long decodes keep requests in flight while the kill lands.
+    let reqs: Vec<EngineRequest> = (0..8u64)
+        .map(|i| EngineRequest {
+            id: i,
+            prompt: vec![(i % 60) as u8, 5, 9],
+            max_new: 60,
+            prefix_id: None,
+            speculate_k: None,
+            priority: 0,
+        })
+        .collect();
+
+    let reference = NativeEngine::start(model.clone(), None, 8);
+    let want = run_all(&reference, &reqs);
+    reference.stop();
+    reference.join();
+
+    let (replicas, router) = fleet(
+        &model,
+        2,
+        RouterOptions {
+            policy: RoutePolicy::LeastLoaded,
+            ..RouterOptions::default()
+        },
+    );
+    // Least-loaded alternates over an idle fleet, so both replicas hold
+    // in-flight work when replica 0 dies.
+    let rxs: Vec<_> = reqs.iter().map(|r| router.submit(r.clone())).collect();
+    replicas[0].kill();
+
+    for (req, rx) in reqs.iter().zip(rxs) {
+        let r = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|e| panic!("request {} never answered: {e:?}", req.id));
+        assert!(r.error.is_none(), "request {}: {:?}", req.id, r.error);
+        assert_eq!(
+            r.tokens, want[&req.id],
+            "request {} re-routed to different tokens",
+            req.id
+        );
+    }
+
+    let rerouted = router.metrics().requests_rerouted.load(Ordering::Relaxed);
+    assert!(rerouted >= 1, "kill mid-flight must re-route something");
+    assert_eq!(router.replicas_healthy(), 1);
+    let stats = router.stats_json();
+    assert_eq!(stats.get("replicas_healthy").as_f64(), Some(1.0));
+    assert_eq!(
+        stats.get("requests_rerouted").as_f64(),
+        Some(rerouted as f64)
+    );
+    // Each request completed exactly once, all on the survivor.
+    assert_eq!(stats.get("requests").as_f64(), Some(reqs.len() as f64));
+    shutdown(replicas, router);
+}
+
+/// Prefix affinity concentrates one prefix's traffic — and therefore
+/// its KV cache — on a single replica: that replica records every
+/// `prefix_hits`, the other records none, and tokens still match the
+/// reference exactly.
+#[test]
+fn prefix_affinity_concentrates_hits_on_one_replica() {
+    let model = Arc::new(make_model(12));
+    let sys = sys_prefix();
+    let reqs: Vec<EngineRequest> = (0..6u64)
+        .map(|i| {
+            let mut prompt = sys.clone();
+            prompt.push(100 + i as u8);
+            EngineRequest {
+                id: i,
+                prompt,
+                max_new: 5,
+                // Mixing explicit pins and auto-detection must land on
+                // the same affinity assignment.
+                prefix_id: (i % 2 == 0).then_some(1),
+                speculate_k: None,
+                priority: 0,
+            }
+        })
+        .collect();
+
+    let reference = NativeEngine::start(model.clone(), None, 8);
+    assert!(reference.register_prefix(1, sys.clone()));
+    let want = run_all(&reference, &reqs);
+    reference.stop();
+    reference.join();
+
+    let (replicas, router) = fleet(
+        &model,
+        2,
+        RouterOptions {
+            policy: RoutePolicy::Prefix,
+            spill_margin: 100, // never spill: this test is about affinity
+            ..RouterOptions::default()
+        },
+    );
+    assert!(router.register_prefix(1, sys));
+    let got = run_all(&router, &reqs);
+    assert_eq!(got, want, "affinity routing changed tokens");
+
+    let hits: Vec<u64> = replicas
+        .iter()
+        .map(|e| e.metrics().prefix_hits.load(Ordering::Relaxed))
+        .collect();
+    assert!(
+        hits.contains(&(reqs.len() as u64)) && hits.contains(&0),
+        "prefix hits should concentrate on one replica, got {hits:?}"
+    );
+    shutdown(replicas, router);
+}

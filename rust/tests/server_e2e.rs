@@ -160,6 +160,7 @@ fn direct_engine_api_under_load() {
                 max_new: 4,
                 prefix_id: None,
                 speculate_k: None,
+                priority: 0,
             })
         })
         .collect();
