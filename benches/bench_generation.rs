@@ -239,6 +239,7 @@ fn pool_pressure() -> Json {
                 prefix_id: None,
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             }));
         }
         let mut tokens = 0usize;
@@ -387,6 +388,7 @@ fn shared_prefix() -> Json {
                 prefix_id: None,
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             }));
         }
         let mut tokens = 0usize;

@@ -104,6 +104,7 @@ fn run(
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         }));
     }
     let mut tokens = 0usize;

@@ -88,6 +88,7 @@ fn requests(shape: &Shape) -> Vec<EngineRequest> {
                 prefix_id: Some(which as u64 + 1),
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             }
         })
         .collect()

@@ -17,6 +17,11 @@
 //!
 //! Bit-parity preflight: every speculated token stream must equal the
 //! non-speculative stream exactly — acceptance only moves throughput.
+//! The coupled accept rule makes that hold in *sampled* mode too, so a
+//! second sweep holds B and k fixed and sweeps the softmax temperature:
+//! acceptance falls as the distribution flattens (the draft and target
+//! samples decouple), and `tokens_resampled` counts the rounds whose
+//! first rejected position re-drew from the target's own distribution.
 //! Reported per row: tok/s, speedup over the k = 0 baseline at the
 //! same B, and the draft acceptance rate. The full run asserts the
 //! k = 4 sweep beats the baseline somewhere in the B sweep; `--smoke`
@@ -28,6 +33,7 @@ use std::time::Instant;
 
 use quipsharp::bench::{best_of, Table};
 use quipsharp::generation::paged::{pages_per_seq, KvPagePool, PagedKv};
+use quipsharp::generation::sampling::{next_token, SamplingParams};
 use quipsharp::generation::speculative::{effective_k, spec_round_paged, SpecLane, SpecStats};
 use quipsharp::generation::Generator;
 use quipsharp::model::{Arch, Model, ModelConfig};
@@ -140,15 +146,26 @@ fn setup(target: &Generator, draft: &Generator, shape: &Shape, bsz: usize) -> La
     Lanes { pool, t_kvs, d_kvs, logits }
 }
 
-/// Baseline: plain batched greedy decode of `new_tokens` per lane.
-fn run_baseline(target: &Generator, shape: &Shape, lanes: &mut Lanes) -> Vec<Vec<u8>> {
+/// Baseline: plain batched decode of `new_tokens` per lane through the
+/// shared per-position sampling rule (greedy params fall through to the
+/// exact argmax call, bit-identical to the pre-sampling bench).
+fn run_baseline(
+    target: &Generator,
+    shape: &Shape,
+    lanes: &mut Lanes,
+    sampling: &[SamplingParams],
+) -> Vec<Vec<u8>> {
     let bsz = lanes.t_kvs.len();
     let mut out: Vec<Vec<u8>> = vec![Vec::new(); bsz];
-    for _ in 0..shape.new_tokens {
+    for step in 0..shape.new_tokens {
+        // Absolute position of the token being emitted: shared prefix +
+        // the lane's distinct first token + tokens emitted so far.
+        let pos = shape.prefix_rows + 1 + step;
         let toks: Vec<u8> = lanes
             .logits
             .iter()
-            .map(|l| quipsharp::generation::argmax(l) as u8)
+            .enumerate()
+            .map(|(b, l)| next_token(l, &sampling[b], pos))
             .collect();
         for (o, &t) in out.iter_mut().zip(&toks) {
             o.push(t);
@@ -170,6 +187,7 @@ fn run_speculative(
     shape: &Shape,
     k: usize,
     lanes: &mut Lanes,
+    sampling: &[SamplingParams],
 ) -> (Vec<Vec<u8>>, SpecStats) {
     let bsz = lanes.t_kvs.len();
     let ctx = target.model.cfg.ctx;
@@ -212,6 +230,8 @@ fn run_speculative(
                         draft_kv: d,
                         pending: p,
                         logits: l,
+                        sampling: sampling[idx],
+                        pos: shape.prefix_rows + 1 + out[idx].len(),
                     });
                     si += 1;
                 }
@@ -233,26 +253,33 @@ fn run_config(
     bsz: usize,
     k: usize,
     baseline_tps: Option<f64>,
+    sampling: &[SamplingParams],
 ) -> (Json, f64, f64) {
     // Parity preflight: the speculated stream must equal the plain
-    // greedy stream token for token.
+    // stream token for token — greedy and sampled alike (the coupled
+    // accept rule makes speculation sample-path-exact).
     let mut base_lanes = setup(target, draft, shape, bsz);
-    let want = run_baseline(target, shape, &mut base_lanes);
+    let want = run_baseline(target, shape, &mut base_lanes, sampling);
     let mut spec_lanes = setup(target, draft, shape, bsz);
-    let (got, preflight_stats) = run_speculative(target, draft, shape, k, &mut spec_lanes);
+    let (got, preflight_stats) =
+        run_speculative(target, draft, shape, k, &mut spec_lanes, sampling);
     assert_eq!(got, want, "speculative decode diverged (B={bsz}, k={k})");
+    assert!(
+        preflight_stats.tokens_resampled <= preflight_stats.rounds,
+        "resample counter exceeds rounds (B={bsz}, k={k})"
+    );
     // Timing: best of `reps` fresh runs (setup excluded).
     let tokens = (bsz * shape.new_tokens) as f64;
     let dt = best_of(shape.reps, || {
         if k == 0 {
             let mut lanes = setup(target, draft, shape, bsz);
             let t0 = Instant::now();
-            run_baseline(target, shape, &mut lanes);
+            run_baseline(target, shape, &mut lanes, sampling);
             t0.elapsed().as_secs_f64()
         } else {
             let mut lanes = setup(target, draft, shape, bsz);
             let t0 = Instant::now();
-            run_speculative(target, draft, shape, k, &mut lanes);
+            run_speculative(target, draft, shape, k, &mut lanes, sampling);
             t0.elapsed().as_secs_f64()
         }
     });
@@ -262,12 +289,14 @@ fn run_config(
     let row = Json::obj(vec![
         ("batch", Json::num(bsz as f64)),
         ("k", Json::num(k as f64)),
+        ("temperature", Json::num(sampling[0].temperature as f64)),
         ("tok_per_sec", Json::num(tps)),
         ("speedup_vs_k0", Json::num(speedup)),
         ("acceptance_rate", Json::num(acc)),
         ("tokens_drafted", Json::num(preflight_stats.tokens_drafted as f64)),
         ("tokens_accepted", Json::num(preflight_stats.tokens_accepted as f64)),
         ("rounds", Json::num(preflight_stats.rounds as f64)),
+        ("tokens_resampled", Json::num(preflight_stats.tokens_resampled as f64)),
     ]);
     (row, tps, speedup)
 }
@@ -303,9 +332,11 @@ fn main() {
     let mut rows_json: Vec<Json> = Vec::new();
     let mut best_k4_speedup = f64::NEG_INFINITY;
     for &bsz in shape.batches {
+        let greedy = vec![SamplingParams::default(); bsz];
         let mut baseline_tps = None;
         for &k in shape.ks {
-            let (row, tps, speedup) = run_config(&target, &draft, &shape, bsz, k, baseline_tps);
+            let (row, tps, speedup) =
+                run_config(&target, &draft, &shape, bsz, k, baseline_tps, &greedy);
             if k == 0 {
                 baseline_tps = Some(tps);
             }
@@ -325,6 +356,49 @@ fn main() {
     }
     t.print();
     t.write_csv("bench_speculative").ok();
+
+    // Sampled sweep: B and k fixed, softmax temperature swept. Parity
+    // (speculated stream == direct sampled stream) is asserted inside
+    // run_config for every row; the interesting column is acceptance,
+    // which falls as the temperature flattens the distributions and the
+    // per-position draft/target samples decouple.
+    let sampled_bsz = *shape.batches.last().unwrap();
+    let sampled_k = *shape.ks.last().unwrap();
+    println!(
+        "\n== sampled mode (B={sampled_bsz}, acceptance vs temperature, parity asserted) =="
+    );
+    let mut st = Table::new(&["temp", "k", "tok/s", "speedup", "accept", "resampled"]);
+    let mut sampled_json: Vec<Json> = Vec::new();
+    for &temp in &[0.5f32, 0.9, 1.4] {
+        let params: Vec<SamplingParams> = (0..sampled_bsz)
+            .map(|b| SamplingParams {
+                temperature: temp,
+                top_k: 0,
+                top_p: 1.0,
+                seed: 0xB_5EED + b as u64,
+            })
+            .collect();
+        let mut baseline_tps = None;
+        for k in [0usize, sampled_k] {
+            let (row, tps, speedup) =
+                run_config(&target, &draft, &shape, sampled_bsz, k, baseline_tps, &params);
+            if k == 0 {
+                baseline_tps = Some(tps);
+            }
+            let acc = row.get("acceptance_rate").as_f64().unwrap();
+            let resampled = row.get("tokens_resampled").as_f64().unwrap();
+            st.row(&[
+                format!("{temp:.1}"),
+                format!("{k}"),
+                format!("{tps:.1}"),
+                format!("{speedup:.2}x"),
+                format!("{acc:.2}"),
+                format!("{resampled:.0}"),
+            ]);
+            sampled_json.push(row);
+        }
+    }
+    st.print();
     let out = Json::obj(vec![
         ("d_model", Json::num(shape.d_model as f64)),
         ("n_layers", Json::num(shape.n_layers as f64)),
@@ -334,6 +408,7 @@ fn main() {
         ("target_bits", Json::num(4.0)),
         ("smoke", Json::Bool(smoke)),
         ("sweep", Json::Arr(rows_json)),
+        ("sampled_sweep", Json::Arr(sampled_json)),
     ]);
     if std::fs::write("BENCH_speculative.json", out.emit()).is_ok() {
         println!("\nwrote BENCH_speculative.json");

@@ -36,6 +36,7 @@
 use std::collections::BTreeMap;
 
 pub mod paged;
+pub mod sampling;
 pub mod speculative;
 
 use crate::linalg::hadamard::{fwht_f32, HadTransform};

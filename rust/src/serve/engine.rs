@@ -31,8 +31,9 @@
 //!      tokens against its own KV (pages from the same pool), the target
 //!      verifies all k + 1 positions in one chunked batched step
 //!      ([`crate::generation::speculative::spec_round_paged`]), and both
-//!      KVs truncate back to the last accepted token. Greedy accept
-//!      keeps responses bit-identical to plain decode,
+//!      KVs truncate back to the last accepted token. The coupled
+//!      accept rule keeps responses bit-identical to plain decode —
+//!      greedy *and* sampled,
 //!   6. retire finished sequences (pages back to the pool) and answer
 //!      their requests.
 //! Requests join/leave at step boundaries — continuous batching.
@@ -58,9 +59,10 @@
 //! are re-prefilled). The submit queue is priority-ordered the same
 //! way: a request enters behind every queued request of its class or
 //! higher (FIFO within a class), and a preempted request re-enters at
-//! the *front* of its class. Priorities never change tokens — greedy
-//! decode is deterministic per request regardless of schedule — they
-//! only reorder who waits.
+//! the *front* of its class. Priorities never change tokens — decode is
+//! deterministic per request regardless of schedule, greedy by
+//! construction and sampled via the position-keyed per-request RNG
+//! ([`crate::generation::sampling`]) — they only reorder who waits.
 //!
 //! The prefix cache itself is built lazily by the scheduler (one
 //! sequential prefill, the first time a registered prefix meaningfully
@@ -86,8 +88,9 @@ use std::time::Instant;
 use crate::generation::paged::{
     pages_per_seq, KvPagePool, KvQuantSpec, PageExport, PagedKv, PAGE_ROWS,
 };
+use crate::generation::sampling::{next_token, SamplingParams};
 use crate::generation::speculative::{effective_k, spec_round_paged, SpecLane, SpecStats};
-use crate::generation::{argmax, streamed_bytes_for_batch, AttnMode, Generator};
+use crate::generation::{streamed_bytes_for_batch, AttnMode, Generator};
 use crate::model::qlinear::codewords_decoded;
 use crate::model::Model;
 use crate::qmodel::QuantizedModel;
@@ -121,6 +124,13 @@ pub struct EngineRequest {
     /// class present. Never changes a request's tokens, only who waits
     /// (TCP field: `priority`).
     pub priority: u8,
+    /// Stochastic-decode controls (TCP fields: `temperature` / `top_k` /
+    /// `top_p` / `seed`; the default is greedy). Sampled tokens are a
+    /// pure function of `(seed, absolute position, logits)`, so the
+    /// response stream is identical on any replica, batch composition,
+    /// thread count, speculation depth, or preempt/spill/restore
+    /// history.
+    pub sampling: SamplingParams,
 }
 
 #[derive(Clone, Debug)]
@@ -962,7 +972,8 @@ impl NativeEngine {
                 }
                 // One scheduler step = up to PREFILL_CHUNK batched decode
                 // rounds. Round 0 advances every sequence by one token
-                // (next prompt token while prefilling, argmax continuation
+                // (next prompt token while prefilling, next-token
+                // continuation — argmax or the position-keyed sample —
                 // otherwise); later rounds only run sequences still in
                 // prefill, so long prompts are consumed in batched slices
                 // without re-decoding weights per sequence.
@@ -986,7 +997,8 @@ impl NativeEngine {
                             // Speculating sequences (spec_k > 0) sit out
                             // the round-0 continuation: they advance in
                             // the speculative phase below instead.
-                            let t = argmax(&a.last_logits) as u8;
+                            let pos = a.req.prompt.len() + a.generated.len();
+                            let t = next_token(&a.last_logits, &a.req.sampling, pos);
                             a.generated.push(t);
                             sel.push((i, t, false));
                         }
@@ -1214,6 +1226,8 @@ impl NativeEngine {
                                         draft_kv: &mut a.draft_kv,
                                         pending: &mut a.draft_pending,
                                         logits: &mut a.last_logits,
+                                        sampling: a.req.sampling,
+                                        pos: a.req.prompt.len() + a.generated.len(),
                                     });
                                     si += 1;
                                 }
@@ -1235,6 +1249,7 @@ impl NativeEngine {
                             round_stats.tokens_drafted,
                             round_stats.tokens_accepted,
                             round_stats.rounds,
+                            round_stats.tokens_resampled,
                         );
                         sh.metrics.record_step(spec_sel.len());
                         // Byte accounting: what the draft steps (base
@@ -1433,6 +1448,7 @@ mod tests {
                 prefix_id: None,
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             });
             rxs.push(rx);
         }
@@ -1470,6 +1486,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         let offline = Generator::dense(&model).generate(&prompt, 6);
@@ -1496,6 +1513,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let rx_short = eng.submit(EngineRequest {
             id: 2,
@@ -1504,6 +1522,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let gen = Generator::dense(&model);
         let resp_long = rx_long
@@ -1537,6 +1556,7 @@ mod tests {
                 prefix_id: None,
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             });
             let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
             assert!(resp.tokens.is_empty());
@@ -1553,6 +1573,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -1607,6 +1628,7 @@ mod tests {
                 prefix_id: None,
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             }));
             prompts.push(prompt);
         }
@@ -1649,6 +1671,7 @@ mod tests {
                 prefix_id: None,
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             }));
         }
         for rx in rxs {
@@ -1686,6 +1709,7 @@ mod tests {
                 prefix_id: None, // auto-detect against the registry
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             }));
             prompts.push(prompt);
         }
@@ -1735,6 +1759,7 @@ mod tests {
             prefix_id: Some(1),
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -1751,6 +1776,7 @@ mod tests {
             prefix_id: Some(99),
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -1766,6 +1792,7 @@ mod tests {
             prefix_id: Some(1),
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
@@ -1798,6 +1825,7 @@ mod tests {
                 prefix_id: Some(3),
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             }));
             prompts.push(prompt);
         }
@@ -1857,6 +1885,7 @@ mod tests {
                 prefix_id: None,
                 speculate_k: Some(4),
                 priority: 0,
+                sampling: Default::default(),
             }));
         }
         for (i, rx) in rxs.into_iter().enumerate() {
@@ -1898,6 +1927,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None, // engine default (4) applies
             priority: 0,
+            sampling: Default::default(),
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert!(resp.error.is_none());
@@ -1910,6 +1940,7 @@ mod tests {
             prefix_id: None,
             speculate_k: Some(0),
             priority: 0,
+            sampling: Default::default(),
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.tokens, gen.generate(&prompt, 10));
@@ -1946,6 +1977,7 @@ mod tests {
                 prefix_id: Some(pid),
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             });
             let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
             assert!(resp.error.is_none(), "prefix {pid}: {:?}", resp.error);
@@ -1986,6 +2018,7 @@ mod tests {
                     prefix_id: None,
                     speculate_k: None,
                     priority: 0,
+                    sampling: Default::default(),
                 }));
             }
             let out = rxs
@@ -2029,6 +2062,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert!(resp.error.is_none());
@@ -2075,6 +2109,7 @@ mod tests {
                 prefix_id: None,
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             }));
             prompts.push(prompt);
         }
@@ -2131,6 +2166,7 @@ mod tests {
                     prefix_id: None,
                     speculate_k: None,
                     priority: 0,
+                    sampling: Default::default(),
                 }));
             }
             let outs: Vec<Vec<u8>> = rxs
@@ -2173,6 +2209,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         let err = resp.error.expect("expected pool-too-small error");
@@ -2194,6 +2231,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority,
+            sampling: Default::default(),
         };
         let mut q = SubmitQueue::new();
         let tx = || channel().0;
@@ -2225,6 +2263,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let rx_b = eng.submit(EngineRequest {
             id: 2,
@@ -2233,6 +2272,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let rx_c = eng.submit(EngineRequest {
             id: 3,
@@ -2241,6 +2281,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 9,
+            sampling: Default::default(),
         });
         let t = std::time::Duration::from_secs(60);
         let a = rx_a.recv_timeout(t).unwrap();
@@ -2279,6 +2320,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         let rx_b = eng.submit(EngineRequest {
             id: 2,
@@ -2287,6 +2329,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 9,
+            sampling: Default::default(),
         });
         let t = std::time::Duration::from_secs(60);
         let a = rx_a.recv_timeout(t).unwrap();
@@ -2324,6 +2367,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         eng.kill();
         assert!(
@@ -2337,6 +2381,7 @@ mod tests {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         });
         assert!(
             rx2.recv_timeout(std::time::Duration::from_secs(5)).is_err(),

@@ -77,6 +77,10 @@ pub struct Metrics {
     pub tokens_accepted: AtomicU64,
     /// Per-sequence speculative rounds executed.
     pub spec_rounds: AtomicU64,
+    /// Sampled-mode speculative rounds whose first rejected draft was
+    /// re-drawn from the target's own distribution (always 0 on greedy
+    /// traffic — the greedy accept rule has no resample step).
+    pub tokens_resampled: AtomicU64,
     /// KV pages quantized to their cold (E8P/RVQ) representation.
     pub kv_pages_quantized: AtomicU64,
     /// Sequences whose quantized pages were exported to the host-side
@@ -131,6 +135,7 @@ impl Metrics {
             tokens_drafted: AtomicU64::new(0),
             tokens_accepted: AtomicU64::new(0),
             spec_rounds: AtomicU64::new(0),
+            tokens_resampled: AtomicU64::new(0),
             kv_pages_quantized: AtomicU64::new(0),
             kv_spills: AtomicU64::new(0),
             kv_restores: AtomicU64::new(0),
@@ -217,11 +222,14 @@ impl Metrics {
 
     /// One batch of self-speculative lane-rounds completed: `drafted`
     /// tokens proposed, `accepted` of them confirmed by the target
-    /// across `rounds` lanes.
-    pub fn record_spec(&self, drafted: u64, accepted: u64, rounds: u64) {
+    /// across `rounds` lanes, `resampled` of those lanes re-drawing
+    /// their first rejected position from the target distribution
+    /// (sampled mode only; always 0 for greedy traffic).
+    pub fn record_spec(&self, drafted: u64, accepted: u64, rounds: u64, resampled: u64) {
         self.tokens_drafted.fetch_add(drafted, Ordering::Relaxed);
         self.tokens_accepted.fetch_add(accepted, Ordering::Relaxed);
         self.spec_rounds.fetch_add(rounds, Ordering::Relaxed);
+        self.tokens_resampled.fetch_add(resampled, Ordering::Relaxed);
     }
 
     /// Fraction of drafted tokens the target accepted (0 when nothing
@@ -366,6 +374,10 @@ impl Metrics {
                 "spec_rounds",
                 Json::num(self.spec_rounds.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "tokens_resampled",
+                Json::num(self.tokens_resampled.load(Ordering::Relaxed) as f64),
+            ),
             ("acceptance_rate", Json::num(self.acceptance_rate())),
             (
                 "kv_pages_quantized",
@@ -509,6 +521,10 @@ impl Metrics {
             ("tokens_accepted", Json::num(accepted as f64)),
             ("spec_rounds", Json::num(summed!(spec_rounds) as f64)),
             (
+                "tokens_resampled",
+                Json::num(summed!(tokens_resampled) as f64),
+            ),
+            (
                 "acceptance_rate",
                 Json::num(if drafted == 0 {
                     0.0
@@ -606,14 +622,16 @@ mod tests {
     fn speculative_and_eviction_counters() {
         let m = Metrics::new();
         assert_eq!(m.acceptance_rate(), 0.0);
-        // Two batched rounds: 8 drafted / 5 accepted, then 4 / 4.
-        m.record_spec(8, 5, 2);
-        m.record_spec(4, 4, 1);
+        // Two batched rounds: 8 drafted / 5 accepted with one sampled
+        // resample, then 4 / 4 (all accepted, nothing re-drawn).
+        m.record_spec(8, 5, 2, 1);
+        m.record_spec(4, 4, 1, 0);
         m.record_prefix_eviction();
         let s = m.snapshot();
         assert_eq!(s.get("tokens_drafted").as_f64(), Some(12.0));
         assert_eq!(s.get("tokens_accepted").as_f64(), Some(9.0));
         assert_eq!(s.get("spec_rounds").as_f64(), Some(3.0));
+        assert_eq!(s.get("tokens_resampled").as_f64(), Some(1.0));
         assert_eq!(s.get("prefix_evictions").as_f64(), Some(1.0));
         assert!((m.acceptance_rate() - 0.75).abs() < 1e-12);
     }
@@ -662,14 +680,14 @@ mod tests {
         a.record_step(2);
         a.set_pool_capacity(8);
         a.set_pages_in_use(6);
-        a.record_spec(8, 4, 1);
+        a.record_spec(8, 4, 1, 2);
         a.set_codewords_decoded(100);
         b.record_request(20, 50.0);
         b.record_request(30, 100.0);
         b.record_step(4);
         b.set_pool_capacity(8);
         b.set_pages_in_use(3);
-        b.record_spec(4, 4, 1);
+        b.record_spec(4, 4, 1, 1);
         // Both replicas mirror the same process-wide kernel counter,
         // b's refresh ran later:
         b.set_codewords_decoded(120);
@@ -686,6 +704,8 @@ mod tests {
         assert_eq!(s.get("codewords_decoded").as_f64(), Some(120.0));
         // acceptance_rate = (4 + 4) / (8 + 4).
         assert!((s.get("acceptance_rate").as_f64().unwrap() - 8.0 / 12.0).abs() < 1e-12);
+        // Resample counter sums across replicas like any other counter.
+        assert_eq!(s.get("tokens_resampled").as_f64(), Some(3.0));
         assert_eq!(s.get("requests_rerouted").as_f64(), Some(1.0));
         // Percentiles come from the concatenated samples.
         assert!(s.get("p99_ms").as_f64().unwrap() >= 100.0);

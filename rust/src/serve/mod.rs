@@ -31,8 +31,10 @@
 //!   admitted while any page is free (actual usage, not reserved ctx),
 //!   and if an allocation fails mid-step the youngest active sequence is
 //!   preempted — its pages return to the pool and its request requeues
-//!   at the queue front. Greedy decode makes the retry deterministic, so
-//!   responses are unchanged; only latency shifts.
+//!   at the queue front. Decode is deterministic per request — greedy by
+//!   construction, sampled via the position-keyed per-request RNG
+//!   ([`crate::generation::sampling`]) — so the retry reproduces the
+//!   same tokens and responses are unchanged; only latency shifts.
 //! * Metrics expose `pool_pages`, `pages_in_use`, `peak_pages_in_use`,
 //!   `preemptions`, and `requests_rejected` for tuning. The
 //!   `bench_generation` pool-pressure sweep (`make bench-serve`) reports
@@ -66,11 +68,13 @@
 //! base-stage model embedded in every multi-stage quantization drafts
 //! k tokens against its own KV (pages from the same pool), the full
 //! model verifies all k + 1 positions in one chunked batched step, and
-//! both KVs roll back to the last accepted token. Greedy accept keeps
-//! the response **bit-identical** to plain decode — only throughput
-//! moves, reported via `tokens_drafted` / `tokens_accepted` /
-//! `acceptance_rate`. `benches/bench_speculative.rs`
-//! (`make bench-spec`) sweeps k × batch on the shared-prefix workload.
+//! both KVs roll back to the last accepted token. The coupled accept
+//! rule ([`crate::generation::speculative`]) keeps the response
+//! **bit-identical** to plain decode in both greedy and sampled mode —
+//! only throughput moves, reported via `tokens_drafted` /
+//! `tokens_accepted` / `acceptance_rate` / `tokens_resampled`.
+//! `benches/bench_speculative.rs` (`make bench-spec`) sweeps k × batch
+//! on the shared-prefix workload, greedy and sampled.
 //!
 //! # Serving fleet
 //!
@@ -83,10 +87,10 @@
 //! requests carry an SLO class (`priority`) that orders every replica's
 //! queue and preemption; a dead or stalled replica is drained and its
 //! requests re-routed (`requests_rerouted`), bitwise-identically —
-//! greedy decode is deterministic per request, so no routing, spill,
-//! preemption, or re-route decision can ever change tokens
-//! (`rust/tests/router_e2e.rs` pins fleet output against a single
-//! engine). `{"cmd":"stats"}` returns the fleet-merged
+//! decode is deterministic per request in both greedy and sampled mode,
+//! so no routing, spill, preemption, or re-route decision can ever
+//! change tokens (`rust/tests/router_e2e.rs` pins fleet output against
+//! a single engine). `{"cmd":"stats"}` returns the fleet-merged
 //! [`Metrics::merged`] view plus per-replica rows; see [`router`] and
 //! `rust/src/serve/README.md`.
 
@@ -96,6 +100,7 @@ pub mod pjrt_engine;
 pub mod router;
 pub mod server;
 
+pub use crate::generation::sampling::SamplingParams;
 pub use engine::{Engine, EngineOptions, EngineRequest, EngineResponse, NativeEngine};
 pub use metrics::Metrics;
 pub use router::{RoutePolicy, Router, RouterOptions};

@@ -40,9 +40,10 @@
 //! marked unhealthy; its in-flight requests are re-dispatched to
 //! healthy replicas (`requests_rerouted`), and it receives no further
 //! traffic. A re-routed request restarts from scratch on its new
-//! replica — greedy decode is deterministic per request, so the caller
-//! still receives exactly the tokens a healthy fleet would have
-//! produced, just later.
+//! replica — decode is deterministic per request (greedy by
+//! construction, sampled via the position-keyed per-request RNG), so
+//! the caller still receives exactly the tokens a healthy fleet would
+//! have produced, just later.
 //!
 //! Bounded in-flight: each replica accepts at most
 //! [`RouterOptions::max_inflight`] dispatched-but-unanswered requests;
@@ -334,8 +335,8 @@ impl RouterInner {
 
     /// A replica failed a request (died or stalled): mark it unhealthy
     /// and re-dispatch elsewhere. The restarted request reproduces the
-    /// exact same tokens — greedy decode is deterministic — so the
-    /// caller only sees added latency.
+    /// exact same tokens — decode is deterministic per request, greedy
+    /// and sampled alike — so the caller only sees added latency.
     fn reroute(&self, from: usize, p: Pending) {
         self.replicas[from].healthy.store(false, Ordering::Relaxed);
         self.metrics.record_rerouted();
@@ -625,6 +626,7 @@ mod tests {
             prefix_id,
             speculate_k: None,
             priority: 0,
+            sampling: Default::default(),
         }
     }
 

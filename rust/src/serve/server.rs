@@ -3,16 +3,22 @@
 //! Protocol (one JSON object per line; see `rust/src/serve/README.md`
 //! for the full field-by-field reference):
 //!   {"prompt": [1,2,3], "max_new": 16, "prefix_id": 1, "speculate": 4,
-//!    "priority": 0}
+//!    "priority": 0, "temperature": 0.8, "top_k": 40, "top_p": 0.95,
+//!    "seed": 7}
 //!       → {"id":…, "tokens":[…], "ms":…} (plus "error" on failure;
 //!         "prefix_id" is optional — without it the engine auto-detects
 //!         registered prefixes — "speculate" optionally sets the
 //!         self-speculative draft length for this request: 0 forces
 //!         plain decode, absent uses the engine default, and the
-//!         response tokens are bit-identical either way — and
+//!         response tokens are bit-identical either way —
 //!         "priority" is the SLO class, 0–255, higher = more urgent:
 //!         it orders queues and inverts into preemption, never changing
-//!         the response tokens)
+//!         the response tokens — and "temperature"/"top_k"/"top_p"/
+//!         "seed" select seeded stochastic decode
+//!         ([`crate::generation::sampling::SamplingParams`]): absent or
+//!         0 temperature is greedy, and a sampled request's stream is
+//!         reproducible from its seed alone, whatever replica, batch,
+//!         or schedule serves it)
 //!   {"cmd": "register_prefix", "id": 1, "tokens": [5,6,7]}
 //!       → {"ok": true|false}  (share this prompt prefix's KV)
 //!   {"cmd": "stats"}     → metrics snapshot (fleet-merged + per-replica
@@ -31,7 +37,25 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use super::engine::{Engine, EngineRequest};
+use crate::generation::sampling::SamplingParams;
 use crate::util::json::Json;
+
+/// Every field a generation request may carry on the wire, in protocol
+/// order — the docs-drift test pins this list against the
+/// `## Generation request` table in `rust/src/serve/README.md`, both
+/// directions, so the documentation cannot drift from the parser
+/// ([`handle_conn`] reads exactly these).
+pub const REQUEST_WIRE_FIELDS: &[&str] = &[
+    "prompt",
+    "max_new",
+    "prefix_id",
+    "speculate",
+    "priority",
+    "temperature",
+    "top_k",
+    "top_p",
+    "seed",
+];
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -150,6 +174,15 @@ fn handle_conn(
                 // "priority": SLO class, clamped to u8 (higher = more
                 // urgent). Orders queues and preemption, never tokens.
                 let priority = msg.get("priority").as_usize().unwrap_or(0).min(255) as u8;
+                // "temperature"/"top_k"/"top_p"/"seed": seeded
+                // stochastic decode; absent (or 0) temperature keeps
+                // the request greedy and the other fields inert.
+                let sampling = SamplingParams {
+                    temperature: msg.get("temperature").as_f64().unwrap_or(0.0) as f32,
+                    top_k: msg.get("top_k").as_usize().unwrap_or(0),
+                    top_p: msg.get("top_p").as_f64().unwrap_or(1.0) as f32,
+                    seed: msg.get("seed").as_usize().unwrap_or(0) as u64,
+                };
                 let id = ids.fetch_add(1, Ordering::Relaxed);
                 let rx = engine.submit(EngineRequest {
                     id,
@@ -158,6 +191,7 @@ fn handle_conn(
                     prefix_id,
                     speculate_k,
                     priority,
+                    sampling,
                 });
                 let resp = rx.recv().context("engine dropped request")?;
                 let mut fields = vec![
@@ -274,7 +308,20 @@ impl Client {
         max_new: usize,
         priority: u8,
     ) -> Result<(Vec<u8>, f64)> {
-        self.request_full(prompt, max_new, None, None, priority)
+        self.request_full(prompt, max_new, None, None, priority, None)
+    }
+
+    /// Like [`Client::request`] with seeded stochastic decode
+    /// ([`SamplingParams`]): the response stream is a pure function of
+    /// the request (prompt, params, seed), reproducible on any replica
+    /// or schedule. Greedy params reproduce [`Client::request`].
+    pub fn request_sampled(
+        &mut self,
+        prompt: &[u8],
+        max_new: usize,
+        sampling: SamplingParams,
+    ) -> Result<(Vec<u8>, f64)> {
+        self.request_full(prompt, max_new, None, None, 0, Some(sampling))
     }
 
     /// Full request form: optional prefix pin and speculation override.
@@ -285,11 +332,11 @@ impl Client {
         prefix_id: Option<u64>,
         speculate: Option<usize>,
     ) -> Result<(Vec<u8>, f64)> {
-        self.request_full(prompt, max_new, prefix_id, speculate, 0)
+        self.request_full(prompt, max_new, prefix_id, speculate, 0, None)
     }
 
     /// Every generation-request field: prefix pin, speculation
-    /// override, and SLO class.
+    /// override, SLO class, and sampling controls.
     pub fn request_full(
         &mut self,
         prompt: &[u8],
@@ -297,6 +344,7 @@ impl Client {
         prefix_id: Option<u64>,
         speculate: Option<usize>,
         priority: u8,
+        sampling: Option<SamplingParams>,
     ) -> Result<(Vec<u8>, f64)> {
         let mut fields = vec![
             (
@@ -313,6 +361,20 @@ impl Client {
         }
         if priority > 0 {
             fields.push(("priority", Json::num(priority as f64)));
+        }
+        if let Some(s) = sampling {
+            if !s.is_greedy() {
+                fields.push(("temperature", Json::num(s.temperature as f64)));
+                if s.top_k > 0 {
+                    fields.push(("top_k", Json::num(s.top_k as f64)));
+                }
+                if s.top_p < 1.0 {
+                    fields.push(("top_p", Json::num(s.top_p as f64)));
+                }
+                // JSON numbers are f64: seeds round-trip exactly up to
+                // 2^53, plenty for a wire-chosen seed.
+                fields.push(("seed", Json::num(s.seed as f64)));
+            }
         }
         let msg = Json::obj(fields);
         writeln!(self.writer, "{}", msg.emit())?;

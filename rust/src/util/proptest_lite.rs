@@ -2,6 +2,13 @@
 //! set). Each case gets a deterministic RNG derived from the case index; a
 //! failing property reports the case index and message so the exact case
 //! replays by construction.
+//!
+//! Also home to the statistical assertion helpers behind the stochastic
+//! decode tests ([`tv_distance`] / [`chi_square_stat`] /
+//! [`assert_histogram_close`]): empirical token histograms against their
+//! expected distributions, with bounds *derived* from the sample count
+//! and support size rather than hand-tuned — and every caller draws from
+//! a fixed-seed RNG, so the checks are deterministic, never flaky.
 
 use super::rng::Pcg64;
 
@@ -44,6 +51,100 @@ pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), St
     Ok(())
 }
 
+/// Total-variation distance `½ Σ |p_i − q_i|` between two normalized
+/// distributions of equal support.
+pub fn tv_distance(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len(), "TV over mismatched supports");
+    0.5 * p.iter().zip(q).map(|(&a, &b)| (a - b).abs()).sum::<f64>()
+}
+
+/// Normalize a count histogram into an empirical distribution.
+pub fn empirical_dist(counts: &[u64]) -> Vec<f64> {
+    let n: u64 = counts.iter().sum();
+    counts.iter().map(|&c| c as f64 / n.max(1) as f64).collect()
+}
+
+/// Derived TV budget for `n` iid draws from a `k`-outcome distribution:
+/// `E[TV] ≤ √(k / 4n)` (Cauchy–Schwarz over per-bin binomial standard
+/// deviations) plus a `√(ln(1/δ) / 2n)` McDiarmid concentration term at
+/// `δ = 10⁻⁶`. A correct sampler stays under this for all but a ~1e-6
+/// sliver of seeds — and the callers' seeds are fixed, so a pass is a
+/// pass forever.
+pub fn tv_bound(k: usize, n: u64) -> f64 {
+    let n = n as f64;
+    (k as f64 / (4.0 * n)).sqrt() + (1e6f64.ln() / (2.0 * n)).sqrt()
+}
+
+/// Pearson chi-square statistic of `counts` against `expected`
+/// (normalized probabilities). Bins whose expected count falls below 5
+/// are pooled into one tail bin (the classic validity rule for the
+/// chi-square approximation); returns `(statistic, degrees of freedom)`.
+/// A positive count on a zero-probability bin returns `(f64::INFINITY, dof)`
+/// — an impossible token was emitted.
+pub fn chi_square_stat(counts: &[u64], expected: &[f64]) -> (f64, usize) {
+    assert_eq!(counts.len(), expected.len(), "chi-square over mismatched supports");
+    let n: u64 = counts.iter().sum();
+    let mut stat = 0.0f64;
+    let mut bins = 0usize;
+    let (mut tail_c, mut tail_e) = (0.0f64, 0.0f64);
+    for (&c, &p) in counts.iter().zip(expected) {
+        if p <= 0.0 {
+            if c > 0 {
+                return (f64::INFINITY, 1);
+            }
+            continue;
+        }
+        let e = p * n as f64;
+        if e < 5.0 {
+            tail_c += c as f64;
+            tail_e += e;
+        } else {
+            stat += (c as f64 - e) * (c as f64 - e) / e;
+            bins += 1;
+        }
+    }
+    if tail_e > 0.0 {
+        stat += (tail_c - tail_e) * (tail_c - tail_e) / tail_e;
+        bins += 1;
+    }
+    (stat, bins.saturating_sub(1).max(1))
+}
+
+/// Chi-square critical value at tail probability ~1e-6 via the
+/// Wilson–Hilferty cube-root normal approximation:
+/// `χ²_crit ≈ dof · (1 − 2/9dof + z √(2/9dof))³` with `z = Φ⁻¹(1 − 10⁻⁶)
+/// ≈ 4.7534`. Same contract as [`tv_bound`]: a correct sampler at a
+/// fixed seed essentially never crosses it.
+pub fn chi_square_crit(dof: usize) -> f64 {
+    let k = dof.max(1) as f64;
+    let z = 4.7534f64;
+    let t = 2.0 / (9.0 * k);
+    k * (1.0 - t + z * t.sqrt()).powi(3)
+}
+
+/// Assert an empirical token histogram matches its expected distribution
+/// under *both* derived checks — TV distance under [`tv_bound`] and the
+/// Pearson statistic under [`chi_square_crit`] — returning `Err` with
+/// the realized values for [`check`]-style replay.
+pub fn assert_histogram_close(counts: &[u64], expected: &[f64]) -> Result<(), String> {
+    let n: u64 = counts.iter().sum();
+    if n == 0 {
+        return Err("empty histogram".to_string());
+    }
+    let support = expected.iter().filter(|&&p| p > 0.0).count();
+    let tv = tv_distance(&empirical_dist(counts), expected);
+    let bound = tv_bound(support, n);
+    if tv > bound {
+        return Err(format!("TV distance {tv:.5} exceeds derived bound {bound:.5} (n={n}, support={support})"));
+    }
+    let (stat, dof) = chi_square_stat(counts, expected);
+    let crit = chi_square_crit(dof);
+    if stat > crit {
+        return Err(format!("chi-square {stat:.3} exceeds critical {crit:.3} at dof={dof} (n={n})"));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,5 +179,53 @@ mod tests {
         assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6).is_ok());
         assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
         assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn tv_distance_basics() {
+        assert_eq!(tv_distance(&[1.0, 0.0], &[1.0, 0.0]), 0.0);
+        assert!((tv_distance(&[1.0, 0.0], &[0.0, 1.0]) - 1.0).abs() < 1e-15);
+        assert!((tv_distance(&[0.5, 0.5], &[0.75, 0.25]) - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn histogram_checks_pass_for_true_dist_and_catch_wrong_dist() {
+        let dist = [0.5f64, 0.25, 0.125, 0.125];
+        let mut rng = Pcg64::new(99);
+        let mut counts = [0u64; 4];
+        for _ in 0..20_000 {
+            counts[rng.weighted(&dist)] += 1;
+        }
+        assert_histogram_close(&counts, &dist).unwrap();
+        // The same counts against a materially different distribution
+        // must fail both derived bounds.
+        let wrong = [0.25f64, 0.25, 0.25, 0.25];
+        assert!(assert_histogram_close(&counts, &wrong).is_err());
+        let (stat, dof) = chi_square_stat(&counts, &wrong);
+        assert!(stat > chi_square_crit(dof));
+    }
+
+    #[test]
+    fn chi_square_flags_impossible_tokens_and_pools_thin_bins() {
+        // A count on a zero-probability bin is an immediate fail.
+        let (stat, _) = chi_square_stat(&[10, 1], &[1.0, 0.0]);
+        assert!(stat.is_infinite());
+        // Thin bins pool: with n=100 the last two bins (expected 0.3
+        // each) merge into one tail bin rather than destabilizing the
+        // statistic.
+        let counts = [60u64, 34, 3, 3];
+        let expected = [0.6f64, 0.34, 0.03, 0.03];
+        let (stat, dof) = chi_square_stat(&counts, &expected);
+        assert!(stat.is_finite());
+        assert_eq!(dof, 2); // 2 fat bins + 1 pooled tail − 1
+        assert!(assert_histogram_close(&counts, &expected).is_ok());
+    }
+
+    #[test]
+    fn derived_bounds_scale_with_samples() {
+        // More samples → tighter TV budget; more dof → larger critical.
+        assert!(tv_bound(8, 40_000) < tv_bound(8, 4_000));
+        assert!(tv_bound(64, 4_000) > tv_bound(8, 4_000));
+        assert!(chi_square_crit(63) > chi_square_crit(7));
     }
 }

@@ -3,7 +3,11 @@
 //! emits — bidirectionally. A field added to [`Metrics::snapshot`]
 //! without a README row fails here, and so does a documented field the
 //! snapshot no longer carries. The fleet section is held to the same
-//! standard against a real [`Router`]'s merged stats.
+//! standard against a real [`Router`]'s merged stats, and the
+//! generation-request table against the fields the TCP front-end
+//! actually parses (`server::REQUEST_WIRE_FIELDS`) — so a wire field
+//! added to the protocol (e.g. the sampling quartet) cannot ship
+//! undocumented, and a documented field cannot silently stop parsing.
 
 use std::collections::BTreeSet;
 use std::sync::mpsc::{channel, Receiver};
@@ -80,6 +84,16 @@ fn stats_table_matches_snapshot_fields() {
     let docs = documented_fields(&readme(), "### `stats`");
     let code = json_keys(&Metrics::new().snapshot());
     assert_same(&docs, &code, "serve/README.md `stats` table");
+}
+
+#[test]
+fn generation_request_table_matches_wire_fields() {
+    let docs = documented_fields(&readme(), "## Generation request");
+    let code: BTreeSet<String> = quipsharp::serve::server::REQUEST_WIRE_FIELDS
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert_same(&docs, &code, "serve/README.md generation-request table");
 }
 
 /// A do-nothing replica so the fleet check runs against the real

@@ -190,6 +190,8 @@ fn speculative_round_parity_across_thread_counts() {
                         draft_kv: d_kv,
                         pending,
                         logits,
+                        sampling: Default::default(),
+                        pos: prompt.len(),
                     })
                     .collect();
                 spec_round_paged(&target, &draft, &mut pool, &mut lanes, &mut stats)

@@ -3,11 +3,13 @@
 //! policy, through replica death and re-routing, and with prefix
 //! affinity concentrating cache hits.
 //!
-//! This is the determinism contract of the whole serving fleet: greedy
-//! decode is deterministic per request, so no routing, spill,
-//! preemption, or re-route decision may ever change tokens. Everything
-//! here asserts *bitwise* equality against a single-engine reference,
-//! not statistical closeness.
+//! This is the determinism contract of the whole serving fleet: decode
+//! is deterministic per request — greedy by construction, sampled via
+//! the seeded position-keyed RNG — so no routing, spill, preemption,
+//! or re-route decision may ever change tokens. The request mixes
+//! interleave greedy and sampled requests, and everything here asserts
+//! *bitwise* equality against a single-engine reference, not
+//! statistical closeness.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
@@ -17,6 +19,7 @@ use std::time::Duration;
 use quipsharp::model::{Arch, Model, ModelConfig, Params, Tensor};
 use quipsharp::serve::{
     Engine, EngineOptions, EngineRequest, NativeEngine, RoutePolicy, Router, RouterOptions,
+    SamplingParams,
 };
 use quipsharp::util::rng::Pcg64;
 
@@ -63,9 +66,11 @@ fn sys_prefix() -> Vec<u8> {
     (0..40).map(|i| ((i * 3 + 2) % 60) as u8).collect()
 }
 
-/// A varied request mix: shared-prefix prompts, unique prompts, and a
-/// spread of SLO classes. Priorities shift who waits, never tokens —
-/// the parity assertion downstream covers exactly that.
+/// A varied request mix: shared-prefix prompts, unique prompts, a
+/// spread of SLO classes, and interleaved greedy/sampled decode.
+/// Priorities shift who waits, never tokens; seeded sampling is exactly
+/// as deterministic per request as greedy — the parity assertion
+/// downstream covers both at once.
 fn request_mix() -> Vec<EngineRequest> {
     let sys = sys_prefix();
     (0..10u64)
@@ -86,6 +91,18 @@ fn request_mix() -> Vec<EngineRequest> {
                 prefix_id: (i < 4 && i % 2 == 0).then_some(1),
                 speculate_k: None,
                 priority: ((i % 3) * 3) as u8,
+                // Odd ids decode stochastically, each with its own seed
+                // and truncation settings.
+                sampling: if i % 2 == 1 {
+                    SamplingParams {
+                        temperature: 0.7 + 0.2 * (i % 3) as f32,
+                        top_k: 20,
+                        top_p: 0.95,
+                        seed: 0xFEED + i,
+                    }
+                } else {
+                    SamplingParams::default()
+                },
             }
         })
         .collect()
@@ -195,7 +212,9 @@ fn fleet_outputs_match_single_engine_under_every_policy() {
 #[test]
 fn killed_replica_requests_are_rerouted_and_exact() {
     let model = Arc::new(make_model(11));
-    // Long decodes keep requests in flight while the kill lands.
+    // Long decodes keep requests in flight while the kill lands; half
+    // the requests sample, so a kill mid-stream also proves a sampled
+    // request restarts elsewhere onto the identical token stream.
     let reqs: Vec<EngineRequest> = (0..8u64)
         .map(|i| EngineRequest {
             id: i,
@@ -204,6 +223,16 @@ fn killed_replica_requests_are_rerouted_and_exact() {
             prefix_id: None,
             speculate_k: None,
             priority: 0,
+            sampling: if i % 2 == 0 {
+                SamplingParams {
+                    temperature: 1.0,
+                    top_k: 0,
+                    top_p: 1.0,
+                    seed: 0x5EED + i,
+                }
+            } else {
+                SamplingParams::default()
+            },
         })
         .collect();
 
@@ -272,6 +301,7 @@ fn prefix_affinity_concentrates_hits_on_one_replica() {
                 prefix_id: (i % 2 == 0).then_some(1),
                 speculate_k: None,
                 priority: 0,
+                sampling: Default::default(),
             }
         })
         .collect();
