@@ -7,7 +7,8 @@
 .PHONY: verify build test fmt lint doc bench-batch bench-serve bench-attention \
         bench-attention-smoke bench-spec bench-spec-smoke bench-parallel \
         bench-parallel-smoke bench-kvquant bench-kvquant-smoke \
-        bench-router bench-router-smoke tsan-threadpool tsan-paged artifacts
+        bench-router bench-router-smoke trace-smoke tsan-threadpool \
+        tsan-paged artifacts
 
 verify:
 	cargo build --release
@@ -102,6 +103,13 @@ bench-router:
 # requests, shorter decodes). Mirrored by the CI `tier1` job.
 bench-router-smoke:
 	cargo bench --bench bench_router -- --smoke
+
+# Request-tracing smoke: a starved two-replica fleet with a mid-stream
+# kill must export every completed request's trace as JSONL, each line
+# passing the lifecycle grammar (preempt/spill/restore/reroute
+# included). Seconds-scale; mirrored by the CI `tier1` job.
+trace-smoke:
+	cargo test -q --test trace_lifecycle trace_smoke_preempted_rerouted_jsonl
 
 # ThreadSanitizer over the worker-pool unit tests (the unsafe dispatch
 # path: raw task pointers, SendPtr row handoff, condvar parking).

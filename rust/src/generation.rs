@@ -43,6 +43,7 @@ use crate::linalg::hadamard::{fwht_f32, HadTransform};
 use crate::model::ops::*;
 use crate::model::qlinear::{dense_matmul, QuantMatvec};
 use crate::model::{Arch, Model};
+use crate::util::phase::{self, Phase};
 use paged::{
     blocked_attention, blocked_attention_kv, fused_batch_attention, fused_batch_attention_kv,
     AttnLane, KvPagePool, PagedKv, PAGE_ROWS,
@@ -292,6 +293,7 @@ impl<'a> Generator<'a> {
     /// Apply a linear layer to B sequence-major inputs through the
     /// batched kernel (fused E8P decode when packed, dense otherwise).
     fn apply_linear_batch(&self, name: &str, xs: &[f32], batch: usize, ys: &mut [f32]) {
+        let _scope = phase::scope(Phase::QuantMatmul);
         if let Some(qm) = self.qlayers.get(name) {
             if qm.n.is_power_of_two() && qm.m.is_power_of_two() {
                 qm.matmul(xs, batch, ys);
@@ -578,7 +580,10 @@ impl<'a> Generator<'a> {
                     let router = model.p(&format!("{pre}router"));
                     let ne = cfg.n_experts;
                     let mut gl = vec![0.0f32; bsz * ne];
-                    matmul_nt(&h, &router.data, bsz, d, ne, &mut gl);
+                    {
+                        let _scope = phase::scope(Phase::QuantMatmul);
+                        matmul_nt(&h, &router.data, bsz, d, ne, &mut gl);
+                    }
                     softmax_rows(&mut gl, bsz, ne);
                     let mut acc = vec![0.0f32; bsz * d];
                     for e in 0..ne {
@@ -624,7 +629,10 @@ impl<'a> Generator<'a> {
         }
         let head = model.p("lm_head");
         let mut logits = vec![0.0f32; bsz * cfg.vocab];
-        matmul_nt(&h, &head.data, bsz, d, cfg.vocab, &mut logits);
+        {
+            let _scope = phase::scope(Phase::QuantMatmul);
+            matmul_nt(&h, &head.data, bsz, d, cfg.vocab, &mut logits);
+        }
         kvb.advance(lane_seq);
         logits.chunks(cfg.vocab).map(|r| r.to_vec()).collect()
     }
@@ -646,6 +654,9 @@ impl<'a> Generator<'a> {
     ) {
         let (heads, hd) = (self.model.cfg.n_heads, self.model.cfg.head_dim());
         let d = heads * hd;
+        // Inline cold-page decode inside the walk is attributed here,
+        // not to `kv_decode` (which times explicit page re-heats).
+        let _scope = phase::scope(Phase::Attention);
         match self.attn_mode {
             AttnMode::PerSeq => {
                 for (b, &pos) in positions.iter().enumerate() {

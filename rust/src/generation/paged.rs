@@ -110,6 +110,7 @@
 
 use crate::model::{Model, ModelConfig};
 use crate::quant::codebook::rowq::RowCodec;
+use crate::util::phase::{self, Phase};
 use crate::util::threadpool;
 
 /// Token rows per KV page. Equal to the contiguous cache's growth slab
@@ -521,6 +522,7 @@ impl KvPagePool {
             return;
         }
         let Some(q) = self.quant.as_ref() else { return };
+        let _scope = phase::scope(Phase::KvCompress);
         let stride = self.page_stride();
         let slab = PAGE_ROWS * self.d;
         let cps = q.codec.codes_per_slab(slab);
@@ -555,6 +557,7 @@ impl KvPagePool {
         if self.states[page as usize].cold.is_none() {
             return true;
         }
+        let _scope = phase::scope(Phase::KvDecode);
         let stride = self.page_stride();
         let cu = self.cold_units();
         if self.budget_units() - self.used_units < stride - cu {

@@ -36,6 +36,7 @@
 //! bitwise equal to direct sampled decode at any draft length.
 
 use super::{argmax, Generator, KvCache};
+use crate::util::phase::{self, Phase};
 use crate::util::rng::Pcg64;
 
 /// Per-request stochastic-decode controls, threaded from the TCP wire
@@ -161,6 +162,7 @@ pub fn next_token(logits: &[f32], p: &SamplingParams, position: usize) -> u8 {
     if p.is_greedy() {
         return argmax(logits) as u8;
     }
+    let _scope = phase::scope(Phase::Sampling);
     let dist = sampled_dist(logits, p);
     let u = token_rng(p.seed, position).f64();
     draw(&dist, u) as u8

@@ -87,6 +87,7 @@
 use super::paged::{KvPagePool, PagedKv};
 use super::sampling::{draw, next_token, SamplingParams};
 use super::{Generator, KvCache};
+use crate::util::phase::{self, Phase};
 use crate::util::rng::Pcg64;
 
 /// Running totals of the draft/verify loop (monotonic counters).
@@ -284,6 +285,9 @@ pub fn spec_round_paged(
     // token at a time, each lane feeding its own previous proposal.
     let mut drafts: Vec<Vec<u8>> = vec![Vec::new(); bsz];
     if max_k > 0 {
+        // Inclusive timing: draft-model matmul/attention inside this
+        // block counts as `spec_draft` (outermost scope wins).
+        let _scope = phase::scope(Phase::SpecDraft);
         let sel: Vec<usize> = (0..bsz).filter(|&b| lanes[b].k > 0).collect();
         let chunks: Vec<Vec<u8>> = sel
             .iter()
@@ -345,6 +349,9 @@ pub fn spec_round_paged(
         .collect();
     let chunk_refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
     let verify = {
+        // Inclusive timing: the target's chunked decode counts as
+        // `spec_verify` (outermost scope wins).
+        let _scope = phase::scope(Phase::SpecVerify);
         let mut kv_refs: Vec<&mut PagedKv> =
             lanes.iter_mut().map(|l| &mut *l.target_kv).collect();
         target.decode_chunks_paged(&chunk_refs, pool, &mut kv_refs)
@@ -431,6 +438,7 @@ pub fn spec_round(
 
     let mut drafts: Vec<Vec<u8>> = vec![Vec::new(); bsz];
     if max_k > 0 {
+        let _scope = phase::scope(Phase::SpecDraft);
         let sel: Vec<usize> = (0..bsz).filter(|&b| lanes[b].k > 0).collect();
         let chunks: Vec<Vec<u8>> = sel
             .iter()
@@ -489,6 +497,7 @@ pub fn spec_round(
         .collect();
     let chunk_refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
     let verify = {
+        let _scope = phase::scope(Phase::SpecVerify);
         let mut kv_refs: Vec<&mut KvCache> =
             lanes.iter_mut().map(|l| &mut *l.target_kv).collect();
         target.decode_chunks(&chunk_refs, &mut kv_refs)

@@ -8,6 +8,7 @@
 //!             [--max-batch 8] [--pool-pages N] [--attn-mode fused|perseq]
 //!             [--speculate K] [--kv-bits 2|4] [--kv-hot-pages W]
 //!             [--replicas N] [--route prefix|rr|least-loaded]
+//!             [--trace-out FILE]
 //!     --bits quantizes the served model (omit for fp32); --max-batch
 //!     caps concurrent sequences (default 8); --pool-pages sets the KV
 //!     pool size in 32-token-row pages — omitted, the pool is sized for
@@ -35,6 +36,10 @@
 //!     deterministic per request. Requests may carry a "priority" SLO
 //!     class (higher = more urgent), honored by every replica's queue
 //!     and preemption order.
+//!     Request-lifecycle tracing is always on (bounded per-replica ring
+//!     buffers; read one request's merged timeline with
+//!     {"cmd":"trace","id":N}); --trace-out additionally appends every
+//!     completed request's full trace to FILE as one JSON line.
 //!     Prompt-prefix sharing is driven by the wire protocol
 //!     (register_prefix / prefix_id), not by flags.
 //!   export-codebook --out path.qtz      (E8P tables for cross-lang tests)
@@ -49,6 +54,7 @@ use quipsharp::generation::AttnMode;
 use quipsharp::quant::pipeline::{Method, SwapCodebook};
 use quipsharp::serve::{
     serve_blocking, EngineOptions, NativeEngine, RoutePolicy, Router, RouterOptions, ServerConfig,
+    TraceConfig, Tracer,
 };
 use quipsharp::util::cli::Args;
 use quipsharp::util::tensorio::{TensorData, TensorFile};
@@ -101,7 +107,8 @@ fn main() -> Result<()> {
                  [--kv-bits 2|4] (E8P/RVQ-quantize cold KV pages; off = fp32 KV) \
                  [--kv-hot-pages W] (recent fp32 pages per sequence, default 1) \
                  [--replicas N] (engine replicas behind an in-process router) \
-                 [--route prefix|rr|least-loaded] (fleet routing policy, default prefix)"
+                 [--route prefix|rr|least-loaded] (fleet routing policy, default prefix) \
+                 [--trace-out FILE] (append completed request traces as JSONL)"
             );
             Ok(())
         }
@@ -210,6 +217,18 @@ fn cmd_serve(args: &Args, art: &str) -> Result<()> {
     let replicas = args.get_usize("replicas", 1).max(1);
     let route = RoutePolicy::parse(args.get_or("route", "prefix"))
         .with_context(|| "unknown --route (expected prefix|rr|least-loaded)")?;
+    // Request-lifecycle tracing is always on (bounded rings; read via
+    // {"cmd":"trace","id":N}). --trace-out additionally appends every
+    // completed request's merged trace to FILE as one JSON line.
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let tracer = Tracer::new(
+        replicas,
+        TraceConfig {
+            jsonl: trace_out.clone(),
+            ..TraceConfig::default()
+        },
+    )
+    .context("creating --trace-out file")?;
     let opts = EngineOptions {
         max_batch,
         pool_pages,
@@ -217,6 +236,14 @@ fn cmd_serve(args: &Args, art: &str) -> Result<()> {
         speculate_k,
         kv_bits,
         kv_hot_pages,
+        // One replica: the engine is the front and owns the `submit`
+        // event. A fleet: the router owns it; `start_replicas` rebinds
+        // this template writer to each replica's own shard.
+        tracer: Some(if replicas > 1 {
+            tracer.writer(0)
+        } else {
+            tracer.writer(0).owning_submit()
+        }),
     };
     let pool_desc = format!(
         "{}{}",
@@ -268,12 +295,16 @@ fn cmd_serve(args: &Args, art: &str) -> Result<()> {
             fleet,
             RouterOptions {
                 policy: route,
+                tracer: Some(tracer.front_writer()),
                 ..RouterOptions::default()
             },
         ))
     } else {
         Arc::new(engines.into_iter().next().expect("one replica"))
     };
+    if let Some(p) = &trace_out {
+        println!("appending completed request traces to {}", p.display());
+    }
     let handle = serve_blocking(engine, ServerConfig { addr })?;
     println!(
         "listening on {} (line-JSON; {{\"cmd\":\"shutdown\"}} to stop)",

@@ -96,6 +96,7 @@ use crate::model::Model;
 use crate::qmodel::QuantizedModel;
 
 use super::metrics::Metrics;
+use super::trace::{TraceEvent, TraceWriter};
 
 /// Prompt tokens a prefilling sequence may consume per scheduler step:
 /// a freshly admitted prompt is absorbed in batched slices of this size
@@ -168,6 +169,17 @@ pub trait Engine: Send + Sync {
     fn stats_json(&self) -> crate::util::json::Json {
         self.metrics().snapshot()
     }
+    /// The merged lifecycle trace of request `id`
+    /// ([`crate::serve::trace::Tracer::trace_json`]) — the TCP `trace`
+    /// command. Backends without a tracer configured answer with an
+    /// `error` object instead of failing the connection.
+    fn trace_json(&self, id: u64) -> crate::util::json::Json {
+        let _ = id;
+        crate::util::json::Json::obj(vec![(
+            "error",
+            crate::util::json::Json::str("tracing is not enabled on this backend"),
+        )])
+    }
 }
 
 /// A registered, reusable prompt prefix (e.g. a system prompt).
@@ -205,6 +217,11 @@ struct SpilledSeq {
     exports: Vec<PageExport>,
     kv_len: usize,
     t0: Instant,
+    /// Original admission and first-token stamps ride along: the spilled
+    /// stream survives the round trip, so the queue/ttft latency split
+    /// keeps measuring to the admission that produced it.
+    admitted_at: Instant,
+    first_token_at: Option<Instant>,
 }
 
 /// An unpinned prefix cache parked in the arena: re-imported on the next
@@ -454,6 +471,26 @@ enum Freed {
     PrefixEvicted,
 }
 
+/// Record a completed request: the whole-request latency plus its
+/// queue/ttft/decode split (from the admission and first-token stamps
+/// the sequence carried), and the terminal `finish` trace event — which
+/// also exports the trace line when a JSONL sink is configured.
+fn retire_metrics(sh: &Shared, a: &Active, tokens: usize, latency_ms: f64) {
+    let queue_ms = a.admitted_at.duration_since(a.t0).as_secs_f64() * 1e3;
+    let (ttft_ms, decode_ms) = match a.first_token_at {
+        Some(ft) => (
+            Some(ft.duration_since(a.t0).as_secs_f64() * 1e3),
+            Some(ft.elapsed().as_secs_f64() * 1e3),
+        ),
+        None => (None, None),
+    };
+    sh.metrics
+        .record_request_timed(tokens, latency_ms, queue_ms, ttft_ms, decode_ms);
+    if let Some(w) = &sh.tracer {
+        w.finish(a.req.id, TraceEvent::Finish { tokens });
+    }
+}
+
 /// Relieve KV pool pressure, preferring the cheapest remedy first:
 /// retire an already-finished sequence (frees its pages *and* answers
 /// its request), unpin the LRU cold prefix cache (frees pages at the
@@ -488,7 +525,7 @@ fn free_pages(
             prompt_len: a.req.prompt.len(),
             error: None,
         };
-        sh.metrics.record_request(resp.tokens.len(), resp.latency_ms);
+        retire_metrics(sh, &a, resp.tokens.len(), resp.latency_ms);
         let _ = a.tx.send(resp);
         return Freed::Removed(fin);
     }
@@ -529,6 +566,9 @@ fn free_pages(
         if pinned > 0 {
             msg.push_str(&format!(" ({pinned} pinned by prefix caches)"));
         }
+        if let Some(w) = &sh.tracer {
+            w.finish(a.req.id, TraceEvent::Fail { reason: msg.clone() });
+        }
         let resp = EngineResponse {
             id: a.req.id,
             tokens: Vec::new(),
@@ -557,10 +597,26 @@ fn free_pages(
     let mut a = active.remove(young);
     a.draft_kv.release(pool);
     sh.metrics.record_preemption();
+    if let Some(w) = &sh.tracer {
+        w.record(
+            a.req.id,
+            TraceEvent::Preempt {
+                spilled: arena.enabled,
+            },
+        );
+    }
     if arena.enabled {
         let kv_len = a.kv.len;
         let exports = a.kv.spill(pool);
         sh.metrics.record_kv_spill();
+        if let Some(w) = &sh.tracer {
+            w.record(
+                a.req.id,
+                TraceEvent::Spill {
+                    pages: exports.len(),
+                },
+            );
+        }
         arena.seqs.push(SpilledSeq {
             req: a.req,
             tx: a.tx,
@@ -571,10 +627,22 @@ fn free_pages(
             exports,
             kv_len,
             t0: a.t0,
+            admitted_at: a.admitted_at,
+            first_token_at: a.first_token_at,
         });
         return Freed::Spilled(young);
     }
     a.kv.release(pool);
+    if let Some(w) = &sh.tracer {
+        // Restart semantics: the request re-enters its class queue and
+        // its discarded stream is re-derived deterministically.
+        w.record(
+            a.req.id,
+            TraceEvent::Queued {
+                class: a.req.priority,
+            },
+        );
+    }
     sh.queue
         .lock()
         .unwrap()
@@ -608,6 +676,14 @@ struct Active {
     /// Admission order: preemption evicts the youngest admission first,
     /// so the oldest sequence always makes progress.
     admit_seq: u64,
+    /// When the admission that produced the surviving token stream
+    /// happened (`queue_ms = admitted_at − t0`). Spill/restore preserves
+    /// it; a restart-preemption's re-admission resets it — the discarded
+    /// stream's admission no longer matters.
+    admitted_at: Instant,
+    /// When the first surviving token was emitted (`ttft_ms`); reset
+    /// together with `admitted_at` on restart semantics.
+    first_token_at: Option<Instant>,
 }
 
 /// One queued submission: the request, its answer channel, and its
@@ -676,6 +752,10 @@ struct Shared {
     /// Registered reusable prompt prefixes (the scheduler caches their
     /// KV lazily, keyed by id, and rebuilds on re-registration).
     prefixes: Mutex<Vec<PrefixDef>>,
+    /// Lifecycle-trace writer bound to this engine's replica shard
+    /// ([`crate::serve::trace`]); `None` disables event recording *and*
+    /// the scheduler thread's phase-timer sink.
+    tracer: Option<TraceWriter>,
 }
 
 /// Native-backend engine: owns the model (optionally quantized), the
@@ -713,6 +793,12 @@ pub struct EngineOptions {
     /// when `kv_bits > 0` (the hot tail; the partially written page is
     /// always fp32 on top of this).
     pub kv_hot_pages: usize,
+    /// Request-lifecycle trace writer ([`crate::serve::trace`]). `None`
+    /// (default) turns tracing — and the scheduler's phase profiling —
+    /// off entirely; the engine then pays only an `Option` check per
+    /// would-be event. [`NativeEngine::start_replicas`] rebinds the
+    /// writer to each replica's shard.
+    pub tracer: Option<TraceWriter>,
 }
 
 impl Default for EngineOptions {
@@ -724,6 +810,7 @@ impl Default for EngineOptions {
             speculate_k: 0,
             kv_bits: 0,
             kv_hot_pages: 1,
+            tracer: None,
         }
     }
 }
@@ -794,9 +881,15 @@ impl NativeEngine {
             next_id: AtomicU64::new(1),
             ctx: model.cfg.ctx,
             prefixes: Mutex::new(Vec::new()),
+            tracer: opts.tracer.clone(),
         });
         let sh = shared.clone();
         let handle = std::thread::spawn(move || {
+            // Phase attribution is part of the tracing opt-in: without a
+            // tracer the instrumented kernels skip even the clock read.
+            if sh.tracer.is_some() {
+                crate::util::phase::install(sh.metrics.phases());
+            }
             let mut generator = match &qm {
                 Some(q) => Generator::quantized(&model, q),
                 None => Generator::dense(&model),
@@ -852,10 +945,22 @@ impl NativeEngine {
                     if !arena.seqs.is_empty() {
                         let mut s = arena.seqs.remove(0);
                         let mut kv = PagedKv::new();
+                        let restore_pages = s.exports.len();
                         if kv.restore(&mut pool, &mut s.exports, s.kv_len) {
                             newly += 1;
                             admit_counter += 1;
                             sh.metrics.record_kv_restore();
+                            if let Some(w) = &sh.tracer {
+                                // `restore` is the re-admission: the
+                                // stream picks up exactly where it
+                                // stopped, so no fresh `admit` follows.
+                                w.record(
+                                    s.req.id,
+                                    TraceEvent::Restore {
+                                        pages: restore_pages,
+                                    },
+                                );
+                            }
                             // The draft KV was released at spill; it
                             // re-consumes the whole true stream (prompt +
                             // generated) at its next speculative round,
@@ -880,6 +985,8 @@ impl NativeEngine {
                                 draft_pending,
                                 t0: s.t0,
                                 admit_seq: admit_counter,
+                                admitted_at: s.admitted_at,
+                                first_token_at: s.first_token_at,
                             });
                             continue;
                         }
@@ -898,17 +1005,21 @@ impl NativeEngine {
                                 continue;
                             }
                             sh.metrics.record_failed();
+                            let msg = format!(
+                                "KV pool too small to restore spilled sequence: \
+                                 {} pages of exported KV against a pool of {}",
+                                s.exports.len(),
+                                pool.pages_total()
+                            );
+                            if let Some(w) = &sh.tracer {
+                                w.finish(s.req.id, TraceEvent::Fail { reason: msg.clone() });
+                            }
                             let resp = EngineResponse {
                                 id: s.req.id,
                                 tokens: s.generated,
                                 latency_ms: s.t0.elapsed().as_secs_f64() * 1e3,
                                 prompt_len: s.req.prompt.len(),
-                                error: Some(format!(
-                                    "KV pool too small to restore spilled sequence: \
-                                     {} pages of exported KV against a pool of {}",
-                                    s.exports.len(),
-                                    pool.pages_total()
-                                )),
+                                error: Some(msg),
                             };
                             let _ = s.tx.send(resp);
                             continue;
@@ -920,6 +1031,15 @@ impl NativeEngine {
                     let Some((req, tx, t0)) = popped else { break };
                     newly += 1;
                     admit_counter += 1;
+                    let admitted_at = Instant::now();
+                    if let Some(w) = &sh.tracer {
+                        w.record(
+                            req.id,
+                            TraceEvent::Admit {
+                                replica: w.replica(),
+                            },
+                        );
+                    }
                     let mut kv = PagedKv::new();
                     let mut pending_prompt = req.prompt.len();
                     let mut last_logits = Vec::new();
@@ -964,6 +1084,8 @@ impl NativeEngine {
                         draft_pending,
                         t0,
                         admit_seq: admit_counter,
+                        admitted_at,
+                        first_token_at: None,
                     });
                 }
                 if active.is_empty() {
@@ -1096,7 +1218,30 @@ impl NativeEngine {
                         for (i, a) in active.iter_mut().enumerate() {
                             if si < sel.len() && sel[si].0 == i {
                                 a.last_logits = logit_it.next().unwrap();
+                                let was_prefill = sel[si].2;
                                 si += 1;
+                                // The continuation token pushed at
+                                // selection survived the decode: stamp
+                                // the first one for the ttft split
+                                // (evicted entries left `sel` above, so
+                                // an undone push can never stamp).
+                                if !was_prefill && a.first_token_at.is_none() {
+                                    a.first_token_at = Some(Instant::now());
+                                }
+                                if let Some(w) = &sh.tracer {
+                                    w.record(
+                                        a.req.id,
+                                        if was_prefill {
+                                            TraceEvent::Prefill { tokens: 1 }
+                                        } else {
+                                            TraceEvent::DecodeRound {
+                                                tokens: 1,
+                                                total: a.generated.len(),
+                                                spec: false,
+                                            }
+                                        },
+                                    );
+                                }
                             }
                         }
                     }
@@ -1244,6 +1389,19 @@ impl NativeEngine {
                         for (em, &i) in emitted.iter().zip(&spec_sel) {
                             active[i].generated.extend_from_slice(em);
                             emitted_total += em.len();
+                            if !em.is_empty() && active[i].first_token_at.is_none() {
+                                active[i].first_token_at = Some(Instant::now());
+                            }
+                            if let Some(w) = &sh.tracer {
+                                w.record(
+                                    active[i].req.id,
+                                    TraceEvent::DecodeRound {
+                                        tokens: em.len(),
+                                        total: active[i].generated.len(),
+                                        spec: true,
+                                    },
+                                );
+                            }
                         }
                         sh.metrics.record_spec(
                             round_stats.tokens_drafted,
@@ -1288,7 +1446,7 @@ impl NativeEngine {
                             prompt_len: a.req.prompt.len(),
                             error: None,
                         };
-                        sh.metrics.record_request(resp.tokens.len(), resp.latency_ms);
+                        retire_metrics(&sh, a, resp.tokens.len(), resp.latency_ms);
                         let _ = a.tx.send(resp);
                         false
                     } else {
@@ -1360,7 +1518,14 @@ impl NativeEngine {
         opts: EngineOptions,
     ) -> Vec<NativeEngine> {
         (0..n.max(1))
-            .map(|_| Self::start_with_opts(model.clone(), qm.clone(), opts.clone()))
+            .map(|i| {
+                let mut o = opts.clone();
+                // Each replica records into its own trace shard
+                // (preserving submit ownership, so a router-less
+                // single-replica fleet still opens its traces).
+                o.tracer = opts.tracer.as_ref().map(|w| w.with_replica(i));
+                Self::start_with_opts(model.clone(), qm.clone(), o)
+            })
             .collect()
     }
 }
@@ -1373,16 +1538,23 @@ impl Engine for NativeEngine {
         // assert deep in the generator.
         if req.prompt.len() >= self.shared.ctx {
             self.shared.metrics.record_rejected();
+            let msg = format!(
+                "prompt length {} exceeds model context {} (no room to generate)",
+                req.prompt.len(),
+                self.shared.ctx
+            );
+            if let Some(w) = &self.shared.tracer {
+                if w.owns_submit() {
+                    w.record(req.id, TraceEvent::Submit { class: req.priority });
+                }
+                w.finish(req.id, TraceEvent::Fail { reason: msg.clone() });
+            }
             let _ = tx.send(EngineResponse {
                 id: req.id,
                 tokens: Vec::new(),
                 latency_ms: 0.0,
                 prompt_len: req.prompt.len(),
-                error: Some(format!(
-                    "prompt length {} exceeds model context {} (no room to generate)",
-                    req.prompt.len(),
-                    self.shared.ctx
-                )),
+                error: Some(msg),
             });
             return rx;
         }
@@ -1391,8 +1563,16 @@ impl Engine for NativeEngine {
             // A killed engine answers nothing: dropping `tx` here
             // disconnects the receiver immediately, so the caller (or
             // the fleet router) learns at once instead of waiting on a
-            // scheduler that will never run.
+            // scheduler that will never run. Nothing is traced either —
+            // a router retries elsewhere and the surviving attempt's
+            // events tell the story.
             return rx;
+        }
+        if let Some(w) = &self.shared.tracer {
+            if w.owns_submit() {
+                w.record(req.id, TraceEvent::Submit { class: req.priority });
+            }
+            w.record(req.id, TraceEvent::Queued { class: req.priority });
         }
         q.push_back_classed((req, tx, Instant::now()));
         rx
@@ -1419,6 +1599,16 @@ impl Engine for NativeEngine {
             None => defs.push(PrefixDef { id, tokens }),
         }
         true
+    }
+
+    fn trace_json(&self, id: u64) -> crate::util::json::Json {
+        match &self.shared.tracer {
+            Some(w) => w.tracer().trace_json(id),
+            None => crate::util::json::Json::obj(vec![(
+                "error",
+                crate::util::json::Json::str("tracing is not enabled on this backend"),
+            )]),
+        }
     }
 }
 

@@ -6,10 +6,21 @@
 //! `pages_saved`, token/byte totals) only ever grow; gauges
 //! (`pages_in_use`, `shared_pages`) are overwritten by the scheduler at
 //! step boundaries, with `peak_pages_in_use` tracking the pool gauge's
-//! high-water mark. Everything is atomics (plus one latency vector
-//! behind a mutex), so the engine's scheduler thread records without
-//! coordination and any number of API threads snapshot concurrently;
-//! a snapshot is *per-field* consistent, not a cross-field transaction.
+//! high-water mark. Everything is atomics — latency distributions
+//! included, which live in fixed-size log-scale bucket [`Histogram`]s
+//! (bounded memory at any request count) — so the engine's scheduler
+//! thread records without coordination and any number of API threads
+//! snapshot concurrently; a snapshot is *per-field* consistent, not a
+//! cross-field transaction.
+//!
+//! Request latency is recorded whole (`p50_ms` / `p99_ms`) and split
+//! into the spans an SLO class actually controls: `queue_ms` (submit →
+//! the admission that produced the surviving token stream), `ttft_ms`
+//! (submit → first surviving token), and `decode_ms` (first token →
+//! finish), each with its own histogram. The `phases` block breaks the
+//! scheduler's decode wall time down by engine phase
+//! ([`crate::util::phase`]); because only outermost scopes record,
+//! per-phase shares of wall always sum to ≤ 100%.
 //!
 //! A multi-replica fleet ([`crate::serve::router`]) aggregates one
 //! `Metrics` per replica (plus the router's own, which carries only
@@ -17,11 +28,117 @@
 //! [`Metrics::merged`] — same field set as [`Metrics::snapshot`], with
 //! per-field merge rules documented there.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::util::json::Json;
+use crate::util::phase::{Phase, PhaseAccum, PHASE_COUNT};
+
+/// Bucket count of the latency [`Histogram`]s.
+const HIST_BUCKETS: usize = 96;
+/// Lower edge of the first log bucket, in ms (bucket 0 is `[0, LO)`).
+const HIST_LO_MS: f64 = 0.01;
+/// Log2 width of one bucket: 4 buckets per octave, so consecutive
+/// bucket edges are a factor `2^0.25 ≈ 1.189` apart.
+const HIST_BUCKET_LOG2: f64 = 0.25;
+
+/// Fixed-size log-scale latency histogram: 96 atomic buckets at 4 per
+/// octave from 0.01 ms, so memory stays constant under millions of
+/// requests and recording is one lock-free `fetch_add`.
+///
+/// **Documented bucket error**: percentiles report the upper edge of
+/// the rank's bucket, so they never *under*state a latency and
+/// overstate it by at most one bucket ratio, `2^0.25 − 1 < 18.9%`.
+/// Values beyond the top edge (≈ 141 s) saturate into the last bucket.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Box<[AtomicU64]>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    fn bucket(ms: f64) -> usize {
+        if ms.is_nan() || ms <= HIST_LO_MS {
+            return 0;
+        }
+        let idx = 1 + ((ms / HIST_LO_MS).log2() / HIST_BUCKET_LOG2).floor() as usize;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    /// Upper edge of `bucket`, in ms — what percentiles report.
+    fn upper_ms(bucket: usize) -> f64 {
+        HIST_LO_MS * (bucket as f64 * HIST_BUCKET_LOG2).exp2()
+    }
+
+    pub fn record(&self, ms: f64) {
+        self.counts[Self::bucket(ms)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    fn counts_vec(&self) -> Vec<u64> {
+        self.counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Quantile `q ∈ [0, 1]` within the documented bucket error (0.0
+    /// when empty). Rank convention matches the exact-sample percentile
+    /// this replaced: the element at `round((n − 1) · q)` of the sorted
+    /// samples.
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile_of(&self.counts_vec(), q)
+    }
+}
+
+/// [`Histogram::percentile`] over raw bucket counts (shared with the
+/// fleet-merged path, which sums per-bucket counts across replicas).
+fn percentile_of(counts: &[u64], q: f64) -> f64 {
+    let n: u64 = counts.iter().sum();
+    if n == 0 {
+        return 0.0;
+    }
+    let rank = ((n - 1) as f64 * q).round() as u64;
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum > rank {
+            return Histogram::upper_ms(i);
+        }
+    }
+    Histogram::upper_ms(HIST_BUCKETS - 1)
+}
+
+/// The `phases` block: per-phase cumulative milliseconds plus each
+/// phase's share of `wall_sec`. Outermost-wins recording guarantees
+/// `Σ nanos ≤ recording thread's wall ≤ wall_sec`, so shares sum to
+/// ≤ 1.
+fn phases_json(nanos: &[u64; PHASE_COUNT], wall_sec: f64) -> Json {
+    let wall_ns = (wall_sec * 1e9).max(1.0);
+    let mut map = BTreeMap::new();
+    for p in Phase::ALL {
+        let ns = nanos[p as usize] as f64;
+        map.insert(format!("{}_ms", p.name()), Json::num(ns / 1e6));
+        map.insert(format!("{}_share", p.name()), Json::num(ns / wall_ns));
+    }
+    Json::Obj(map)
+}
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -102,7 +219,18 @@ pub struct Metrics {
     /// Weight bytes the same steps would stream decoding one sequence at
     /// a time (batch × bytes/step).
     weight_bytes_logical: AtomicU64,
-    latencies_ms: Mutex<Vec<f64>>,
+    /// Whole-request latency (submit → answer), log-bucketed.
+    latency_hist: Histogram,
+    /// Submit → the admission that produced the surviving stream.
+    queue_hist: Histogram,
+    /// Submit → first surviving token (time-to-first-token).
+    ttft_hist: Histogram,
+    /// First surviving token → finish.
+    decode_hist: Histogram,
+    /// Per-phase decode wall time ([`crate::util::phase`]); the engine
+    /// scheduler installs this as its thread's phase sink when tracing
+    /// is enabled.
+    phases: Arc<PhaseAccum>,
 }
 
 impl Default for Metrics {
@@ -144,7 +272,11 @@ impl Metrics {
             codewords_decoded: AtomicU64::new(0),
             weight_bytes_streamed: AtomicU64::new(0),
             weight_bytes_logical: AtomicU64::new(0),
-            latencies_ms: Mutex::new(Vec::new()),
+            latency_hist: Histogram::new(),
+            queue_hist: Histogram::new(),
+            ttft_hist: Histogram::new(),
+            decode_hist: Histogram::new(),
+            phases: Arc::new(PhaseAccum::new()),
         }
     }
 
@@ -152,7 +284,36 @@ impl Metrics {
         self.requests_completed.fetch_add(1, Ordering::Relaxed);
         self.tokens_generated
             .fetch_add(tokens as u64, Ordering::Relaxed);
-        self.latencies_ms.lock().unwrap().push(latency_ms);
+        self.latency_hist.record(latency_ms);
+    }
+
+    /// [`Metrics::record_request`] plus the latency split the trace
+    /// events expose: queue wait, time-to-first-token, and decode span.
+    /// `ttft_ms` / `decode_ms` are `None` for requests that finished
+    /// without emitting a token (e.g. `max_new: 0`).
+    pub fn record_request_timed(
+        &self,
+        tokens: usize,
+        latency_ms: f64,
+        queue_ms: f64,
+        ttft_ms: Option<f64>,
+        decode_ms: Option<f64>,
+    ) {
+        self.record_request(tokens, latency_ms);
+        self.queue_hist.record(queue_ms);
+        if let Some(t) = ttft_ms {
+            self.ttft_hist.record(t);
+        }
+        if let Some(d) = decode_ms {
+            self.decode_hist.record(d);
+        }
+    }
+
+    /// The phase-time accumulator behind the snapshot's `phases` block.
+    /// The engine scheduler installs it as its thread's sink
+    /// ([`crate::util::phase::install`]) when tracing is on.
+    pub fn phases(&self) -> Arc<PhaseAccum> {
+        self.phases.clone()
     }
 
     pub fn record_step(&self, batch: usize) {
@@ -305,15 +466,9 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Json {
-        let lats = self.latencies_ms.lock().unwrap();
-        let mut sorted = lats.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |q: f64| -> f64 {
-            if sorted.is_empty() {
-                return 0.0;
-            }
-            sorted[((sorted.len() - 1) as f64 * q).round() as usize]
-        };
+        let uptime = self.start.elapsed().as_secs_f64();
+        let phase_nanos: [u64; PHASE_COUNT] =
+            std::array::from_fn(|i| self.phases.nanos(Phase::ALL[i]));
         Json::obj(vec![
             (
                 "requests",
@@ -419,9 +574,19 @@ impl Metrics {
                 "requests_rerouted",
                 Json::num(self.requests_rerouted.load(Ordering::Relaxed) as f64),
             ),
-            ("p50_ms", Json::num(pct(0.5))),
-            ("p99_ms", Json::num(pct(0.99))),
-            ("uptime_sec", Json::num(self.start.elapsed().as_secs_f64())),
+            ("p50_ms", Json::num(self.latency_hist.percentile(0.5))),
+            ("p99_ms", Json::num(self.latency_hist.percentile(0.99))),
+            ("queue_p50_ms", Json::num(self.queue_hist.percentile(0.5))),
+            ("queue_p99_ms", Json::num(self.queue_hist.percentile(0.99))),
+            ("ttft_p50_ms", Json::num(self.ttft_hist.percentile(0.5))),
+            ("ttft_p99_ms", Json::num(self.ttft_hist.percentile(0.99))),
+            ("decode_p50_ms", Json::num(self.decode_hist.percentile(0.5))),
+            (
+                "decode_p99_ms",
+                Json::num(self.decode_hist.percentile(0.99)),
+            ),
+            ("phases", phases_json(&phase_nanos, uptime)),
+            ("uptime_sec", Json::num(uptime)),
         ])
     }
 
@@ -444,8 +609,14 @@ impl Metrics {
     /// * derived rates (`tok_per_sec`, `mean_batch`,
     ///   `bytes_amortization`, `acceptance_rate`) are recomputed from
     ///   the summed numerators/denominators, never averaged;
-    /// * latency percentiles come from the concatenated per-request
-    ///   samples of every part.
+    /// * latency percentiles (whole-request, queue, ttft, decode) come
+    ///   from the per-bucket **sum** of every part's histogram — the
+    ///   exact fleet distribution at the documented bucket error, with
+    ///   no per-sample memory;
+    /// * `phases` sums per-phase time across parts; shares are taken
+    ///   against the summed uptime of the parts that recorded any phase
+    ///   time (replicas — the router's own `Metrics` never does), so
+    ///   fleet shares still sum to ≤ 100%.
     pub fn merged(parts: &[Arc<Metrics>]) -> Json {
         macro_rules! summed {
             ($field:ident) => {
@@ -475,17 +646,32 @@ impl Metrics {
         let logical = summed!(weight_bytes_logical);
         let drafted = summed!(tokens_drafted);
         let accepted = summed!(tokens_accepted);
-        let mut lats: Vec<f64> = Vec::new();
-        for m in parts {
-            lats.extend_from_slice(&m.latencies_ms.lock().unwrap());
-        }
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |q: f64| -> f64 {
-            if lats.is_empty() {
-                return 0.0;
+        let merge_hist = |pick: fn(&Metrics) -> &Histogram| -> Vec<u64> {
+            let mut acc = vec![0u64; HIST_BUCKETS];
+            for m in parts {
+                for (a, c) in acc.iter_mut().zip(pick(m).counts_vec()) {
+                    *a += c;
+                }
             }
-            lats[((lats.len() - 1) as f64 * q).round() as usize]
+            acc
         };
+        let latency = merge_hist(|m| &m.latency_hist);
+        let queue = merge_hist(|m| &m.queue_hist);
+        let ttft = merge_hist(|m| &m.ttft_hist);
+        let decode = merge_hist(|m| &m.decode_hist);
+        let mut phase_nanos = [0u64; PHASE_COUNT];
+        let mut phase_wall = 0.0f64;
+        for m in parts {
+            if m.phases.total_nanos() > 0 {
+                phase_wall += m.start.elapsed().as_secs_f64();
+            }
+            for p in Phase::ALL {
+                phase_nanos[p as usize] += m.phases.nanos(p);
+            }
+        }
+        if phase_wall == 0.0 {
+            phase_wall = uptime;
+        }
         Json::obj(vec![
             ("requests", Json::num(summed!(requests_completed) as f64)),
             ("tokens", Json::num(tokens as f64)),
@@ -560,8 +746,15 @@ impl Metrics {
                 "requests_rerouted",
                 Json::num(summed!(requests_rerouted) as f64),
             ),
-            ("p50_ms", Json::num(pct(0.5))),
-            ("p99_ms", Json::num(pct(0.99))),
+            ("p50_ms", Json::num(percentile_of(&latency, 0.5))),
+            ("p99_ms", Json::num(percentile_of(&latency, 0.99))),
+            ("queue_p50_ms", Json::num(percentile_of(&queue, 0.5))),
+            ("queue_p99_ms", Json::num(percentile_of(&queue, 0.99))),
+            ("ttft_p50_ms", Json::num(percentile_of(&ttft, 0.5))),
+            ("ttft_p99_ms", Json::num(percentile_of(&ttft, 0.99))),
+            ("decode_p50_ms", Json::num(percentile_of(&decode, 0.5))),
+            ("decode_p99_ms", Json::num(percentile_of(&decode, 0.99))),
+            ("phases", phases_json(&phase_nanos, phase_wall)),
             ("uptime_sec", Json::num(uptime)),
         ])
     }
@@ -707,7 +900,8 @@ mod tests {
         // Resample counter sums across replicas like any other counter.
         assert_eq!(s.get("tokens_resampled").as_f64(), Some(3.0));
         assert_eq!(s.get("requests_rerouted").as_f64(), Some(1.0));
-        // Percentiles come from the concatenated samples.
+        // Percentiles come from the per-bucket sum of both histograms;
+        // the bucket upper edge never understates the true sample.
         assert!(s.get("p99_ms").as_f64().unwrap() >= 100.0);
     }
 
@@ -726,5 +920,114 @@ mod tests {
                 .collect()
         };
         assert_eq!(keys(&single), keys(&fleet));
+    }
+
+    #[test]
+    fn histogram_percentile_within_documented_error() {
+        // Any value in (LO, top] reports in [v, v·2^0.25): never
+        // understated, overstated by less than one bucket ratio.
+        let err = HIST_BUCKET_LOG2.exp2();
+        crate::util::proptest_lite::check("hist_bucket_error", 200, |rng| {
+            // Log-uniform over ~6 decades, well inside the bucket range
+            // (0.02 ms … ~21 s; the top edge is ≈ 141 s).
+            let v = 0.02 * (rng.f64() * 20.0).exp2();
+            let h = Histogram::new();
+            h.record(v);
+            let p = h.percentile(0.5);
+            // 1e-9 relative slack absorbs log2/exp2 rounding when v sits
+            // exactly on a bucket edge.
+            crate::prop_assert!(p >= v * (1.0 - 1e-9), "p {p} understates v {v}");
+            crate::prop_assert!(p <= v * err * (1.0 + 1e-9), "p {p} overstates v {v}");
+            Ok(())
+        });
+        // Edge behavior: sub-floor values land in bucket 0, huge values
+        // saturate the top bucket instead of indexing out of range.
+        let h = Histogram::new();
+        h.record(0.0);
+        assert!((h.percentile(0.5) - HIST_LO_MS).abs() < 1e-12);
+        let h = Histogram::new();
+        h.record(1e12);
+        assert!(h.percentile(1.0) > 1e5);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn histogram_percentile_rank_convention() {
+        // Matches the exact-sample rule it replaced: element at
+        // round((n−1)·q) of the sorted samples, up to bucket error.
+        let h = Histogram::new();
+        for v in [5.0, 50.0, 100.0] {
+            h.record(v);
+        }
+        // p50 → rank 1 → the 50.0 sample's bucket edge.
+        let p50 = h.percentile(0.5);
+        assert!((50.0..60.0).contains(&p50));
+        // p99 → rank 2 → the 100.0 sample's bucket edge.
+        let p99 = h.percentile(0.99);
+        assert!((100.0..119.0).contains(&p99));
+        // p0 → rank 0 → the 5.0 sample's bucket edge.
+        let p0 = h.percentile(0.0);
+        assert!((5.0..6.0).contains(&p0));
+    }
+
+    #[test]
+    fn timed_requests_split_queue_ttft_decode() {
+        let m = Metrics::new();
+        m.record_request_timed(10, 100.0, 30.0, Some(40.0), Some(60.0));
+        // A zero-token request has no first token: ttft/decode skipped.
+        m.record_request_timed(0, 10.0, 10.0, None, None);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").as_f64(), Some(2.0));
+        assert!(s.get("queue_p99_ms").as_f64().unwrap() >= 30.0);
+        assert!(s.get("ttft_p50_ms").as_f64().unwrap() >= 40.0);
+        assert!(s.get("ttft_p50_ms").as_f64().unwrap() < 48.0);
+        assert!(s.get("decode_p50_ms").as_f64().unwrap() >= 60.0);
+    }
+
+    #[test]
+    fn phases_block_shares_bounded() {
+        let m = Metrics::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        // Simulate a scheduler that spent 2 ms in matmul scopes.
+        m.phases().add(crate::util::phase::Phase::QuantMatmul, 2_000_000);
+        let s = m.snapshot();
+        let ph = s.get("phases");
+        let obj = ph.as_obj().expect("phases is an object");
+        // One `_ms` and one `_share` key per phase.
+        assert_eq!(obj.len(), 2 * PHASE_COUNT);
+        let matmul_ms = ph.get("matmul_ms").as_f64().unwrap();
+        assert!((matmul_ms - 2.0).abs() < 1e-9);
+        let share_sum: f64 = obj
+            .iter()
+            .filter(|(k, _)| k.ends_with("_share"))
+            .map(|(_, v)| v.as_f64().unwrap())
+            .sum();
+        assert!(share_sum > 0.0);
+        assert!(share_sum <= 1.0, "phase shares must sum to ≤ 1");
+    }
+
+    #[test]
+    fn merged_histograms_and_phases() {
+        let a = Arc::new(Metrics::new());
+        let b = Arc::new(Metrics::new());
+        for _ in 0..9 {
+            a.record_request_timed(1, 10.0, 1.0, Some(2.0), Some(8.0));
+        }
+        b.record_request_timed(1, 1000.0, 1.0, Some(2.0), Some(998.0));
+        // Only `a` recorded phase time, so the share denominator is its
+        // uptime alone — the idle part must not dilute shares.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        a.phases().add(crate::util::phase::Phase::Attention, 1_000_000);
+        let s = Metrics::merged(&[a, b]);
+        // 10 samples; p50 → rank 4 (a 10 ms sample), p99 → rank 9 (the
+        // 1000 ms outlier) — a per-part average could never report both.
+        let p50 = s.get("p50_ms").as_f64().unwrap();
+        let p99 = s.get("p99_ms").as_f64().unwrap();
+        assert!((10.0..12.0).contains(&p50), "fleet p50 {p50}");
+        assert!((1000.0..1190.0).contains(&p99), "fleet p99 {p99}");
+        assert!(s.get("decode_p99_ms").as_f64().unwrap() >= 998.0);
+        let ph = s.get("phases");
+        assert!((ph.get("attention_ms").as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert!(ph.get("attention_share").as_f64().unwrap() > 0.0);
     }
 }

@@ -93,15 +93,27 @@
 //! a single engine). `{"cmd":"stats"}` returns the fleet-merged
 //! [`Metrics::merged`] view plus per-replica rows; see [`router`] and
 //! `rust/src/serve/README.md`.
+//!
+//! # Observability
+//!
+//! Every request's lifecycle is recorded as typed span events
+//! (`submit → queued → admit → prefill/decode rounds → preempt / spill
+//! / restore / reroute → finish/fail`) in per-replica bounded ring
+//! buffers ([`trace`]), read back fleet-merged through the `trace` TCP
+//! command, exported as JSONL via `serve --trace-out`, and paired with
+//! per-phase decode timings ([`crate::util::phase`]) in the `stats`
+//! snapshot's `phases` block. See `ARCHITECTURE.md` ("Observability").
 
 pub mod engine;
 pub mod metrics;
 pub mod pjrt_engine;
 pub mod router;
 pub mod server;
+pub mod trace;
 
 pub use crate::generation::sampling::SamplingParams;
 pub use engine::{Engine, EngineOptions, EngineRequest, EngineResponse, NativeEngine};
 pub use metrics::Metrics;
 pub use router::{RoutePolicy, Router, RouterOptions};
 pub use server::{serve_blocking, Client, ClientOptions, ServerConfig, ServerHandle};
+pub use trace::{TraceConfig, TraceEvent, TraceWriter, Tracer, EVENT_KINDS};

@@ -69,6 +69,7 @@ use crate::util::json::Json;
 
 use super::engine::{Engine, EngineRequest, EngineResponse};
 use super::metrics::Metrics;
+use super::trace::{TraceEvent, TraceWriter};
 
 /// How the router picks a replica for each request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,6 +123,11 @@ pub struct RouterOptions {
     /// a busy replica under deep queueing is not a stalled one, so only
     /// deployments with a latency ceiling should set this.
     pub stall_timeout: Option<Duration>,
+    /// Front-shard trace writer ([`crate::serve::trace`]): the router
+    /// records `submit`, `reroute`, and router-synthesized failures;
+    /// replicas record the rest of the lifecycle through their own
+    /// writers. `None` (the default) disables router-side tracing.
+    pub tracer: Option<TraceWriter>,
 }
 
 impl Default for RouterOptions {
@@ -131,6 +137,7 @@ impl Default for RouterOptions {
             max_inflight: 64,
             spill_margin: 4,
             stall_timeout: None,
+            tracer: None,
         }
     }
 }
@@ -340,21 +347,32 @@ impl RouterInner {
     fn reroute(&self, from: usize, p: Pending) {
         self.replicas[from].healthy.store(false, Ordering::Relaxed);
         self.metrics.record_rerouted();
+        // The watcher only observes the dropped channel after the dead
+        // replica's die-drain, so this event lands strictly after every
+        // event that replica recorded for the request — the merged
+        // trace never interleaves the old life with the new one.
+        if let Some(w) = &self.opts.tracer {
+            w.record(p.req.id, TraceEvent::Reroute { from });
+        }
         if p.hops + 1 >= self.replicas.len().max(2) {
             // Every replica has now failed this request once; answer
             // descriptively instead of bouncing forever.
             self.metrics.record_failed();
+            let msg = format!(
+                "request {} could not be served: every replica failed it \
+                 ({} re-routes)",
+                p.req.id,
+                p.hops + 1
+            );
+            if let Some(w) = &self.opts.tracer {
+                w.finish(p.req.id, TraceEvent::Fail { reason: msg.clone() });
+            }
             let _ = p.outer_tx.send(EngineResponse {
                 id: p.req.id,
                 tokens: Vec::new(),
                 latency_ms: 0.0,
                 prompt_len: p.req.prompt.len(),
-                error: Some(format!(
-                    "request {} could not be served: every replica failed it \
-                     ({} re-routes)",
-                    p.req.id,
-                    p.hops + 1
-                )),
+                error: Some(msg),
             });
             return;
         }
@@ -371,12 +389,16 @@ impl RouterInner {
                     self.backlog_push(p.req, p.outer_tx);
                 } else {
                     self.metrics.record_failed();
+                    let msg = "no healthy replica available".to_string();
+                    if let Some(w) = &self.opts.tracer {
+                        w.finish(p.req.id, TraceEvent::Fail { reason: msg.clone() });
+                    }
                     let _ = p.outer_tx.send(EngineResponse {
                         id: p.req.id,
                         tokens: Vec::new(),
                         latency_ms: 0.0,
                         prompt_len: p.req.prompt.len(),
-                        error: Some("no healthy replica available".into()),
+                        error: Some(msg),
                     });
                 }
             }
@@ -472,6 +494,13 @@ impl Router {
 impl Engine for Router {
     fn submit(&self, req: EngineRequest) -> Receiver<EngineResponse> {
         let (outer_tx, outer_rx) = channel();
+        // The router is the fleet's front: it owns the `submit` event,
+        // and the replica a request lands on records the rest.
+        if let Some(w) = &self.inner.opts.tracer {
+            if w.owns_submit() {
+                w.record(req.id, TraceEvent::Submit { class: req.priority });
+            }
+        }
         match self.inner.pick(&req) {
             Some(to) => self.inner.dispatch(to, req, outer_tx, 0),
             None => {
@@ -484,12 +513,16 @@ impl Engine for Router {
                     self.inner.backlog_push(req, outer_tx);
                 } else {
                     self.inner.metrics.record_failed();
+                    let msg = "no healthy replica available".to_string();
+                    if let Some(w) = &self.inner.opts.tracer {
+                        w.finish(req.id, TraceEvent::Fail { reason: msg.clone() });
+                    }
                     let _ = outer_tx.send(EngineResponse {
                         id: req.id,
                         tokens: Vec::new(),
                         latency_ms: 0.0,
                         prompt_len: req.prompt.len(),
-                        error: Some("no healthy replica available".into()),
+                        error: Some(msg),
                     });
                 }
             }
@@ -527,6 +560,19 @@ impl Engine for Router {
             }
         }
         ok
+    }
+
+    /// The fleet-merged lifecycle trace of request `id`: the front
+    /// shard's events (submit / reroute / synthesized failures) and
+    /// every replica's, sorted by the global sequence stamp.
+    fn trace_json(&self, id: u64) -> Json {
+        match &self.inner.opts.tracer {
+            Some(w) => w.tracer().trace_json(id),
+            None => Json::obj(vec![(
+                "error",
+                Json::str("tracing is not enabled on this backend"),
+            )]),
+        }
     }
 
     /// Fleet-merged metrics ([`Metrics::merged`] over the router's own

@@ -23,6 +23,10 @@
 //!       → {"ok": true|false}  (share this prompt prefix's KV)
 //!   {"cmd": "stats"}     → metrics snapshot (fleet-merged + per-replica
 //!                          rows when serving through a router)
+//!   {"cmd": "trace", "id": 7}
+//!       → request 7's merged lifecycle trace ({"id":…, "truncated":…,
+//!         "events":[…]}; see [`crate::serve::trace`]), or an "error"
+//!         object when tracing is not enabled on the backend
 //!   {"cmd": "shutdown"}  → stops the server
 //!
 //! The server is backend-agnostic over [`Engine`]: a single
@@ -140,6 +144,16 @@ fn handle_conn(
         match msg.get("cmd").as_str() {
             Some("stats") => {
                 writeln!(writer, "{}", engine.stats_json().emit())?;
+            }
+            Some("trace") => {
+                let out = match msg.get("id").as_usize() {
+                    Some(id) => engine.trace_json(id as u64),
+                    None => Json::obj(vec![(
+                        "error",
+                        Json::str("trace requires a numeric request id"),
+                    )]),
+                };
+                writeln!(writer, "{}", out.emit())?;
             }
             Some("register_prefix") => {
                 let tokens: Vec<u8> = msg
@@ -415,6 +429,20 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<Json> {
         writeln!(self.writer, "{}", r#"{"cmd":"stats"}"#)?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+
+    /// Fetch request `id`'s merged lifecycle trace
+    /// ([`crate::serve::trace`]). The response carries an `error` field
+    /// instead when tracing is not enabled on the serving backend.
+    pub fn trace(&mut self, id: u64) -> Result<Json> {
+        let msg = Json::obj(vec![
+            ("cmd", Json::str("trace")),
+            ("id", Json::num(id as f64)),
+        ]);
+        writeln!(self.writer, "{}", msg.emit())?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(Json::parse(line.trim())?)

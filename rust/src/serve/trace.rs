@@ -1,0 +1,590 @@
+//! Request-lifecycle tracing: every request's path through the serving
+//! fleet recorded as typed span events in lock-cheap bounded ring
+//! buffers, with three read paths — the `trace` TCP command (one
+//! request's merged timeline as JSON), an optional JSONL export of
+//! completed-request traces (`serve --trace-out`), and the per-phase
+//! timing block ([`crate::util::phase`]) next to the `stats` snapshot.
+//!
+//! # Event taxonomy
+//!
+//! A request's legal lifecycle is the grammar
+//!
+//! ```text
+//! submit → queued(class) → admit(replica) → prefill* → decode_round*
+//!        → { preempt [→ spill] [→ restore | → queued] , reroute }*
+//!        → finish | fail
+//! ```
+//!
+//! * `submit` — accepted by the front (router, or the engine itself on a
+//!   single-replica deployment). Always the first event.
+//! * `queued` — entered an engine's class-ordered submit queue; recurs
+//!   after a restart-preemption (fp32 pool: tokens are discarded and
+//!   re-derived) and after a re-route.
+//! * `admit` — the scheduler activated the request on a replica. A
+//!   freshly (re-)admitted request has generated no surviving tokens.
+//! * `prefill` / `decode_round` — one scheduler round's prompt
+//!   consumption / token emission for this sequence. `decode_round`
+//!   carries the tokens emitted this round and the running total, so a
+//!   trace double-checks its own token accounting; `spec` marks
+//!   draft/verify rounds.
+//! * `preempt` — evicted under pool pressure. `spilled: true` means the
+//!   KV moved to the host arena (`spill` follows, `restore` re-admits
+//!   with tokens intact); `spilled: false` means restart semantics
+//!   (`queued` follows, the token count resets and the deterministic
+//!   decode re-derives the identical stream).
+//! * `reroute` — the router re-dispatched the request after its replica
+//!   died; the new replica starts from scratch (`queued` follows). The
+//!   dead replica's events stay in the trace — a faithful causal
+//!   history — and the token stream restarts, bitwise identical.
+//! * `finish` / `fail` — terminal; at most one per request.
+//!
+//! # Ring-buffer design
+//!
+//! One bounded ring per shard — shard 0 for the front (router/server),
+//! shard `r + 1` for replica `r` — each behind its own mutex, so a
+//! replica's scheduler thread only ever touches its own shard:
+//! recording is one short uncontended lock, one `VecDeque` push, and an
+//! overwrite of the oldest event when full (bounded memory, newest
+//! history wins). A process-wide atomic sequence number stamps every
+//! event, giving the fleet-merged reader ([`Tracer::trace_json`]) a
+//! total order to sort shards into without any cross-shard
+//! coordination on the write path. Per-request sampling
+//! (`sample_every`, default 1 = everything) filters whole requests by
+//! id so a sampled trace is always complete, never partial.
+//!
+//! # Overhead
+//!
+//! Off the serving path (no [`TraceWriter`] configured) nothing is
+//! recorded and the engine pays a single `Option` check per event site.
+//! With tracing on, an event is ~100ns of uncontended mutex + ring
+//! push, a few times per scheduler round per sequence — noise against
+//! a decode step's matmuls. The phase timers are separate
+//! ([`crate::util::phase`]): threads without an installed sink skip
+//! even the clock read.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default per-shard ring capacity (events, not requests).
+pub const DEFAULT_RING_CAPACITY: usize = 8192;
+
+/// Every event kind's wire name, in declaration order. Pinned by the
+/// docs-drift test against the `#### Trace events` table in
+/// `rust/src/serve/README.md`; [`TraceEvent::kind`] is an exhaustive
+/// match, so adding a variant without updating both breaks the build
+/// (`clippy -D warnings` and the drift test both gate it).
+pub const EVENT_KINDS: [&str; 11] = [
+    "submit",
+    "queued",
+    "admit",
+    "prefill",
+    "decode_round",
+    "preempt",
+    "spill",
+    "restore",
+    "reroute",
+    "finish",
+    "fail",
+];
+
+/// One typed lifecycle event (see the module docs for the grammar).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Accepted by the front; `class` is the request's SLO priority.
+    Submit { class: u8 },
+    /// Entered an engine's class-ordered submit queue (or re-entered it
+    /// after a restart-preemption or re-route).
+    Queued { class: u8 },
+    /// Activated by a replica's scheduler.
+    Admit { replica: usize },
+    /// Prompt tokens consumed by chunked prefill this round.
+    Prefill { tokens: usize },
+    /// Tokens emitted this round (`spec` = a draft/verify round) and
+    /// the surviving-stream total after them.
+    DecodeRound {
+        tokens: usize,
+        total: usize,
+        spec: bool,
+    },
+    /// Evicted under pool pressure; `spilled` says whether the KV was
+    /// exported to the host arena (else restart semantics).
+    Preempt { spilled: bool },
+    /// KV pages exported to the spill arena.
+    Spill { pages: usize },
+    /// Spilled pages imported back; the sequence resumes with its
+    /// token stream intact.
+    Restore { pages: usize },
+    /// Re-dispatched away from dead replica `from`.
+    Reroute { from: usize },
+    /// Completed with `tokens` generated tokens.
+    Finish { tokens: usize },
+    /// Rejected or failed; terminal.
+    Fail { reason: String },
+}
+
+impl TraceEvent {
+    /// The wire name (an entry of [`EVENT_KINDS`]). Exhaustive on
+    /// purpose — see [`EVENT_KINDS`].
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Submit { .. } => "submit",
+            TraceEvent::Queued { .. } => "queued",
+            TraceEvent::Admit { .. } => "admit",
+            TraceEvent::Prefill { .. } => "prefill",
+            TraceEvent::DecodeRound { .. } => "decode_round",
+            TraceEvent::Preempt { .. } => "preempt",
+            TraceEvent::Spill { .. } => "spill",
+            TraceEvent::Restore { .. } => "restore",
+            TraceEvent::Reroute { .. } => "reroute",
+            TraceEvent::Finish { .. } => "finish",
+            TraceEvent::Fail { .. } => "fail",
+        }
+    }
+
+    /// Whether this event terminates a request's lifecycle.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TraceEvent::Finish { .. } | TraceEvent::Fail { .. })
+    }
+
+    fn payload(&self, fields: &mut Vec<(&'static str, Json)>) {
+        match self {
+            TraceEvent::Submit { class } | TraceEvent::Queued { class } => {
+                fields.push(("class", Json::num(*class as f64)));
+            }
+            TraceEvent::Admit { replica } => {
+                fields.push(("replica_to", Json::num(*replica as f64)));
+            }
+            TraceEvent::Prefill { tokens } => {
+                fields.push(("tokens", Json::num(*tokens as f64)));
+            }
+            TraceEvent::DecodeRound {
+                tokens,
+                total,
+                spec,
+            } => {
+                fields.push(("tokens", Json::num(*tokens as f64)));
+                fields.push(("total", Json::num(*total as f64)));
+                fields.push(("spec", Json::Bool(*spec)));
+            }
+            TraceEvent::Preempt { spilled } => {
+                fields.push(("spilled", Json::Bool(*spilled)));
+            }
+            TraceEvent::Spill { pages } | TraceEvent::Restore { pages } => {
+                fields.push(("pages", Json::num(*pages as f64)));
+            }
+            TraceEvent::Reroute { from } => {
+                fields.push(("from", Json::num(*from as f64)));
+            }
+            TraceEvent::Finish { tokens } => {
+                fields.push(("tokens", Json::num(*tokens as f64)));
+            }
+            TraceEvent::Fail { reason } => {
+                fields.push(("reason", Json::str(reason.clone())));
+            }
+        }
+    }
+}
+
+/// One recorded event: the typed payload plus its total-order stamp,
+/// microsecond offset from tracer start, request id, and recording
+/// shard's replica (`None` = the front shard).
+#[derive(Clone, Debug)]
+struct Recorded {
+    seq: u64,
+    t_us: u64,
+    id: u64,
+    replica: Option<usize>,
+    event: TraceEvent,
+}
+
+impl Recorded {
+    fn to_json(&self) -> Json {
+        let mut fields: Vec<(&'static str, Json)> = vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("t_us", Json::num(self.t_us as f64)),
+            (
+                "replica",
+                match self.replica {
+                    Some(r) => Json::num(r as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("kind", Json::str(self.event.kind())),
+        ];
+        self.event.payload(&mut fields);
+        Json::obj(fields)
+    }
+}
+
+/// Bounded overwrite-oldest event buffer (one per shard).
+#[derive(Debug)]
+struct Ring {
+    buf: VecDeque<Recorded>,
+    cap: usize,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Recorded) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(ev);
+    }
+}
+
+/// Tracer configuration (see [`Tracer::new`]).
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Events retained per shard before the oldest is overwritten.
+    pub capacity: usize,
+    /// Trace requests whose `id % sample_every == 0`; `1` traces
+    /// everything, `0` disables recording entirely.
+    pub sample_every: u64,
+    /// When set, each completed (or failed) traced request's full
+    /// merged timeline is appended to this file as one JSON line.
+    pub jsonl: Option<PathBuf>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            capacity: DEFAULT_RING_CAPACITY,
+            sample_every: 1,
+            jsonl: None,
+        }
+    }
+}
+
+/// The fleet-wide trace store: per-shard rings, the global event
+/// sequence, and the optional JSONL sink. Shared (`Arc`) between the
+/// front and every replica's [`TraceWriter`].
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    seq: AtomicU64,
+    sample_every: u64,
+    shards: Vec<Mutex<Ring>>,
+    sink: Option<Mutex<BufWriter<File>>>,
+}
+
+impl Tracer {
+    /// Build a tracer for `replicas` engine shards plus the front
+    /// shard. Fails only if the JSONL sink file cannot be created.
+    pub fn new(replicas: usize, cfg: TraceConfig) -> std::io::Result<Arc<Tracer>> {
+        let shards = (0..replicas.max(1) + 1)
+            .map(|_| {
+                Mutex::new(Ring {
+                    buf: VecDeque::new(),
+                    cap: cfg.capacity.max(1),
+                })
+            })
+            .collect();
+        let sink = match &cfg.jsonl {
+            Some(path) => Some(Mutex::new(BufWriter::new(File::create(path)?))),
+            None => None,
+        };
+        Ok(Arc::new(Tracer {
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            sample_every: cfg.sample_every,
+            shards,
+            sink,
+        }))
+    }
+
+    /// Whether request `id` is traced under the sampling setting.
+    pub fn sampled(&self, id: u64) -> bool {
+        self.sample_every != 0 && id % self.sample_every == 0
+    }
+
+    /// Writer for the front shard (router / single-engine server); it
+    /// owns the `submit` event.
+    pub fn front_writer(self: &Arc<Self>) -> TraceWriter {
+        TraceWriter {
+            tracer: self.clone(),
+            replica: None,
+            owns_submit: true,
+        }
+    }
+
+    /// Writer for replica `replica`'s shard.
+    pub fn writer(self: &Arc<Self>, replica: usize) -> TraceWriter {
+        TraceWriter {
+            tracer: self.clone(),
+            replica: Some(replica),
+            owns_submit: false,
+        }
+    }
+
+    fn record(&self, shard: usize, replica: Option<usize>, id: u64, event: TraceEvent) {
+        if !self.sampled(id) {
+            return;
+        }
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let rec = Recorded {
+            seq,
+            t_us,
+            id,
+            replica,
+            event,
+        };
+        self.shards[shard.min(self.shards.len() - 1)]
+            .lock()
+            .unwrap()
+            .push(rec);
+    }
+
+    /// The fleet-merged timeline of request `id`: every shard's events
+    /// for it, sorted by the global sequence stamp. `truncated` is true
+    /// when the ring has already overwritten the head of the history
+    /// (the first surviving event is not `submit`).
+    pub fn trace_json(&self, id: u64) -> Json {
+        let mut events: Vec<Recorded> = Vec::new();
+        for shard in &self.shards {
+            let ring = shard.lock().unwrap();
+            events.extend(ring.buf.iter().filter(|r| r.id == id).cloned());
+        }
+        events.sort_by_key(|r| r.seq);
+        let truncated = events
+            .first()
+            .map(|r| r.event.kind() != "submit")
+            .unwrap_or(false);
+        Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("truncated", Json::Bool(truncated)),
+            (
+                "events",
+                Json::Arr(events.iter().map(Recorded::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Append `id`'s merged timeline to the JSONL sink, if configured.
+    /// Called by [`TraceWriter::finish`] right after the terminal event
+    /// lands, so an exported line is always a complete trace.
+    fn export(&self, id: u64) {
+        let Some(sink) = &self.sink else {
+            return;
+        };
+        let line = self.trace_json(id).emit();
+        let mut w = sink.lock().unwrap();
+        // Serving must not die on a full disk; drop the line instead.
+        let _ = writeln!(w, "{line}");
+        let _ = w.flush();
+    }
+}
+
+/// A shard-bound handle for recording events — cheap to clone, one per
+/// replica (plus the front). `owns_submit` marks the single writer
+/// responsible for the `submit` event so a fleet engine behind a router
+/// does not duplicate what the router already recorded.
+#[derive(Clone, Debug)]
+pub struct TraceWriter {
+    tracer: Arc<Tracer>,
+    replica: Option<usize>,
+    owns_submit: bool,
+}
+
+impl TraceWriter {
+    /// Rebind to replica `replica`'s shard, preserving `owns_submit`
+    /// (used by `NativeEngine::start_replicas` to give each replica its
+    /// own shard from one template writer).
+    pub fn with_replica(&self, replica: usize) -> TraceWriter {
+        TraceWriter {
+            tracer: self.tracer.clone(),
+            replica: Some(replica),
+            owns_submit: self.owns_submit,
+        }
+    }
+
+    /// Mark this writer as the `submit`-event owner (single-engine
+    /// deployments, where the engine is the front).
+    pub fn owning_submit(mut self) -> Self {
+        self.owns_submit = true;
+        self
+    }
+
+    /// Whether this writer records the `submit` event.
+    pub fn owns_submit(&self) -> bool {
+        self.owns_submit
+    }
+
+    /// The replica index events from this writer carry (`0` for the
+    /// front shard, which also serves single-engine deployments).
+    pub fn replica(&self) -> usize {
+        self.replica.unwrap_or(0)
+    }
+
+    /// The shared tracer (for `trace_json` / merged reads).
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// Record one event for request `id` on this writer's shard.
+    pub fn record(&self, id: u64, event: TraceEvent) {
+        let shard = self.replica.map(|r| r + 1).unwrap_or(0);
+        self.tracer.record(shard, self.replica, id, event);
+    }
+
+    /// Record a terminal event and, when a JSONL sink is configured,
+    /// export the request's completed timeline.
+    pub fn finish(&self, id: u64, event: TraceEvent) {
+        debug_assert!(event.is_terminal(), "finish() takes terminal events");
+        self.record(id, event);
+        if self.tracer.sampled(id) {
+            self.tracer.export(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_cover_event_kinds_exactly() {
+        let samples = [
+            TraceEvent::Submit { class: 0 },
+            TraceEvent::Queued { class: 1 },
+            TraceEvent::Admit { replica: 0 },
+            TraceEvent::Prefill { tokens: 3 },
+            TraceEvent::DecodeRound {
+                tokens: 1,
+                total: 1,
+                spec: false,
+            },
+            TraceEvent::Preempt { spilled: true },
+            TraceEvent::Spill { pages: 2 },
+            TraceEvent::Restore { pages: 2 },
+            TraceEvent::Reroute { from: 0 },
+            TraceEvent::Finish { tokens: 4 },
+            TraceEvent::Fail {
+                reason: "x".to_string(),
+            },
+        ];
+        assert_eq!(samples.len(), EVENT_KINDS.len());
+        for (ev, &kind) in samples.iter().zip(EVENT_KINDS.iter()) {
+            assert_eq!(ev.kind(), kind);
+        }
+        assert!(samples.iter().filter(|e| e.is_terminal()).count() == 2);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_flags_truncation() {
+        let tracer = Tracer::new(
+            1,
+            TraceConfig {
+                capacity: 4,
+                ..TraceConfig::default()
+            },
+        )
+        .unwrap();
+        let w = tracer.writer(0).owning_submit();
+        w.record(7, TraceEvent::Submit { class: 0 });
+        for i in 0..6usize {
+            w.record(
+                7,
+                TraceEvent::DecodeRound {
+                    tokens: 1,
+                    total: i + 1,
+                    spec: false,
+                },
+            );
+        }
+        let t = tracer.trace_json(7);
+        let events = t.get("events").as_arr().unwrap();
+        assert_eq!(events.len(), 4, "ring bounds history");
+        assert_eq!(t.get("truncated").as_bool(), Some(true));
+        // The newest events survive.
+        assert_eq!(events.last().unwrap().get("total").as_f64(), Some(6.0));
+    }
+
+    #[test]
+    fn fleet_merge_sorts_by_global_sequence() {
+        let tracer = Tracer::new(2, TraceConfig::default()).unwrap();
+        let front = tracer.front_writer();
+        let r0 = tracer.writer(0);
+        let r1 = tracer.writer(1);
+        front.record(3, TraceEvent::Submit { class: 2 });
+        r0.record(3, TraceEvent::Queued { class: 2 });
+        r0.record(3, TraceEvent::Admit { replica: 0 });
+        front.record(3, TraceEvent::Reroute { from: 0 });
+        r1.record(3, TraceEvent::Queued { class: 2 });
+        let t = tracer.trace_json(3);
+        assert_eq!(t.get("truncated").as_bool(), Some(false));
+        let kinds: Vec<&str> = t
+            .get("events")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("kind").as_str().unwrap())
+            .collect();
+        assert_eq!(kinds, ["submit", "queued", "admit", "reroute", "queued"]);
+        let replicas: Vec<Option<f64>> = t
+            .get("events")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("replica").as_f64())
+            .collect();
+        assert_eq!(replicas, [None, Some(0.0), Some(0.0), None, Some(1.0)]);
+    }
+
+    #[test]
+    fn sampling_filters_whole_requests() {
+        let tracer = Tracer::new(
+            1,
+            TraceConfig {
+                sample_every: 2,
+                ..TraceConfig::default()
+            },
+        )
+        .unwrap();
+        let w = tracer.writer(0).owning_submit();
+        for id in 0..4u64 {
+            w.record(id, TraceEvent::Submit { class: 0 });
+            w.finish(id, TraceEvent::Finish { tokens: 0 });
+        }
+        for id in 0..4u64 {
+            let n = tracer.trace_json(id).get("events").as_arr().unwrap().len();
+            assert_eq!(n, if id % 2 == 0 { 2 } else { 0 }, "id {id}");
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_gets_one_complete_line_per_terminal() {
+        let path = std::env::temp_dir().join(format!(
+            "quipsharp-trace-unit-{}.jsonl",
+            std::process::id()
+        ));
+        let tracer = Tracer::new(
+            1,
+            TraceConfig {
+                jsonl: Some(path.clone()),
+                ..TraceConfig::default()
+            },
+        )
+        .unwrap();
+        let w = tracer.writer(0).owning_submit();
+        w.record(5, TraceEvent::Submit { class: 0 });
+        w.record(5, TraceEvent::Queued { class: 0 });
+        w.record(5, TraceEvent::Admit { replica: 0 });
+        w.finish(5, TraceEvent::Finish { tokens: 0 });
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let t = Json::parse(lines[0]).unwrap();
+        assert_eq!(t.get("id").as_f64(), Some(5.0));
+        assert_eq!(t.get("truncated").as_bool(), Some(false));
+        assert_eq!(t.get("events").as_arr().unwrap().len(), 4);
+    }
+}

@@ -1,10 +1,11 @@
 //! Substrate utilities built from scratch for the offline environment:
 //! deterministic RNG, minimal JSON, scoped thread-pool helpers, the shared
-//! `.qtz` tensor container, a tiny CLI parser, and a seeded property-test
-//! harness.
+//! `.qtz` tensor container, a tiny CLI parser, a seeded property-test
+//! harness, and the scoped phase profiler behind the serving telemetry.
 
 pub mod cli;
 pub mod json;
+pub mod phase;
 pub mod proptest_lite;
 pub mod rng;
 pub mod tensorio;

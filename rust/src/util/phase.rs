@@ -1,0 +1,244 @@
+//! Engine phase profiler: lightweight scoped wall-clock timers that
+//! attribute decode time to the hot-path phases (quantized matmul, fused
+//! attention, sampling, speculative draft/verify, KV cold-compress and
+//! cold-decode), surfaced as the `phases` block of the serving `stats`
+//! snapshot ([`crate::serve::Metrics`]).
+//!
+//! # Design: thread-local sink, outermost-wins
+//!
+//! A scheduler thread that wants attribution calls [`install`] once with
+//! its metrics' [`PhaseAccum`]; every [`scope`] entered on that thread
+//! then records its elapsed nanoseconds into the accumulator on drop.
+//! Threads that never install a sink (worker-pool threads, library
+//! callers, benches) pay only a thread-local depth bump and an
+//! `Option::is_some` check per scope — no clock is read — which is what
+//! keeps the instrumented kernels unmeasurable when profiling is off.
+//!
+//! **Outermost-wins**: only a depth-1 scope records. A speculative
+//! draft/verify scope wraps whole batched decode calls, so the matmul /
+//! attention / sampling scopes inside it stay inert and their time is
+//! attributed to `spec_draft` / `spec_verify` inclusively. Every
+//! recorded interval is therefore disjoint wall time of one thread,
+//! which gives the invariant the stats snapshot relies on:
+//! `Σ phase time ≤ scheduler-thread wall time ≤ uptime`, so
+//! share-of-wall figures always sum to ≤ 100%.
+//!
+//! Timers are wall-clock (`Instant`), deliberately: the phases bound
+//! kernels that dispatch onto the worker pool, and the scheduler-thread
+//! wall time of a parallel section *is* its cost to the serving loop.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Number of [`Phase`] variants (the `PhaseAccum` slot count).
+pub const PHASE_COUNT: usize = 7;
+
+/// A hot-path phase of the serving decode loop. Wire names (snake_case,
+/// via [`Phase::name`]) are pinned by the docs-drift test against the
+/// `#### Phases` table in `rust/src/serve/README.md`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Quantized (or dense-fallback) linear layers, lm_head included.
+    QuantMatmul,
+    /// The blocked / fused batch attention pass, inline cold-page
+    /// decode inside the walk included.
+    Attention,
+    /// Stochastic next-token selection (distribution build + draw;
+    /// greedy argmax is not counted — it draws nothing).
+    Sampling,
+    /// Speculative draft rounds, inclusive of the draft model's matmul
+    /// and attention time.
+    SpecDraft,
+    /// Speculative verify steps, inclusive of the target model's chunked
+    /// decode.
+    SpecVerify,
+    /// KV cold-tier compression (`quantize_page`: E8P/RVQ re-encode).
+    KvCompress,
+    /// KV cold-tier re-heat (`reheat_page`: decode back to fp32 rows).
+    KvDecode,
+}
+
+impl Phase {
+    /// Every phase, in `PhaseAccum` slot order.
+    pub const ALL: [Phase; PHASE_COUNT] = [
+        Phase::QuantMatmul,
+        Phase::Attention,
+        Phase::Sampling,
+        Phase::SpecDraft,
+        Phase::SpecVerify,
+        Phase::KvCompress,
+        Phase::KvDecode,
+    ];
+
+    /// The snake_case wire name used in the stats `phases` block.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::QuantMatmul => "matmul",
+            Phase::Attention => "attention",
+            Phase::Sampling => "sampling",
+            Phase::SpecDraft => "spec_draft",
+            Phase::SpecVerify => "spec_verify",
+            Phase::KvCompress => "kv_compress",
+            Phase::KvDecode => "kv_decode",
+        }
+    }
+}
+
+/// Per-phase cumulative nanosecond counters. Lock-free: the owning
+/// scheduler thread adds, any number of stats threads read.
+#[derive(Debug)]
+pub struct PhaseAccum {
+    nanos: [AtomicU64; PHASE_COUNT],
+}
+
+impl Default for PhaseAccum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseAccum {
+    pub fn new() -> Self {
+        PhaseAccum {
+            nanos: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Add `nanos` of wall time to `phase` (called from guard drops).
+    pub fn add(&self, phase: Phase, nanos: u64) {
+        self.nanos[phase as usize].fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Cumulative nanoseconds recorded for `phase`.
+    pub fn nanos(&self, phase: Phase) -> u64 {
+        self.nanos[phase as usize].load(Ordering::Relaxed)
+    }
+
+    /// Cumulative nanoseconds over all phases. Because only depth-1
+    /// scopes record, this never exceeds the recording thread's wall
+    /// time.
+    pub fn total_nanos(&self) -> u64 {
+        Phase::ALL.iter().map(|&p| self.nanos(p)).sum()
+    }
+}
+
+thread_local! {
+    static SINK: RefCell<Option<Arc<PhaseAccum>>> = const { RefCell::new(None) };
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Route this thread's depth-1 [`scope`] timings into `accum` (the
+/// engine scheduler calls this once at thread start when profiling is
+/// on). Replaces any previously installed sink.
+pub fn install(accum: Arc<PhaseAccum>) {
+    SINK.with(|s| *s.borrow_mut() = Some(accum));
+}
+
+/// Remove this thread's sink; later scopes stop recording.
+pub fn uninstall() {
+    SINK.with(|s| *s.borrow_mut() = None);
+}
+
+/// Open a scoped timer for `phase`. Hold the guard for the duration of
+/// the phase (`let _scope = phase::scope(...)`); it records on drop if
+/// and only if this thread has a sink installed **and** this is the
+/// outermost scope on the thread.
+#[must_use]
+pub fn scope(phase: Phase) -> PhaseGuard {
+    let depth = DEPTH.with(|d| {
+        let v = d.get() + 1;
+        d.set(v);
+        v
+    });
+    let start = if depth == 1 && SINK.with(|s| s.borrow().is_some()) {
+        Some(Instant::now())
+    } else {
+        None
+    };
+    PhaseGuard { phase, start }
+}
+
+/// RAII guard from [`scope`]; records elapsed wall time on drop.
+#[derive(Debug)]
+pub struct PhaseGuard {
+    phase: Phase,
+    start: Option<Instant>,
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        DEPTH.with(|d| d.set(d.get() - 1));
+        if let Some(t0) = self.start.take() {
+            let ns = t0.elapsed().as_nanos() as u64;
+            SINK.with(|s| {
+                if let Some(a) = s.borrow().as_ref() {
+                    a.add(self.phase, ns);
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn no_sink_records_nothing() {
+        let a = Arc::new(PhaseAccum::new());
+        {
+            let _s = scope(Phase::QuantMatmul);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(a.total_nanos(), 0);
+    }
+
+    #[test]
+    fn outermost_scope_wins() {
+        // Run on a dedicated thread so install() cannot leak into other
+        // tests sharing this test thread.
+        let a = Arc::new(PhaseAccum::new());
+        let acc = a.clone();
+        std::thread::spawn(move || {
+            install(acc);
+            {
+                let _outer = scope(Phase::SpecDraft);
+                {
+                    // Inner scopes are inert: their time lands on the
+                    // enclosing phase.
+                    let _inner = scope(Phase::QuantMatmul);
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            {
+                let _solo = scope(Phase::Attention);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            uninstall();
+        })
+        .join()
+        .unwrap();
+        assert_eq!(a.nanos(Phase::QuantMatmul), 0);
+        assert!(a.nanos(Phase::SpecDraft) >= 1_000_000);
+        assert!(a.nanos(Phase::Attention) >= 500_000);
+        assert_eq!(
+            a.total_nanos(),
+            a.nanos(Phase::SpecDraft) + a.nanos(Phase::Attention)
+        );
+    }
+
+    #[test]
+    fn names_are_distinct_and_ordered() {
+        let names: Vec<&str> = Phase::ALL.iter().map(|&p| p.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), PHASE_COUNT);
+        for (i, &p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p as usize, i, "ALL order must match slot order");
+        }
+    }
+}

@@ -14,7 +14,7 @@ use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 
 use quipsharp::serve::{
-    Engine, EngineRequest, EngineResponse, Metrics, Router, RouterOptions,
+    Engine, EngineRequest, EngineResponse, Metrics, Router, RouterOptions, EVENT_KINDS,
 };
 use quipsharp::util::json::Json;
 
@@ -84,6 +84,28 @@ fn stats_table_matches_snapshot_fields() {
     let docs = documented_fields(&readme(), "### `stats`");
     let code = json_keys(&Metrics::new().snapshot());
     assert_same(&docs, &code, "serve/README.md `stats` table");
+}
+
+/// The `phases` block is its own README table: every per-phase
+/// `{name}_ms` / `{name}_share` key the snapshot emits must have a row,
+/// and vice versa.
+#[test]
+fn phases_table_matches_snapshot_block() {
+    let docs = documented_fields(&readme(), "#### Phases");
+    let snapshot = Metrics::new().snapshot();
+    let code = json_keys(snapshot.get("phases"));
+    assert_same(&docs, &code, "serve/README.md `phases` table");
+}
+
+/// Every trace-event kind the tracer can emit must have a README row,
+/// and every documented kind must exist in code. [`TraceEvent::kind`]
+/// is an exhaustive match over the same enum, so a new variant cannot
+/// ship without touching both the wire-name list and this table.
+#[test]
+fn trace_events_table_matches_event_kinds() {
+    let docs = documented_fields(&readme(), "#### Trace events");
+    let code: BTreeSet<String> = EVENT_KINDS.iter().map(|s| s.to_string()).collect();
+    assert_same(&docs, &code, "serve/README.md trace-events table");
 }
 
 #[test]

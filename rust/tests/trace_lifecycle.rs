@@ -1,0 +1,735 @@
+//! Request-lifecycle traces obey the grammar, end to end.
+//!
+//! A completed request's fleet-merged trace must read
+//!
+//! ```text
+//! submit → queued → admit → prefill* → decode_round*
+//!        → { preempt [→ spill → restore | → queued] , reroute }*
+//!        → finish | fail
+//! ```
+//!
+//! with the global sequence stamps strictly increasing, timestamps
+//! non-decreasing, `decode_round` totals accounting for every emitted
+//! token, and `finish` carrying exactly the decoded total. The checker
+//! here is a straight state machine over that grammar; the tests drive
+//! it with the nastiest schedules the serving stack produces — pool
+//! starvation (spill/restore and fp32 restart preemption), a replica
+//! hard-killed mid-stream (re-route), and the JSONL export — plus the
+//! `trace` TCP command over a live server. `make trace-smoke` runs the
+//! fleet JSONL scenario as the tier-1 smoke.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use quipsharp::model::{Arch, Model, ModelConfig};
+use quipsharp::serve::{
+    serve_blocking, Client, Engine, EngineOptions, EngineRequest, NativeEngine, RoutePolicy,
+    Router, RouterOptions, SamplingParams, ServerConfig, TraceConfig, Tracer,
+};
+use quipsharp::util::json::Json;
+
+fn make_model(seed: u64, ctx: usize) -> Model {
+    let cfg = ModelConfig {
+        name: "trace-e2e".into(),
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        vocab: 64,
+        ctx,
+        arch: Arch::Llama,
+        n_experts: 2,
+    };
+    Model::random(cfg, seed)
+}
+
+/// Lifecycle states of the trace grammar. `Preempted` remembers whether
+/// the eviction spilled (arena path: `spill → restore` must follow) or
+/// restarted (fp32 path: `queued` must follow and the token count
+/// resets).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum LifeState {
+    Start,
+    Submitted,
+    Queued,
+    Admitted,
+    Preempted { spilled: bool },
+    Spilled,
+    Done,
+}
+
+/// Validate one completed request's merged trace against the lifecycle
+/// grammar: event order, strictly increasing sequence stamps,
+/// non-decreasing timestamps, and token accounting (`decode_round`
+/// totals are cumulative over the surviving stream; `finish` must carry
+/// exactly the decoded total; re-routes and restart preemptions reset
+/// the stream).
+fn check_completed_trace(trace: &Json) -> Result<(), String> {
+    if trace.get("truncated").as_bool() != Some(false) {
+        return Err("trace is truncated (ring overwrote its head)".to_string());
+    }
+    let events = trace
+        .get("events")
+        .as_arr()
+        .ok_or_else(|| "trace has no events array".to_string())?;
+    if events.is_empty() {
+        return Err("trace has no events".to_string());
+    }
+    let mut st = LifeState::Start;
+    let mut expect = 0usize; // surviving generated-token total
+    let mut last_seq = -1.0f64;
+    let mut last_t = -1.0f64;
+    for (i, e) in events.iter().enumerate() {
+        let kind = e
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| format!("event {i} has no kind"))?;
+        let seq = e
+            .get("seq")
+            .as_f64()
+            .ok_or_else(|| format!("event {i} has no seq"))?;
+        if seq <= last_seq {
+            return Err(format!(
+                "event {i} (`{kind}`): seq {seq} not after {last_seq}"
+            ));
+        }
+        last_seq = seq;
+        let t = e
+            .get("t_us")
+            .as_f64()
+            .ok_or_else(|| format!("event {i} has no t_us"))?;
+        if t < last_t {
+            return Err(format!("event {i} (`{kind}`): time ran backwards"));
+        }
+        last_t = t;
+        let num = |key: &str| -> Result<usize, String> {
+            e.get(key)
+                .as_f64()
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("event {i} (`{kind}`) missing `{key}`"))
+        };
+        st = match kind {
+            "submit" if st == LifeState::Start => LifeState::Submitted,
+            "queued" => match st {
+                LifeState::Submitted => LifeState::Queued,
+                LifeState::Preempted { spilled: false } => {
+                    // Restart semantics: the tokens were discarded and
+                    // the deterministic decode re-derives the stream.
+                    expect = 0;
+                    LifeState::Queued
+                }
+                _ => return Err(format!("event {i}: `queued` illegal in state {st:?}")),
+            },
+            "admit" if st == LifeState::Queued => {
+                if expect != 0 {
+                    return Err(format!(
+                        "event {i}: admit with {expect} surviving tokens"
+                    ));
+                }
+                LifeState::Admitted
+            }
+            "prefill" if st == LifeState::Admitted => LifeState::Admitted,
+            "decode_round" if st == LifeState::Admitted => {
+                let (tokens, total) = (num("tokens")?, num("total")?);
+                if total != expect + tokens {
+                    return Err(format!(
+                        "event {i}: decode_round total {total} != {expect} + {tokens}"
+                    ));
+                }
+                expect = total;
+                LifeState::Admitted
+            }
+            "preempt" if st == LifeState::Admitted => LifeState::Preempted {
+                spilled: e
+                    .get("spilled")
+                    .as_bool()
+                    .ok_or_else(|| format!("event {i}: preempt missing `spilled`"))?,
+            },
+            "spill" if st == (LifeState::Preempted { spilled: true }) => LifeState::Spilled,
+            // Restore re-admits with the token stream intact: `expect`
+            // survives, and no fresh `admit` follows.
+            "restore" if st == LifeState::Spilled => LifeState::Admitted,
+            "reroute" if st != LifeState::Done && st != LifeState::Start => {
+                // The new replica restarts the stream from scratch.
+                expect = 0;
+                LifeState::Submitted
+            }
+            "finish" if st == LifeState::Admitted => {
+                let tokens = num("tokens")?;
+                if tokens != expect {
+                    return Err(format!(
+                        "event {i}: finish tokens {tokens} != decoded {expect}"
+                    ));
+                }
+                LifeState::Done
+            }
+            "fail" if st != LifeState::Done => LifeState::Done,
+            _ => return Err(format!("event {i}: `{kind}` illegal in state {st:?}")),
+        };
+    }
+    if st != LifeState::Done {
+        return Err(format!("trace ends in non-terminal state {st:?}"));
+    }
+    Ok(())
+}
+
+fn kinds(trace: &Json) -> Vec<String> {
+    trace
+        .get("events")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|e| e.get("kind").as_str().unwrap().to_string())
+        .collect()
+}
+
+fn ev(seq: u64, kind: &str, extra: Vec<(&'static str, Json)>) -> Json {
+    let mut fields = vec![
+        ("seq", Json::num(seq as f64)),
+        ("t_us", Json::num(seq as f64)),
+        ("replica", Json::Null),
+        ("kind", Json::str(kind)),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+fn trace_of(events: Vec<Json>) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(0.0)),
+        ("truncated", Json::Bool(false)),
+        ("events", Json::Arr(events)),
+    ])
+}
+
+fn decode(seq: u64, tokens: usize, total: usize) -> Json {
+    ev(
+        seq,
+        "decode_round",
+        vec![
+            ("tokens", Json::num(tokens as f64)),
+            ("total", Json::num(total as f64)),
+            ("spec", Json::Bool(false)),
+        ],
+    )
+}
+
+/// The checker itself: accepts the documented lifecycles — including
+/// the full spill → restore → reroute gauntlet — and rejects every
+/// out-of-grammar mutation.
+#[test]
+fn grammar_checker_accepts_lifecycles_and_rejects_mutations() {
+    let class = |v: f64| vec![("class", Json::num(v))];
+    let plain = trace_of(vec![
+        ev(0, "submit", class(0.0)),
+        ev(1, "queued", class(0.0)),
+        ev(2, "admit", vec![("replica_to", Json::num(0.0))]),
+        ev(3, "prefill", vec![("tokens", Json::num(3.0))]),
+        decode(4, 1, 1),
+        ev(5, "finish", vec![("tokens", Json::num(1.0))]),
+    ]);
+    check_completed_trace(&plain).unwrap();
+
+    // Spill → restore (tokens survive), then a re-route (stream resets).
+    let gauntlet = trace_of(vec![
+        ev(0, "submit", class(3.0)),
+        ev(1, "queued", class(3.0)),
+        ev(2, "admit", vec![("replica_to", Json::num(0.0))]),
+        ev(3, "prefill", vec![("tokens", Json::num(2.0))]),
+        decode(4, 2, 2),
+        ev(5, "preempt", vec![("spilled", Json::Bool(true))]),
+        ev(6, "spill", vec![("pages", Json::num(2.0))]),
+        ev(7, "restore", vec![("pages", Json::num(2.0))]),
+        decode(8, 1, 3),
+        ev(9, "reroute", vec![("from", Json::num(0.0))]),
+        ev(10, "queued", class(3.0)),
+        ev(11, "admit", vec![("replica_to", Json::num(1.0))]),
+        ev(12, "prefill", vec![("tokens", Json::num(2.0))]),
+        decode(13, 3, 3),
+        ev(14, "finish", vec![("tokens", Json::num(3.0))]),
+    ]);
+    check_completed_trace(&gauntlet).unwrap();
+
+    // Restart preemption: no spill, re-queue, token count resets.
+    let restart = trace_of(vec![
+        ev(0, "submit", class(0.0)),
+        ev(1, "queued", class(0.0)),
+        ev(2, "admit", vec![("replica_to", Json::num(0.0))]),
+        decode(3, 1, 1),
+        ev(4, "preempt", vec![("spilled", Json::Bool(false))]),
+        ev(5, "queued", class(0.0)),
+        ev(6, "admit", vec![("replica_to", Json::num(0.0))]),
+        ev(7, "prefill", vec![("tokens", Json::num(2.0))]),
+        decode(8, 1, 1),
+        ev(9, "finish", vec![("tokens", Json::num(1.0))]),
+    ]);
+    check_completed_trace(&restart).unwrap();
+
+    let rejects: Vec<(&str, Json)> = vec![
+        (
+            "decode before admit",
+            trace_of(vec![
+                ev(0, "submit", class(0.0)),
+                ev(1, "queued", class(0.0)),
+                decode(2, 1, 1),
+            ]),
+        ),
+        (
+            "spill without a spilled preempt",
+            trace_of(vec![
+                ev(0, "submit", class(0.0)),
+                ev(1, "queued", class(0.0)),
+                ev(2, "admit", vec![("replica_to", Json::num(0.0))]),
+                ev(3, "spill", vec![("pages", Json::num(1.0))]),
+            ]),
+        ),
+        (
+            "restore without a spill",
+            trace_of(vec![
+                ev(0, "submit", class(0.0)),
+                ev(1, "queued", class(0.0)),
+                ev(2, "admit", vec![("replica_to", Json::num(0.0))]),
+                ev(3, "preempt", vec![("spilled", Json::Bool(true))]),
+                ev(4, "restore", vec![("pages", Json::num(1.0))]),
+            ]),
+        ),
+        (
+            "spill after a restart preempt",
+            trace_of(vec![
+                ev(0, "submit", class(0.0)),
+                ev(1, "queued", class(0.0)),
+                ev(2, "admit", vec![("replica_to", Json::num(0.0))]),
+                ev(3, "preempt", vec![("spilled", Json::Bool(false))]),
+                ev(4, "spill", vec![("pages", Json::num(1.0))]),
+            ]),
+        ),
+        (
+            "decode totals that drop a token",
+            trace_of(vec![
+                ev(0, "submit", class(0.0)),
+                ev(1, "queued", class(0.0)),
+                ev(2, "admit", vec![("replica_to", Json::num(0.0))]),
+                decode(3, 1, 1),
+                decode(4, 1, 3),
+                ev(5, "finish", vec![("tokens", Json::num(3.0))]),
+            ]),
+        ),
+        (
+            "finish claiming more tokens than were decoded",
+            trace_of(vec![
+                ev(0, "submit", class(0.0)),
+                ev(1, "queued", class(0.0)),
+                ev(2, "admit", vec![("replica_to", Json::num(0.0))]),
+                decode(3, 2, 2),
+                ev(4, "finish", vec![("tokens", Json::num(3.0))]),
+            ]),
+        ),
+        (
+            "events after the terminal",
+            trace_of(vec![
+                ev(0, "submit", class(0.0)),
+                ev(1, "queued", class(0.0)),
+                ev(2, "admit", vec![("replica_to", Json::num(0.0))]),
+                decode(3, 1, 1),
+                ev(4, "finish", vec![("tokens", Json::num(1.0))]),
+                decode(5, 1, 2),
+            ]),
+        ),
+        (
+            "a second submit",
+            trace_of(vec![
+                ev(0, "submit", class(0.0)),
+                ev(1, "submit", class(0.0)),
+            ]),
+        ),
+        (
+            "sequence stamps out of order",
+            trace_of(vec![
+                ev(5, "submit", class(0.0)),
+                ev(5, "queued", class(0.0)),
+            ]),
+        ),
+        (
+            "no terminal event",
+            trace_of(vec![
+                ev(0, "submit", class(0.0)),
+                ev(1, "queued", class(0.0)),
+                ev(2, "admit", vec![("replica_to", Json::num(0.0))]),
+                decode(3, 1, 1),
+            ]),
+        ),
+    ];
+    for (what, t) in rejects {
+        assert!(
+            check_completed_trace(&t).is_err(),
+            "checker accepted {what}"
+        );
+    }
+
+    // A truncated trace is never a valid completed history.
+    let mut t = plain;
+    if let Json::Obj(map) = &mut t {
+        map.insert("truncated".to_string(), Json::Bool(true));
+    }
+    assert!(check_completed_trace(&t).is_err());
+}
+
+/// Pool starvation with the spill arena on (`kv_bits` 2): preempted
+/// sequences spill to the host arena and restore mid-stream, and every
+/// completed trace — spill events included — passes the grammar with
+/// the full 126-token total on its `finish`.
+#[test]
+fn spilled_and_restored_requests_trace_contiguously() {
+    let model = Arc::new(make_model(43, 128));
+    let tracer = Tracer::new(1, TraceConfig::default()).unwrap();
+    let eng = NativeEngine::start_with_opts(
+        model,
+        None,
+        EngineOptions {
+            max_batch: 3,
+            pool_pages: Some(5),
+            kv_bits: 2,
+            tracer: Some(tracer.writer(0).owning_submit()),
+            ..EngineOptions::default()
+        },
+    );
+    let rxs: Vec<_> = (0..3u64)
+        .map(|i| {
+            eng.submit(EngineRequest {
+                id: i,
+                prompt: vec![(3 + 5 * i) as u8, (7 + i) as u8],
+                max_new: 126,
+                prefix_id: None,
+                speculate_k: None,
+                priority: 0,
+                sampling: SamplingParams {
+                    temperature: 1.0,
+                    top_k: 0,
+                    top_p: 1.0,
+                    seed: 0xA11CE + i,
+                },
+            })
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), 126);
+    }
+    let m = eng.metrics();
+    assert!(
+        m.kv_spills.load(Ordering::Relaxed) > 0,
+        "a 5-page pool must spill"
+    );
+    assert!(m.kv_restores.load(Ordering::Relaxed) > 0);
+
+    let mut seen: Vec<String> = Vec::new();
+    for id in 0..3u64 {
+        let t = eng.trace_json(id);
+        check_completed_trace(&t).unwrap_or_else(|e| panic!("request {id}: {e}\n{}", t.emit()));
+        let ks = kinds(&t);
+        assert_eq!(ks.first().map(String::as_str), Some("submit"), "req {id}");
+        assert_eq!(ks.last().map(String::as_str), Some("finish"), "req {id}");
+        seen.extend(ks);
+    }
+    for needed in ["prefill", "decode_round", "preempt", "spill", "restore"] {
+        assert!(
+            seen.iter().any(|k| k == needed),
+            "no `{needed}` event under pool pressure"
+        );
+    }
+    eng.stop();
+    eng.join();
+}
+
+/// The same starvation without the arena (`kv_bits` 0): preemption
+/// restarts — the victim re-queues, re-prefills, and its trace shows
+/// the reset (`preempt{spilled:false} → queued → admit`) while still
+/// accounting for every surviving token.
+#[test]
+fn restart_preempted_requests_requeue_and_trace_contiguously() {
+    let model = Arc::new(make_model(43, 128));
+    let tracer = Tracer::new(1, TraceConfig::default()).unwrap();
+    let eng = NativeEngine::start_with_opts(
+        model,
+        None,
+        EngineOptions {
+            max_batch: 3,
+            pool_pages: Some(5),
+            kv_bits: 0,
+            tracer: Some(tracer.writer(0).owning_submit()),
+            ..EngineOptions::default()
+        },
+    );
+    let rxs: Vec<_> = (0..3u64)
+        .map(|i| {
+            eng.submit(EngineRequest {
+                id: i,
+                prompt: vec![(3 + 5 * i) as u8, (7 + i) as u8],
+                max_new: 126,
+                prefix_id: None,
+                speculate_k: None,
+                priority: 0,
+                sampling: SamplingParams {
+                    temperature: 1.0,
+                    top_k: 0,
+                    top_p: 1.0,
+                    seed: 0xA11CE + i,
+                },
+            })
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), 126);
+    }
+    let m = eng.metrics();
+    assert!(m.preemptions.load(Ordering::Relaxed) > 0);
+    assert_eq!(m.kv_spills.load(Ordering::Relaxed), 0, "fp32 never spills");
+
+    let mut requeued = 0usize;
+    for id in 0..3u64 {
+        let t = eng.trace_json(id);
+        check_completed_trace(&t).unwrap_or_else(|e| panic!("request {id}: {e}\n{}", t.emit()));
+        let ks = kinds(&t);
+        assert!(!ks.iter().any(|k| k == "spill" || k == "restore"));
+        if ks.iter().filter(|k| *k == "queued").count() >= 2 {
+            requeued += 1;
+        }
+    }
+    assert!(requeued >= 1, "a preempted request must re-queue");
+    eng.stop();
+    eng.join();
+}
+
+/// A replica hard-killed with work in flight: the router re-routes to
+/// the survivor, and the rerouted request's trace is one contiguous
+/// history — the dead replica's events, the `reroute`, then the
+/// survivor's fresh `queued → admit → … → finish`.
+#[test]
+fn killed_replica_reroutes_trace_contiguously() {
+    let model = Arc::new(make_model(11, 64));
+    let tracer = Tracer::new(2, TraceConfig::default()).unwrap();
+    let replicas: Vec<Arc<NativeEngine>> = NativeEngine::start_replicas(
+        model,
+        None,
+        2,
+        EngineOptions {
+            tracer: Some(tracer.writer(0)),
+            ..EngineOptions::default()
+        },
+    )
+    .into_iter()
+    .map(Arc::new)
+    .collect();
+    let dyns: Vec<Arc<dyn Engine>> = replicas
+        .iter()
+        .map(|e| e.clone() as Arc<dyn Engine>)
+        .collect();
+    let router = Router::new(
+        dyns,
+        RouterOptions {
+            policy: RoutePolicy::LeastLoaded,
+            tracer: Some(tracer.front_writer()),
+            ..RouterOptions::default()
+        },
+    );
+    let reqs: Vec<EngineRequest> = (0..8u64)
+        .map(|i| EngineRequest {
+            id: i,
+            prompt: vec![(i % 60) as u8, 5, 9],
+            max_new: 60,
+            prefix_id: None,
+            speculate_k: None,
+            priority: 0,
+            sampling: if i % 2 == 0 {
+                SamplingParams {
+                    temperature: 1.0,
+                    top_k: 0,
+                    top_p: 1.0,
+                    seed: 0x5EED + i,
+                }
+            } else {
+                SamplingParams::default()
+            },
+        })
+        .collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| router.submit(r.clone())).collect();
+    replicas[0].kill();
+    for (req, rx) in reqs.iter().zip(rxs) {
+        let r = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|e| panic!("request {} never answered: {e:?}", req.id));
+        assert!(r.error.is_none(), "request {}: {:?}", req.id, r.error);
+    }
+    assert!(router.metrics().requests_rerouted.load(Ordering::Relaxed) >= 1);
+
+    let mut rerouted_traces = 0usize;
+    for id in 0..8u64 {
+        let t = router.trace_json(id);
+        check_completed_trace(&t).unwrap_or_else(|e| panic!("request {id}: {e}\n{}", t.emit()));
+        if kinds(&t).iter().any(|k| k == "reroute") {
+            rerouted_traces += 1;
+        }
+    }
+    assert!(
+        rerouted_traces >= 1,
+        "kill mid-flight must reroute a traced request"
+    );
+    router.stop();
+    drop(router);
+    for e in replicas {
+        e.join();
+    }
+}
+
+/// The tier-1 smoke (`make trace-smoke`): a starved two-replica fleet
+/// with a mid-stream kill exports every completed request's merged
+/// timeline as one JSONL line, and each line parses and passes the
+/// grammar — preempts, spills, restores, and re-routes included.
+#[test]
+fn trace_smoke_preempted_rerouted_jsonl() {
+    let path = std::env::temp_dir().join(format!(
+        "quipsharp-trace-smoke-{}.jsonl",
+        std::process::id()
+    ));
+    let model = Arc::new(make_model(7, 128));
+    let tracer = Tracer::new(
+        2,
+        TraceConfig {
+            jsonl: Some(path.clone()),
+            ..TraceConfig::default()
+        },
+    )
+    .unwrap();
+    let replicas: Vec<Arc<NativeEngine>> = NativeEngine::start_replicas(
+        model,
+        None,
+        2,
+        EngineOptions {
+            max_batch: 3,
+            pool_pages: Some(5),
+            kv_bits: 2,
+            tracer: Some(tracer.writer(0)),
+            ..EngineOptions::default()
+        },
+    )
+    .into_iter()
+    .map(Arc::new)
+    .collect();
+    let dyns: Vec<Arc<dyn Engine>> = replicas
+        .iter()
+        .map(|e| e.clone() as Arc<dyn Engine>)
+        .collect();
+    let router = Router::new(
+        dyns,
+        RouterOptions {
+            policy: RoutePolicy::LeastLoaded,
+            tracer: Some(tracer.front_writer()),
+            ..RouterOptions::default()
+        },
+    );
+    let reqs: Vec<EngineRequest> = (0..6u64)
+        .map(|i| EngineRequest {
+            id: i,
+            prompt: vec![((3 + 5 * i) % 60) as u8, ((7 + i) % 60) as u8],
+            max_new: 126,
+            prefix_id: None,
+            speculate_k: None,
+            priority: ((i % 3) * 3) as u8,
+            sampling: if i % 2 == 0 {
+                SamplingParams {
+                    temperature: 1.0,
+                    top_k: 0,
+                    top_p: 1.0,
+                    seed: 0xA11CE + i,
+                }
+            } else {
+                SamplingParams::default()
+            },
+        })
+        .collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| router.submit(r.clone())).collect();
+    replicas[0].kill();
+    for (req, rx) in reqs.iter().zip(rxs) {
+        let r = rx
+            .recv_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|e| panic!("request {} never answered: {e:?}", req.id));
+        assert!(r.error.is_none(), "request {}: {:?}", req.id, r.error);
+        assert_eq!(r.tokens.len(), 126, "request {}", req.id);
+    }
+    assert!(router.metrics().requests_rerouted.load(Ordering::Relaxed) >= 1);
+    let spills: u64 = replicas
+        .iter()
+        .map(|e| e.metrics().kv_spills.load(Ordering::Relaxed))
+        .sum();
+    assert!(spills > 0, "a 5-page fleet pool must spill");
+    router.stop();
+    drop(router);
+    for e in replicas {
+        e.join();
+    }
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), reqs.len(), "one JSONL line per completion");
+    let mut ids: Vec<u64> = Vec::new();
+    let mut seen: Vec<String> = Vec::new();
+    for line in lines {
+        let t = Json::parse(line).unwrap();
+        check_completed_trace(&t)
+            .unwrap_or_else(|e| panic!("exported trace failed the grammar: {e}\n{line}"));
+        ids.push(t.get("id").as_f64().unwrap() as u64);
+        seen.extend(kinds(&t));
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, (0..reqs.len() as u64).collect::<Vec<u64>>());
+    for needed in ["preempt", "spill", "restore", "reroute", "finish"] {
+        assert!(
+            seen.iter().any(|k| k == needed),
+            "no `{needed}` event in the exported traces"
+        );
+    }
+}
+
+/// The `trace` TCP command: a served request's timeline comes back over
+/// the wire, passes the grammar, and an unknown id answers with an
+/// empty (not erroneous) timeline.
+#[test]
+fn trace_command_over_tcp() {
+    let model = Arc::new(make_model(5, 64));
+    let tracer = Tracer::new(1, TraceConfig::default()).unwrap();
+    let engine = Arc::new(NativeEngine::start_with_opts(
+        model,
+        None,
+        EngineOptions {
+            max_batch: 4,
+            tracer: Some(tracer.writer(0).owning_submit()),
+            ..EngineOptions::default()
+        },
+    ));
+    let eng_dyn: Arc<dyn Engine> = engine.clone();
+    let handle = serve_blocking(eng_dyn, ServerConfig::default()).unwrap();
+    let mut c = Client::connect(handle.local_addr).unwrap();
+    let (tokens, _) = c.request(&[1, 2, 3], 6).unwrap();
+    assert_eq!(tokens.len(), 6);
+
+    // The server numbers wire requests from 1.
+    let t = c.trace(1).unwrap();
+    check_completed_trace(&t).unwrap_or_else(|e| panic!("{e}\n{}", t.emit()));
+    let ks = kinds(&t);
+    assert_eq!(ks.first().map(String::as_str), Some("submit"));
+    assert_eq!(ks.last().map(String::as_str), Some("finish"));
+
+    let missing = c.trace(999).unwrap();
+    assert!(missing.get("events").as_arr().unwrap().is_empty());
+    assert_eq!(missing.get("truncated").as_bool(), Some(false));
+
+    c.shutdown().unwrap();
+    handle.stop();
+    engine.stop();
+    engine.join();
+}
